@@ -1,0 +1,46 @@
+//! Domain example: projected supercomputer scaling (paper §5.4, Fig. 16).
+//!
+//! Uses the Tianhe-1 cluster model to project MAP-UOT / COFFEE / POT
+//! distributed scaling at M=N=20480 for both node configurations the
+//! paper evaluates, and prints the crossover where communication starts
+//! to dominate.
+//!
+//!     cargo run --release --example cluster_scaling
+
+use map_uot::algo::SolverKind;
+use map_uot::config::presets;
+use map_uot::sim::cluster;
+
+fn main() {
+    const M: usize = 20480;
+    for ppn in [8usize, 12] {
+        let cfg = presets::tianhe1_cluster(ppn);
+        println!("== Tianhe-1 model, {ppn} processes/node, M=N={M} ==");
+        println!("{:>6} {:>10} {:>10} {:>10} {:>12}", "procs", "POT", "COFFEE", "MAP-UOT", "MAP eff/proc");
+        let procs: &[usize] = if ppn == 8 {
+            &[8, 16, 32, 64, 128, 256, 512]
+        } else {
+            &[12, 24, 48, 96, 192, 384, 768]
+        };
+        for &p in procs {
+            let s = |k| cluster::speedup_vs_pot1(&cfg, k, M, M, p);
+            println!(
+                "{:>6} {:>9.0}x {:>9.0}x {:>9.0}x {:>11.1}%",
+                p,
+                s(SolverKind::Pot),
+                s(SolverKind::Coffee),
+                s(SolverKind::MapUot),
+                s(SolverKind::MapUot) / p as f64 * 100.0
+            );
+        }
+        // Communication share at the largest configuration.
+        let p = *procs.last().unwrap();
+        let comm = cfg.allreduce_s(M, p);
+        let total = cluster::iter_time_s(&cfg, SolverKind::MapUot, M, M, p);
+        println!(
+            "at {p} procs: allreduce is {:.0}% of a MAP-UOT iteration\n",
+            comm / total * 100.0
+        );
+    }
+    println!("(model parameters in config::presets::tianhe1_cluster; see DESIGN.md §Substitutions)");
+}

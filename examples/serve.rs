@@ -1,0 +1,95 @@
+//! End-to-end driver: the full three-layer stack under a real workload.
+//!
+//! Starts the L3 coordinator with the **PJRT backend**, so every solve
+//! executes the AOT artifact chain: Pallas fused kernel (L1) inside the
+//! jax chunk graph (L2), compiled from HLO text and run by the Rust
+//! runtime — Python is nowhere in this process. A mixed burst of color
+//! -transfer-style and random UOT requests is submitted; the example
+//! reports latency/throughput and cross-checks a sample answer against
+//! the native solver.
+//!
+//! Requires artifacts: `make artifacts` first. Results are recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//!     cargo run --release --example serve
+
+use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::config::{Backend, ServiceConfig};
+use map_uot::coordinator::Service;
+use map_uot::util::{Timer, XorShift};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("no artifacts/ — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 };
+    let cfg = ServiceConfig {
+        workers: 4,
+        batch_max: 8,
+        backend: Backend::Pjrt,
+        stop,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).expect("service start");
+    println!("coordinator up: 4 workers, PJRT backend, dynamic batching\n");
+
+    // Mixed workload: three shape classes, padded into artifact buckets by
+    // the router (100->256, 200x140->256, 256 exact).
+    let mut rng = XorShift::new(7);
+    let n_requests = 48;
+    let timer = Timer::start();
+    let mut rxs = Vec::new();
+    let mut sample = None;
+    for i in 0..n_requests {
+        let (m, n) = match rng.below(3) {
+            0 => (256, 256),
+            1 => (100, 100),
+            _ => (200, 140),
+        };
+        let p = Problem::random(m, n, 0.8, i);
+        if i == 0 {
+            sample = Some(p.clone());
+        }
+        rxs.push(svc.submit(p).expect("submit"));
+    }
+
+    let mut ok = 0;
+    let mut sample_plan = None;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("reply");
+        match resp.result {
+            Ok(solved) => {
+                ok += 1;
+                if i == 0 {
+                    sample_plan = Some(solved.plan);
+                }
+            }
+            Err(e) => eprintln!("request {i} failed: {e}"),
+        }
+    }
+    let wall = timer.elapsed().as_secs_f64();
+    let m = svc.metrics();
+
+    println!("workload   : {n_requests} requests, 3 shape classes (bucketed to 256x256)");
+    println!("completed  : {ok}/{n_requests} in {wall:.2}s  ->  {:.1} req/s", ok as f64 / wall);
+    println!("batching   : {} batches, mean size {:.2}", m.batches, m.mean_batch_size);
+    println!(
+        "latency    : mean {:.1} ms, p50 <= {:.1} ms, p99 <= {:.1} ms",
+        m.mean_latency_ms,
+        m.latency_percentile_ms(50.0),
+        m.latency_percentile_ms(99.0)
+    );
+    println!("iterations : {} total fused iterations on the PJRT path", m.iterations);
+
+    // Cross-check one answer against the native MAP-UOT solver.
+    let p = sample.expect("sample problem");
+    let (native, _) = algo::solve(SolverKind::MapUot, &p, SolveOptions { stop, ..Default::default() });
+    let diff = sample_plan.expect("sample plan").max_rel_diff(&native, 1e-5);
+    println!("\ncross-check vs native solver: max rel diff = {diff:.2e}");
+    assert!(diff < 2e-2, "PJRT and native answers diverged");
+    println!("three-layer stack verified: pallas kernel -> jax chunk -> HLO text -> PJRT -> coordinator");
+
+    svc.shutdown();
+}

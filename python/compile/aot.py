@@ -1,0 +1,127 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each artifact is shape-specialized; ``manifest.txt`` (one line per
+artifact: ``key=value`` pairs) tells the Rust runtime what exists. Python
+runs exactly once, at build time (``make artifacts``); the request path is
+pure Rust + PJRT.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import mapuot
+
+#: (M, N) shape buckets for the UOT chunk executables. The coordinator
+#: routes a request to the smallest bucket that fits (padding with zero
+#: mass rows/cols preserves the solution on the real support).
+CHUNK_SHAPES = [(256, 256), (512, 512), (512, 256), (1024, 1024)]
+
+#: Iterations fused into one chunk executable. Chosen so the L3 convergence
+#: check (a host scalar read) amortizes across enough device work.
+CHUNK_STEPS = 8
+
+#: Point-cloud buckets for gibbs_init / barycentric_map (D = 3: RGB space).
+POINT_SHAPES = [(256, 256, 3), (512, 512, 3), (1024, 1024, 3)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation (tupled) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_uot_chunk(m: int, n: int, steps: int):
+    """Lower one UOT chunk bucket; returns (hlo_text, manifest_fields)."""
+    block_m = mapuot.choose_block_m(m, n)
+    fn = lambda A, cs, rpd, cpd, fi: model.uot_chunk(
+        A, cs, rpd, cpd, fi[0], n_steps=steps, block_m=block_m
+    )
+    lowered = jax.jit(fn).lower(
+        _spec((m, n)), _spec((n,)), _spec((m,)), _spec((n,)), _spec((1,))
+    )
+    fields = dict(kind="uot_chunk", m=m, n=n, steps=steps, block_m=block_m)
+    return to_hlo_text(lowered), fields
+
+
+def lower_gibbs_init(m: int, n: int, d: int):
+    lowered = jax.jit(model.gibbs_init).lower(
+        _spec((m, d)), _spec((n, d)), _spec((1,))
+    )
+    return to_hlo_text(lowered), dict(kind="gibbs_init", m=m, n=n, d=d)
+
+
+def lower_barycentric(m: int, n: int, d: int):
+    lowered = jax.jit(model.barycentric_map).lower(_spec((m, n)), _spec((n, d)))
+    return to_hlo_text(lowered), dict(kind="barycentric", m=m, n=n, d=d)
+
+
+def build(out_dir: str, chunk_shapes=None, point_shapes=None, steps=CHUNK_STEPS):
+    """Lower every bucket and write artifacts + manifest. Returns manifest rows."""
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+
+    for m, n in chunk_shapes if chunk_shapes is not None else CHUNK_SHAPES:
+        text, fields = lower_uot_chunk(m, n, steps)
+        name = f"uot_chunk_{m}x{n}_s{steps}"
+        rows.append((name, fields, text))
+
+    for m, n, d in point_shapes if point_shapes is not None else POINT_SHAPES:
+        text, fields = lower_gibbs_init(m, n, d)
+        rows.append((f"gibbs_init_{m}x{n}x{d}", fields, text))
+        text, fields = lower_barycentric(m, n, d)
+        rows.append((f"barycentric_{m}x{n}x{d}", fields, text))
+
+    manifest_lines = []
+    for name, fields, text in rows:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in fields.items())
+        manifest_lines.append(f"{name} file={fname} {kv}")
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# MAP-UOT AOT artifact manifest: name file=... kind=... <shape fields>\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(rows)} artifacts in {out_dir}")
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--steps", type=int, default=CHUNK_STEPS)
+    p.add_argument(
+        "--small", action="store_true",
+        help="only the smallest bucket of each kind (CI smoke)",
+    )
+    args = p.parse_args()
+    chunks = CHUNK_SHAPES[:1] if args.small else None
+    points = POINT_SHAPES[:1] if args.small else None
+    build(args.out_dir, chunks, points, args.steps)
+
+
+if __name__ == "__main__":
+    main()

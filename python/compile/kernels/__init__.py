@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for MAP-UOT.
+
+- :mod:`.mapuot`   — the fused interweaved iteration (the paper's contribution)
+- :mod:`.baseline` — POT-style separate sweeps (comparator)
+- :mod:`.ref`      — pure-jnp oracle; source of truth for numerics
+"""
+
+from . import baseline, mapuot, ref  # noqa: F401

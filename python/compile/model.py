@@ -1,0 +1,83 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust runtime.
+
+Three graphs, all built on the L1 fused kernel, all shape-specialized at
+lowering time (the Rust coordinator buckets requests by shape and picks the
+matching artifact):
+
+- :func:`uot_chunk`       — ``n_steps`` fused UOT iterations + marginal
+  error. The solver's convergence loop lives in L3: the coordinator runs
+  chunks and stops when the returned error clears its threshold, so no
+  dynamic control flow needs to cross the AOT boundary.
+- :func:`gibbs_init`      — squared-Euclidean cost + Gibbs kernel
+  ``exp(-C/eps)``: the initial transport plan for entropic UOT.
+- :func:`barycentric_map` — barycentric projection ``diag(1/rowsum) A Y``:
+  the output step of the color-transfer / domain-adaptation apps (Fig 17).
+
+Everything here is build-time Python; the lowered HLO text in
+``artifacts/`` is the only thing the request path touches.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mapuot, ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "block_m"))
+def uot_chunk(A, colsum, rpd, cpd, fi, *, n_steps: int, block_m: int):
+    """Run ``n_steps`` fused iterations; return ``(A', colsum', err)``.
+
+    ``err`` is the L-inf marginal error of ``A'`` (cheap O(M·N) reduction,
+    fused by XLA into the last iteration's sweep), letting L3 decide whether
+    to schedule another chunk without pulling the plan off the device.
+    """
+
+    def body(_, carry):
+        a, cs = carry
+        return mapuot.fused_uot_iteration(a, cs, rpd, cpd, fi, block_m=block_m)
+
+    A, colsum = jax.lax.fori_loop(0, n_steps, body, (A, colsum))
+    err = ref.marginal_error(A, rpd, cpd)
+    return A, colsum, err
+
+
+@jax.jit
+def gibbs_init(X, Y, eps):
+    """Initial plan ``K = exp(-C/eps)`` with ``C`` squared Euclidean.
+
+    Args:
+        X: source points ``(M, D)``; Y: target points ``(N, D)``;
+        eps: entropic regularizer, shape ``(1,)``.
+
+    Returns:
+        ``(K, colsum(K))`` ready to feed :func:`uot_chunk`.
+    """
+    sq = (
+        jnp.sum(X * X, axis=1)[:, None]
+        + jnp.sum(Y * Y, axis=1)[None, :]
+        - 2.0 * X @ Y.T
+    )
+    K = jnp.exp(-jnp.maximum(sq, 0.0) / eps[0])
+    return K, jnp.sum(K, axis=0)
+
+
+@jax.jit
+def barycentric_map(A, Y):
+    """Barycentric projection of the target points under plan ``A``.
+
+    ``mapped_i = (Σ_j A_ij · Y_j) / (Σ_j A_ij)`` — the color-transfer map.
+    """
+    rowsum = jnp.sum(A, axis=1)
+    return (A @ Y) / rowsum[:, None]
+
+
+def solve_reference(A, rpd, cpd, fi, n_iter: int, block_m: int):
+    """Build-time convenience: full solve through the fused kernel (tests)."""
+    colsum = jnp.sum(A, axis=0)
+    for _ in range(n_iter):
+        A, colsum = mapuot.fused_uot_iteration(A, colsum, rpd, cpd, fi, block_m=block_m)
+    return A

@@ -1,0 +1,56 @@
+"""Generate the cross-language golden file consumed by the Rust test
+`golden_cross_language` (rust/tests/golden.rs).
+
+Both sides construct the same deterministic problem from closed-form
+formulas (no RNG coupling needed), run 10 UOT iterations, and must agree:
+
+    A[i][j]  = 0.05 + ((3*i + 5*j) % 11) / 11
+    RPD[i]   = 0.3 + (i % 5) / 5
+    CPD[j]   = 0.4 + (j % 4) / 4
+    fi       = 0.7,  M = 12, N = 9, iterations = 10
+
+Run from `python/`:  python -m tests.make_golden
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+M, N, FI, ITERS = 12, 9, 0.7, 10
+
+
+def make_problem():
+    A = np.array(
+        [[0.05 + ((3 * i + 5 * j) % 11) / 11 for j in range(N)] for i in range(M)],
+        dtype=np.float32,
+    )
+    rpd = np.array([0.3 + (i % 5) / 5 for i in range(M)], dtype=np.float32)
+    cpd = np.array([0.4 + (j % 4) / 4 for j in range(N)], dtype=np.float32)
+    return A, rpd, cpd
+
+
+def solve():
+    A, rpd, cpd = make_problem()
+    out = jnp.asarray(A)
+    colsum = jnp.sum(out, axis=0)
+    for _ in range(ITERS):
+        out, colsum = ref.uot_iteration(out, colsum, jnp.asarray(rpd), jnp.asarray(cpd), FI)
+    return np.asarray(out)
+
+
+def main():
+    out = solve()
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "data", "golden_uot_12x9.txt")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(f"# golden: {M}x{N} fi={FI} iters={ITERS} — see make_golden.py\n")
+        for i in range(M):
+            f.write(" ".join(f"{v:.8e}" for v in out[i]) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

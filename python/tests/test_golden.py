@@ -1,0 +1,27 @@
+"""The checked-in golden file must stay reproducible from the oracle."""
+
+import os
+
+import numpy as np
+
+from tests import make_golden
+
+
+def golden_path():
+    return os.path.join(
+        os.path.dirname(__file__), "..", "..", "data", "golden_uot_12x9.txt"
+    )
+
+
+def test_golden_file_matches_oracle():
+    path = golden_path()
+    assert os.path.exists(path), "run `python -m tests.make_golden` and commit data/"
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#"):
+                continue
+            rows.append([float(x) for x in line.split()])
+    stored = np.array(rows, dtype=np.float32)
+    fresh = make_golden.solve()
+    np.testing.assert_allclose(stored, fresh, rtol=1e-5, atol=1e-7)

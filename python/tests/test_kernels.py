@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The hypothesis sweeps are the core correctness signal for the AOT path: the
+fused kernel must be indistinguishable (to FP tolerance) from POT semantics
+across shapes, panel sizes, dtypes, relaxation exponents and value scales.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import baseline, mapuot, ref
+
+F32 = np.float32
+
+
+def make_problem(rng, m, n, lo=0.05, hi=2.0):
+    A = jnp.asarray(rng.uniform(lo, hi, (m, n)).astype(F32))
+    rpd = jnp.asarray(rng.uniform(0.3, 1.7, m).astype(F32))
+    cpd = jnp.asarray(rng.uniform(0.3, 1.7, n).astype(F32))
+    return A, jnp.sum(A, axis=0), rpd, cpd
+
+
+def divisors(m):
+    return [d for d in range(1, m + 1) if m % d == 0]
+
+
+@st.composite
+def problems(draw):
+    m = draw(st.integers(2, 24))
+    n = draw(st.integers(2, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    fi = draw(st.floats(0.05, 1.0))
+    block_m = draw(st.sampled_from(divisors(m)))
+    return m, n, seed, fi, block_m
+
+
+@settings(max_examples=40, deadline=None)
+@given(problems())
+def test_fused_matches_oracle(p):
+    m, n, seed, fi, block_m = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    r_A, r_cs = ref.uot_iteration(A, cs, rpd, cpd, fi)
+    f_A, f_cs = mapuot.fused_uot_iteration(A, cs, rpd, cpd, fi, block_m=block_m)
+    np.testing.assert_allclose(f_A, r_A, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(f_cs, r_cs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems())
+def test_baseline_matches_oracle(p):
+    m, n, seed, fi, block_m = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    r_A, r_cs = ref.uot_iteration(A, cs, rpd, cpd, fi)
+    b_A, b_cs = baseline.baseline_uot_iteration(A, cs, rpd, cpd, fi, block_m=block_m)
+    np.testing.assert_allclose(b_A, r_A, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b_cs, r_cs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(problems(), st.integers(2, 5))
+def test_multi_iteration_composition(p, iters):
+    """K fused iterations == K oracle iterations (carried colsum survives)."""
+    m, n, seed, fi, block_m = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    fA, fcs = A, cs
+    for _ in range(iters):
+        fA, fcs = mapuot.fused_uot_iteration(fA, fcs, rpd, cpd, fi, block_m=block_m)
+    rA, rcs = A, cs
+    for _ in range(iters):
+        rA, rcs = ref.uot_iteration(rA, rcs, rpd, cpd, fi)
+    np.testing.assert_allclose(fA, rA, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(fcs, rcs, rtol=5e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_fixed_point_is_preserved(m, n, seed):
+    """If the marginals already hold, both rescalings are identity."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.uniform(0.1, 1.0, (m, n)).astype(F32))
+    rpd, cpd = jnp.sum(A, axis=1), jnp.sum(A, axis=0)
+    f_A, f_cs = mapuot.fused_uot_iteration(A, jnp.sum(A, axis=0), rpd, cpd, 0.5, block_m=1)
+    np.testing.assert_allclose(f_A, A, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(f_cs, cpd, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(0, 2**31 - 1))
+def test_balanced_row_marginal_exact(m, n, seed):
+    """fi=1 (balanced Sinkhorn): row marginals match RPD right after the
+    row rescaling — the classic Sinkhorn invariant."""
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    f_A, _ = mapuot.fused_uot_iteration(A, cs, rpd, cpd, 1.0, block_m=m)
+    np.testing.assert_allclose(jnp.sum(f_A, axis=1), rpd, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(problems())
+def test_nextsum_col_is_colsum_of_output(p):
+    """Computation IV really accumulates colsum(A') across the whole grid."""
+    m, n, seed, fi, block_m = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    f_A, f_cs = mapuot.fused_uot_iteration(A, cs, rpd, cpd, fi, block_m=block_m)
+    np.testing.assert_allclose(f_cs, jnp.sum(f_A, axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_convergence_reduces_marginal_error():
+    rng = np.random.default_rng(7)
+    A, cs, rpd, cpd = make_problem(rng, 32, 24)
+    err0 = float(ref.marginal_error(A, rpd, cpd))
+    out = A
+    colsum = cs
+    for _ in range(50):
+        out, colsum = mapuot.fused_uot_iteration(out, colsum, rpd, cpd, 0.9, block_m=8)
+    err1 = float(ref.marginal_error(out, rpd, cpd))
+    assert err1 < err0 * 0.05, (err0, err1)
+
+
+def test_pot_4sweep_equivalence():
+    """Paper Fig. 1: 4-sweep NumPy form == carried-colsum form (fresh colsum)."""
+    rng = np.random.default_rng(3)
+    A, cs, rpd, cpd = make_problem(rng, 10, 14)
+    a1, _ = ref.uot_iteration(A, cs, rpd, cpd, 0.6)
+    a2 = ref.pot_iteration_4sweep(A, rpd, cpd, 0.6)
+    np.testing.assert_allclose(a1, a2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 1e-5), (jnp.bfloat16, 0.05)])
+def test_dtypes(dtype, rtol):
+    rng = np.random.default_rng(11)
+    A = jnp.asarray(rng.uniform(0.1, 1.0, (8, 12)), dtype=dtype)
+    rpd = jnp.asarray(rng.uniform(0.5, 1.5, 8), dtype=dtype)
+    cpd = jnp.asarray(rng.uniform(0.5, 1.5, 12), dtype=dtype)
+    cs = jnp.sum(A, axis=0)
+    r_A, _ = ref.uot_iteration(A, cs, rpd, cpd, 0.5)
+    f_A, _ = mapuot.fused_uot_iteration(A, cs, rpd, cpd, 0.5, block_m=4)
+    np.testing.assert_allclose(
+        np.asarray(f_A, np.float32), np.asarray(r_A, np.float32), rtol=rtol, atol=rtol
+    )
+
+
+def test_block_m_must_divide():
+    rng = np.random.default_rng(0)
+    A, cs, rpd, cpd = make_problem(rng, 10, 10)
+    with pytest.raises(ValueError):
+        mapuot.fused_uot_iteration(A, cs, rpd, cpd, 0.5, block_m=3)
+
+
+@given(st.integers(1, 4096), st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_choose_block_m_properties(m, n):
+    bm = mapuot.choose_block_m(m, n)
+    assert m % bm == 0
+    assert bm >= 1
+    # fits budget unless even a single row overflows it
+    if mapuot.vmem_bytes(1, n) <= mapuot.VMEM_BUDGET:
+        assert mapuot.vmem_bytes(bm, n) <= mapuot.VMEM_BUDGET
+    # maximality among divisors that fit
+    for d in range(bm + 1, m + 1):
+        if m % d == 0 and mapuot.vmem_bytes(d, n) <= mapuot.VMEM_BUDGET:
+            raise AssertionError(f"{d} also fits but {bm} chosen")
+
+
+def test_hbm_traffic_ratio_is_three():
+    """Paper §3.1: baseline traffic / fused traffic == 3 (6MN vs 2MN)."""
+    assert baseline.hbm_traffic_elements(1024, 512, fused=False) == 3 * baseline.hbm_traffic_elements(1024, 512, fused=True)

@@ -1,0 +1,114 @@
+"""L2 correctness: the AOT-facing graphs (chunk, gibbs init, barycentric)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def make_problem(rng, m, n):
+    A = jnp.asarray(rng.uniform(0.05, 2.0, (m, n)).astype(F32))
+    rpd = jnp.asarray(rng.uniform(0.3, 1.7, m).astype(F32))
+    cpd = jnp.asarray(rng.uniform(0.3, 1.7, n).astype(F32))
+    return A, jnp.sum(A, axis=0), rpd, cpd
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(2, 16), st.integers(2, 16),
+    st.integers(1, 6), st.integers(0, 2**31 - 1),
+)
+def test_chunk_equals_repeated_oracle(m, n, steps, seed):
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    cA, ccs, err = model.uot_chunk(A, cs, rpd, cpd, 0.7, n_steps=steps, block_m=1)
+    rA, rcs = A, cs
+    for _ in range(steps):
+        rA, rcs = ref.uot_iteration(rA, rcs, rpd, cpd, 0.7)
+    np.testing.assert_allclose(cA, rA, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(ccs, rcs, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(err, ref.marginal_error(rA, rpd, cpd), rtol=1e-4, atol=1e-6)
+
+
+def test_chunk_converges_to_fixed_point():
+    """UOT with fi<1 converges to a *relaxed* fixed point: the marginal
+    error plateaus at a nonzero value (mass relaxation) but the plan itself
+    stops moving. We assert plan-delta → 0 and error monotone non-increasing."""
+    rng = np.random.default_rng(5)
+    A, cs, rpd, cpd = make_problem(rng, 24, 24)
+    errs, deltas = [], []
+    prev = np.asarray(A)
+    for _ in range(6):
+        A, cs, err = model.uot_chunk(A, cs, rpd, cpd, 0.8, n_steps=4, block_m=8)
+        errs.append(float(err))
+        cur = np.asarray(A)
+        deltas.append(float(np.max(np.abs(cur - prev))))
+        prev = cur
+    assert all(e2 <= e1 + 1e-6 for e1, e2 in zip(errs, errs[1:])), errs
+    assert deltas[-1] < deltas[0] * 1e-3, deltas
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_gibbs_init_matches_manual(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(m, d)).astype(F32))
+    Y = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    eps = jnp.asarray([0.5], F32)
+    K, cs = model.gibbs_init(X, Y, eps)
+    C = np.asarray(
+        ((np.asarray(X)[:, None, :] - np.asarray(Y)[None, :, :]) ** 2).sum(-1)
+    )
+    np.testing.assert_allclose(K, np.exp(-C / 0.5), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(cs, np.asarray(K).sum(0), rtol=1e-5, atol=1e-6)
+
+
+def test_gibbs_kernel_properties():
+    """K in (0, 1]; diagonal of self-transport is exactly 1."""
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.normal(size=(9, 3)).astype(F32))
+    K, _ = model.gibbs_init(X, X, jnp.asarray([0.2], F32))
+    k = np.asarray(K)
+    assert (k > 0).all() and (k <= 1.0 + 1e-6).all()
+    np.testing.assert_allclose(np.diag(k), 1.0, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 2**31 - 1))
+def test_barycentric_constant_target(m, n, seed):
+    """If every target point is c, the barycentric image is c for all rows."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.uniform(0.1, 1.0, (m, n)).astype(F32))
+    c = np.asarray([0.25, -1.5, 3.0], F32)
+    Y = jnp.broadcast_to(jnp.asarray(c), (n, 3))
+    out = model.barycentric_map(A, Y)
+    np.testing.assert_allclose(out, np.tile(c, (m, 1)), rtol=1e-5)
+
+
+def test_barycentric_is_convex_combination():
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.uniform(0.01, 1.0, (7, 9)).astype(F32))
+    Y = jnp.asarray(rng.uniform(0.0, 1.0, (9, 3)).astype(F32))
+    out = np.asarray(model.barycentric_map(A, Y))
+    y = np.asarray(Y)
+    assert (out >= y.min(0) - 1e-5).all() and (out <= y.max(0) + 1e-5).all()
+
+
+def test_end_to_end_color_pipeline():
+    """gibbs_init → chunks to convergence → barycentric map, all through L2."""
+    rng = np.random.default_rng(9)
+    X = jnp.asarray(rng.uniform(0, 1, (16, 3)).astype(F32))
+    Y = jnp.asarray(rng.uniform(0, 1, (16, 3)).astype(F32))
+    A, cs = model.gibbs_init(X, Y, jnp.asarray([0.1], F32))
+    rpd = jnp.full((16,), 1.0 / 16, F32)
+    cpd = jnp.full((16,), 1.0 / 16, F32)
+    err = None
+    for _ in range(10):
+        A, cs, err = model.uot_chunk(A, cs, rpd, cpd, 1.0, n_steps=8, block_m=4)
+    assert float(err) < 1e-4
+    mapped = np.asarray(model.barycentric_map(A, Y))
+    assert mapped.shape == (16, 3)
+    assert (mapped >= -1e-4).all() and (mapped <= 1.0 + 1e-4).all()

@@ -1,0 +1,67 @@
+"""Column-tiled two-phase kernel vs the oracle and the fused kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mapuot, ref, tiled
+
+F32 = np.float32
+
+
+def make_problem(rng, m, n):
+    A = jnp.asarray(rng.uniform(0.05, 2.0, (m, n)).astype(F32))
+    rpd = jnp.asarray(rng.uniform(0.3, 1.7, m).astype(F32))
+    cpd = jnp.asarray(rng.uniform(0.3, 1.7, n).astype(F32))
+    return A, jnp.sum(A, axis=0), rpd, cpd
+
+
+def divisors(x):
+    return [d for d in range(1, x + 1) if x % d == 0]
+
+
+@st.composite
+def tilings(draw):
+    m = draw(st.integers(2, 20))
+    n = draw(st.integers(2, 20))
+    bm = draw(st.sampled_from(divisors(m)))
+    bn = draw(st.sampled_from(divisors(n)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    fi = draw(st.floats(0.1, 1.0))
+    return m, n, bm, bn, seed, fi
+
+
+@settings(max_examples=30, deadline=None)
+@given(tilings())
+def test_tiled_matches_oracle(p):
+    m, n, bm, bn, seed, fi = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    r_A, r_cs = ref.uot_iteration(A, cs, rpd, cpd, fi)
+    t_A, t_cs = tiled.tiled_uot_iteration(A, cs, rpd, cpd, fi, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(t_A, r_A, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(t_cs, r_cs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tilings())
+def test_tiled_matches_fused(p):
+    m, n, bm, bn, seed, fi = p
+    A, cs, rpd, cpd = make_problem(np.random.default_rng(seed), m, n)
+    f_A, f_cs = mapuot.fused_uot_iteration(A, cs, rpd, cpd, fi, block_m=1)
+    t_A, t_cs = tiled.tiled_uot_iteration(A, cs, rpd, cpd, fi, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(t_A, f_A, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(t_cs, f_cs, rtol=1e-4, atol=1e-5)
+
+
+def test_tiling_must_divide():
+    rng = np.random.default_rng(0)
+    A, cs, rpd, cpd = make_problem(rng, 10, 10)
+    try:
+        tiled.tiled_uot_iteration(A, cs, rpd, cpd, 0.5, block_m=3, block_n=5)
+        raise AssertionError("should have raised")
+    except ValueError:
+        pass
+
+
+def test_structural_traffic_ratio():
+    assert tiled.hbm_traffic_ratio_vs_fused() == 2.0

@@ -1,0 +1,55 @@
+//! Ablation: coordinator batching policy — throughput/latency as a
+//! function of `batch_max` and worker count under a synthetic burst.
+//! (The design-choice study DESIGN.md calls out for the L3 batcher.)
+
+use std::sync::Arc;
+
+use map_uot::algo::{Problem, SolverKind, StopRule};
+use map_uot::bench::{fast_mode, Table};
+use map_uot::config::ServiceConfig;
+use map_uot::coordinator::Service;
+use map_uot::util::Timer;
+
+fn run_once(workers: usize, batch_max: usize, requests: usize, size: usize) -> (f64, f64) {
+    let cfg = ServiceConfig {
+        workers,
+        batch_max,
+        solver: SolverKind::MapUot,
+        stop: StopRule { tol: 0.0, delta_tol: 0.0, max_iter: 32 },
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(Service::start(cfg).expect("start"));
+    let timer = Timer::start();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| svc.submit(Problem::random(size, size, 0.8, i as u64)).expect("submit"))
+        .collect();
+    for rx in rxs {
+        let _ = rx.recv().expect("reply");
+    }
+    let wall = timer.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    Arc::try_unwrap(svc).ok().expect("sole owner").shutdown();
+    (requests as f64 / wall, m.mean_latency_ms)
+}
+
+fn main() {
+    let (requests, size) = if fast_mode() { (16, 64) } else { (64, 192) };
+    let mut t = Table::new(
+        format!("Ablation: batching policy ({requests} requests of {size}x{size}, 32 iters each)"),
+        &["workers", "batch_max", "req/s", "mean latency ms"],
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &batch_max in &[1usize, 4, 16] {
+            let (rps, lat) = run_once(workers, batch_max, requests, size);
+            t.row(&[
+                format!("{workers}"),
+                format!("{batch_max}"),
+                format!("{rps:.1}"),
+                format!("{lat:.1}"),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(single-core host: worker-count rows mainly measure scheduling overhead;");
+    println!(" batch_max rows show the batcher amortizing queue wakeups)");
+}

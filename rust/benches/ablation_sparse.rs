@@ -1,0 +1,43 @@
+//! Ablation: fused vs unfused sparse UOT (paper §6 future work), and the
+//! interweaving benefit as a function of density.
+
+use map_uot::algo::sparse::{self, CsrMatrix};
+use map_uot::bench::{fast_mode, measure, Policy, Table};
+use map_uot::util::{Matrix, XorShift};
+
+fn main() {
+    let n = if fast_mode() { 512 } else { 4096 };
+    let mut t = Table::new(
+        format!("Ablation: sparse MAP-UOT at {n}x{n} (ms/iter)"),
+        &["density", "nnz", "unfused 4-pass", "fused 1-pass", "speedup"],
+    );
+    for &density in &[0.01f32, 0.05, 0.2, 0.5] {
+        let mut rng = XorShift::new(7);
+        let dense = Matrix::from_fn(n, n, |_, _| {
+            if rng.next_f32() < density { rng.uniform(0.1, 2.0) } else { 0.0 }
+        });
+        let a0 = CsrMatrix::from_dense(&dense, 0.0);
+        let rpd = rng.uniform_vec(n, 0.3, 1.7);
+        let cpd = rng.uniform_vec(n, 0.3, 1.7);
+
+        let mut a = a0.clone();
+        let mut cs = a.col_sums();
+        let policy = Policy { warmup: 1, reps: 5 };
+        let unfused = measure(policy, || {
+            sparse::iterate_baseline(&mut a, &mut cs, &rpd, &cpd, 0.7)
+        }) * 1e3;
+        let mut b = a0.clone();
+        let mut cs2 = b.col_sums();
+        let fused = measure(policy, || {
+            sparse::iterate(&mut b, &mut cs2, &rpd, &cpd, 0.7)
+        }) * 1e3;
+        t.row(&[
+            format!("{density}"),
+            format!("{}", a0.nnz()),
+            format!("{unfused:.3}"),
+            format!("{fused:.3}"),
+            format!("{:.2}x", unfused / fused),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,9 @@
+//! `cargo bench` harness regenerating paper Figure 8.
+//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
+//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+
+fn main() {
+    let (a, b) = map_uot::bench::figures::fig08();
+    a.print();
+    b.print();
+}

@@ -1,0 +1,9 @@
+//! `cargo bench` harness regenerating paper Figure 9.
+//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
+//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+
+fn main() {
+    let (t, s) = map_uot::bench::figures::fig09();
+    t.print();
+    println!("summary (paper claims up to 2.9x/2.4x, avg 1.9x/1.6x): {s}");
+}

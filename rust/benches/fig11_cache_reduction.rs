@@ -1,0 +1,7 @@
+//! `cargo bench` harness regenerating paper Figure 11.
+//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
+//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+
+fn main() {
+    map_uot::bench::figures::fig11().print();
+}

@@ -1,0 +1,9 @@
+//! `cargo bench` harness regenerating paper Figure 13.
+//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
+//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+
+fn main() {
+    let (t, s) = map_uot::bench::figures::fig13();
+    t.print();
+    println!("summary (paper claims up to 3.5x, avg 1.6x): {s}");
+}

@@ -1,0 +1,9 @@
+//! `cargo bench` harness regenerating paper Figure 17.
+//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
+//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+
+fn main() {
+    let (t, s) = map_uot::bench::figures::fig17();
+    t.print();
+    println!("summary (paper: 2.77x/1.79x at 1920x1280 on CPU): {s}");
+}

@@ -1,0 +1,99 @@
+//! §Perf harness: achieved memory bandwidth of the solver inner loops vs
+//! this machine's practical streaming peak (a memcpy-like roofline), plus
+//! per-primitive timings. This is the measurement loop behind
+//! EXPERIMENTS.md §Perf — run directly with
+//! `cargo bench --bench perf_kernel`.
+
+use map_uot::algo::{self, mapuot, SolverKind};
+use map_uot::bench::{measure, Policy, Table};
+use map_uot::util::Matrix;
+
+// 420 MB plan: beyond even this host's 260 MB LLC, so the sweeps hit DRAM
+// and the paper's traffic argument applies. (At LLC-resident sizes the
+// fused and phase-fused variants tie — recorded in EXPERIMENTS.md §Perf.)
+const S: usize = 10240;
+
+fn streaming_peak_gbs() -> f64 {
+    // Practical peak: a scale-by-constant sweep (1 read + 1 write, fully
+    // vectorizable, no dependencies) over the same footprint.
+    let mut m = Matrix::from_fn(S, S, |i, j| (i + j) as f32 * 1e-6 + 0.5);
+    let sec = measure(Policy { warmup: 1, reps: 5 }, || {
+        for v in m.as_mut_slice() {
+            *v *= 1.000001;
+        }
+    });
+    2.0 * (S * S * 4) as f64 / sec / 1e9
+}
+
+fn solver_gbs(kind: SolverKind) -> (f64, f64) {
+    let p = algo::Problem::random(S, S, 0.7, 1);
+    let mut plan = p.plan.clone();
+    let mut cs = plan.col_sums();
+    let sec = measure(Policy { warmup: 1, reps: 5 }, || {
+        algo::iterate_once(kind, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+    });
+    let bytes = kind.sweeps_per_iter() as f64 * (S * S * 4) as f64;
+    (bytes / sec / 1e9, sec * 1e3)
+}
+
+fn primitive_gbs() -> (f64, f64) {
+    // The two fused row primitives in isolation.
+    let n = S;
+    let mut row = vec![1.0f32; n * 16];
+    let fcol = vec![1.0000001f32; n];
+    let mut ncs = vec![0f32; n];
+    let t1 = measure(Policy { warmup: 1, reps: 5 }, || {
+        let mut acc = 0f32;
+        for r in row.chunks_exact_mut(n) {
+            acc += mapuot::scale_by_vec_and_sum(r, &fcol);
+        }
+        std::hint::black_box(acc)
+    });
+    let t2 = measure(Policy { warmup: 1, reps: 5 }, || {
+        for r in row.chunks_exact_mut(n) {
+            mapuot::scale_by_scalar_and_accumulate(r, 0.9999999, &mut ncs);
+        }
+    });
+    let bytes = (row.len() * 4) as f64 * 2.0; // read+write per element
+    (bytes / t1 / 1e9, bytes / t2 / 1e9)
+}
+
+fn lazy_ms() -> f64 {
+    let p = algo::Problem::random(S, S, 0.7, 1);
+    let mut solver =
+        algo::lazy::LazySolver::new(p.plan.clone(), p.rpd.clone(), p.cpd.clone(), p.fi);
+    measure(Policy { warmup: 1, reps: 5 }, || solver.iterate()) * 1e3
+}
+
+fn main() {
+    let peak = streaming_peak_gbs();
+    let (p1, p2) = primitive_gbs();
+    let mut t = Table::new(
+        format!("Perf: achieved bandwidth at {S}x{S} (streaming peak {peak:.1} GB/s)"),
+        &["what", "GB/s", "ms/iter", "% of streaming peak"],
+    );
+    for kind in SolverKind::ALL {
+        let (gbs, ms) = solver_gbs(kind);
+        t.row(&[
+            kind.name().into(),
+            format!("{gbs:.1}"),
+            format!("{ms:.2}"),
+            format!("{:.0}%", gbs / peak * 100.0),
+        ]);
+    }
+    t.row(&["primitive: scale+rowsum".into(), format!("{p1:.1}"), "-".into(), format!("{:.0}%", p1 / peak * 100.0)]);
+    t.row(&["primitive: scale+colacc".into(), format!("{p2:.1}"), "-".into(), format!("{:.0}%", p2 / peak * 100.0)]);
+    let lz = lazy_ms();
+    let lazy_gbs = 2.0 * (S * S * 4) as f64 / (lz * 1e-3) / 1e9;
+    t.row(&[
+        "MAP-UOT lazy (§Perf)".into(),
+        format!("{lazy_gbs:.1}"),
+        format!("{lz:.2}"),
+        format!("{:.0}%", lazy_gbs / peak * 100.0),
+    ]);
+    t.print();
+    println!(
+        "\ninterpretation: MAP-UOT moves 2 element-accesses/cell/iter; at the\n\
+         streaming peak its ms/iter is the practical roofline on this host."
+    );
+}

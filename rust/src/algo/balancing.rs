@@ -1,0 +1,139 @@
+//! Generality of the interweaving strategy (paper §1: "broad generality
+//! for algorithms with similar iterations of row and column rescaling" —
+//! e.g. Sinkhorn-Knopp matrix balancing and the Sinkhorn-distance/EMD
+//! kernel of Cuturi).
+//!
+//! This module applies the fused double-loop to two cousins of UOT:
+//!
+//! * **Doubly-stochastic balancing** (Sinkhorn–Knopp): scale a positive
+//!   matrix until every row and column sums to 1 — UOT with uniform
+//!   marginals and `fi = 1`.
+//! * **Sinkhorn distance**: run balanced Sinkhorn on the Gibbs kernel of a
+//!   cost matrix and return `Σ_ij P_ij · C_ij` — the entropic OT cost.
+//!
+//! Both reuse `mapuot::fused_rows` unchanged, which is the generality
+//! claim in executable form.
+
+use crate::algo::mapuot;
+use crate::algo::scaling::factors_into;
+use crate::util::Matrix;
+
+/// Fused Sinkhorn–Knopp balancing step: one pass, uniform marginals.
+pub fn balance_iterate(a: &mut Matrix, colsum: &mut [f32]) {
+    let (m, n) = (a.rows(), a.cols());
+    let rpd = vec![1.0f32; m];
+    let cpd = vec![1.0f32; n];
+    let mut fcol = vec![0f32; n];
+    factors_into(&mut fcol, &cpd, colsum, 1.0);
+    colsum.fill(0.0);
+    mapuot::fused_rows(a.as_mut_slice(), n, &rpd, &fcol, 1.0, colsum);
+}
+
+/// Balance `a` to row/col sums of 1 within `tol`; returns iterations used
+/// (or `max_iter` if the budget ran out).
+pub fn balance(a: &mut Matrix, tol: f32, max_iter: usize) -> usize {
+    let mut colsum = a.col_sums();
+    for it in 0..max_iter {
+        balance_iterate(a, &mut colsum);
+        let row_err = a
+            .row_sums()
+            .iter()
+            .map(|r| (r - 1.0).abs())
+            .fold(0f32, f32::max);
+        let col_err = colsum.iter().map(|c| (c - 1.0).abs()).fold(0f32, f32::max);
+        if row_err.max(col_err) <= tol {
+            return it + 1;
+        }
+    }
+    max_iter
+}
+
+/// Entropic OT (Sinkhorn distance, Cuturi 2013): `min <P, C> + entropy`,
+/// solved by balanced Sinkhorn on `K = exp(-C/eps)` with marginals
+/// `(r, c)`, via the same fused pass. Returns `(P, distance)`.
+pub fn sinkhorn_distance(
+    cost: &Matrix,
+    r: &[f32],
+    c: &[f32],
+    eps: f32,
+    iters: usize,
+) -> (Matrix, f32) {
+    let (m, n) = (cost.rows(), cost.cols());
+    let mut p = Matrix::from_fn(m, n, |i, j| (-cost.get(i, j) / eps).exp());
+    let mut colsum = p.col_sums();
+    let mut fcol = vec![0f32; n];
+    for _ in 0..iters {
+        factors_into(&mut fcol, c, &colsum, 1.0);
+        colsum.fill(0.0);
+        mapuot::fused_rows(p.as_mut_slice(), n, r, &fcol, 1.0, &mut colsum);
+    }
+    let dist: f32 = (0..m)
+        .map(|i| {
+            p.row(i)
+                .iter()
+                .zip(cost.row(i))
+                .map(|(&pv, &cv)| pv * cv)
+                .sum::<f32>()
+        })
+        .sum();
+    (p, dist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn balancing_converges_to_doubly_stochastic() {
+        let mut rng = XorShift::new(1);
+        // Square positive matrix scaled so total mass == n (required for
+        // doubly-stochastic feasibility).
+        let n = 16;
+        let mut a = Matrix::from_fn(n, n, |_, _| rng.uniform(0.2, 2.0));
+        let iters = balance(&mut a, 1e-4, 500);
+        assert!(iters < 500, "did not converge");
+        for rs in a.row_sums() {
+            assert!((rs - 1.0).abs() < 1e-3, "{rs}");
+        }
+        for cs in a.col_sums() {
+            assert!((cs - 1.0).abs() < 1e-3, "{cs}");
+        }
+    }
+
+    #[test]
+    fn sinkhorn_distance_identity_cost_is_cheap() {
+        // Cost 0 on the diagonal, 1 elsewhere: optimal plan concentrates on
+        // the diagonal, so the entropic cost is far below uniform.
+        let n = 12;
+        let cost = Matrix::from_fn(n, n, |i, j| if i == j { 0.0 } else { 1.0 });
+        let marg = vec![1.0 / n as f32; n];
+        let (p, d) = sinkhorn_distance(&cost, &marg, &marg, 0.05, 200);
+        let uniform_cost = (n as f32 - 1.0) / n as f32; // <U, C>
+        assert!(d < 0.2 * uniform_cost, "d={d} uniform={uniform_cost}");
+        // Plan marginals hold.
+        for rs in p.row_sums() {
+            assert!((rs - 1.0 / n as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sinkhorn_distance_is_symmetric_for_symmetric_cost() {
+        let mut rng = XorShift::new(3);
+        let n = 8;
+        let mut cost = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = if i == j { 0.0 } else { rng.uniform(0.2, 1.0) };
+                cost.set(i, j, v);
+                cost.set(j, i, v);
+            }
+        }
+        let marg = vec![1.0 / n as f32; n];
+        let (_, d1) = sinkhorn_distance(&cost, &marg, &marg, 0.1, 100);
+        // Transpose problem: same distance for symmetric cost + equal marginals.
+        let cost_t = Matrix::from_fn(n, n, |i, j| cost.get(j, i));
+        let (_, d2) = sinkhorn_distance(&cost_t, &marg, &marg, 0.1, 100);
+        assert!((d1 - d2).abs() < 1e-4, "{d1} vs {d2}");
+    }
+}

@@ -1,0 +1,87 @@
+//! Convergence metrics and stopping criteria.
+
+use crate::util::Matrix;
+
+/// L-inf distance of the plan's marginals from `(rpd, cpd)`, computed in a
+/// single row-major sweep (same definition as `ref.marginal_error` in L1).
+pub fn marginal_error(plan: &Matrix, rpd: &[f32], cpd: &[f32]) -> f32 {
+    let n = plan.cols();
+    let mut colsum = vec![0f32; n];
+    let mut row_err = 0f32;
+    for i in 0..plan.rows() {
+        let mut rs = 0f32;
+        for (s, &v) in colsum.iter_mut().zip(plan.row(i)) {
+            rs += v;
+            *s += v;
+        }
+        row_err = row_err.max((rs - rpd[i]).abs());
+    }
+    let col_err = colsum
+        .iter()
+        .zip(cpd)
+        .map(|(s, &t)| (s - t).abs())
+        .fold(0f32, f32::max);
+    row_err.max(col_err)
+}
+
+/// Max element-wise change between consecutive plans; UOT with `fi < 1`
+/// converges to a *relaxed* fixed point where the marginal error plateaus
+/// at a nonzero value, so fixed-point motion is the robust criterion.
+pub fn plan_delta(prev: &Matrix, cur: &Matrix) -> f32 {
+    prev.max_abs_diff(cur)
+}
+
+/// Stopping rule evaluated between iteration chunks.
+#[derive(Debug, Clone, Copy)]
+pub struct StopRule {
+    /// Stop when the marginal L-inf error is below this (used with fi = 1
+    /// or when the application wants marginal feasibility).
+    pub tol: f32,
+    /// Also stop when the plan stops moving by more than this (the relaxed
+    /// fixed point for fi < 1).
+    pub delta_tol: f32,
+    /// Hard iteration budget.
+    pub max_iter: usize,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        Self { tol: 1e-4, delta_tol: 1e-6, max_iter: 10_000 }
+    }
+}
+
+impl StopRule {
+    /// Has the solve finished, given the latest metrics?
+    pub fn is_done(&self, err: f32, delta: f32, iters: usize) -> bool {
+        err <= self.tol || delta <= self.delta_tol || iters >= self.max_iter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_error_at_satisfied_marginals() {
+        let m = Matrix::from_fn(3, 4, |i, j| (1 + i + j) as f32);
+        let err = marginal_error(&m, &m.row_sums(), &m.col_sums());
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn error_reflects_worst_violation() {
+        let m = Matrix::from_fn(2, 2, |_, _| 1.0);
+        // row sums = [2,2], col sums = [2,2]
+        let err = marginal_error(&m, &[2.0, 5.0], &[2.0, 2.0]);
+        assert_eq!(err, 3.0);
+    }
+
+    #[test]
+    fn stop_rule_thresholds() {
+        let r = StopRule { tol: 1e-3, delta_tol: 1e-7, max_iter: 10 };
+        assert!(r.is_done(1e-4, 1.0, 0));
+        assert!(r.is_done(1.0, 1e-8, 0));
+        assert!(r.is_done(1.0, 1.0, 10));
+        assert!(!r.is_done(1.0, 1.0, 9));
+    }
+}

@@ -1,0 +1,179 @@
+//! Double-precision solvers (paper §5.1: "we obtain similar performance
+//! improvement when using double-precision floating-point numbers").
+//!
+//! f64 doubles every solver's byte traffic, so the *ratios* between POT /
+//! COFFEE / MAP-UOT are unchanged (all scale by the same factor) while
+//! absolute times roughly double in the DRAM-bound regime — which is
+//! exactly what `benches/ablation_fp64.rs` verifies. Kept as a separate,
+//! self-contained f64 implementation rather than genericizing the f32 hot
+//! path (monomorphization would be free, but the f32 path's layout
+//! guarantees and tests stay simpler untouched).
+
+use crate::util::XorShift;
+
+/// One fused MAP-UOT iteration over a row-major f64 matrix.
+pub fn mapuot_iterate(
+    plan: &mut [f64],
+    n: usize,
+    colsum: &mut [f64],
+    rpd: &[f64],
+    cpd: &[f64],
+    fi: f64,
+) {
+    debug_assert_eq!(plan.len(), rpd.len() * n);
+    let mut fcol = vec![0f64; n];
+    for ((f, &t), &s) in fcol.iter_mut().zip(cpd).zip(colsum.iter()) {
+        *f = if s > 0.0 { (t / s).powf(fi) } else { 0.0 };
+    }
+    colsum.fill(0.0);
+    for (i, row) in plan.chunks_exact_mut(n).enumerate() {
+        // Computations I + II (8-lane accumulator: AVX-width for f64).
+        const W: usize = 8;
+        let mut acc = [0f64; W];
+        let chunks = n / W;
+        let (rh, rt) = row.split_at_mut(chunks * W);
+        let (fh, ft) = fcol.split_at(chunks * W);
+        for (rw, fw) in rh.chunks_exact_mut(W).zip(fh.chunks_exact(W)) {
+            for k in 0..W {
+                rw[k] *= fw[k];
+                acc[k] += rw[k];
+            }
+        }
+        let mut s = acc.iter().sum::<f64>();
+        for (r, &f) in rt.iter_mut().zip(ft) {
+            *r *= f;
+            s += *r;
+        }
+        // Computations III + IV.
+        let fr = if s > 0.0 { (rpd[i] / s).powf(fi) } else { 0.0 };
+        for (v, cs) in row.iter_mut().zip(colsum.iter_mut()) {
+            *v *= fr;
+            *cs += *v;
+        }
+    }
+}
+
+/// One POT (4-sweep) iteration over f64 — comparator for the ablation.
+pub fn pot_iterate(
+    plan: &mut [f64],
+    n: usize,
+    colsum: &mut [f64],
+    rpd: &[f64],
+    cpd: &[f64],
+    fi: f64,
+) {
+    let m = plan.len() / n;
+    // Sweep 1.
+    let mut sums = vec![0f64; n];
+    for row in plan.chunks_exact(n) {
+        for (s, &v) in sums.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    let mut fcol = vec![0f64; n];
+    for ((f, &t), &s) in fcol.iter_mut().zip(cpd).zip(&sums) {
+        *f = if s > 0.0 { (t / s).powf(fi) } else { 0.0 };
+    }
+    // Sweep 2.
+    for row in plan.chunks_exact_mut(n) {
+        for (v, &f) in row.iter_mut().zip(&fcol) {
+            *v *= f;
+        }
+    }
+    // Sweep 3.
+    let rowsum: Vec<f64> = plan.chunks_exact(n).map(|r| r.iter().sum()).collect();
+    // Sweep 4.
+    for (i, row) in plan.chunks_exact_mut(n).enumerate() {
+        let fr = if rowsum[i] > 0.0 { (rpd[i] / rowsum[i]).powf(fi) } else { 0.0 };
+        for v in row {
+            *v *= fr;
+        }
+    }
+    // Refresh carried colsum.
+    colsum.fill(0.0);
+    for row in plan.chunks_exact(n) {
+        for (s, &v) in colsum.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+    let _ = m;
+}
+
+/// Deterministic random f64 problem matching `Problem::random`'s ranges.
+pub fn random_problem(m: usize, n: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift::new(seed);
+    let plan = (0..m * n).map(|_| rng.uniform(0.05, 2.0) as f64).collect();
+    let rpd = (0..m).map(|_| rng.uniform(0.3, 1.7) as f64).collect();
+    let cpd = (0..n).map(|_| rng.uniform(0.3, 1.7) as f64).collect();
+    (plan, rpd, cpd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn colsums(plan: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0f64; n];
+        for row in plan.chunks_exact(n) {
+            for (s, &v) in out.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fp64_mapuot_matches_fp64_pot() {
+        let (plan0, rpd, cpd) = random_problem(15, 11, 3);
+        let mut a = plan0.clone();
+        let mut b = plan0.clone();
+        let mut cs_a = colsums(&a, 11);
+        let mut cs_b = colsums(&b, 11);
+        for _ in 0..8 {
+            mapuot_iterate(&mut a, 11, &mut cs_a, &rpd, &cpd, 0.7);
+            pot_iterate(&mut b, 11, &mut cs_b, &rpd, &cpd, 0.7);
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-10 * y.abs().max(1e-10), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fp64_matches_fp32_to_single_precision() {
+        // Same problem through the f32 path: answers agree to f32 accuracy.
+        let (plan64, rpd64, cpd64) = random_problem(12, 9, 5);
+        let p32 = crate::algo::Problem::random(12, 9, 0.7, 5);
+        let mut a64 = plan64.clone();
+        let mut cs64 = colsums(&a64, 9);
+        let mut a32 = p32.plan.clone();
+        let mut cs32 = a32.col_sums();
+        for _ in 0..5 {
+            mapuot_iterate(&mut a64, 9, &mut cs64, &rpd64, &cpd64, 0.7);
+            crate::algo::mapuot::iterate(&mut a32, &mut cs32, &p32.rpd, &p32.cpd, 0.7);
+        }
+        for (x64, x32) in a64.iter().zip(a32.as_slice()) {
+            assert!(
+                (x64 - *x32 as f64).abs() < 1e-4 * x64.abs().max(1e-4),
+                "{x64} vs {x32}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp64_higher_precision_on_long_runs() {
+        // After many iterations the carried f64 colsum drifts less from the
+        // fresh colsum than f32 does on an equivalent problem.
+        let (mut a, rpd, cpd) = random_problem(32, 24, 9);
+        let mut cs = colsums(&a, 24);
+        for _ in 0..200 {
+            mapuot_iterate(&mut a, 24, &mut cs, &rpd, &cpd, 0.9);
+        }
+        let fresh = colsums(&a, 24);
+        let drift = cs
+            .iter()
+            .zip(&fresh)
+            .map(|(c, f)| (c - f).abs() / f.abs().max(1e-12))
+            .fold(0f64, f64::max);
+        assert!(drift < 1e-9, "f64 drift {drift}");
+    }
+}

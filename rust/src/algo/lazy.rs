@@ -1,0 +1,181 @@
+//! Lazy-rescaling MAP-UOT: a §Perf experiment *beyond* the paper —
+//! measured SLOWER than the eager fused loop and kept as a documented
+//! negative result (EXPERIMENTS.md §Perf step 2). Opt-in only; nothing in
+//! the default solve path uses it.
+//!
+//! Idea: the iterate is `diag(f_row) · A · diag(f_col)`, so instead of
+//! applying `f_row` immediately (Algorithm 1's second store pass), carry
+//! it and fold it into the *next* iteration's column pass:
+//!
+//! ```text
+//! pass A (per row): a' = A[i][j] · f_row_prev[i] · f_col[j]   (1 store)
+//!                   rowsum += a'            → f_row[i] for this iter
+//! pass B (cached) : colsum[j] += f_row[i] · a'  (re-read, NO store)
+//! ```
+//!
+//! `f_row[i]` is only known after the row's pass A completes, so the
+//! column sums of the true iterate must come from a cached re-read
+//! (pass B) — but that re-read no longer *writes*, halving store traffic
+//! versus Algorithm 1 (1 write/cell/iter instead of 2, on write-allocate
+//! caches a 2× store saving).
+//!
+//! Why it loses in practice on this host: pass A carries an extra multiply
+//! per element and pass B's read-after-write of the just-stored row stalls
+//! on store-to-load forwarding, which costs more than the saved writeback
+//! bandwidth. See the `perf_kernel` bench for the numbers.
+//!
+//! The stored plan lags one row-scaling behind the true iterate;
+//! [`LazySolver::flush`] applies the pending factors (one extra pass),
+//! which the driver does before any convergence check or when returning
+//! the plan.
+
+use crate::algo::scaling::{factor, factors_into};
+use crate::util::Matrix;
+
+/// Carried state of the lazy solver.
+pub struct LazySolver {
+    plan: Matrix,
+    /// Pending row factors not yet applied to `plan` (all 1.0 initially).
+    pending_frow: Vec<f32>,
+    /// Column sums of the *true* iterate (post both rescalings).
+    colsum: Vec<f32>,
+    rpd: Vec<f32>,
+    cpd: Vec<f32>,
+    fi: f32,
+    iters: usize,
+}
+
+impl LazySolver {
+    pub fn new(plan: Matrix, rpd: Vec<f32>, cpd: Vec<f32>, fi: f32) -> Self {
+        let colsum = plan.col_sums();
+        let m = plan.rows();
+        Self { plan, pending_frow: vec![1.0; m], colsum, rpd, cpd, fi, iters: 0 }
+    }
+
+    pub fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// One iteration: single fused pass with the pending row factors
+    /// folded in, plus a cached colsum re-read (no store).
+    pub fn iterate(&mut self) {
+        let (m, n) = (self.plan.rows(), self.plan.cols());
+        let mut fcol = vec![0f32; n];
+        factors_into(&mut fcol, &self.cpd, &self.colsum, self.fi);
+        self.colsum.fill(0.0);
+
+        for i in 0..m {
+            let fp = self.pending_frow[i];
+            let row = self.plan.row_mut(i);
+            // Pass A: fold pending row factor + new column factor, one
+            // write per element, accumulate the row sum.
+            const W: usize = 16;
+            let mut acc = [0f32; W];
+            let chunks = n / W;
+            let (rh, rt) = row.split_at_mut(chunks * W);
+            let (fh, ft) = fcol.split_at(chunks * W);
+            for (rw, fw) in rh.chunks_exact_mut(W).zip(fh.chunks_exact(W)) {
+                for k in 0..W {
+                    rw[k] *= fp * fw[k];
+                    acc[k] += rw[k];
+                }
+            }
+            let mut s = acc.iter().sum::<f32>();
+            for (r, &f) in rt.iter_mut().zip(ft) {
+                *r *= fp * f;
+                s += *r;
+            }
+            // New row factor — NOT applied to the row (deferred), but the
+            // carried colsum must reflect it, so the cached re-read
+            // accumulates `fr · row` without storing.
+            let fr = factor(self.rpd[i], s, self.fi);
+            self.pending_frow[i] = fr;
+            for (v, cs) in row.iter().zip(self.colsum.iter_mut()) {
+                *cs += fr * *v;
+            }
+        }
+        self.iters += 1;
+    }
+
+    /// Apply pending row factors; afterwards `plan()` is the true iterate.
+    pub fn flush(&mut self) {
+        for i in 0..self.plan.rows() {
+            let fr = self.pending_frow[i];
+            if fr != 1.0 {
+                for v in self.plan.row_mut(i) {
+                    *v *= fr;
+                }
+            }
+            self.pending_frow[i] = 1.0;
+        }
+    }
+
+    /// The (possibly lagged) plan; call [`flush`] first for the true one.
+    pub fn plan(&self) -> &Matrix {
+        &self.plan
+    }
+
+    /// Finish: flush and return the plan.
+    pub fn into_plan(mut self) -> Matrix {
+        self.flush();
+        self.plan
+    }
+
+    pub fn colsum(&self) -> &[f32] {
+        &self.colsum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{mapuot, problem::Problem};
+
+    #[test]
+    fn lazy_matches_eager_exactly_enough() {
+        for seed in [1u64, 7, 13] {
+            let p = Problem::random(19, 23, 0.7, seed);
+            let mut lazy = LazySolver::new(p.plan.clone(), p.rpd.clone(), p.cpd.clone(), p.fi);
+            let mut eager = p.plan.clone();
+            let mut cs = eager.col_sums();
+            for _ in 0..7 {
+                lazy.iterate();
+                mapuot::iterate(&mut eager, &mut cs, &p.rpd, &p.cpd, p.fi);
+            }
+            // Carried colsums agree even before flush.
+            for (a, b) in lazy.colsum().iter().zip(&cs) {
+                assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+            }
+            let plan = lazy.into_plan();
+            assert!(plan.max_rel_diff(&eager, 1e-6) < 1e-3, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn flush_is_idempotent() {
+        let p = Problem::random(8, 8, 0.5, 3);
+        let mut lazy = LazySolver::new(p.plan.clone(), p.rpd.clone(), p.cpd.clone(), p.fi);
+        lazy.iterate();
+        lazy.flush();
+        let once = lazy.plan().clone();
+        lazy.flush();
+        assert_eq!(lazy.plan().max_abs_diff(&once), 0.0);
+    }
+
+    #[test]
+    fn iterating_after_flush_still_correct() {
+        let p = Problem::random(11, 9, 0.8, 5);
+        let mut lazy = LazySolver::new(p.plan.clone(), p.rpd.clone(), p.cpd.clone(), p.fi);
+        lazy.iterate();
+        lazy.flush(); // mid-solve convergence check would do this
+        lazy.iterate();
+        let plan = lazy.into_plan();
+
+        let mut eager = p.plan.clone();
+        let mut cs = eager.col_sums();
+        for _ in 0..2 {
+            mapuot::iterate(&mut eager, &mut cs, &p.rpd, &p.cpd, p.fi);
+        }
+        assert!(plan.max_rel_diff(&eager, 1e-6) < 1e-3);
+    }
+}

@@ -1,0 +1,213 @@
+//! Native UOT solvers: POT baseline, COFFEE comparator, MAP-UOT.
+//!
+//! All three share one semantics (see `python/compile/kernels/ref.py`, the
+//! cross-layer oracle): per iteration, a column rescaling from the carried
+//! column sums followed by a row rescaling, with relaxation exponent `fi`.
+//! They differ **only** in how many times the matrix streams through memory
+//! — which is the paper's entire subject:
+//!
+//! | solver  | sweeps/iter | element traffic | layout        |
+//! |---------|-------------|-----------------|---------------|
+//! | POT     | 4           | 6·M·N           | row-major     |
+//! | COFFEE  | 2           | 4·M·N           | row-major     |
+//! | MAP-UOT | 1 (fused)   | 2·M·N           | row-major     |
+
+pub mod balancing;
+pub mod coffee;
+pub mod convergence;
+pub mod fp64;
+pub mod lazy;
+pub mod mapuot;
+pub mod sparse;
+pub mod parallel;
+pub mod pot;
+pub mod problem;
+pub mod scaling;
+
+pub use convergence::StopRule;
+pub use problem::Problem;
+
+use crate::util::{Matrix, Timer};
+
+/// Which solver implementation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    /// POT / NumPy 4-sweep baseline.
+    Pot,
+    /// COFFEE phase-fused 2-sweep comparator.
+    Coffee,
+    /// MAP-UOT fused single-sweep (the paper's contribution).
+    MapUot,
+}
+
+impl SolverKind {
+    pub const ALL: [SolverKind; 3] = [SolverKind::Pot, SolverKind::Coffee, SolverKind::MapUot];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::Pot => "POT",
+            SolverKind::Coffee => "COFFEE",
+            SolverKind::MapUot => "MAP-UOT",
+        }
+    }
+
+    /// Matrix-touching sweeps per iteration (drives traffic models & sims).
+    pub fn sweeps_per_iter(self) -> usize {
+        match self {
+            SolverKind::Pot => 6,    // 4 passes, 2 of them read+write
+            SolverKind::Coffee => 4, // 2 read+write passes
+            SolverKind::MapUot => 2, // 1 read + 1 write
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pot" | "baseline" | "numpy" => Some(SolverKind::Pot),
+            "coffee" => Some(SolverKind::Coffee),
+            "mapuot" | "map-uot" | "map_uot" => Some(SolverKind::MapUot),
+            _ => None,
+        }
+    }
+}
+
+/// Execution options for [`solve`].
+#[derive(Debug, Clone, Copy)]
+pub struct SolveOptions {
+    /// Worker threads (1 = serial paths).
+    pub threads: usize,
+    /// Stopping criteria.
+    pub stop: StopRule,
+    /// Evaluate the stop rule every this many iterations (convergence
+    /// checks cost one extra sweep, so they are amortized — same rationale
+    /// as the AOT chunk size at L2/L3).
+    pub check_every: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self { threads: 1, stop: StopRule::default(), check_every: 8 }
+    }
+}
+
+/// Outcome of a [`solve`] run.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveReport {
+    pub iters: usize,
+    pub err: f32,
+    pub delta: f32,
+    pub converged: bool,
+    pub seconds: f64,
+}
+
+/// Advance one iteration of `kind` (serial if `threads == 1`).
+pub fn iterate_once(
+    kind: SolverKind,
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+) {
+    match (kind, threads) {
+        (SolverKind::Pot, 1) => pot::iterate(plan, colsum, rpd, cpd, fi),
+        (SolverKind::Coffee, 1) => coffee::iterate(plan, colsum, rpd, cpd, fi),
+        (SolverKind::MapUot, 1) => mapuot::iterate(plan, colsum, rpd, cpd, fi),
+        (SolverKind::Pot, t) => parallel::pot_iterate(plan, colsum, rpd, cpd, fi, t),
+        (SolverKind::Coffee, t) => parallel::coffee_iterate(plan, colsum, rpd, cpd, fi, t),
+        (SolverKind::MapUot, t) => parallel::mapuot_iterate(plan, colsum, rpd, cpd, fi, t),
+    }
+}
+
+/// Solve `problem` to the stop rule; returns the final plan and a report.
+pub fn solve(kind: SolverKind, problem: &Problem, opts: SolveOptions) -> (Matrix, SolveReport) {
+    let timer = Timer::start();
+    let mut plan = problem.plan.clone();
+    let mut colsum = plan.col_sums();
+    let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
+
+    let mut iters = 0;
+    let mut prev = plan.clone();
+    let (mut err, mut delta);
+    loop {
+        let steps = opts.check_every.max(1);
+        for _ in 0..steps {
+            iterate_once(kind, &mut plan, &mut colsum, rpd, cpd, fi, opts.threads);
+        }
+        iters += steps;
+        err = convergence::marginal_error(&plan, rpd, cpd);
+        delta = convergence::plan_delta(&prev, &plan);
+        if opts.stop.is_done(err, delta, iters) {
+            break;
+        }
+        prev = plan.clone();
+    }
+
+    let converged = err <= opts.stop.tol || delta <= opts.stop.delta_tol;
+    (
+        plan,
+        SolveReport { iters, err, delta, converged, seconds: timer.elapsed().as_secs_f64() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_agree_after_full_solve() {
+        let p = Problem::random(24, 18, 0.8, 42);
+        let opts = SolveOptions { check_every: 4, ..Default::default() };
+        let (a, ra) = solve(SolverKind::MapUot, &p, opts);
+        let (b, rb) = solve(SolverKind::Pot, &p, opts);
+        let (c, rc) = solve(SolverKind::Coffee, &p, opts);
+        assert!(ra.converged && rb.converged && rc.converged);
+        assert!(a.max_rel_diff(&b, 1e-6) < 1e-2);
+        assert!(a.max_rel_diff(&c, 1e-6) < 1e-2);
+    }
+
+    #[test]
+    fn balanced_solve_hits_marginals() {
+        // fi = 1 with equal total masses: classic Sinkhorn feasibility.
+        let mut p = Problem::random(16, 16, 1.0, 7);
+        let total_r: f32 = p.rpd.iter().sum();
+        let total_c: f32 = p.cpd.iter().sum();
+        for v in &mut p.cpd {
+            *v *= total_r / total_c;
+        }
+        let opts = SolveOptions {
+            stop: StopRule { tol: 1e-4, delta_tol: 0.0, max_iter: 5_000 },
+            ..Default::default()
+        };
+        let (plan, report) = solve(SolverKind::MapUot, &p, opts);
+        assert!(report.converged, "err={}", report.err);
+        for (rs, &t) in plan.row_sums().iter().zip(&p.rpd) {
+            assert!((rs - t).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn parallel_solve_matches_serial_solve() {
+        let p = Problem::random(32, 20, 0.6, 9);
+        let serial = SolveOptions::default();
+        let par = SolveOptions { threads: 4, ..Default::default() };
+        let (a, _) = solve(SolverKind::MapUot, &p, serial);
+        let (b, _) = solve(SolverKind::MapUot, &p, par);
+        assert!(a.max_rel_diff(&b, 1e-6) < 1e-3);
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(SolverKind::parse("map-uot"), Some(SolverKind::MapUot));
+        assert_eq!(SolverKind::parse("POT"), Some(SolverKind::Pot));
+        assert_eq!(SolverKind::parse("coffee"), Some(SolverKind::Coffee));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn traffic_ordering() {
+        assert!(SolverKind::Pot.sweeps_per_iter() > SolverKind::Coffee.sweeps_per_iter());
+        assert!(SolverKind::Coffee.sweeps_per_iter() > SolverKind::MapUot.sweeps_per_iter());
+    }
+}

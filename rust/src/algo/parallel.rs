@@ -1,0 +1,309 @@
+//! Threaded variants of the three solvers (paper §4.1.2).
+//!
+//! The matrix is split into contiguous row blocks, one per thread — "which
+//! makes the most sense since all computations are done in row order"
+//! (§4.1.2). Each MAP-UOT thread runs the same fused double-loop over its
+//! block with a *private* `NextSum_col` (Algorithm 1 lines 5–15); the main
+//! thread reduces the per-thread sums (lines 16–20). Private, separately
+//! allocated accumulators + 64-byte-aligned row blocks are what make the
+//! false-sharing figure (Fig. 12) flat.
+//!
+//! std::thread::scope plays the role of Pthreads create/join. POT's four
+//! sweeps and COFFEE's two phases need a barrier between sweeps, realized
+//! as one scope per sweep group — this extra synchronization is part of
+//! what Fig. 10 measures.
+
+use std::thread;
+
+use crate::algo::mapuot::fused_rows;
+use crate::algo::scaling::{factor, factors_into};
+use crate::util::Matrix;
+
+/// Clamp a thread-count request to something usable.
+pub fn effective_threads(requested: usize, rows: usize) -> usize {
+    requested.max(1).min(rows.max(1))
+}
+
+/// One parallel MAP-UOT iteration with `threads` workers.
+pub fn mapuot_iterate(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let t = effective_threads(threads, m);
+    let mut fcol = vec![0f32; n];
+    factors_into(&mut fcol, cpd, colsum, fi);
+    let rows_per = m.div_ceil(t);
+
+    let fcol_ref = &fcol;
+    let locals: Vec<Vec<f32>> = thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .zip(rpd.chunks(rows_per))
+            .map(|(block, rpd_block)| {
+                s.spawn(move || {
+                    // Private NextSum_col: separately allocated, so no two
+                    // threads ever share a cache line of accumulator state.
+                    let mut local = vec![0f32; n];
+                    fused_rows(block, n, rpd_block, fcol_ref, fi, &mut local);
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    // Algorithm 1 lines 16–20: reduce per-thread NextSum_col on the main thread.
+    colsum.fill(0.0);
+    for local in &locals {
+        for (s, &v) in colsum.iter_mut().zip(local) {
+            *s += v;
+        }
+    }
+}
+
+/// One parallel COFFEE iteration: two phase-sweeps with a barrier between.
+pub fn coffee_iterate(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let t = effective_threads(threads, m);
+    let mut fcol = vec![0f32; n];
+    factors_into(&mut fcol, cpd, colsum, fi);
+    let rows_per = m.div_ceil(t);
+
+    // Phase A: column rescale + row sums.
+    let fcol_ref = &fcol;
+    let rowsum: Vec<f32> = thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .map(|block| {
+                s.spawn(move || {
+                    block
+                        .chunks_exact_mut(n)
+                        .map(|row| {
+                            let mut acc = 0f32;
+                            for (v, &f) in row.iter_mut().zip(fcol_ref) {
+                                *v *= f;
+                                acc += *v;
+                            }
+                            acc
+                        })
+                        .collect::<Vec<f32>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+
+    // Phase B: row rescale + next column sums.
+    let rowsum_ref = &rowsum;
+    let locals: Vec<Vec<f32>> = thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .enumerate()
+            .map(|(b, block)| {
+                s.spawn(move || {
+                    let mut local = vec![0f32; n];
+                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
+                        let gi = b * rows_per + i;
+                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
+                        for (v, sl) in row.iter_mut().zip(local.iter_mut()) {
+                            *v *= fr;
+                            *sl += *v;
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    colsum.fill(0.0);
+    for local in &locals {
+        for (s, &v) in colsum.iter_mut().zip(local) {
+            *s += v;
+        }
+    }
+}
+
+/// One parallel POT iteration: four sweeps, each row-partitioned, with
+/// barriers between sweeps (the NumPy execution model under a parallel
+/// BLAS-style backend).
+pub fn pot_iterate(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let t = effective_threads(threads, m);
+    let rows_per = m.div_ceil(t);
+
+    // Sweep 1: column sums.
+    let sums = par_col_sums(plan, rows_per);
+    let mut fcol = vec![0f32; n];
+    factors_into(&mut fcol, cpd, &sums, fi);
+
+    // Sweep 2: column rescale.
+    let fcol_ref = &fcol;
+    thread::scope(|s| {
+        for block in plan.as_mut_slice().chunks_mut(rows_per * n) {
+            s.spawn(move || {
+                for row in block.chunks_exact_mut(n) {
+                    for (v, &f) in row.iter_mut().zip(fcol_ref) {
+                        *v *= f;
+                    }
+                }
+            });
+        }
+    });
+
+    // Sweep 3: row sums.
+    let rowsum: Vec<f32> = thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .map(|block| {
+                s.spawn(move || {
+                    block
+                        .chunks_exact(n)
+                        .map(|row| row.iter().sum::<f32>())
+                        .collect::<Vec<f32>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+
+    // Sweep 4: row rescale.
+    let rowsum_ref = &rowsum;
+    thread::scope(|s| {
+        for (b, block) in plan.as_mut_slice().chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || {
+                for (i, row) in block.chunks_exact_mut(n).enumerate() {
+                    let gi = b * rows_per + i;
+                    let fr = factor(rpd[gi], rowsum_ref[gi], fi);
+                    for v in row {
+                        *v *= fr;
+                    }
+                }
+            });
+        }
+    });
+
+    // Refresh carried colsum (POT recomputes it next iteration anyway).
+    let fresh = par_col_sums(plan, rows_per);
+    colsum.copy_from_slice(&fresh);
+}
+
+fn par_col_sums(plan: &mut Matrix, rows_per: usize) -> Vec<f32> {
+    let n = plan.cols();
+    let locals: Vec<Vec<f32>> = thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .map(|block| {
+                s.spawn(move || {
+                    let mut local = vec![0f32; n];
+                    for row in block.chunks_exact(n) {
+                        for (sl, &v) in local.iter_mut().zip(row) {
+                            *sl += v;
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let mut out = vec![0f32; n];
+    for local in &locals {
+        for (s, &v) in out.iter_mut().zip(local) {
+            *s += v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{mapuot, problem::Problem};
+
+    fn check_parallel_matches_serial(
+        par: impl Fn(&mut Matrix, &mut [f32], &[f32], &[f32], f32, usize),
+        threads: usize,
+        seed: u64,
+    ) {
+        let p = Problem::random(23, 17, 0.7, seed);
+        let mut a = p.plan.clone();
+        let mut cs_a = a.col_sums();
+        for _ in 0..5 {
+            par(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, threads);
+        }
+        let mut b = p.plan.clone();
+        let mut cs_b = b.col_sums();
+        for _ in 0..5 {
+            mapuot::iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi);
+        }
+        assert!(a.max_rel_diff(&b, 1e-6) < 1e-3, "threads={threads}");
+    }
+
+    #[test]
+    fn mapuot_parallel_matches_serial() {
+        for t in [1, 2, 3, 4, 8, 32] {
+            check_parallel_matches_serial(mapuot_iterate, t, 1);
+        }
+    }
+
+    #[test]
+    fn coffee_parallel_matches_serial() {
+        for t in [1, 2, 5, 16] {
+            check_parallel_matches_serial(coffee_iterate, t, 2);
+        }
+    }
+
+    #[test]
+    fn pot_parallel_matches_serial() {
+        for t in [1, 2, 5, 16] {
+            check_parallel_matches_serial(pot_iterate, t, 3);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows_is_safe() {
+        let p = Problem::random(3, 5, 0.5, 4);
+        let mut a = p.plan.clone();
+        let mut cs = a.col_sums();
+        mapuot_iterate(&mut a, &mut cs, &p.rpd, &p.cpd, p.fi, 64);
+        assert!(a.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(0, 10), 1);
+        assert_eq!(effective_threads(16, 4), 4);
+        assert_eq!(effective_threads(8, 100), 8);
+    }
+}

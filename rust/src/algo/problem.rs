@@ -1,0 +1,121 @@
+//! UOT problem definition and workload generators.
+
+use crate::error::{Error, Result};
+use crate::util::{Matrix, XorShift};
+
+/// An entropic unbalanced optimal transport instance.
+///
+/// The solver iterates row/column rescalings of `plan` toward the marginal
+/// constraints `rpd` (length M) and `cpd` (length N), with relaxation
+/// exponent `fi = er / (er + ep)` (paper §2.1; `fi = 1` is balanced
+/// Sinkhorn).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Initial transport plan (usually the Gibbs kernel `exp(-C/eps)`).
+    pub plan: Matrix,
+    /// Row probability distribution (target row marginals), length M.
+    pub rpd: Vec<f32>,
+    /// Column probability distribution (target column marginals), length N.
+    pub cpd: Vec<f32>,
+    /// Relaxation exponent in `(0, 1]`.
+    pub fi: f32,
+}
+
+impl Problem {
+    /// Validated constructor.
+    pub fn new(plan: Matrix, rpd: Vec<f32>, cpd: Vec<f32>, fi: f32) -> Result<Self> {
+        if rpd.len() != plan.rows() {
+            return Err(Error::InvalidProblem(format!(
+                "rpd length {} != rows {}",
+                rpd.len(),
+                plan.rows()
+            )));
+        }
+        if cpd.len() != plan.cols() {
+            return Err(Error::InvalidProblem(format!(
+                "cpd length {} != cols {}",
+                cpd.len(),
+                plan.cols()
+            )));
+        }
+        if !(fi > 0.0 && fi <= 1.0) {
+            return Err(Error::InvalidProblem(format!("fi={fi} outside (0, 1]")));
+        }
+        if plan.as_slice().iter().any(|v| !v.is_finite() || *v < 0.0) {
+            return Err(Error::InvalidProblem("plan has negative/non-finite entries".into()));
+        }
+        if rpd.iter().chain(cpd.iter()).any(|v| !v.is_finite() || *v <= 0.0) {
+            return Err(Error::InvalidProblem("marginals must be positive and finite".into()));
+        }
+        Ok(Self { plan, rpd, cpd, fi })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.plan.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.plan.cols()
+    }
+
+    /// Random dense instance: plan entries uniform in `[0.05, 2)`, marginals
+    /// uniform in `[0.3, 1.7)` — the distribution the paper's figures use
+    /// ("randomly generated matrices") and the same ranges as the Python
+    /// hypothesis sweeps, so golden values transfer across layers.
+    pub fn random(m: usize, n: usize, fi: f32, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let plan = Matrix::from_fn(m, n, |_, _| rng.uniform(0.05, 2.0));
+        let rpd = rng.uniform_vec(m, 0.3, 1.7);
+        let cpd = rng.uniform_vec(n, 0.3, 1.7);
+        Self { plan, rpd, cpd, fi }
+    }
+
+    /// Gibbs-kernel instance from two point clouds: `K = exp(-||x−y||²/eps)`
+    /// with uniform marginals — the entry point used by the applications
+    /// (color transfer, domain adaptation).
+    pub fn from_point_clouds(xs: &[[f32; 3]], ys: &[[f32; 3]], eps: f32, fi: f32) -> Self {
+        let (m, n) = (xs.len(), ys.len());
+        let plan = Matrix::from_fn(m, n, |i, j| {
+            let d2: f32 = (0..3).map(|k| (xs[i][k] - ys[j][k]).powi(2)).sum();
+            (-d2 / eps).exp()
+        });
+        Self {
+            plan,
+            rpd: vec![1.0 / m as f32; m],
+            cpd: vec![1.0 / n as f32; n],
+            fi,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Problem::random(8, 6, 0.5, 7);
+        let b = Problem::random(8, 6, 0.5, 7);
+        assert_eq!(a.plan.as_slice(), b.plan.as_slice());
+        assert_eq!(a.rpd, b.rpd);
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let plan = Matrix::zeros(2, 3);
+        assert!(Problem::new(plan.clone(), vec![1.0; 3], vec![1.0; 3], 0.5).is_err());
+        assert!(Problem::new(plan.clone(), vec![1.0; 2], vec![1.0; 2], 0.5).is_err());
+        assert!(Problem::new(plan.clone(), vec![1.0; 2], vec![1.0; 3], 0.0).is_err());
+        assert!(Problem::new(plan.clone(), vec![1.0; 2], vec![1.0; 3], 1.5).is_err());
+        assert!(Problem::new(plan, vec![1.0, -1.0], vec![1.0; 3], 0.5).is_err());
+    }
+
+    #[test]
+    fn gibbs_kernel_in_unit_range() {
+        let xs = [[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]];
+        let ys = [[0.0, 0.0, 0.0], [0.5, 0.5, 0.0]];
+        let p = Problem::from_point_clouds(&xs, &ys, 0.5, 1.0);
+        assert!(p.plan.as_slice().iter().all(|&v| v > 0.0 && v <= 1.0));
+        assert_eq!(p.plan.get(0, 0), 1.0); // identical points
+    }
+}

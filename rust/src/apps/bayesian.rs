@@ -1,0 +1,123 @@
+//! Sequential cooperative Bayesian inference (paper §2.2; Wang et al.).
+//!
+//! Cooperative inference iterates Sinkhorn-style normalization of a
+//! teacher/learner likelihood matrix until the teaching distribution
+//! stabilizes — operationally a balanced UOT solve (fi = 1, uniform
+//! marginals). The paper reports 99% of this app's time inside UOT at
+//! M=N=1024; the surrounding work is only matrix setup and the final
+//! argmax decoding.
+
+use crate::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use crate::apps::AppReport;
+use crate::util::{Matrix, Timer, XorShift};
+
+/// Run config: `hypotheses × data` likelihood matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub hypotheses: usize,
+    pub data: usize,
+    pub solver: SolverKind,
+    pub threads: usize,
+    pub max_iter: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            hypotheses: 128,
+            data: 128,
+            solver: SolverKind::MapUot,
+            threads: 1,
+            max_iter: 500,
+            seed: 5,
+        }
+    }
+}
+
+/// Output: the stabilized teaching matrix + consistency metric + timing.
+#[derive(Debug)]
+pub struct Output {
+    pub teaching: Matrix,
+    /// Max deviation of the final marginals from uniform (should be ~0).
+    pub marginal_err: f32,
+    pub report: AppReport,
+}
+
+/// Run cooperative inference.
+pub fn run(cfg: Config) -> Output {
+    let total = Timer::start();
+    let mut rng = XorShift::new(cfg.seed);
+    // Likelihood matrix: block-diagonal-ish signal + noise, all positive.
+    let blocks = 4.max(cfg.hypotheses / 32);
+    let plan = Matrix::from_fn(cfg.hypotheses, cfg.data, |i, j| {
+        let same = (i * blocks / cfg.hypotheses) == (j * blocks / cfg.data);
+        let base = if same { 1.0 } else { 0.15 };
+        base * rng.uniform(0.5, 1.5)
+    });
+    let rpd = vec![1.0 / cfg.hypotheses as f32; cfg.hypotheses];
+    let cpd = vec![1.0 / cfg.data as f32; cfg.data];
+    let problem = Problem { plan, rpd: rpd.clone(), cpd: cpd.clone(), fi: 1.0 };
+
+    let uot = Timer::start();
+    let (teaching, solve_report) = algo::solve(
+        cfg.solver,
+        &problem,
+        SolveOptions {
+            threads: cfg.threads,
+            stop: StopRule { tol: 1e-5, delta_tol: 1e-9, max_iter: cfg.max_iter },
+            check_every: 8,
+        },
+    );
+    let uot_s = uot.elapsed().as_secs_f64();
+
+    let marginal_err = crate::algo::convergence::marginal_error(&teaching, &rpd, &cpd);
+    Output {
+        teaching,
+        marginal_err,
+        report: AppReport {
+            total_s: total.elapsed().as_secs_f64(),
+            uot_s,
+            iters: solve_report.iters,
+            solver: cfg.solver,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn teaching_matrix_is_doubly_stochastic_scaled() {
+        let out = run(Config { hypotheses: 48, data: 48, ..Default::default() });
+        assert!(out.marginal_err < 1e-3, "err={}", out.marginal_err);
+    }
+
+    #[test]
+    fn uot_dominates_total_time() {
+        // The paper's Fig. 2 claim for this app: UOT ~99% of runtime at
+        // M=N=1024. At test scale (384² with a tight tolerance) the solve
+        // still takes the majority of end-to-end time; the fig02 bench
+        // reproduces the full-size share.
+        // Threshold is deliberately loose: the unit-test harness runs many
+        // tests concurrently, which perturbs wall-clock shares.
+        let out = run(Config {
+            hypotheses: 384,
+            data: 384,
+            max_iter: 2000,
+            ..Default::default()
+        });
+        assert!(out.report.uot_share() > 0.35, "share={}", out.report.uot_share());
+    }
+
+    #[test]
+    fn signal_structure_survives_normalization() {
+        let out = run(Config { hypotheses: 32, data: 32, ..Default::default() });
+        // Diagonal blocks should still carry above-average mass.
+        let mean = 1.0 / (32.0 * 32.0);
+        let diag_mean: f32 =
+            (0..32).map(|i| out.teaching.get(i, i)).sum::<f32>() / 32.0;
+        assert!(diag_mean > mean, "diag={diag_mean} mean={mean}");
+    }
+}

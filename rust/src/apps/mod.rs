@@ -1,0 +1,36 @@
+//! The paper's four UOT applications (§2.2, Figs. 2 and 17), on synthetic
+//! data (DESIGN.md §Substitutions: histogram/point statistics, not pixel
+//! content, drive the solver, so procedural inputs preserve the behaviour).
+//!
+//! Every app reports a [`AppReport`] splitting end-to-end time into the
+//! UOT solve and everything else — the Fig. 2 metric — and can run on any
+//! [`SolverKind`], which is how Fig. 17 compares end-to-end speedups.
+
+pub mod bayesian;
+pub mod color_transfer;
+pub mod domain_adapt;
+pub mod entropic2d;
+pub mod sinkhorn_filter;
+pub mod wmd;
+
+use crate::algo::SolverKind;
+
+/// Timing breakdown of one application run.
+#[derive(Debug, Clone, Copy)]
+pub struct AppReport {
+    /// End-to-end wall time (seconds).
+    pub total_s: f64,
+    /// Time inside the UOT solver (seconds).
+    pub uot_s: f64,
+    /// Solver iterations executed.
+    pub iters: usize,
+    /// Which solver ran.
+    pub solver: SolverKind,
+}
+
+impl AppReport {
+    /// Fraction of end-to-end time spent in UOT (the Fig. 2 y-axis).
+    pub fn uot_share(&self) -> f64 {
+        if self.total_s <= 0.0 { 0.0 } else { self.uot_s / self.total_s }
+    }
+}

@@ -1,0 +1,495 @@
+//! Figure/table generators: one function per paper figure.
+//!
+//! Each returns (and can print) the same rows/series the paper reports.
+//! The `cargo bench` harnesses (`rust/benches/fig*.rs`) and the CLI
+//! (`map-uot fig N`) are thin wrappers over these. Native-solver figures
+//! measure real wall time on this machine; hardware-gated figures run the
+//! simulators (DESIGN.md §Substitutions).
+
+use crate::algo::{self, SolverKind};
+use crate::apps;
+use crate::bench::{fast_mode, measure, speedup_summary, Policy, Table};
+use crate::config::presets;
+use crate::sim::gpu::model::Part;
+use crate::sim::gpu::{self, TileConfig};
+use crate::sim::{cluster, memtrace, roofline};
+
+/// Square sizes used by the single-node figures (paper: 1024..10240).
+pub fn square_sizes() -> Vec<usize> {
+    if fast_mode() {
+        vec![256, 512]
+    } else {
+        // 8192 (268 MB) exceeds even this host's 260 MB LLC, where the
+        // paper's DRAM-traffic argument fully applies; smaller sizes show
+        // the LLC-resident regime (EXPERIMENTS.md discusses both).
+        vec![1024, 2048, 4096, 8192]
+    }
+}
+
+/// Rectangular (M, N) pairs (paper Fig. 9/13 right panels).
+pub fn rect_sizes() -> Vec<(usize, usize)> {
+    if fast_mode() {
+        vec![(256, 1024), (1024, 256)]
+    } else {
+        vec![(1024, 4096), (4096, 1024), (512, 8192)]
+    }
+}
+
+/// Sizes for the trace-driven cache figures (miss rates are pattern-driven
+/// and size-invariant once the matrix exceeds L2, so the sim stops at 4096).
+pub fn cache_sizes() -> Vec<usize> {
+    if fast_mode() { vec![256, 512] } else { vec![1024, 2048, 4096] }
+}
+
+/// Median seconds per iteration of `kind` on an `m × n` problem.
+pub fn iter_seconds(kind: SolverKind, m: usize, n: usize, threads: usize) -> f64 {
+    let p = algo::Problem::random(m, n, 0.7, 42);
+    let mut plan = p.plan.clone();
+    let mut colsum = plan.col_sums();
+    // Measure a small batch of iterations to amortize timer noise.
+    let iters_per_rep = if m * n >= 4096 * 4096 { 2 } else { 4 };
+    let policy = Policy { warmup: 1, reps: if fast_mode() { 3 } else { 5 } };
+    let sec = measure(policy, || {
+        for _ in 0..iters_per_rep {
+            algo::iterate_once(kind, &mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, threads);
+        }
+    });
+    sec / iters_per_rep as f64
+}
+
+/// Fig. 2: proportion of application time spent in UOT + growth with size.
+pub fn fig02() -> Table {
+    let mut t = Table::new(
+        "Fig 2: share of end-to-end time spent in UOT (MAP-UOT solver)",
+        &["application", "size", "uot_ms", "total_ms", "uot_share"],
+    );
+    let scale = if fast_mode() { 1 } else { 4 };
+
+    let bay = apps::bayesian::run(apps::bayesian::Config {
+        hypotheses: 256 * scale,
+        data: 256 * scale,
+        max_iter: 2000,
+        ..Default::default()
+    });
+    push_app(&mut t, "cooperative-bayesian", 256 * scale, &bay.report);
+
+    let e2d = apps::entropic2d::run(apps::entropic2d::Config {
+        grid: 8 * scale.min(4),
+        max_iter: 500,
+        ..Default::default()
+    });
+    push_app(&mut t, "2d-entropic-uot", (8usize * scale.min(4)).pow(2), &e2d.report);
+
+    let ct = apps::color_transfer::run(apps::color_transfer::Config {
+        palette: 256 * scale.min(2),
+        max_iter: 500,
+        ..Default::default()
+    });
+    push_app(&mut t, "color-transfer", 256 * scale.min(2), &ct.report);
+
+    let sf = apps::sinkhorn_filter::run(apps::sinkhorn_filter::Config {
+        points: 128 * scale,
+        max_iter: 1000,
+        ..Default::default()
+    });
+    push_app(&mut t, "sinkhorn-filter", 128 * scale, &sf.report);
+
+    // Domain adaptation share vs matrix size (bottom panel of Fig. 2).
+    for npc in if fast_mode() { vec![16, 32] } else { vec![32, 64, 128, 256] } {
+        let da = apps::domain_adapt::run(apps::domain_adapt::Config {
+            n_per_class: npc,
+            classes: 4,
+            max_iter: 1000,
+            ..Default::default()
+        });
+        push_app(&mut t, "domain-adaptation", npc * 4, &da.report);
+    }
+    t
+}
+
+fn push_app(t: &mut Table, name: &str, size: usize, r: &apps::AppReport) {
+    t.row(&[
+        name.into(),
+        format!("{size}"),
+        format!("{:.2}", r.uot_s * 1e3),
+        format!("{:.2}", r.total_s * 1e3),
+        format!("{:.1}%", r.uot_share() * 100.0),
+    ]);
+}
+
+/// Fig. 3: Roofline model — Eq. 1 intensities vs ridge points.
+pub fn fig03() -> Table {
+    let mut t = Table::new(
+        "Fig 3: global-memory Roofline (Eq. 1)",
+        &["machine", "solver", "I (flop/byte)", "attainable GF/s", "ridge point"],
+    );
+    let machines = [presets::i9_12900k_roofline(), presets::rtx_3090ti_roofline()];
+    for row in roofline::figure3(&machines, 4096, 4096) {
+        t.row(&[
+            row.machine.into(),
+            row.kind.name().into(),
+            format!("{:.3}", row.intensity),
+            format!("{:.1}", row.attainable_gflops),
+            format!("{:.1}", row.ridge_point),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4: baseline (POT) L1/L2 miss rates on the 12900K cache model.
+pub fn fig04() -> Table {
+    let mut t = Table::new(
+        "Fig 4: baseline (POT) cache miss rates (12900K model)",
+        &["size", "L1 miss", "L2 miss"],
+    );
+    let cfg = presets::i9_12900k_caches();
+    for &s in &cache_sizes() {
+        let st = memtrace::simulate(cfg, SolverKind::Pot, s, s, 1);
+        t.row(&[
+            format!("{s}x{s}"),
+            format!("{:.2}%", st.l1_miss_rate() * 100.0),
+            format!("{:.2}%", st.l2_miss_rate() * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: baseline GPU global load/store throughput (3090 Ti model).
+pub fn fig05() -> Table {
+    let mut t = Table::new(
+        "Fig 5: baseline (CuPy) global throughput (3090 Ti model)",
+        &["size", "load GB/s", "store GB/s", "load %peak", "store %peak"],
+    );
+    let g = presets::rtx_3090ti_gpu();
+    for &s in &[1024usize, 2048, 4096, 8192, 10240] {
+        let th = gpu::throughput_gbs(&g, s, s, false);
+        t.row(&[
+            format!("{s}x{s}"),
+            format!("{:.0}", th.load_gbs),
+            format!("{:.0}", th.store_gbs),
+            format!("{:.1}%", th.load_gbs / g.peak_bw_gbs * 100.0),
+            format!("{:.1}%", th.store_gbs / g.peak_bw_gbs * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8: GPU tiling-parameter sweep at 10240² (Ty = 2 for part ②).
+pub fn fig08() -> (Table, Table) {
+    let g = presets::rtx_3090ti_gpu();
+    let nys = [1usize, 2, 4, 8, 16];
+    let txs = [32usize, 64, 128, 256, 512];
+    let mk = |part: Part, ty: usize| {
+        let title = match part {
+            Part::Part2 => "Fig 8 (part 2): kernel ms over Tx x Ny, 10240^2",
+            Part::Part4 => "Fig 8 (part 4): kernel ms over Tx x Ny, 10240^2",
+        };
+        let mut headers = vec!["Tx\\Ny".to_string()];
+        headers.extend(nys.iter().map(|n| n.to_string()));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(title, &hdr_refs);
+        for &tx in &txs {
+            let mut row = vec![tx.to_string()];
+            for &ny in &nys {
+                let ms = gpu::model::kernel_time_ms(&g, part, TileConfig { tx, ty, ny }, 10240, 10240);
+                row.push(format!("{ms:.3}"));
+            }
+            t.row(&row);
+        }
+        t
+    };
+    (mk(Part::Part2, 2), mk(Part::Part4, 1))
+}
+
+/// Fig. 9: single-threaded native performance, square + rectangular.
+pub fn fig09() -> (Table, String) {
+    let mut t = Table::new(
+        "Fig 9: single-threaded time per iteration (ms) + speedups",
+        &["size", "POT", "COFFEE", "MAP-UOT", "vs POT", "vs COFFEE"],
+    );
+    let mut sp_pot = Vec::new();
+    let mut sp_cof = Vec::new();
+    let mut shapes: Vec<(usize, usize)> = square_sizes().iter().map(|&s| (s, s)).collect();
+    shapes.extend(rect_sizes());
+    for (m, n) in shapes {
+        let pot = iter_seconds(SolverKind::Pot, m, n, 1);
+        let cof = iter_seconds(SolverKind::Coffee, m, n, 1);
+        let map = iter_seconds(SolverKind::MapUot, m, n, 1);
+        sp_pot.push(pot / map);
+        sp_cof.push(cof / map);
+        t.row(&[
+            format!("{m}x{n}"),
+            format!("{:.2}", pot * 1e3),
+            format!("{:.2}", cof * 1e3),
+            format!("{:.2}", map * 1e3),
+            format!("{:.2}x", pot / map),
+            format!("{:.2}x", cof / map),
+        ]);
+    }
+    let summary = format!(
+        "vs POT: {} | vs COFFEE: {}",
+        speedup_summary(&sp_pot),
+        speedup_summary(&sp_cof)
+    );
+    (t, summary)
+}
+
+/// Fig. 10: thread scaling, normalized to single-threaded POT.
+///
+/// Two panels: *measured* on this machine (meaningful only when it has
+/// multiple cores — the CI testbed has one, where this degenerates into a
+/// threading-overhead check) and *projected* on the paper's 12900K via the
+/// bandwidth-saturation model (`sim::multicore`), which reproduces the
+/// paper's 3.3x / 4.0x / 7.2x plateaus.
+pub fn fig10() -> Table {
+    let size = if fast_mode() { 512 } else { 4096 };
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let mut t = Table::new(
+        format!("Fig 10: scaling at {size}^2, speedup vs POT 1T (measured on {cores}-core host | projected 12900K)"),
+        &["threads", "POT", "COFFEE", "MAP-UOT"],
+    );
+    let machine = presets::i9_12900k_roofline();
+    let base = iter_seconds(SolverKind::Pot, size, size, 1);
+    for &threads in &[1usize, 2, 4, 8, 16] {
+        let cells: Vec<String> = SolverKind::ALL
+            .iter()
+            .map(|&k| {
+                let measured = base / iter_seconds(k, size, size, threads);
+                let projected =
+                    crate::sim::multicore::speedup_vs_pot1(&machine, k, size, size, threads);
+                format!("{measured:.2}x|{projected:.2}x")
+            })
+            .collect();
+        t.row(&[format!("{threads}"), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+    }
+    t
+}
+
+/// Fig. 11: cache-miss reduction vs POT and COFFEE.
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Fig 11: MAP-UOT cache-miss-rate reduction (12900K model)",
+        &["size", "L1 vs POT", "L1 vs COFFEE", "L2 vs POT", "L2 vs COFFEE"],
+    );
+    let cfg = presets::i9_12900k_caches();
+    for &s in &cache_sizes() {
+        let pot = memtrace::simulate(cfg, SolverKind::Pot, s, s, 1);
+        let cof = memtrace::simulate(cfg, SolverKind::Coffee, s, s, 1);
+        let map = memtrace::simulate(cfg, SolverKind::MapUot, s, s, 1);
+        let red = |a: f64, b: f64| format!("{:.1}%", (1.0 - b / a) * 100.0);
+        t.row(&[
+            format!("{s}x{s}"),
+            red(pot.l1_miss_rate(), map.l1_miss_rate()),
+            red(cof.l1_miss_rate(), map.l1_miss_rate()),
+            red(pot.l2_miss_rate(), map.l2_miss_rate()),
+            red(cof.l2_miss_rate(), map.l2_miss_rate()),
+        ]);
+    }
+    t
+}
+
+/// Fig. 12: L1 miss rate vs thread count (false-sharing check) — padded
+/// design vs naive shared accumulators ablation.
+pub fn fig12() -> Table {
+    let mut t = Table::new(
+        "Fig 12: MAP-UOT L1 miss rate vs threads (padded | naive accumulators)",
+        &["matrix", "T=1", "T=2", "T=4", "T=8", "T=16"],
+    );
+    let l1 = presets::i9_12900k_caches().l1;
+    // n = 12 (48 B accumulator rows, unaligned thread boundaries) is the
+    // shape where naive shared accumulators false-share; n >= 16 with
+    // aligned rows is the paper's "eliminated" regime (§5.2.4).
+    let shapes: &[(usize, usize)] = if fast_mode() {
+        &[(128, 12), (256, 128)]
+    } else {
+        &[(1024, 12), (1024, 16), (512, 2048), (2048, 2048)]
+    };
+    for &(m, n) in shapes {
+        let mut cells = vec![format!("{m}x{n}")];
+        for &threads in &[1usize, 2, 4, 8, 16] {
+            let padded = memtrace::simulate_mapuot_threads(l1, m, n, threads, true);
+            let naive = memtrace::simulate_mapuot_threads(l1, m, n, threads, false);
+            cells.push(format!(
+                "{:.2}%|{:.2}%",
+                padded.l1_miss_rate() * 100.0,
+                naive.l1_miss_rate() * 100.0
+            ));
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+/// Fig. 13: GPU performance vs POT (3090 Ti model).
+pub fn fig13() -> (Table, String) {
+    let g = presets::rtx_3090ti_gpu();
+    let (t2, t4) = (TileConfig::part2_default(), TileConfig::part4_default());
+    let mut t = Table::new(
+        "Fig 13: GPU iteration time (ms) and speedup (3090 Ti model)",
+        &["size", "POT/CuPy", "MAP-UOT", "speedup"],
+    );
+    let mut sps = Vec::new();
+    let mut shapes: Vec<(usize, usize)> =
+        [512usize, 1024, 2048, 4096, 8192, 10240].iter().map(|&s| (s, s)).collect();
+    shapes.extend([(1024, 4096), (4096, 1024), (2048, 10240)]);
+    for (m, n) in shapes {
+        let pot = gpu::pot_iter_ms(&g, m, n);
+        let map = gpu::mapuot_iter_ms(&g, m, n, t2, t4);
+        sps.push(pot / map);
+        t.row(&[
+            format!("{m}x{n}"),
+            format!("{pot:.3}"),
+            format!("{map:.3}"),
+            format!("{:.2}x", pot / map),
+        ]);
+    }
+    let s = speedup_summary(&sps);
+    (t, s)
+}
+
+/// Fig. 14: global-throughput increment over POT (3090 Ti model).
+pub fn fig14() -> Table {
+    let g = presets::rtx_3090ti_gpu();
+    let mut t = Table::new(
+        "Fig 14: achieved bandwidth, MAP-UOT vs CuPy baseline (3090 Ti model)",
+        &["size", "base ld/st GB/s", "fused ld/st GB/s", "store +%", "total util +%"],
+    );
+    for &s in &[1024usize, 2048, 4096, 8192, 10240] {
+        let b = gpu::throughput_gbs(&g, s, s, false);
+        let f = gpu::throughput_gbs(&g, s, s, true);
+        t.row(&[
+            format!("{s}x{s}"),
+            format!("{:.0}/{:.0}", b.load_gbs, b.store_gbs),
+            format!("{:.0}/{:.0}", f.load_gbs, f.store_gbs),
+            format!("{:+.1}%", (f.store_gbs / b.store_gbs - 1.0) * 100.0),
+            format!("{:+.1}%", (f.total_gbs() / b.total_gbs() - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 15: peak device memory (3090 Ti model).
+pub fn fig15() -> Table {
+    let g = presets::rtx_3090ti_gpu();
+    let mut t = Table::new(
+        "Fig 15: peak device memory (MB, 3090 Ti model)",
+        &["size", "POT", "MAP-UOT", "reduction"],
+    );
+    for &s in &[1024usize, 2048, 4096, 8192, 10240] {
+        let pot = gpu::peak_memory_mb(&g, s, s, false);
+        let map = gpu::peak_memory_mb(&g, s, s, true);
+        t.row(&[
+            format!("{s}x{s}"),
+            format!("{pot:.0}"),
+            format!("{map:.0}"),
+            format!("{:.1}%", (1.0 - map / pot) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 16: Tianhe-1 scalability (cluster model), M=N=20480.
+pub fn fig16() -> Table {
+    let mut t = Table::new(
+        "Fig 16: Tianhe-1 model, speedup vs POT 1-proc (M=N=20480)",
+        &["ppn", "procs", "POT", "COFFEE", "MAP-UOT"],
+    );
+    const M: usize = 20480;
+    for &ppn in &[8usize, 12] {
+        let cfg = presets::tianhe1_cluster(ppn);
+        let procs: Vec<usize> = match ppn {
+            8 => vec![8, 32, 128, 256, 512],
+            _ => vec![12, 48, 192, 384, 768],
+        };
+        for p in procs {
+            let s = |k| cluster::speedup_vs_pot1(&cfg, k, M, M, p);
+            t.row(&[
+                format!("{ppn}"),
+                format!("{p}"),
+                format!("{:.0}x", s(SolverKind::Pot)),
+                format!("{:.0}x", s(SolverKind::Coffee)),
+                format!("{:.0}x", s(SolverKind::MapUot)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 17: end-to-end color-transfer speedup across solvers.
+pub fn fig17() -> (Table, String) {
+    let mut t = Table::new(
+        "Fig 17: color-transfer end-to-end time (ms) per solver",
+        &["image", "palette", "POT", "COFFEE", "MAP-UOT", "vs POT", "vs COFFEE", "uot-only vs POT"],
+    );
+    // The last row's 8192-color palette makes the plan 268 MB — beyond even
+    // this host's 260 MB LLC — so the paper's DRAM-bound regime is measured
+    // directly (fewer iterations keep the row affordable; the speedup is
+    // per-iteration-cost driven, not budget driven).
+    let shapes: &[(usize, usize, usize, usize)] = if fast_mode() {
+        &[(96, 64, 128, 100)]
+    } else {
+        &[
+            (480, 320, 256, 300),
+            (960, 640, 512, 300),
+            (1920, 1280, 1024, 300),
+            (1920, 1280, 8192, 24),
+        ]
+    };
+    let mut sps = Vec::new();
+    for &(w, h, pal, iters) in shapes {
+        let run = |k| {
+            let r = apps::color_transfer::run(apps::color_transfer::Config {
+                width: w,
+                height: h,
+                palette: pal,
+                solver: k,
+                max_iter: iters,
+                ..Default::default()
+            })
+            .report;
+            (r.total_s, r.uot_s)
+        };
+        let (pot, pot_uot) = run(SolverKind::Pot);
+        let (cof, _) = run(SolverKind::Coffee);
+        let (map, map_uot) = run(SolverKind::MapUot);
+        sps.push(pot / map);
+        t.row(&[
+            format!("{w}x{h}"),
+            format!("{pal}"),
+            format!("{:.1}", pot * 1e3),
+            format!("{:.1}", cof * 1e3),
+            format!("{:.1}", map * 1e3),
+            format!("{:.2}x", pot / map),
+            format!("{:.2}x", cof / map),
+            format!("{:.2}x", pot_uot / map_uot),
+        ]);
+    }
+    let s = speedup_summary(&sps);
+    (t, s)
+}
+
+/// Run every figure (the CLI's `figures` command).
+pub fn all() {
+    fig02().print();
+    fig03().print();
+    fig04().print();
+    fig05().print();
+    let (a, b) = fig08();
+    a.print();
+    b.print();
+    let (t, s) = fig09();
+    t.print();
+    println!("summary (paper §5.2.1): {s}\n");
+    fig10().print();
+    fig11().print();
+    fig12().print();
+    let (t, s) = fig13();
+    t.print();
+    println!("summary (paper §5.3.1): {s}\n");
+    fig14().print();
+    fig15().print();
+    fig16().print();
+    let (t, s) = fig17();
+    t.print();
+    println!("summary (paper §5.5): {s}");
+}

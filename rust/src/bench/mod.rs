@@ -1,0 +1,68 @@
+//! Shared bench harness: timing, table formatting, figure row types.
+//!
+//! `criterion` is not in the offline crate set, so every `benches/fig*.rs`
+//! is a `harness = false` binary built on this module: it runs the
+//! workload, prints a paper-shaped table, and (where the paper states
+//! aggregate claims) a summary row with min / max / geometric mean.
+
+pub mod figures;
+pub mod report;
+
+pub use report::Table;
+
+use crate::util::{stats, timer};
+
+/// Default measurement policy for native-solver benches.
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Self { warmup: 1, reps: 5 }
+    }
+}
+
+/// Quick mode: set `MAP_UOT_BENCH_FAST=1` to shrink sizes/reps (CI smoke).
+pub fn fast_mode() -> bool {
+    std::env::var("MAP_UOT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Measure median seconds of `f` under `policy`.
+pub fn measure<T>(policy: Policy, f: impl FnMut() -> T) -> f64 {
+    let samples = timer::sample(policy.warmup, policy.reps, f);
+    stats::median(&samples)
+}
+
+/// Pretty speedup summary the paper quotes ("up to X, average Y").
+pub fn speedup_summary(speedups: &[f64]) -> String {
+    format!(
+        "up to {:.1}x, avg (geomean) {:.1}x, min {:.1}x over {} points",
+        speedups.iter().copied().fold(f64::MIN, f64::max),
+        stats::geomean(speedups),
+        speedups.iter().copied().fold(f64::MAX, f64::min),
+        speedups.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_time() {
+        let t = measure(Policy { warmup: 0, reps: 3 }, || {
+            std::hint::black_box((0..10_000).sum::<u64>())
+        });
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn summary_format() {
+        let s = speedup_summary(&[1.0, 2.0, 4.0]);
+        assert!(s.contains("up to 4.0x"), "{s}");
+        assert!(s.contains("avg (geomean) 2.0x"), "{s}");
+    }
+}

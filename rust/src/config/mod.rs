@@ -1,0 +1,132 @@
+//! Configuration: hardware presets (Table 1), service config file parsing.
+
+pub mod parser;
+pub mod presets;
+
+use crate::algo::{SolverKind, StopRule};
+use crate::error::Result;
+use parser::RawConfig;
+
+/// Which execution backend the coordinator routes a request to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust solvers (`algo/`).
+    Native,
+    /// AOT-compiled HLO artifacts through PJRT (`runtime/`).
+    Pjrt,
+}
+
+/// Full service configuration (coordinator + solver defaults).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads in the coordinator pool.
+    pub workers: usize,
+    /// Max requests drained into one batch.
+    pub batch_max: usize,
+    /// Max time the batcher waits to fill a batch (microseconds).
+    pub batch_wait_us: u64,
+    /// Bounded queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+    /// Execution backend.
+    pub backend: Backend,
+    /// Default solver for native execution.
+    pub solver: SolverKind,
+    /// Threads per native solve.
+    pub solver_threads: usize,
+    /// Stopping criteria.
+    pub stop: StopRule,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            batch_max: 8,
+            batch_wait_us: 200,
+            queue_cap: 1024,
+            backend: Backend::Native,
+            solver: SolverKind::MapUot,
+            solver_threads: 1,
+            stop: StopRule::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Load from the TOML-subset config format (see [`parser`]).
+    pub fn from_raw(c: &RawConfig) -> Result<Self> {
+        let d = ServiceConfig::default();
+        let backend = match c.get("coordinator", "backend") {
+            Some("pjrt") => Backend::Pjrt,
+            Some("native") | None => Backend::Native,
+            Some(other) => {
+                return Err(crate::error::Error::Config(format!("unknown backend {other:?}")))
+            }
+        };
+        let solver = match c.get("solver", "kind") {
+            None => d.solver,
+            Some(s) => SolverKind::parse(s)
+                .ok_or_else(|| crate::error::Error::Config(format!("unknown solver {s:?}")))?,
+        };
+        Ok(Self {
+            workers: c.get_or("coordinator", "workers", d.workers)?,
+            batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
+            batch_wait_us: c.get_or("coordinator", "batch_wait_us", d.batch_wait_us)?,
+            queue_cap: c.get_or("coordinator", "queue_cap", d.queue_cap)?,
+            backend,
+            solver,
+            solver_threads: c.get_or("solver", "threads", d.solver_threads)?,
+            stop: StopRule {
+                tol: c.get_or("solver", "tol", d.stop.tol)?,
+                delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
+                max_iter: c.get_or("solver", "max_iter", d.stop.max_iter)?,
+            },
+            artifacts_dir: c
+                .get("runtime", "artifacts_dir")
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_raw(&RawConfig::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_raw_full() {
+        let raw = parser::RawConfig::parse(
+            "[coordinator]\nworkers=3\nbackend=pjrt\n[solver]\nkind=coffee\nthreads=2\nmax_iter=50\n",
+        )
+        .unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert_eq!(c.solver, SolverKind::Coffee);
+        assert_eq!(c.solver_threads, 2);
+        assert_eq!(c.stop.max_iter, 50);
+    }
+
+    #[test]
+    fn defaults_for_empty_config() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.workers, ServiceConfig::default().workers);
+        assert_eq!(c.backend, Backend::Native);
+    }
+
+    #[test]
+    fn rejects_unknown_backend_and_solver() {
+        let raw = parser::RawConfig::parse("[coordinator]\nbackend=cuda\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = parser::RawConfig::parse("[solver]\nkind=quantum\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal key-value config parser (TOML subset).
+//!
+//! No serde/toml crates are available offline, so the service config file
+//! format is a deliberately small TOML subset: `[section]` headers,
+//! `key = value` lines (string / integer / float / bool), `#` comments.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed config: section -> key -> raw value string.
+#[derive(Debug, Default, Clone)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`: {raw:?}", lineno + 1))
+            })?;
+            let value = v.trim().trim_matches('"').to_string();
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::Config(format!("[{section}] {key}: cannot parse {s:?}"))
+            }),
+        }
+    }
+
+    /// Section names present.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# service config
+[coordinator]
+workers = 4
+batch_max = 8           # requests per batch
+backend = "native"
+
+[solver]
+fi = 0.7
+tol = 1e-4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("coordinator", "workers", 1usize).unwrap(), 4);
+        assert_eq!(c.get_or("coordinator", "batch_max", 1usize).unwrap(), 8);
+        assert_eq!(c.get("coordinator", "backend"), Some("native"));
+        assert!((c.get_or("solver", "fi", 0.0f32).unwrap() - 0.7).abs() < 1e-6);
+        assert!((c.get_or("solver", "tol", 0.0f64).unwrap() - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("coordinator", "absent", 9usize).unwrap(), 9);
+        assert_eq!(c.get_or("absent", "absent", 3i32).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(RawConfig::parse("[x]\nnot a kv line").is_err());
+        assert!(RawConfig::parse("[s]\nk = notanum")
+            .unwrap()
+            .get_or("s", "k", 0i64)
+            .is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = RawConfig::parse("# only comments\n\n   \n").unwrap();
+        assert_eq!(c.sections().count(), 0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Hardware presets — paper Table 1.
+
+use crate::sim::cache::{CacheConfig, HierarchyConfig};
+use crate::sim::cluster::ClusterConfig;
+use crate::sim::gpu::GpuConfig;
+use crate::sim::roofline::Machine;
+
+/// 12th Gen Intel Core i9-12900K (Table 1, top): 793.6 GFLOPS FP32 peak,
+/// 76.8 GB/s DRAM bandwidth.
+pub fn i9_12900k_roofline() -> Machine {
+    Machine { name: "i9-12900K", peak_gflops: 793.6, peak_bw_gbs: 76.8 }
+}
+
+/// NVIDIA GeForce RTX 3090 Ti (Table 1, middle): 40 TFLOPS FP32,
+/// 1008 GB/s GDDR6X.
+pub fn rtx_3090ti_roofline() -> Machine {
+    Machine { name: "RTX 3090 Ti", peak_gflops: 40_000.0, peak_bw_gbs: 1008.0 }
+}
+
+/// Golden Cove P-core cache hierarchy of the 12900K:
+/// L1D 48 KiB / 12-way, L2 1.25 MiB / 10-way, 64-byte lines.
+pub fn i9_12900k_caches() -> HierarchyConfig {
+    HierarchyConfig {
+        l1: CacheConfig { size_bytes: 48 * 1024, line_bytes: 64, assoc: 12 },
+        l2: CacheConfig { size_bytes: 1280 * 1024, line_bytes: 64, assoc: 10 },
+        // Degree-16 miss-triggered L2 streamer (≈ the measured single-digit
+        // L2 miss rates of sequential sweeps in paper Fig. 4).
+        l2_prefetch: 16,
+    }
+}
+
+/// RTX 3090 Ti execution parameters (Table 1 + GA102 whitepaper values).
+pub fn rtx_3090ti_gpu() -> GpuConfig {
+    GpuConfig {
+        name: "RTX 3090 Ti",
+        peak_bw_gbs: 1008.0,
+        peak_gflops: 40_000.0,
+        sm_count: 84,
+        max_threads_per_sm: 1536,
+        warp_size: 32,
+        // Calibrated micro-costs (DESIGN.md §Substitutions): per-kernel
+        // launch, per-block scheduling slot, per-conflicting-atomic
+        // serialization, per-warp shuffle-reduce step.
+        kernel_launch_us: 4.0,
+        block_sched_ns: 150.0,
+        atomic_conflict_ns: 12.0,
+        smem_reduce_ns_per_step: 6.0,
+        // Framework (CuPy / driver) baseline device-memory overhead, MB.
+        context_mb: 120.0,
+    }
+}
+
+/// Tianhe-1 node/network model (Table 1, bottom): 12-core Intel Xeon
+/// Westmere nodes, 32 GB RAM, Infiniband QDR.
+pub fn tianhe1_cluster(procs_per_node: usize) -> ClusterConfig {
+    ClusterConfig {
+        procs_per_node,
+        // Westmere 3-channel DDR3-1066: ~25.6 GB/s per node, shared.
+        node_bw_gbs: 25.6,
+        // Per-process sustained compute-side throughput cap (elements/s of
+        // matrix traffic it can issue when bandwidth-unconstrained).
+        proc_gelems_per_s: 1.0,
+        // Infiniband QDR 4x: 4 GB/s raw, ~1 GB/s effective through the
+        // mpi4py + pickle path the paper uses (Smith, PyHPC'16).
+        link_bw_gbs: 1.0,
+        // MPI small-message latency (alpha in the Thakur model), inflated
+        // by the mpi4py dispatch path.
+        alpha_us: 20.0,
+        // Per-iteration serial overhead of the mpi4py driver loop (µs).
+        py_overhead_us: 1500.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        let c = i9_12900k_roofline();
+        assert_eq!(c.peak_gflops, 793.6);
+        assert_eq!(c.peak_bw_gbs, 76.8);
+        let g = rtx_3090ti_roofline();
+        assert_eq!(g.peak_bw_gbs, 1008.0);
+        let h = i9_12900k_caches();
+        assert_eq!(h.l1.size_bytes, 48 * 1024);
+        assert!(h.l1.size_bytes < h.l2.size_bytes);
+    }
+
+    #[test]
+    fn cache_geometry_is_consistent() {
+        let h = i9_12900k_caches();
+        for c in [h.l1, h.l2] {
+            assert_eq!(c.size_bytes % (c.line_bytes * c.assoc), 0);
+        }
+    }
+}

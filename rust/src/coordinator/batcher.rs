@@ -1,0 +1,234 @@
+//! Bounded request queue with dynamic batching and backpressure.
+//!
+//! The batcher is the L3 hot-path data structure: producers `push` (bounded
+//! — `Reject` gives load-shedding, `Block` gives backpressure), workers
+//! `pop_batch` which drains up to `batch_max` *shape-compatible* requests,
+//! waiting up to `batch_wait` after the first arrival so concurrent
+//! requests of the same shape can share a worker (and, on the PJRT path,
+//! an executable's warm state).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::SolveRequest;
+
+/// What `push` does when the queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FullPolicy {
+    /// Block the producer until space frees (backpressure).
+    Block,
+    /// Return the request to the caller (load shedding).
+    Reject,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    queue: VecDeque<SolveRequest>,
+    closed: bool,
+}
+
+/// Bounded MPMC batching queue.
+#[derive(Debug)]
+pub struct Batcher {
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    batch_max: usize,
+    batch_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(cap: usize, batch_max: usize, batch_wait: Duration) -> Self {
+        assert!(cap > 0 && batch_max > 0);
+        Self {
+            state: Mutex::new(State::default()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+            batch_max,
+            batch_wait,
+        }
+    }
+
+    /// Enqueue a request. Returns `Err(request)` if rejected (full under
+    /// `Reject`, or queue closed).
+    pub fn push(&self, req: SolveRequest, policy: FullPolicy) -> Result<(), SolveRequest> {
+        let mut st = self.state.lock().expect("batcher poisoned");
+        loop {
+            if st.closed {
+                return Err(req);
+            }
+            if st.queue.len() < self.cap {
+                st.queue.push_back(req);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match policy {
+                FullPolicy::Reject => return Err(req),
+                FullPolicy::Block => {
+                    st = self.not_full.wait(st).expect("batcher poisoned");
+                }
+            }
+        }
+    }
+
+    /// Dequeue a batch: blocks for the first request (or close), then
+    /// drains same-shape requests up to `batch_max`, waiting up to
+    /// `batch_wait` to top the batch up. Returns `None` when closed+empty.
+    pub fn pop_batch(&self) -> Option<Vec<SolveRequest>> {
+        let mut st = self.state.lock().expect("batcher poisoned");
+        // Wait for work.
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("batcher poisoned");
+        }
+
+        let mut batch = vec![st.queue.pop_front().expect("non-empty")];
+        let shape = batch[0].shape();
+        let deadline = Instant::now() + self.batch_wait;
+
+        loop {
+            // Drain compatible requests (stable order for the rest).
+            let mut i = 0;
+            while batch.len() < self.batch_max && i < st.queue.len() {
+                if st.queue[i].shape() == shape {
+                    let req = st.queue.remove(i).expect("index valid");
+                    batch.push(req);
+                } else {
+                    i += 1;
+                }
+            }
+            if batch.len() >= self.batch_max || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (next, timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .expect("batcher poisoned");
+            st = next;
+            if timeout.timed_out() && st.queue.iter().all(|r| r.shape() != shape) {
+                break;
+            }
+        }
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.state.lock().expect("batcher poisoned").closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("batcher poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Problem;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(id: u64, m: usize, n: usize) -> SolveRequest {
+        let (tx, _rx) = channel();
+        // leak the receiver side: these tests never reply
+        std::mem::forget(_rx);
+        SolveRequest {
+            id,
+            problem: Problem::random(m, n, 0.5, id),
+            reply: tx,
+            submitted_at: std::time::Instant::now(),
+        }
+    }
+
+    fn batcher(cap: usize, bmax: usize) -> Batcher {
+        Batcher::new(cap, bmax, Duration::from_millis(5))
+    }
+
+    #[test]
+    fn batches_group_same_shape() {
+        let b = batcher(16, 8);
+        b.push(req(1, 8, 8), FullPolicy::Reject).unwrap();
+        b.push(req(2, 4, 4), FullPolicy::Reject).unwrap();
+        b.push(req(3, 8, 8), FullPolicy::Reject).unwrap();
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let batch2 = b.pop_batch().unwrap();
+        assert_eq!(batch2[0].id, 2);
+    }
+
+    #[test]
+    fn respects_batch_max() {
+        let b = batcher(16, 2);
+        for i in 0..5 {
+            b.push(req(i, 8, 8), FullPolicy::Reject).unwrap();
+        }
+        assert_eq!(b.pop_batch().unwrap().len(), 2);
+        assert_eq!(b.pop_batch().unwrap().len(), 2);
+        assert_eq!(b.pop_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn reject_when_full() {
+        let b = batcher(2, 8);
+        b.push(req(1, 4, 4), FullPolicy::Reject).unwrap();
+        b.push(req(2, 4, 4), FullPolicy::Reject).unwrap();
+        assert!(b.push(req(3, 4, 4), FullPolicy::Reject).is_err());
+    }
+
+    #[test]
+    fn block_until_space() {
+        let b = Arc::new(batcher(1, 1));
+        b.push(req(1, 4, 4), FullPolicy::Reject).unwrap();
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            // Blocks until the main thread pops.
+            b2.push(req(2, 4, 4), FullPolicy::Block).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(b.len(), 1);
+        let _ = b.pop_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn close_unblocks_consumers() {
+        let b = Arc::new(batcher(4, 4));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.pop_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+        // producers now fail
+        assert!(b.push(req(9, 4, 4), FullPolicy::Block).is_err());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let b = batcher(4, 4);
+        b.push(req(1, 4, 4), FullPolicy::Reject).unwrap();
+        b.close();
+        assert_eq!(b.pop_batch().unwrap().len(), 1);
+        assert!(b.pop_batch().is_none());
+    }
+}

@@ -1,0 +1,126 @@
+//! Lock-free service metrics (counters + latency histogram).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency histogram bucket upper bounds (milliseconds).
+pub const LATENCY_BUCKETS_MS: [f64; 8] = [0.5, 1.0, 2.0, 5.0, 10.0, 50.0, 200.0, 1000.0];
+
+/// Service-wide metrics, cheap to update from any thread.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// Total solver iterations executed (native + PJRT chunks × steps).
+    pub iterations: AtomicU64,
+    latency_buckets: [AtomicU64; 9], // 8 bounded + overflow
+    latency_total_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        let ms = seconds * 1e3;
+        let idx = LATENCY_BUCKETS_MS.iter().position(|&b| ms <= b).unwrap_or(8);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_total_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot for reporting.
+    pub fn snapshot(&self) -> Snapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                self.batched_requests.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            iterations: self.iterations.load(Ordering::Relaxed),
+            mean_latency_ms: if completed == 0 {
+                0.0
+            } else {
+                self.latency_total_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1e3
+            },
+            latency_buckets: std::array::from_fn(|i| self.latency_buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub iterations: u64,
+    pub mean_latency_ms: f64,
+    pub latency_buckets: [u64; 9],
+}
+
+impl Snapshot {
+    /// Approximate latency percentile from the histogram (ms).
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        let total: u64 = self.latency_buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.latency_buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return LATENCY_BUCKETS_MS.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_and_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(0.0004); // 0.4 ms -> bucket 0
+        }
+        for _ in 0..10 {
+            m.record_latency(0.1); // 100 ms -> bucket 200
+        }
+        m.completed.store(100, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.latency_percentile_ms(50.0), 0.5);
+        assert_eq!(s.latency_percentile_ms(99.0), 200.0);
+        assert!(s.mean_latency_ms > 0.0);
+    }
+
+    #[test]
+    fn batch_means() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.snapshot().mean_batch_size - 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: the UOT solver service.
+//!
+//! Requests enter a bounded [`batcher`] (dynamic batching by shape, with
+//! backpressure / load-shedding), a worker pool executes them on the
+//! [`router`]-chosen backend — native solvers in-thread, or the PJRT
+//! executor actor ([`pjrt_exec`]) running the AOT artifacts — and
+//! [`metrics`] tracks throughput/latency. Python never appears here.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pjrt_exec;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batcher, FullPolicy};
+pub use metrics::{Metrics, Snapshot};
+pub use request::{RequestId, SolveRequest, SolveResponse, Solved};
+pub use router::Route;
+pub use service::Service;

@@ -1,0 +1,67 @@
+//! Request/response types of the solver service.
+
+use std::sync::mpsc::Sender;
+
+use crate::algo::{Problem, SolveReport, SolverKind};
+use crate::config::Backend;
+use crate::util::Matrix;
+
+/// Monotonic request id assigned at submission.
+pub type RequestId = u64;
+
+/// A solve request travelling through the coordinator.
+#[derive(Debug)]
+pub struct SolveRequest {
+    pub id: RequestId,
+    pub problem: Problem,
+    /// Reply channel back to the submitter.
+    pub reply: Sender<SolveResponse>,
+    /// Submission timestamp for latency accounting.
+    pub submitted_at: std::time::Instant,
+}
+
+impl SolveRequest {
+    /// Shape key used for batching and artifact bucketing.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.problem.rows(), self.problem.cols())
+    }
+}
+
+/// The service's answer to one request.
+#[derive(Debug)]
+pub struct SolveResponse {
+    pub id: RequestId,
+    pub result: Result<Solved, String>,
+}
+
+/// Successful solve payload.
+#[derive(Debug)]
+pub struct Solved {
+    pub plan: Matrix,
+    pub report: SolveReport,
+    /// Which backend executed it.
+    pub backend: Backend,
+    /// Which solver kind ran (native) — MAP-UOT for PJRT (the artifact is
+    /// the fused kernel).
+    pub solver: SolverKind,
+    /// End-to-end latency from submission to completion (seconds).
+    pub latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn shape_key() {
+        let (tx, _rx) = channel();
+        let r = SolveRequest {
+            id: 1,
+            problem: Problem::random(8, 6, 0.5, 1),
+            reply: tx,
+            submitted_at: std::time::Instant::now(),
+        };
+        assert_eq!(r.shape(), (8, 6));
+    }
+}

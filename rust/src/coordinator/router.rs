@@ -1,0 +1,130 @@
+//! Routing: backend choice and shape-bucket padding.
+//!
+//! The PJRT backend executes shape-specialized artifacts, so a request is
+//! routed to the smallest chunk bucket that fits and zero-padded into it.
+//! Padding is sound because a zero row/column has zero mass: the factor
+//! guard `(target/sum)^fi with sum=0 → 0` keeps it identically zero, the
+//! real support evolves exactly as unpadded, and the padded rows contribute
+//! 0 to the device-side marginal error (their target is also 0).
+
+use crate::algo::Problem;
+use crate::runtime::Manifest;
+use crate::util::Matrix;
+
+/// Where a request will execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Native solver on the worker thread.
+    Native,
+    /// PJRT artifact with this bucket shape.
+    Pjrt { bucket_m: usize, bucket_n: usize },
+}
+
+/// Pick a route: PJRT when enabled and a bucket fits, else native.
+pub fn route(manifest: Option<&Manifest>, m: usize, n: usize) -> Route {
+    match manifest.and_then(|mf| mf.chunk_for(m, n)) {
+        Some(meta) => Route::Pjrt { bucket_m: meta.m, bucket_n: meta.n },
+        None => Route::Native,
+    }
+}
+
+/// A problem padded into a bucket, remembering its true shape.
+#[derive(Debug)]
+pub struct Padded {
+    pub plan: Matrix,
+    pub colsum: Vec<f32>,
+    pub rpd: Vec<f32>,
+    pub cpd: Vec<f32>,
+    pub fi: f32,
+    pub orig_m: usize,
+    pub orig_n: usize,
+}
+
+/// Zero-pad `problem` into a `bm × bn` bucket.
+pub fn pad(problem: &Problem, bm: usize, bn: usize) -> Padded {
+    let (m, n) = (problem.rows(), problem.cols());
+    assert!(bm >= m && bn >= n, "bucket {bm}x{bn} smaller than problem {m}x{n}");
+    let mut plan = Matrix::zeros(bm, bn);
+    for i in 0..m {
+        plan.row_mut(i)[..n].copy_from_slice(problem.plan.row(i));
+    }
+    let mut rpd = vec![0f32; bm];
+    rpd[..m].copy_from_slice(&problem.rpd);
+    let mut cpd = vec![0f32; bn];
+    cpd[..n].copy_from_slice(&problem.cpd);
+    let colsum = plan.col_sums();
+    Padded { plan, colsum, rpd, cpd, fi: problem.fi, orig_m: m, orig_n: n }
+}
+
+impl Padded {
+    /// Extract the unpadded plan.
+    pub fn unpad(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.orig_m, self.orig_n);
+        for i in 0..self.orig_m {
+            out.row_mut(i)
+                .copy_from_slice(&self.plan.row(i)[..self.orig_n]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{iterate_once, SolverKind};
+    use crate::runtime::Manifest;
+
+    const MANIFEST: &str = "\
+c256 file=a kind=uot_chunk m=256 n=256 steps=8 block_m=128
+c512 file=b kind=uot_chunk m=512 n=512 steps=8 block_m=64
+";
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let mf = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(route(Some(&mf), 100, 100), Route::Pjrt { bucket_m: 256, bucket_n: 256 });
+        assert_eq!(route(Some(&mf), 400, 100), Route::Pjrt { bucket_m: 512, bucket_n: 512 });
+        assert_eq!(route(Some(&mf), 4096, 4096), Route::Native);
+        assert_eq!(route(None, 8, 8), Route::Native);
+    }
+
+    #[test]
+    fn padding_preserves_solver_semantics() {
+        // Iterating the padded problem must evolve the real support exactly
+        // as iterating the original problem.
+        let p = Problem::random(10, 7, 0.6, 3);
+        let mut padded = pad(&p, 16, 12);
+
+        let mut plain = p.plan.clone();
+        let mut plain_cs = plain.col_sums();
+        for _ in 0..4 {
+            iterate_once(SolverKind::MapUot, &mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, 1);
+            iterate_once(
+                SolverKind::MapUot,
+                &mut padded.plan,
+                &mut padded.colsum,
+                &padded.rpd,
+                &padded.cpd,
+                padded.fi,
+                1,
+            );
+        }
+        let unpadded = padded.unpad();
+        assert!(unpadded.max_rel_diff(&plain, 1e-6) < 1e-4);
+        // padding stayed exactly zero
+        for i in 0..16 {
+            for j in 0..12 {
+                if i >= 10 || j >= 7 {
+                    assert_eq!(padded.plan.get(i, j), 0.0, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than problem")]
+    fn pad_rejects_too_small_bucket() {
+        let p = Problem::random(10, 10, 0.5, 1);
+        let _ = pad(&p, 8, 16);
+    }
+}

@@ -1,0 +1,243 @@
+//! The solver service: worker pool draining the batcher, routing each
+//! request to the native solvers or the PJRT executor.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::algo::{self, Problem, SolveOptions};
+use crate::config::{Backend, ServiceConfig};
+use crate::coordinator::batcher::{Batcher, FullPolicy};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pjrt_exec::{self, PjrtHandle};
+use crate::coordinator::request::{SolveRequest, SolveResponse, Solved};
+use crate::error::{Error, Result};
+
+/// A running solver service.
+pub struct Service {
+    cfg: ServiceConfig,
+    batcher: Arc<Batcher>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    pjrt: Option<(PjrtHandle, JoinHandle<()>)>,
+    next_id: AtomicU64,
+}
+
+impl Service {
+    /// Start workers (and the PJRT executor when configured).
+    pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        let batcher = Arc::new(Batcher::new(
+            cfg.queue_cap,
+            cfg.batch_max,
+            Duration::from_micros(cfg.batch_wait_us),
+        ));
+        let metrics = Arc::new(Metrics::new());
+
+        let pjrt = match cfg.backend {
+            Backend::Pjrt => Some(pjrt_exec::spawn(cfg.artifacts_dir.clone())?),
+            Backend::Native => None,
+        };
+        let pjrt_handle = pjrt.as_ref().map(|(h, _)| h.clone());
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers.max(1) {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let cfg_w = cfg.clone();
+            let pjrt_w = pjrt_handle.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("uot-worker-{w}"))
+                    .spawn(move || worker_loop(&batcher, &metrics, &cfg_w, pjrt_w.as_ref()))
+                    .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
+            );
+        }
+        Ok(Self { cfg, batcher, metrics, workers, pjrt, next_id: AtomicU64::new(1) })
+    }
+
+    /// Submit a problem; returns the reply channel. `Err` on queue-full
+    /// (load shedding) or after shutdown.
+    pub fn submit(&self, problem: Problem) -> Result<Receiver<SolveResponse>> {
+        let (tx, rx) = channel();
+        let req = SolveRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            problem,
+            reply: tx,
+            submitted_at: std::time::Instant::now(),
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.batcher.push(req, FullPolicy::Reject) {
+            Ok(()) => Ok(rx),
+            Err(_) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Service("queue full".into()))
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn solve_blocking(&self, problem: Problem) -> Result<Solved> {
+        let rx = self.submit(problem)?;
+        let resp = rx
+            .recv()
+            .map_err(|_| Error::Service("service dropped request".into()))?;
+        resp.result.map_err(Error::Service)
+    }
+
+    pub fn metrics(&self) -> crate::coordinator::metrics::Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Drain and stop. Pending requests are completed first.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some((h, j)) = self.pjrt.take() {
+            h.shutdown();
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_loop(
+    batcher: &Batcher,
+    metrics: &Metrics,
+    cfg: &ServiceConfig,
+    pjrt: Option<&PjrtHandle>,
+) {
+    while let Some(batch) = batcher.pop_batch() {
+        metrics.record_batch(batch.len());
+        for req in batch {
+            let result = execute(cfg, pjrt, &req);
+            match &result {
+                Ok(s) => {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.iterations.fetch_add(s.report.iters as u64, Ordering::Relaxed);
+                    metrics.record_latency(s.latency_s);
+                }
+                Err(_) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Receiver may have given up; dropping the response is fine.
+            let _ = req.reply.send(SolveResponse {
+                id: req.id,
+                result: result.map_err(|e| e.to_string()),
+            });
+        }
+    }
+}
+
+fn execute(cfg: &ServiceConfig, pjrt: Option<&PjrtHandle>, req: &SolveRequest) -> Result<Solved> {
+    let (plan, report, backend) = match pjrt {
+        Some(handle) => {
+            let (plan, report) = handle.solve(req.problem.clone(), cfg.stop)?;
+            (plan, report, Backend::Pjrt)
+        }
+        None => {
+            let opts = SolveOptions {
+                threads: cfg.solver_threads,
+                stop: cfg.stop,
+                check_every: 8,
+            };
+            let (plan, report) = algo::solve(cfg.solver, &req.problem, opts);
+            (plan, report, Backend::Native)
+        }
+    };
+    Ok(Solved {
+        plan,
+        report,
+        backend,
+        solver: cfg.solver,
+        latency_s: req.submitted_at.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::SolverKind;
+
+    fn native_cfg(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            solver: SolverKind::MapUot,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn solve_blocking_roundtrip() {
+        let svc = Service::start(native_cfg(2)).unwrap();
+        let p = Problem::random(24, 24, 0.8, 1);
+        let solved = svc.solve_blocking(p).unwrap();
+        assert!(solved.report.converged);
+        assert_eq!(solved.backend, Backend::Native);
+        assert_eq!(solved.plan.rows(), 24);
+        let m = svc.metrics();
+        assert_eq!(m.completed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let svc = Arc::new(Service::start(native_cfg(4)).unwrap());
+        let mut rxs = Vec::new();
+        for seed in 0..32u64 {
+            rxs.push(svc.submit(Problem::random(16, 16, 0.7, seed)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.is_ok());
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 32);
+        assert_eq!(m.submitted, 32);
+        assert!(m.mean_batch_size >= 1.0);
+        Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_pending() {
+        let svc = Service::start(native_cfg(1)).unwrap();
+        let rx = svc.submit(Problem::random(16, 16, 0.7, 5)).unwrap();
+        svc.shutdown();
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+
+    #[test]
+    fn rejects_when_queue_full() {
+        let mut cfg = native_cfg(1);
+        cfg.queue_cap = 1;
+        cfg.batch_wait_us = 50_000; // slow the worker's batch window
+        let svc = Service::start(cfg).unwrap();
+        // Stuff the queue faster than one worker drains it; expect at
+        // least one rejection out of a burst.
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for seed in 0..64u64 {
+            match svc.submit(Problem::random(32, 32, 0.7, seed)) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        assert!(rejected > 0, "expected load shedding");
+        assert_eq!(svc.metrics().rejected, rejected);
+        svc.shutdown();
+    }
+}

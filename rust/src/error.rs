@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the MAP-UOT library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Problem construction or solver-input validation failed.
+    #[error("invalid problem: {0}")]
+    InvalidProblem(String),
+
+    /// Configuration file / preset errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// AOT artifact manifest / loading errors.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failures (compile, execute, literal conversion).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator/service lifecycle errors (queue closed, worker died...).
+    #[error("service error: {0}")]
+    Service(String),
+
+    /// Solver did not converge within the iteration budget.
+    #[error("no convergence after {iters} iterations (err={err})")]
+    NoConvergence { iters: usize, err: f32 },
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

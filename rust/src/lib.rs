@@ -1,0 +1,41 @@
+//! # MAP-UOT — memory-efficient unbalanced optimal transport
+//!
+//! Reproduction of *"MAP-UOT: A Memory-Efficient Approach to Unbalanced
+//! Optimal Transport Implementation"* (Sun, Hu, Jiang; 2024) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the solver service: native solvers
+//!   ([`algo`]: POT baseline, COFFEE comparator, the fused MAP-UOT
+//!   iteration, threaded variants), a request [`coordinator`] with dynamic
+//!   batching, a PJRT [`runtime`] executing AOT artifacts, the paper's
+//!   applications ([`apps`]), and the simulators ([`sim`]) that regenerate
+//!   the hardware-gated figures (cache misses, GPU throughput, Tianhe-1).
+//! * **L2 (build time)** — `python/compile/model.py`: the UOT chunk graph
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (build time)** — `python/compile/kernels/mapuot.py`: the fused
+//!   interweaved iteration as a Pallas kernel.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use map_uot::algo::{solve, Problem, SolverKind, SolveOptions};
+//!
+//! let problem = Problem::random(512, 512, 0.7, 42);
+//! let (plan, report) = solve(SolverKind::MapUot, &problem, SolveOptions::default());
+//! println!("converged={} iters={} err={}", report.converged, report.iters, report.err);
+//! # let _ = plan;
+//! ```
+
+pub mod algo;
+pub mod apps;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+
+pub use algo::{solve, Problem, SolveOptions, SolverKind};
+pub use error::{Error, Result};

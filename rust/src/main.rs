@@ -1,0 +1,312 @@
+//! `map-uot` CLI — leader entrypoint for the solver service and the
+//! reproduction harnesses.
+//!
+//! Subcommands:
+//!   solve    one UOT solve (native or PJRT), print the report
+//!   serve    run the coordinator under a synthetic request load
+//!   app      run one of the paper's four applications
+//!   fig      regenerate one paper figure (2..17) or `all`
+//!   info     platform + artifact inventory
+
+use std::collections::HashMap;
+
+use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::apps;
+use map_uot::bench::figures;
+use map_uot::config::{Backend, ServiceConfig};
+use map_uot::coordinator::Service;
+use map_uot::error::Result;
+use map_uot::runtime::Runtime;
+use map_uot::util::Timer;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let code = match cmd {
+        "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
+        "app" => cmd_app(&argv.get(1).map(String::as_str).unwrap_or(""), &args),
+        "fig" => cmd_fig(&argv.get(1).map(String::as_str).unwrap_or("all")),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "map-uot — memory-efficient unbalanced optimal transport (paper reproduction)\n\
+         \n\
+         USAGE: map-uot <command> [--flag value ...]\n\
+         \n\
+         COMMANDS\n\
+         \x20 solve  --m 1024 --n 1024 --fi 0.7 --solver mapuot|coffee|pot\n\
+         \x20        --threads 1 --max-iter 1000 --tol 1e-4 --seed 42 --backend native|pjrt\n\
+         \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
+         \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
+         \x20 fig    2|3|4|5|8|9|10|11|12|13|14|15|16|17|all\n\
+         \x20 info   [--artifacts artifacts]"
+    );
+}
+
+fn cmd_solve(a: &Args) -> i32 {
+    let m = a.get("m", 1024usize);
+    let n = a.get("n", 1024usize);
+    let fi = a.get("fi", 0.7f32);
+    let solver = SolverKind::parse(&a.str("solver", "mapuot")).unwrap_or(SolverKind::MapUot);
+    let problem = Problem::random(m, n, fi, a.get("seed", 42u64));
+    let stop = StopRule {
+        tol: a.get("tol", 1e-4f32),
+        delta_tol: a.get("delta-tol", 1e-6f32),
+        max_iter: a.get("max-iter", 1000usize),
+    };
+
+    if a.str("backend", "native") == "pjrt" {
+        return run_or_die(|| {
+            let cfg = ServiceConfig {
+                backend: Backend::Pjrt,
+                stop,
+                artifacts_dir: a.str("artifacts", "artifacts"),
+                ..ServiceConfig::default()
+            };
+            let svc = Service::start(cfg)?;
+            let solved = svc.solve_blocking(problem.clone())?;
+            println!(
+                "pjrt solve {m}x{n}: iters={} err={:.3e} converged={} latency={:.1}ms",
+                solved.report.iters,
+                solved.report.err,
+                solved.report.converged,
+                solved.latency_s * 1e3
+            );
+            svc.shutdown();
+            Ok(())
+        });
+    }
+
+    let opts = SolveOptions { threads: a.get("threads", 1usize), stop, check_every: 8 };
+    let (plan, report) = algo::solve(solver, &problem, opts);
+    println!(
+        "{} solve {m}x{n} fi={fi}: iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
+        solver.name(),
+        report.iters,
+        report.err,
+        report.delta,
+        report.converged,
+        report.seconds * 1e3,
+        report.seconds * 1e3 / report.iters.max(1) as f64,
+    );
+    let _ = plan;
+    0
+}
+
+fn cmd_serve(a: &Args) -> i32 {
+    run_or_die(|| {
+        let backend = if a.str("backend", "native") == "pjrt" {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        };
+        let cfg = ServiceConfig {
+            workers: a.get("workers", 4usize),
+            backend,
+            artifacts_dir: a.str("artifacts", "artifacts"),
+            stop: StopRule { max_iter: a.get("max-iter", 400usize), ..Default::default() },
+            ..ServiceConfig::default()
+        };
+        let requests = a.get("requests", 64usize);
+        let size = a.get("size", 256usize);
+        let svc = Service::start(cfg)?;
+
+        let timer = Timer::start();
+        let rxs: Vec<_> = (0..requests)
+            .filter_map(|i| svc.submit(Problem::random(size, size, 0.8, i as u64)).ok())
+            .collect();
+        let accepted = rxs.len();
+        let mut ok = 0;
+        for rx in rxs {
+            if rx.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+                ok += 1;
+            }
+        }
+        let wall = timer.elapsed().as_secs_f64();
+        let m = svc.metrics();
+        println!(
+            "serve: {ok}/{accepted} ok of {requests} submitted in {wall:.2}s \
+             ({:.1} req/s) | mean batch {:.2} | mean latency {:.1}ms | p99<= {:.0}ms | rejected {}",
+            ok as f64 / wall,
+            m.mean_batch_size,
+            m.mean_latency_ms,
+            m.latency_percentile_ms(99.0),
+            m.rejected,
+        );
+        svc.shutdown();
+        Ok(())
+    })
+}
+
+fn cmd_app(which: &str, a: &Args) -> i32 {
+    let solver = SolverKind::parse(&a.str("solver", "mapuot")).unwrap_or(SolverKind::MapUot);
+    match which {
+        "color" => {
+            let out = apps::color_transfer::run(apps::color_transfer::Config {
+                solver,
+                ..Default::default()
+            });
+            print_app("color-transfer", &out.report);
+        }
+        "domain" => {
+            let out =
+                apps::domain_adapt::run(apps::domain_adapt::Config { solver, ..Default::default() });
+            print_app("domain-adaptation", &out.report);
+            println!("  accuracy: {:.1}%", out.accuracy * 100.0);
+        }
+        "bayes" => {
+            let out = apps::bayesian::run(apps::bayesian::Config { solver, ..Default::default() });
+            print_app("cooperative-bayesian", &out.report);
+            println!("  marginal err: {:.2e}", out.marginal_err);
+        }
+        "filter" => {
+            let out = apps::sinkhorn_filter::run(apps::sinkhorn_filter::Config {
+                solver,
+                ..Default::default()
+            });
+            print_app("sinkhorn-filter", &out.report);
+            println!("  correspondence accuracy: {:.1}%", out.accuracy * 100.0);
+        }
+        "entropic2d" => {
+            let out = apps::entropic2d::run(apps::entropic2d::Config { solver, ..Default::default() });
+            print_app("2d-entropic-uot", &out.report);
+            println!("  plan mass {:.3}, mean transport distance {:.2} cells", out.plan_mass, out.mean_distance);
+        }
+        "wmd" => {
+            let out = apps::wmd::run(apps::wmd::Config::default());
+            print_app("sinkhorn-wmd", &out.report);
+            println!("  1-NN topic accuracy: {:.1}%", out.knn_accuracy * 100.0);
+        }
+        other => {
+            eprintln!("unknown app {other:?} (color|domain|bayes|filter|entropic2d|wmd)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn print_app(name: &str, r: &apps::AppReport) {
+    println!(
+        "{name} [{}]: total {:.1}ms, uot {:.1}ms ({:.1}%), {} iters",
+        r.solver.name(),
+        r.total_s * 1e3,
+        r.uot_s * 1e3,
+        r.uot_share() * 100.0,
+        r.iters
+    );
+}
+
+fn cmd_fig(which: &str) -> i32 {
+    match which {
+        "2" => figures::fig02().print(),
+        "3" => figures::fig03().print(),
+        "4" => figures::fig04().print(),
+        "5" => figures::fig05().print(),
+        "8" => {
+            let (a, b) = figures::fig08();
+            a.print();
+            b.print();
+        }
+        "9" => {
+            let (t, s) = figures::fig09();
+            t.print();
+            println!("summary: {s}");
+        }
+        "10" => figures::fig10().print(),
+        "11" => figures::fig11().print(),
+        "12" => figures::fig12().print(),
+        "13" => {
+            let (t, s) = figures::fig13();
+            t.print();
+            println!("summary: {s}");
+        }
+        "14" => figures::fig14().print(),
+        "15" => figures::fig15().print(),
+        "16" => figures::fig16().print(),
+        "17" => {
+            let (t, s) = figures::fig17();
+            t.print();
+            println!("summary: {s}");
+        }
+        "all" => figures::all(),
+        other => {
+            eprintln!("unknown figure {other:?} (2-5, 8-17, all)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_info(a: &Args) -> i32 {
+    run_or_die(|| {
+        println!("map-uot {} — three-layer rust+jax+pallas stack", env!("CARGO_PKG_VERSION"));
+        let dir = a.str("artifacts", "artifacts");
+        match Runtime::open(&dir) {
+            Ok(rt) => {
+                println!("pjrt platform: {}", rt.platform());
+                println!("artifacts in {dir:?}:");
+                for m in rt.manifest().iter() {
+                    println!(
+                        "  {} ({:?} {}x{} steps={} block_m={})",
+                        m.name, m.kind, m.m, m.n, m.steps, m.block_m
+                    );
+                }
+            }
+            Err(e) => println!("no artifacts: {e}"),
+        }
+        Ok(())
+    })
+}
+
+fn run_or_die(f: impl FnOnce() -> Result<()>) -> i32 {
+    match f() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest: the line-oriented index `aot.py` writes next to the
+//! HLO text files (`name file=... kind=... m=... n=... [d=|steps=|block_m=]`).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `n_steps` fused UOT iterations + marginal error.
+    UotChunk,
+    /// Gibbs kernel initialization from two point clouds.
+    GibbsInit,
+    /// Barycentric projection of target points under a plan.
+    Barycentric,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uot_chunk" => Ok(Self::UotChunk),
+            "gibbs_init" => Ok(Self::GibbsInit),
+            "barycentric" => Ok(Self::Barycentric),
+            other => Err(Error::Artifact(format!("unknown artifact kind {other:?}"))),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub m: usize,
+    pub n: usize,
+    /// Point dimension (gibbs/barycentric) — 0 for chunks.
+    pub d: usize,
+    /// Iterations per execution (chunks) — 0 otherwise.
+    pub steps: usize,
+    /// Pallas panel rows (chunks) — 0 otherwise.
+    pub block_m: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::Artifact(format!("line {}: empty", lineno + 1)))?
+                .to_string();
+            let mut file = String::new();
+            let mut kind = None;
+            let (mut m, mut n, mut d, mut steps, mut block_m) = (0, 0, 0, 0, 0);
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    Error::Artifact(format!("line {}: bad field {kv:?}", lineno + 1))
+                })?;
+                let int = || -> Result<usize> {
+                    v.parse().map_err(|_| {
+                        Error::Artifact(format!("line {}: {k}={v:?} not an int", lineno + 1))
+                    })
+                };
+                match k {
+                    "file" => file = v.to_string(),
+                    "kind" => kind = Some(ArtifactKind::parse(v)?),
+                    "m" => m = int()?,
+                    "n" => n = int()?,
+                    "d" => d = int()?,
+                    "steps" => steps = int()?,
+                    "block_m" => block_m = int()?,
+                    _ => {} // forward-compatible: ignore unknown fields
+                }
+            }
+            let kind = kind
+                .ok_or_else(|| Error::Artifact(format!("line {}: missing kind", lineno + 1)))?;
+            if file.is_empty() || m == 0 || n == 0 {
+                return Err(Error::Artifact(format!("line {}: incomplete entry", lineno + 1)));
+            }
+            entries.push(ArtifactMeta { name, file, kind, m, n, d, steps, block_m });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path).map_err(|e| {
+            Error::Artifact(format!("cannot read {path:?} (run `make artifacts`): {e}"))
+        })?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.iter()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|a| a.name == name)
+    }
+
+    /// Exact-match chunk artifact for an `m × n` problem.
+    pub fn chunk_exact(&self, m: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|a| a.kind == ArtifactKind::UotChunk && a.m == m && a.n == n)
+    }
+
+    /// Smallest chunk bucket that fits an `m × n` problem (requests smaller
+    /// than a bucket are zero-padded by the router; padding rows/cols carry
+    /// zero mass, which the factor guard maps to factor 0, preserving the
+    /// solution on the real support).
+    pub fn chunk_for(&self, m: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::UotChunk && a.m >= m && a.n >= n)
+            .min_by_key(|a| a.m * a.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+uot_chunk_256x256_s8 file=uot_chunk_256x256_s8.hlo.txt kind=uot_chunk m=256 n=256 steps=8 block_m=128
+uot_chunk_512x512_s8 file=uot_chunk_512x512_s8.hlo.txt kind=uot_chunk m=512 n=512 steps=8 block_m=64
+gibbs_init_256x256x3 file=gibbs_init_256x256x3.hlo.txt kind=gibbs_init m=256 n=256 d=3
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 3);
+        let c = m.get("uot_chunk_256x256_s8").unwrap();
+        assert_eq!(c.kind, ArtifactKind::UotChunk);
+        assert_eq!((c.m, c.n, c.steps, c.block_m), (256, 256, 8, 128));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.chunk_exact(256, 256).unwrap().name, "uot_chunk_256x256_s8");
+        assert!(m.chunk_exact(300, 300).is_none());
+        // 300x300 pads into the 512 bucket.
+        assert_eq!(m.chunk_for(300, 300).unwrap().m, 512);
+        // 100x100 pads into the smallest fitting bucket (256).
+        assert_eq!(m.chunk_for(100, 100).unwrap().m, 256);
+        // too big for any bucket
+        assert!(m.chunk_for(2000, 2000).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("x file=f.hlo kind=bogus m=1 n=1").is_err());
+        assert!(Manifest::parse("x kind=uot_chunk m=1 n=1").is_err()); // no file
+        assert!(Manifest::parse("x file=f kind=uot_chunk m=zero n=1").is_err());
+    }
+
+    #[test]
+    fn ignores_unknown_fields() {
+        let m = Manifest::parse("a file=f kind=uot_chunk m=4 n=4 future=42").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load and execute the AOT artifacts from `artifacts/`.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py`):
+//! jax ≥ 0.5 serializes `HloModuleProto` with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. Executables
+//! are compiled once per artifact and cached; the request path is
+//! literal-in / literal-out with no Python anywhere.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::Matrix;
+
+/// Output of one UOT chunk execution.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkOutput {
+    /// Marginal L-inf error of the returned plan (device-side reduction).
+    pub err: f32,
+    /// Iterations advanced (the artifact's compiled-in step count).
+    pub steps: usize,
+}
+
+/// A PJRT CPU client plus a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Warm the executable cache for every artifact of `kind`.
+    pub fn warmup(&mut self, kind: ArtifactKind) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .iter()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Run one `uot_chunk` artifact in place: advances `plan`/`colsum` by
+    /// the artifact's compiled step count and returns the marginal error.
+    pub fn run_uot_chunk(
+        &mut self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+    ) -> Result<ChunkOutput> {
+        let (m, n) = (plan.rows(), plan.cols());
+        let meta = self
+            .manifest
+            .chunk_for(m, n)
+            .ok_or_else(|| Error::Artifact(format!("no uot_chunk artifact for {m}x{n}")))?
+            .clone();
+        if (meta.m, meta.n) != (m, n) {
+            return Err(Error::Artifact(format!(
+                "chunk bucket {}x{} does not match problem {m}x{n} (router must pad first)",
+                meta.m, meta.n
+            )));
+        }
+        let steps = meta.steps;
+        let exe = self.executable(&meta.name)?;
+
+        let a_lit = xla::Literal::vec1(plan.as_slice()).reshape(&[m as i64, n as i64])?;
+        let cs_lit = xla::Literal::vec1(colsum);
+        let rpd_lit = xla::Literal::vec1(rpd);
+        let cpd_lit = xla::Literal::vec1(cpd);
+        let fi_lit = xla::Literal::vec1(&[fi]);
+
+        let result = exe.execute::<xla::Literal>(&[a_lit, cs_lit, rpd_lit, cpd_lit, fi_lit])?[0]
+            [0]
+        .to_literal_sync()?;
+        let (a_out, cs_out, err_out) = result.to_tuple3()?;
+
+        let a_vec = a_out.to_vec::<f32>()?;
+        plan.as_mut_slice().copy_from_slice(&a_vec);
+        let cs_vec = cs_out.to_vec::<f32>()?;
+        colsum.copy_from_slice(&cs_vec);
+        let err = err_out.to_vec::<f32>()?[0];
+        Ok(ChunkOutput { err, steps })
+    }
+
+    /// Run a `gibbs_init` artifact: `K = exp(-||x-y||²/eps)` + its colsum.
+    pub fn run_gibbs_init(
+        &mut self,
+        xs: &[f32], // (m, d) row-major
+        ys: &[f32], // (n, d) row-major
+        m: usize,
+        n: usize,
+        d: usize,
+        eps: f32,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let meta = self
+            .manifest
+            .iter()
+            .find(|a| a.kind == ArtifactKind::GibbsInit && a.m == m && a.n == n && a.d == d)
+            .ok_or_else(|| Error::Artifact(format!("no gibbs_init artifact for {m}x{n}x{d}")))?
+            .clone();
+        let exe = self.executable(&meta.name)?;
+        let x_lit = xla::Literal::vec1(xs).reshape(&[m as i64, d as i64])?;
+        let y_lit = xla::Literal::vec1(ys).reshape(&[n as i64, d as i64])?;
+        let eps_lit = xla::Literal::vec1(&[eps]);
+        let result =
+            exe.execute::<xla::Literal>(&[x_lit, y_lit, eps_lit])?[0][0].to_literal_sync()?;
+        let (k_out, cs_out) = result.to_tuple2()?;
+        let plan = Matrix::from_slice(m, n, &k_out.to_vec::<f32>()?);
+        Ok((plan, cs_out.to_vec::<f32>()?))
+    }
+
+    /// Run a `barycentric` artifact: map target points under the plan.
+    pub fn run_barycentric(&mut self, plan: &Matrix, ys: &[f32], d: usize) -> Result<Vec<f32>> {
+        let (m, n) = (plan.rows(), plan.cols());
+        let meta = self
+            .manifest
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Barycentric && a.m == m && a.n == n && a.d == d)
+            .ok_or_else(|| Error::Artifact(format!("no barycentric artifact for {m}x{n}x{d}")))?
+            .clone();
+        let exe = self.executable(&meta.name)?;
+        let a_lit = xla::Literal::vec1(plan.as_slice()).reshape(&[m as i64, n as i64])?;
+        let y_lit = xla::Literal::vec1(ys).reshape(&[n as i64, d as i64])?;
+        let result = exe.execute::<xla::Literal>(&[a_lit, y_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.len())
+            .field("compiled", &self.executables.len())
+            .finish()
+    }
+}

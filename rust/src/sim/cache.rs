@@ -1,0 +1,275 @@
+//! Trace-driven set-associative LRU cache hierarchy simulator.
+//!
+//! Substitutes for the paper's `perf`-counter measurements on the 12900K
+//! (Figs. 4, 11, 12): miss *rates* are a function of the access pattern
+//! against the cache geometry, which this models exactly — L1 → L2, LRU
+//! replacement, write-allocate, 64-byte lines (the 12900K's Golden Cove
+//! geometry lives in `config::presets::i9_12900k_caches`).
+
+/// Geometry of one cache level.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub assoc: usize,
+}
+
+impl CacheConfig {
+    pub fn num_sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.assoc)
+    }
+}
+
+/// One set-associative LRU cache level.
+#[derive(Debug)]
+pub struct Cache {
+    pub cfg: CacheConfig,
+    /// Per set: tags ordered most-recently-used first.
+    sets: Vec<Vec<u64>>,
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        assert!(cfg.num_sets().is_power_of_two() || cfg.num_sets() > 0);
+        Self { sets: vec![Vec::new(); cfg.num_sets()], cfg, accesses: 0, misses: 0 }
+    }
+
+    /// Access one byte address; returns `true` on hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.accesses += 1;
+        let line = addr / self.cfg.line_bytes as u64;
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        let set = &mut self.sets[set_idx];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            let tag = set.remove(pos);
+            set.insert(0, tag); // move to MRU
+            true
+        } else {
+            self.misses += 1;
+            if set.len() == self.cfg.assoc {
+                set.pop(); // evict LRU
+            }
+            set.insert(0, line);
+            false
+        }
+    }
+
+    /// Install a line without counting an access (prefetch fill).
+    pub fn install(&mut self, addr: u64) {
+        let line = addr / self.cfg.line_bytes as u64;
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        let set = &mut self.sets[set_idx];
+        if let Some(pos) = set.iter().position(|&t| t == line) {
+            let tag = set.remove(pos);
+            set.insert(0, tag);
+            return;
+        }
+        if set.len() == self.cfg.assoc {
+            set.pop();
+        }
+        set.insert(0, line);
+    }
+
+    /// Invalidate a line if present (coherence traffic from another core).
+    pub fn invalidate(&mut self, addr: u64) {
+        let line = addr / self.cfg.line_bytes as u64;
+        let set_idx = (line % self.sets.len() as u64) as usize;
+        if let Some(pos) = self.sets[set_idx].iter().position(|&t| t == line) {
+            self.sets[set_idx].remove(pos);
+        }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 { 0.0 } else { self.misses as f64 / self.accesses as f64 }
+    }
+}
+
+/// Two-level hierarchy configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchyConfig {
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    /// Miss-triggered L2 stream-prefetch degree (lines fetched ahead on an
+    /// L2 miss; 0 disables). Models the L2 streamer that makes measured L2
+    /// miss rates on sequential sweeps single-digit (paper Fig. 4: 4.6%).
+    pub l2_prefetch: usize,
+}
+
+/// L1 → L2 hierarchy; L2 sees only L1 misses (paper's perf counters count
+/// L2 miss rate as L2-misses / L2-accesses the same way).
+#[derive(Debug)]
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    prefetch: usize,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: HierarchyConfig) -> Self {
+        Self { l1: Cache::new(cfg.l1), l2: Cache::new(cfg.l2), prefetch: cfg.l2_prefetch }
+    }
+
+    /// Access one address through the hierarchy.
+    #[inline]
+    pub fn access(&mut self, addr: u64) {
+        if !self.l1.access(addr) {
+            if !self.l2.access(addr) && self.prefetch > 0 {
+                // Miss-triggered streamer: pull the next lines into L2.
+                let line_bytes = self.l2.cfg.line_bytes as u64;
+                for k in 1..=self.prefetch as u64 {
+                    self.l2.install(addr + k * line_bytes);
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> HierarchyStats {
+        HierarchyStats {
+            l1_accesses: self.l1.accesses,
+            l1_misses: self.l1.misses,
+            l2_accesses: self.l2.accesses,
+            l2_misses: self.l2.misses,
+        }
+    }
+}
+
+/// Aggregated statistics from a simulation run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierarchyStats {
+    pub l1_accesses: u64,
+    pub l1_misses: u64,
+    pub l2_accesses: u64,
+    pub l2_misses: u64,
+}
+
+impl HierarchyStats {
+    pub fn l1_miss_rate(&self) -> f64 {
+        if self.l1_accesses == 0 { 0.0 } else { self.l1_misses as f64 / self.l1_accesses as f64 }
+    }
+
+    pub fn l2_miss_rate(&self) -> f64 {
+        if self.l2_accesses == 0 { 0.0 } else { self.l2_misses as f64 / self.l2_accesses as f64 }
+    }
+
+    pub fn merge(&mut self, other: &HierarchyStats) {
+        self.l1_accesses += other.l1_accesses;
+        self.l1_misses += other.l1_misses;
+        self.l2_accesses += other.l2_accesses;
+        self.l2_misses += other.l2_misses;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CacheConfig {
+        CacheConfig { size_bytes: 256, line_bytes: 64, assoc: 2 } // 2 sets
+    }
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(tiny());
+        assert!(!c.access(0));
+        for _ in 0..10 {
+            assert!(c.access(4)); // same line as 0
+        }
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = Cache::new(tiny());
+        // set 0 holds lines with (line % 2 == 0): addresses 0, 128, 256...
+        c.access(0); // line 0 -> set 0
+        c.access(128); // line 2 -> set 0 (full now)
+        c.access(0); // touch line 0 (MRU)
+        c.access(256); // line 4 -> evicts LRU = line 2
+        assert!(c.access(0), "line 0 should survive");
+        assert!(!c.access(128), "line 2 was evicted");
+    }
+
+    #[test]
+    fn streaming_miss_rate_is_one_per_line() {
+        // Stream 64 KiB of f32s: every 16th access misses (64B line / 4B).
+        let mut c = Cache::new(CacheConfig { size_bytes: 4096, line_bytes: 64, assoc: 4 });
+        for i in 0..16_384u64 {
+            c.access(i * 4);
+        }
+        let rate = c.miss_rate();
+        assert!((rate - 1.0 / 16.0).abs() < 1e-3, "rate={rate}");
+    }
+
+    #[test]
+    fn strided_columns_miss_every_access() {
+        // Column sweep of a 1024x1024 f32 matrix: stride 4096B >> cache.
+        let mut c = Cache::new(CacheConfig { size_bytes: 32 * 1024, line_bytes: 64, assoc: 8 });
+        for j in 0..4u64 {
+            for i in 0..1024u64 {
+                c.access(i * 4096 + j * 4);
+            }
+        }
+        // First column: all miss. Next columns: same lines already evicted
+        // (1024 lines > 512 cache lines) -> all miss again.
+        assert!(c.miss_rate() > 0.99, "rate={}", c.miss_rate());
+    }
+
+    #[test]
+    fn working_set_that_fits_has_only_compulsory_misses() {
+        let mut c = Cache::new(CacheConfig { size_bytes: 64 * 1024, line_bytes: 64, assoc: 8 });
+        for _round in 0..4 {
+            for i in 0..4096u64 {
+                c.access(i * 4); // 16 KiB working set
+            }
+        }
+        assert_eq!(c.misses, 4096 / 16); // only the first round misses
+    }
+
+    #[test]
+    fn invalidate_forces_remiss() {
+        let mut c = Cache::new(tiny());
+        c.access(0);
+        assert!(c.access(0));
+        c.invalidate(0);
+        assert!(!c.access(0));
+    }
+
+    #[test]
+    fn hierarchy_l2_sees_only_l1_misses() {
+        let cfg = HierarchyConfig {
+            l1: CacheConfig { size_bytes: 1024, line_bytes: 64, assoc: 2 },
+            l2: CacheConfig { size_bytes: 8192, line_bytes: 64, assoc: 4 },
+            l2_prefetch: 0,
+        };
+        let mut h = Hierarchy::new(cfg);
+        for i in 0..256u64 {
+            h.access(i * 4); // 1 KiB stream: 16 lines
+        }
+        let s = h.stats();
+        assert_eq!(s.l1_accesses, 256);
+        assert_eq!(s.l2_accesses, s.l1_misses);
+    }
+
+    #[test]
+    fn l2_streamer_converts_stream_misses_to_hits() {
+        let mk = |pf: usize| HierarchyConfig {
+            l1: CacheConfig { size_bytes: 1024, line_bytes: 64, assoc: 2 },
+            l2: CacheConfig { size_bytes: 64 * 1024, line_bytes: 64, assoc: 8 },
+            l2_prefetch: pf,
+        };
+        let run = |pf: usize| {
+            let mut h = Hierarchy::new(mk(pf));
+            for i in 0..65_536u64 {
+                h.access(i * 4); // 256 KiB stream
+            }
+            h.stats().l2_miss_rate()
+        };
+        let none = run(0);
+        let deg16 = run(16);
+        assert!(none > 0.95, "no-prefetch stream should miss L2: {none}");
+        // Miss-triggered degree-16 streamer: ~1 miss per 17 lines.
+        assert!((deg16 - 1.0 / 17.0).abs() < 0.02, "deg16={deg16}");
+    }
+}

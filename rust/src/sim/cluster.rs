@@ -1,0 +1,148 @@
+//! MPI cluster model — Tianhe-1 scalability substitute (Fig. 16).
+//!
+//! The paper runs M=N=20480 on Tianhe-1 with mpi4py, replacing the
+//! per-thread `NextSum_col` reduction (Algorithm 1 lines 16–20) with
+//! `MPI_Allreduce`. The figure's shape is a race between two terms:
+//!
+//! * **compute**: each of `P` processes sweeps `M/P` rows; per-process
+//!   effective rate is the min of its core-side issue rate and its share
+//!   of the node's memory bandwidth (12 Westmere cores share one socket's
+//!   DDR3 — the same saturation that flattens Fig. 10);
+//! * **communication**: one allreduce of `N` floats per rescaling phase,
+//!   costed with the Thakur–Rabenseifner–Gropp recursive-doubling /
+//!   rec-halving model `2·log2(P)·α + 2·(P−1)/P · n·β`.
+//!
+//! POT needs two allreduces per iteration (column sums and a separate
+//!   broadcast/reduce for the factor exchange of its unfused sweeps) and
+//!   three times MAP-UOT's traffic; COFFEE needs one allreduce and twice
+//!   the traffic, matching its sweep structure.
+
+use crate::algo::SolverKind;
+
+/// Cluster hardware model.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// MPI processes per node (the paper evaluates 8 and 12).
+    pub procs_per_node: usize,
+    /// Node-wide memory bandwidth shared by local processes (GB/s).
+    pub node_bw_gbs: f64,
+    /// Per-process compute-side issue rate, giga-elements/s of traffic.
+    pub proc_gelems_per_s: f64,
+    /// Per-link network bandwidth (GB/s).
+    pub link_bw_gbs: f64,
+    /// MPI latency term α (µs per message stage).
+    pub alpha_us: f64,
+    /// Per-iteration serial driver overhead (µs) — the mpi4py loop.
+    pub py_overhead_us: f64,
+}
+
+impl ClusterConfig {
+    /// Effective per-process matrix-traffic rate (elements/s) when `p`
+    /// processes run on this node layout.
+    pub fn per_proc_rate(&self, p: usize) -> f64 {
+        let local = p.min(self.procs_per_node) as f64;
+        let bw_share_elems = self.node_bw_gbs * 1e9 / 4.0 / local; // f32 elems/s
+        (self.proc_gelems_per_s * 1e9).min(bw_share_elems)
+    }
+
+    /// Allreduce time (seconds) for `n` f32 values across `p` processes.
+    pub fn allreduce_s(&self, n: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let lg = (p as f64).log2().ceil();
+        let bytes = n as f64 * 4.0;
+        2.0 * lg * self.alpha_us * 1e-6
+            + 2.0 * (p as f64 - 1.0) / p as f64 * bytes / (self.link_bw_gbs * 1e9)
+    }
+}
+
+/// Allreduces per iteration for each solver's distributed form.
+fn allreduces_per_iter(kind: SolverKind) -> usize {
+    match kind {
+        SolverKind::Pot => 2,
+        SolverKind::Coffee => 1,
+        SolverKind::MapUot => 1,
+    }
+}
+
+/// Predicted time (seconds) of one distributed iteration of `kind` with
+/// `p` processes on an `m × n` problem.
+pub fn iter_time_s(cfg: &ClusterConfig, kind: SolverKind, m: usize, n: usize, p: usize) -> f64 {
+    let p = p.max(1);
+    let rows = (m as f64 / p as f64).ceil();
+    let traffic_elems = kind.sweeps_per_iter() as f64 * rows * n as f64;
+    let compute = traffic_elems / cfg.per_proc_rate(p);
+    let comm = allreduces_per_iter(kind) as f64 * cfg.allreduce_s(n, p);
+    compute + comm + cfg.py_overhead_us * 1e-6
+}
+
+/// Speedup of (`kind`, `p` procs) relative to single-process POT — the
+/// normalization Fig. 16 uses.
+pub fn speedup_vs_pot1(cfg: &ClusterConfig, kind: SolverKind, m: usize, n: usize, p: usize) -> f64 {
+    iter_time_s(cfg, SolverKind::Pot, m, n, 1) / iter_time_s(cfg, kind, m, n, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::tianhe1_cluster;
+
+    const M: usize = 20480;
+
+    #[test]
+    fn allreduce_grows_logarithmically_in_latency_term() {
+        let c = tianhe1_cluster(12);
+        let t2 = c.allreduce_s(1, 2);
+        let t1024 = c.allreduce_s(1, 1024);
+        assert!(t1024 < t2 * 12.0, "t2={t2} t1024={t1024}");
+        assert!(t1024 > t2);
+    }
+
+    #[test]
+    fn fig16_ordering_mapuot_coffee_pot() {
+        let c = tianhe1_cluster(12);
+        for p in [48usize, 192, 768] {
+            let s_map = speedup_vs_pot1(&c, SolverKind::MapUot, M, M, p);
+            let s_cof = speedup_vs_pot1(&c, SolverKind::Coffee, M, M, p);
+            let s_pot = speedup_vs_pot1(&c, SolverKind::Pot, M, M, p);
+            assert!(s_map > s_cof && s_cof > s_pot, "p={p}: {s_map} {s_cof} {s_pot}");
+        }
+    }
+
+    #[test]
+    fn fig16_magnitudes_in_paper_band() {
+        // Paper at 768 procs: MAP 550x, COFFEE 301x, POT 184x.
+        let c = tianhe1_cluster(12);
+        let s_map = speedup_vs_pot1(&c, SolverKind::MapUot, M, M, 768);
+        let s_pot = speedup_vs_pot1(&c, SolverKind::Pot, M, M, 768);
+        assert!(s_map > 350.0 && s_map < 900.0, "map={s_map}");
+        assert!(s_pot > 120.0 && s_pot < 400.0, "pot={s_pot}");
+        assert!(s_map / s_pot > 2.0, "ratio={}", s_map / s_pot);
+    }
+
+    #[test]
+    fn scaling_is_monotone_then_comm_bound() {
+        let c = tianhe1_cluster(8);
+        let mut prev = 0.0;
+        for p in [8usize, 32, 128, 512] {
+            let s = speedup_vs_pot1(&c, SolverKind::MapUot, M, M, p);
+            assert!(s > prev, "p={p}: {s} <= {prev}");
+            prev = s;
+        }
+        // Communication eventually dominates: efficiency per proc drops.
+        let e512 = speedup_vs_pot1(&c, SolverKind::MapUot, M, M, 512) / 512.0;
+        let e8 = speedup_vs_pot1(&c, SolverKind::MapUot, M, M, 8) / 8.0;
+        assert!(e512 < e8, "e512={e512} e8={e8}");
+    }
+
+    #[test]
+    fn node_bandwidth_saturation_binds() {
+        let c = tianhe1_cluster(12);
+        // With 12 procs on one node each gets 1/12 of 25.6 GB/s.
+        let r12 = c.per_proc_rate(12);
+        let r1 = c.per_proc_rate(1);
+        assert!(r12 < r1);
+        assert!((r12 - 25.6e9 / 4.0 / 12.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Analytical GPU execution model (RTX 3090 Ti substitute).
+//!
+//! No CUDA hardware is available in this environment, so the paper's GPU
+//! experiments (Figs. 5, 8, 13, 14, 15) are regenerated from a
+//! transaction-level model of the two MAP-UOT kernels (paper Algorithms 2
+//! and 3) and the CuPy baseline. The model captures the effects the paper
+//! attributes its wins to:
+//!
+//! * **streaming traffic** per iteration (6·M·N elements baseline vs
+//!   4·M·N for the two fused kernels — the GPU cannot fuse across the
+//!   row-factor dependency, so MAP-UOT on GPU is two passes, not one);
+//! * **occupancy** from the tile shape (`blocks_per_sm` is limited by the
+//!   1536-thread SM and the 16-block slot limit; one-warp blocks starve
+//!   the SM exactly as Fig. 8's `Tx=32` column shows);
+//! * **fixed per-block-row latency** (shuffle/smem reduction + `atomicAdd`
+//!   + `__syncthreads`) that larger `Ny` amortizes — the Fig. 8 rows;
+//! * **atomic serialization chains** on `Sum_col`/`Sum_row` addresses;
+//! * **host dispatch overhead** of the un-fused CuPy loop (many small
+//!   kernel launches + Python) that dominates small sizes — the Fig. 13
+//!   crossover at small matrices.
+//!
+//! Calibration constants live in `config::presets::rtx_3090ti_gpu`; the
+//! model is validated in EXPERIMENTS.md against the shape of each figure
+//! (who wins, optima locations, crossovers), not absolute microseconds.
+
+pub mod model;
+pub mod tiling;
+
+pub use model::{
+    mapuot_iter_ms, peak_memory_mb, pot_iter_ms, throughput_gbs, Throughput,
+};
+pub use tiling::{blocks_per_sm, occupancy, TileConfig};
+
+/// GPU device parameters (Table 1 + calibrated micro-costs).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuConfig {
+    pub name: &'static str,
+    pub peak_bw_gbs: f64,
+    pub peak_gflops: f64,
+    pub sm_count: usize,
+    pub max_threads_per_sm: usize,
+    pub warp_size: usize,
+    /// Host-side cost of one kernel launch (µs).
+    pub kernel_launch_us: f64,
+    /// Hardware block-scheduling slot cost (ns).
+    pub block_sched_ns: f64,
+    /// Serialization cost per conflicting atomic on one address (ns).
+    pub atomic_conflict_ns: f64,
+    /// Per-step cost of a shared-memory/warp reduction (ns).
+    pub smem_reduce_ns_per_step: f64,
+    /// Framework/context device-memory overhead (MB) for Fig. 15.
+    pub context_mb: f64,
+}

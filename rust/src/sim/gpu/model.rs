@@ -1,0 +1,217 @@
+//! Kernel timing, throughput and memory models (Figs. 5, 8, 13, 14, 15).
+
+use super::tiling::{concurrent_blocks, occupancy, TileConfig};
+use super::GpuConfig;
+
+const F: f64 = 4.0; // sizeof(f32)
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Which fused kernel of the GPU design (paper §4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Part {
+    /// Part ② (Algorithm 2): row rescaling + column-sum accumulation.
+    Part2,
+    /// Part ④ (Algorithm 3): column rescaling + row-sum reduction.
+    Part4,
+}
+
+/// Effective streaming efficiency of a fully-coalesced fused kernel.
+const MAPUOT_STREAM_EFF: f64 = 0.89;
+/// Effective streaming efficiency of the CuPy baseline's generic kernels.
+const POT_STREAM_EFF: f64 = 0.80;
+/// Host-side Python/CuPy dispatch overhead per baseline iteration (ms):
+/// seven-ish kernel launches, descriptor setup, host sync. Calibrated so
+/// the small-size end of Fig. 13 peaks at ~3.5× (the paper's max).
+const POT_HOST_OVERHEAD_MS: f64 = 0.05;
+/// Fixed latency of one block-row step (reduce + atomic + sync), ns.
+const BLOCK_ROW_LATENCY_NS: f64 = 1600.0;
+/// Mild penalty per Ny doubling past 8 (register pressure / smem growth —
+/// calibrated so the Fig. 8 optimum lands at Ny = 8 as measured).
+const NY_PRESSURE: f64 = 0.012;
+
+/// Latency-hiding factor from per-thread unrolling: deeper `Ny` loops keep
+/// more loads in flight (paper §4.2.2 "help hide memory access latency").
+fn hiding(ny: usize) -> f64 {
+    (ny as f64).sqrt().min(4.0)
+}
+
+/// Time (ms) of one fused-kernel launch over an `m × n` matrix.
+pub fn kernel_time_ms(cfg: &GpuConfig, part: Part, tile: TileConfig, m: usize, n: usize) -> f64 {
+    let (m, n) = (m as f64, n as f64);
+    // Streaming term: one read + one write of the matrix.
+    let bytes = 2.0 * m * n * F;
+    let occ = occupancy(cfg, tile);
+    // Bandwidth saturates once enough warps are resident; below ~2/3
+    // occupancy the achieved bandwidth degrades roughly linearly.
+    let bw_util = MAPUOT_STREAM_EFF * (occ / 0.66).min(1.0);
+    let t_stream = bytes / (cfg.peak_bw_gbs * 1e9 * bw_util) * 1e3;
+
+    // Latency term: every (block, row-step) pays a fixed reduce/atomic/sync
+    // latency; concurrent blocks and per-thread unrolling hide it.
+    let block_rows = match part {
+        // Part ②: grid (N/Tx, M/(Ty·Ny)); each block does Ny row-steps.
+        Part::Part2 => (n / tile.tx as f64) * (m / tile.ty as f64),
+        // Part ④: 1-D blocks of Tx threads; N/Tx blocks cover each row.
+        Part::Part4 => (n / tile.tx as f64) * m,
+    };
+    let conc = concurrent_blocks(cfg, tile) as f64 * hiding(tile.ny);
+    let t_lat = block_rows * BLOCK_ROW_LATENCY_NS / conc * 1e-6;
+
+    // Atomic serialization: longest chain of conflicting atomicAdds.
+    let chain = match part {
+        Part::Part2 => m / (tile.ty as f64 * tile.ny as f64), // per Sum_col[j]
+        Part::Part4 => n / tile.tx as f64,                    // per Sum_row[i]
+    };
+    let t_atomic = chain * cfg.atomic_conflict_ns * 1e-6;
+
+    let pressure = if tile.ny > 8 { 1.0 + NY_PRESSURE * (tile.ny as f64 / 8.0 - 1.0) } else { 1.0 };
+    (t_stream.max(t_lat) + t_atomic) * pressure + cfg.kernel_launch_us * 1e-3
+}
+
+/// One MAP-UOT GPU iteration (ms): part ② + part ④ + the O(N) factor
+/// kernels (folded into launch overhead).
+pub fn mapuot_iter_ms(cfg: &GpuConfig, m: usize, n: usize, t2: TileConfig, t4: TileConfig) -> f64 {
+    kernel_time_ms(cfg, Part::Part2, t2, m, n)
+        + kernel_time_ms(cfg, Part::Part4, t4, m, n)
+        + 2.0 * cfg.kernel_launch_us * 1e-3 // factor/zero kernels
+}
+
+/// One POT (CuPy) GPU iteration (ms): four generic streaming kernels
+/// (6·M·N traffic) + the Python/CuPy dispatch overhead.
+pub fn pot_iter_ms(cfg: &GpuConfig, m: usize, n: usize) -> f64 {
+    let bytes = 6.0 * m as f64 * n as f64 * F;
+    let t_stream = bytes / (cfg.peak_bw_gbs * 1e9 * POT_STREAM_EFF) * 1e3;
+    t_stream + POT_HOST_OVERHEAD_MS + 4.0 * cfg.kernel_launch_us * 1e-3
+}
+
+/// Achieved global load/store throughput (GB/s) over one iteration —
+/// the Fig. 5 / Fig. 14 metric (bytes moved / wall time).
+///
+/// Reproduction note (EXPERIMENTS.md): under consistent wall-time byte
+/// accounting, MAP-UOT's *store* throughput and *total* bandwidth
+/// utilization rise (as in the paper), while its *load* byte count is cut
+/// in half by the fusion itself — so a wall-time load-throughput increment
+/// like the paper's Ncu +22.7% is not reconstructible from a consistent
+/// timing model; we report the direction via `total_gbs` instead.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    pub load_gbs: f64,
+    pub store_gbs: f64,
+}
+
+impl Throughput {
+    /// Total achieved bandwidth (bandwidth utilization — always higher for
+    /// the fused kernels).
+    pub fn total_gbs(&self) -> f64 {
+        self.load_gbs + self.store_gbs
+    }
+}
+
+/// Throughput for a solver kind: `fused = true` models MAP-UOT (loads =
+/// stores = M·N elements per pass over its two kernels), `false` the CuPy
+/// baseline (4·M·N loads, 2·M·N stores over four kernels).
+pub fn throughput_gbs(cfg: &GpuConfig, m: usize, n: usize, fused: bool) -> Throughput {
+    let mn = m as f64 * n as f64;
+    if fused {
+        let t = mapuot_iter_ms(cfg, m, n, TileConfig::part2_default(), TileConfig::part4_default());
+        Throughput {
+            load_gbs: 2.0 * mn * F / (t * 1e-3) / 1e9,
+            store_gbs: 2.0 * mn * F / (t * 1e-3) / 1e9,
+        }
+    } else {
+        let t = pot_iter_ms(cfg, m, n);
+        Throughput {
+            load_gbs: 4.0 * mn * F / (t * 1e-3) / 1e9,
+            store_gbs: 2.0 * mn * F / (t * 1e-3) / 1e9,
+        }
+    }
+}
+
+/// Peak device memory (MB) during a solve — Fig. 15.
+///
+/// Model (DESIGN.md §Substitutions): both hold the framework context plus
+/// buffers proportional to the plan. The CuPy baseline materializes the
+/// plan plus broadcast temporaries and reduction workspaces (≈ 4.4 plan
+/// sizes, calibrated on the paper's 4096² point: 413 MB); MAP-UOT holds
+/// the plan, its double buffer and one workspace (3 plan sizes → 323 MB).
+pub fn peak_memory_mb(cfg: &GpuConfig, m: usize, n: usize, fused: bool) -> f64 {
+    let plan_mb = m as f64 * n as f64 * F / MB;
+    let factor = if fused { 3.0 } else { 4.4 };
+    cfg.context_mb + factor * plan_mb + (m + n) as f64 * F * 6.0 / MB
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::rtx_3090ti_gpu;
+
+    #[test]
+    fn fig8_optimum_part2_is_tx32_ny8() {
+        let g = rtx_3090ti_gpu();
+        let mut best = (f64::MAX, TileConfig { tx: 0, ty: 2, ny: 0 });
+        for tx in [32, 64, 128, 256, 512] {
+            for ny in [1, 2, 4, 8, 16] {
+                let t = kernel_time_ms(&g, Part::Part2, TileConfig { tx, ty: 2, ny }, 10240, 10240);
+                if t < best.0 {
+                    best = (t, TileConfig { tx, ty: 2, ny });
+                }
+            }
+        }
+        assert_eq!(best.1.ny, 8, "best={:?}", best);
+    }
+
+    #[test]
+    fn fig8_part4_tx32_is_catastrophic() {
+        let g = rtx_3090ti_gpu();
+        let t32 = kernel_time_ms(&g, Part::Part4, TileConfig { tx: 32, ty: 1, ny: 1 }, 10240, 10240);
+        let t128 = kernel_time_ms(&g, Part::Part4, TileConfig { tx: 128, ty: 1, ny: 8 }, 10240, 10240);
+        assert!(t32 > 2.5 * t128, "t32={t32} t128={t128}");
+        // and the best configuration approaches the streaming floor (~0.93 ms)
+        assert!(t128 < 1.3, "t128={t128}");
+        assert!(t128 > 0.8, "t128={t128}");
+    }
+
+    #[test]
+    fn fig13_mapuot_beats_pot_at_all_sizes() {
+        let g = rtx_3090ti_gpu();
+        let (t2, t4) = (TileConfig::part2_default(), TileConfig::part4_default());
+        for s in [512usize, 1024, 2048, 4096, 10240] {
+            let pot = pot_iter_ms(&g, s, s);
+            let map = mapuot_iter_ms(&g, s, s, t2, t4);
+            assert!(pot > map, "size={s}: pot={pot} map={map}");
+        }
+    }
+
+    #[test]
+    fn fig13_speedup_larger_at_small_sizes() {
+        let g = rtx_3090ti_gpu();
+        let (t2, t4) = (TileConfig::part2_default(), TileConfig::part4_default());
+        let sp = |s: usize| pot_iter_ms(&g, s, s) / mapuot_iter_ms(&g, s, s, t2, t4);
+        assert!(sp(512) > sp(4096), "sp512={} sp4096={}", sp(512), sp(4096));
+        assert!(sp(4096) > 1.3 && sp(4096) < 2.5, "sp4096={}", sp(4096));
+        assert!(sp(512) < 5.0, "sp512={}", sp(512));
+    }
+
+    #[test]
+    fn fig14_throughput_increments_positive() {
+        let g = rtx_3090ti_gpu();
+        for s in [1024usize, 4096, 10240] {
+            let base = throughput_gbs(&g, s, s, false);
+            let fused = throughput_gbs(&g, s, s, true);
+            // Store throughput and total bandwidth utilization both rise
+            // (see Throughput docs for the load-side accounting caveat).
+            assert!(fused.store_gbs > base.store_gbs, "size={s}");
+            assert!(fused.total_gbs() > base.total_gbs(), "size={s}");
+        }
+    }
+
+    #[test]
+    fn fig15_memory_matches_paper_at_4096() {
+        let g = rtx_3090ti_gpu();
+        let pot = peak_memory_mb(&g, 4096, 4096, false);
+        let map = peak_memory_mb(&g, 4096, 4096, true);
+        assert!((map - 323.0).abs() < 15.0, "map={map}");
+        let reduction = 1.0 - map / pot;
+        assert!((reduction - 0.218).abs() < 0.05, "reduction={reduction}");
+    }
+}

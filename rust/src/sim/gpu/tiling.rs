@@ -1,0 +1,79 @@
+//! Tiling configurations and occupancy (paper §4.2, Fig. 8 sweep space).
+
+use super::GpuConfig;
+
+/// A kernel tile shape: `Tx × Ty` threads per block, `Ny` rows (part ②)
+/// or row-steps (part ④) per thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    pub tx: usize,
+    pub ty: usize,
+    pub ny: usize,
+}
+
+impl TileConfig {
+    pub fn threads_per_block(&self) -> usize {
+        self.tx * self.ty
+    }
+
+    /// The paper's chosen configuration for part ② (Fig. 8: Tx=32, Ty=2, Ny=8).
+    pub fn part2_default() -> Self {
+        Self { tx: 32, ty: 2, ny: 8 }
+    }
+
+    /// The paper's chosen configuration for part ④ (Fig. 8: Tx=128, Ny=8).
+    pub fn part4_default() -> Self {
+        Self { tx: 128, ty: 1, ny: 8 }
+    }
+}
+
+/// Resident blocks per SM: limited by the thread budget and the hardware
+/// block-slot limit (16 on Ampere).
+pub fn blocks_per_sm(cfg: &GpuConfig, tile: TileConfig) -> usize {
+    let by_threads = cfg.max_threads_per_sm / tile.threads_per_block().max(1);
+    by_threads.min(16).max(1)
+}
+
+/// Occupancy: resident threads / max threads per SM.
+pub fn occupancy(cfg: &GpuConfig, tile: TileConfig) -> f64 {
+    let resident = blocks_per_sm(cfg, tile) * tile.threads_per_block();
+    (resident as f64 / cfg.max_threads_per_sm as f64).min(1.0)
+}
+
+/// Concurrent blocks across the device.
+pub fn concurrent_blocks(cfg: &GpuConfig, tile: TileConfig) -> usize {
+    cfg.sm_count * blocks_per_sm(cfg, tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::rtx_3090ti_gpu;
+
+    #[test]
+    fn one_warp_blocks_starve_the_sm() {
+        let g = rtx_3090ti_gpu();
+        // 32-thread blocks: 16-slot limit binds -> 512/1536 occupancy.
+        let t32 = TileConfig { tx: 32, ty: 1, ny: 1 };
+        assert_eq!(blocks_per_sm(&g, t32), 16);
+        assert!((occupancy(&g, t32) - 512.0 / 1536.0).abs() < 1e-9);
+        // 128-thread blocks reach full occupancy (12 * 128 = 1536).
+        let t128 = TileConfig { tx: 128, ty: 1, ny: 1 };
+        assert_eq!(blocks_per_sm(&g, t128), 12);
+        assert!((occupancy(&g, t128) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn huge_blocks_reduce_block_slots() {
+        let g = rtx_3090ti_gpu();
+        let t = TileConfig { tx: 512, ty: 2, ny: 1 };
+        assert_eq!(blocks_per_sm(&g, t), 1);
+        assert!(occupancy(&g, t) < 0.7);
+    }
+
+    #[test]
+    fn paper_defaults() {
+        assert_eq!(TileConfig::part2_default().tx, 32);
+        assert_eq!(TileConfig::part4_default().tx, 128);
+    }
+}

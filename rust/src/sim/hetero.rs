@@ -1,0 +1,166 @@
+//! Heterogeneous P/E-core scheduling model (paper §6 future work: "taking
+//! advantage of complex structure of 12900K's performance cores and
+//! efficient cores").
+//!
+//! The 12900K has 8 Golden Cove P-cores and 8 Gracemont E-cores with very
+//! different sustained per-core bandwidth/compute. MAP-UOT's row partition
+//! (`parallel.rs` splits rows evenly) is optimal for homogeneous cores but
+//! leaves P-cores idle waiting for E-cores on a hybrid part. This module
+//! models one iteration under three schedules and quantifies the §6
+//! opportunity:
+//!
+//! * `Uniform`      — even rows per core (the paper's Algorithm 1)
+//! * `Proportional` — rows ∝ per-core throughput (static, oracle weights)
+//! * `WorkStealing` — chunked deque, cores pull; approaches proportional
+//!   with bounded chunk overhead
+//!
+//! All schedules share the DRAM-bandwidth ceiling: per-core rates are
+//! clipped so the aggregate never exceeds the socket's peak (the same
+//! saturation law as `sim::multicore`).
+
+use crate::algo::SolverKind;
+
+/// A hybrid CPU: two core classes with per-core sustained solver
+/// throughput (giga-element-accesses/s) and a socket bandwidth ceiling.
+#[derive(Debug, Clone, Copy)]
+pub struct HybridCpu {
+    pub p_cores: usize,
+    pub e_cores: usize,
+    /// Per-P-core throughput for a memory-bound sweep (Gelem/s).
+    pub p_rate: f64,
+    /// Per-E-core throughput (Gracemont: narrower, lower clock).
+    pub e_rate: f64,
+    /// Socket DRAM ceiling in Gelem/s (f32: 76.8 GB/s → 19.2 Gelem/s).
+    pub socket_ceiling: f64,
+}
+
+/// 12900K preset: E-cores sustain ~45% of a P-core on streaming loops.
+pub fn i9_12900k_hybrid() -> HybridCpu {
+    HybridCpu { p_cores: 8, e_cores: 8, p_rate: 2.7, e_rate: 1.2, socket_ceiling: 19.2 }
+}
+
+/// Scheduling policy for the row partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    Uniform,
+    Proportional,
+    /// Work stealing with this many chunks per core.
+    WorkStealing { chunks_per_core: usize },
+}
+
+/// Effective per-core rates after the socket ceiling is applied
+/// proportionally (bandwidth is shared, not reserved).
+fn clipped_rates(cpu: &HybridCpu) -> (f64, f64) {
+    let raw = cpu.p_cores as f64 * cpu.p_rate + cpu.e_cores as f64 * cpu.e_rate;
+    let scale = (cpu.socket_ceiling / raw).min(1.0);
+    (cpu.p_rate * scale, cpu.e_rate * scale)
+}
+
+/// Predicted seconds for one iteration of `kind` over `m × n` under a
+/// schedule. Work per row is `sweeps · n` element accesses.
+pub fn iter_time_s(
+    cpu: &HybridCpu,
+    kind: SolverKind,
+    m: usize,
+    n: usize,
+    schedule: Schedule,
+) -> f64 {
+    let (p, e) = clipped_rates(cpu);
+    let row_work = kind.sweeps_per_iter() as f64 * n as f64; // accesses/row
+    let total_rows = m as f64;
+    match schedule {
+        Schedule::Uniform => {
+            // Even split: the slowest populated class finishes last.
+            let cores = (cpu.p_cores + cpu.e_cores) as f64;
+            let rows_per_core = total_rows / cores;
+            let t_p = if cpu.p_cores > 0 { rows_per_core * row_work / (p * 1e9) } else { 0.0 };
+            let t_e = if cpu.e_cores > 0 { rows_per_core * row_work / (e * 1e9) } else { 0.0 };
+            t_p.max(t_e)
+        }
+        Schedule::Proportional => {
+            // Rows ∝ rate ⇒ all cores finish together.
+            let agg = cpu.p_cores as f64 * p + cpu.e_cores as f64 * e;
+            total_rows * row_work / (agg * 1e9)
+        }
+        Schedule::WorkStealing { chunks_per_core } => {
+            // Proportional finish plus one trailing chunk of the slowest
+            // class plus per-chunk deque overhead (~80 ns CAS + cache line).
+            let agg = cpu.p_cores as f64 * p + cpu.e_cores as f64 * e;
+            let ideal = total_rows * row_work / (agg * 1e9);
+            let chunks = (cpu.p_cores + cpu.e_cores) * chunks_per_core.max(1);
+            let chunk_rows = total_rows / chunks as f64;
+            let tail = chunk_rows * row_work / (e * 1e9);
+            let overhead = chunks as f64 * 80e-9 / (cpu.p_cores + cpu.e_cores) as f64;
+            ideal + tail + overhead
+        }
+    }
+}
+
+/// Speedup of a schedule over `Uniform` (the §6 headroom number).
+pub fn speedup_vs_uniform(
+    cpu: &HybridCpu,
+    kind: SolverKind,
+    m: usize,
+    n: usize,
+    schedule: Schedule,
+) -> f64 {
+    iter_time_s(cpu, kind, m, n, Schedule::Uniform) / iter_time_s(cpu, kind, m, n, schedule)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: usize = 4096;
+
+    #[test]
+    fn uniform_is_bound_by_e_cores() {
+        let cpu = i9_12900k_hybrid();
+        let (p, e) = clipped_rates(&cpu);
+        assert!(p > e);
+        let t_uni = iter_time_s(&cpu, SolverKind::MapUot, S, S, Schedule::Uniform);
+        // Uniform time equals the E-core time for its share.
+        let rows_per_core = S as f64 / 16.0;
+        let expect = rows_per_core * 2.0 * S as f64 / (e * 1e9);
+        assert!((t_uni - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proportional_beats_uniform_by_the_rate_gap() {
+        let cpu = i9_12900k_hybrid();
+        let s = speedup_vs_uniform(&cpu, SolverKind::MapUot, S, S, Schedule::Proportional);
+        // Analytic: uniform is bound by 16·e; proportional achieves
+        // 8p + 8e. Gain = (8p+8e)/(16e) = (p/e + 1)/2 ≈ 1.63 for the preset.
+        let (p, e) = clipped_rates(&cpu);
+        let expect = (p / e + 1.0) / 2.0;
+        assert!((s - expect).abs() < 1e-6, "s={s} expect={expect}");
+        assert!(s > 1.3 && s < 2.0);
+    }
+
+    #[test]
+    fn work_stealing_approaches_proportional_with_more_chunks() {
+        let cpu = i9_12900k_hybrid();
+        let prop = iter_time_s(&cpu, SolverKind::MapUot, S, S, Schedule::Proportional);
+        let ws4 = iter_time_s(&cpu, SolverKind::MapUot, S, S, Schedule::WorkStealing { chunks_per_core: 4 });
+        let ws32 = iter_time_s(&cpu, SolverKind::MapUot, S, S, Schedule::WorkStealing { chunks_per_core: 32 });
+        assert!(ws32 < ws4, "more chunks should tighten the tail");
+        assert!(ws32 >= prop, "stealing cannot beat the oracle split");
+        assert!((ws32 - prop) / prop < 0.08, "32 chunks within 8% of oracle");
+    }
+
+    #[test]
+    fn ceiling_binds_for_memory_bound_kinds() {
+        let cpu = i9_12900k_hybrid();
+        // Raw aggregate 8·2.7 + 8·1.2 = 31.2 > 19.2 ceiling: clipped.
+        let (p, e) = clipped_rates(&cpu);
+        let agg = 8.0 * p + 8.0 * e;
+        assert!((agg - cpu.socket_ceiling).abs() < 1e-9, "agg={agg}");
+    }
+
+    #[test]
+    fn homogeneous_cpu_has_no_headroom() {
+        let cpu = HybridCpu { p_cores: 16, e_cores: 0, p_rate: 2.0, e_rate: 1.0, socket_ceiling: 19.2 };
+        let s = speedup_vs_uniform(&cpu, SolverKind::MapUot, S, S, Schedule::Proportional);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulators substituting for hardware the paper used but this testbed
+//! lacks (see DESIGN.md §Substitutions):
+//!
+//! * [`cache`] + [`memtrace`] — 12900K perf counters (Figs. 4, 11, 12)
+//! * [`gpu`] — RTX 3090 Ti + Nsight Compute (Figs. 5, 8, 13, 14, 15)
+//! * [`cluster`] — Tianhe-1 + MPI (Fig. 16)
+//! * [`roofline`] — the §3.1 Roofline analysis (Fig. 3, Eq. 1)
+
+pub mod cache;
+pub mod cluster;
+pub mod gpu;
+pub mod hetero;
+pub mod memtrace;
+pub mod multicore;
+pub mod roofline;

@@ -1,0 +1,143 @@
+//! Global-memory Roofline model (paper §3.1, Fig. 3).
+//!
+//! Reproduces Eq. 1: the UOT algorithm's operational intensity is
+//! `(M·N + M + N) / (4·M·N)` FLOP/byte (FP32) ≈ 1/4 — far below the ridge
+//! points of both evaluation platforms (10.3 on the i9-12900K, 39.7 on the
+//! RTX 3090 Ti), hence "heavily memory-bound".
+
+use crate::algo::SolverKind;
+
+/// A machine for Roofline purposes.
+#[derive(Debug, Clone, Copy)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Peak FP32 throughput in GFLOP/s.
+    pub peak_gflops: f64,
+    /// Peak DRAM bandwidth in GB/s.
+    pub peak_bw_gbs: f64,
+}
+
+impl Machine {
+    /// Ridge point (FLOP/byte) where the machine turns compute-bound.
+    pub fn ridge_point(&self) -> f64 {
+        self.peak_gflops / self.peak_bw_gbs
+    }
+
+    /// Attainable GFLOP/s at operational intensity `i` (the roofline).
+    pub fn attainable_gflops(&self, i: f64) -> f64 {
+        (self.peak_bw_gbs * i).min(self.peak_gflops)
+    }
+}
+
+/// Work `W` of one UOT iteration in operations (paper §3.1 counting: ADD,
+/// MUL, DIV and pow CALL all count 1): `6·M·N + 6·(M+N)`.
+pub fn work_ops(m: usize, n: usize) -> f64 {
+    6.0 * (m as f64) * (n as f64) + 6.0 * (m as f64 + n as f64)
+}
+
+/// Memory traffic `Q` in bytes for one iteration of `kind` (FP32).
+pub fn traffic_bytes(kind: SolverKind, m: usize, n: usize) -> f64 {
+    (kind.sweeps_per_iter() as f64) * (m as f64) * (n as f64) * 4.0
+}
+
+/// Operational intensity `I = W / Q` of one iteration of `kind`.
+///
+/// For the POT baseline this is Eq. 1: `(M·N + M + N) / (4·M·N)` ≈ 1/4.
+/// MAP-UOT's single fused sweep triples it to ≈ 3/4 — still memory-bound,
+/// which is why the paper's wins track the traffic ratio, not FLOPs.
+pub fn operational_intensity(kind: SolverKind, m: usize, n: usize) -> f64 {
+    work_ops(m, n) / traffic_bytes(kind, m, n)
+}
+
+/// Predicted time (seconds) for one iteration on `machine`, assuming the
+/// kernel achieves `efficiency` of the roofline bound at its intensity.
+pub fn predicted_iter_seconds(
+    machine: &Machine,
+    kind: SolverKind,
+    m: usize,
+    n: usize,
+    efficiency: f64,
+) -> f64 {
+    let gflops = machine.attainable_gflops(operational_intensity(kind, m, n)) * efficiency;
+    work_ops(m, n) / (gflops * 1e9)
+}
+
+/// One row of the Fig. 3 dataset.
+#[derive(Debug, Clone)]
+pub struct RooflineRow {
+    pub machine: &'static str,
+    pub kind: SolverKind,
+    pub intensity: f64,
+    pub attainable_gflops: f64,
+    pub ridge_point: f64,
+}
+
+/// Build the Fig. 3 dataset for a list of machines.
+pub fn figure3(machines: &[Machine], m: usize, n: usize) -> Vec<RooflineRow> {
+    let mut rows = Vec::new();
+    for mach in machines {
+        for kind in SolverKind::ALL {
+            let i = operational_intensity(kind, m, n);
+            rows.push(RooflineRow {
+                machine: mach.name,
+                kind,
+                intensity: i,
+                attainable_gflops: mach.attainable_gflops(i),
+                ridge_point: mach.ridge_point(),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn eq1_is_about_one_quarter() {
+        let i = operational_intensity(SolverKind::Pot, 1024, 1024);
+        assert!((i - 0.25).abs() < 0.01, "I={i}");
+        // exact form: (MN + M + N) / (4MN)
+        let (m, n) = (64.0, 48.0);
+        let exact = (m * n + m + n) / (4.0 * m * n);
+        let got = operational_intensity(SolverKind::Pot, 64, 48);
+        assert!((got - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_points_match_paper() {
+        // 793.6 GFLOPS / 76.8 GB/s = 10.33; 40 TFLOPS / 1008 GB/s = 39.7.
+        let cpu = presets::i9_12900k_roofline();
+        let gpu = presets::rtx_3090ti_roofline();
+        assert!((cpu.ridge_point() - 10.33).abs() < 0.05, "{}", cpu.ridge_point());
+        assert!((gpu.ridge_point() - 39.7).abs() < 0.1, "{}", gpu.ridge_point());
+    }
+
+    #[test]
+    fn mapuot_triples_intensity() {
+        let pot = operational_intensity(SolverKind::Pot, 2048, 2048);
+        let map = operational_intensity(SolverKind::MapUot, 2048, 2048);
+        assert!((map / pot - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn both_platforms_memory_bound_for_all_kinds() {
+        for mach in [presets::i9_12900k_roofline(), presets::rtx_3090ti_roofline()] {
+            for kind in SolverKind::ALL {
+                let i = operational_intensity(kind, 4096, 4096);
+                assert!(i < mach.ridge_point(), "{:?} on {} not memory-bound", kind, mach.name);
+                assert!(mach.attainable_gflops(i) < mach.peak_gflops);
+            }
+        }
+    }
+
+    #[test]
+    fn predicted_time_scales_with_traffic() {
+        let mach = presets::i9_12900k_roofline();
+        let t_pot = predicted_iter_seconds(&mach, SolverKind::Pot, 4096, 4096, 1.0);
+        let t_map = predicted_iter_seconds(&mach, SolverKind::MapUot, 4096, 4096, 1.0);
+        assert!((t_pot / t_map - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal property-based-testing harness.
+//!
+//! `proptest` is not available in the offline crate set, so this module
+//! provides the small subset the coordinator/sim invariant tests need:
+//! seeded random generation of structured inputs, many-case driving, and
+//! greedy input shrinking on failure. Deterministic per seed.
+
+use crate::util::XorShift;
+
+/// Number of cases [`check`] runs by default.
+pub const DEFAULT_CASES: usize = 64;
+
+/// A generator of random values driven by the harness RNG.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut XorShift) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut XorShift) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut XorShift) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform integer in `[lo, hi]` (inclusive).
+pub fn int_range(lo: usize, hi: usize) -> impl Gen<Value = usize> {
+    move |rng: &mut XorShift| lo + rng.below(hi - lo + 1)
+}
+
+/// Uniform f32 in `[lo, hi)`.
+pub fn f32_range(lo: f32, hi: f32) -> impl Gen<Value = f32> {
+    move |rng: &mut XorShift| rng.uniform(lo, hi)
+}
+
+/// Vector of `len` draws from `inner`.
+pub fn vec_of<G: Gen>(inner: G, len: impl Gen<Value = usize>) -> impl Gen<Value = Vec<G::Value>> {
+    move |rng: &mut XorShift| {
+        let n = len.generate(rng);
+        (0..n).map(|_| inner.generate(rng)).collect()
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Ok,
+    Failed {
+        /// Case index that failed first.
+        case: usize,
+        /// The (possibly shrunk) failing input.
+        input: T,
+        /// Failure message from the property.
+        message: String,
+    },
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, greedily shrink
+/// with `shrink` (returns candidate smaller inputs) before reporting.
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<Value = T>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = XorShift::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut cur = input;
+            let mut msg = first_msg;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return PropResult::Failed { case, input: cur, message: msg };
+        }
+    }
+    PropResult::Ok
+}
+
+/// [`check_with`] without shrinking; panics on failure (test-friendly).
+pub fn check<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    gen: impl Gen<Value = T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match check_with(seed, DEFAULT_CASES, gen, |_| Vec::new(), prop) {
+        PropResult::Ok => {}
+        PropResult::Failed { case, input, message } => {
+            panic!("property failed at case {case} with input {input:?}: {message}")
+        }
+    }
+}
+
+/// Shrinker for `usize`: halves toward `lo`.
+pub fn shrink_usize(lo: usize) -> impl Fn(&usize) -> Vec<usize> {
+    move |&v: &usize| {
+        if v <= lo {
+            Vec::new()
+        } else {
+            vec![lo, lo + (v - lo) / 2, v - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_ok() {
+        check(1, int_range(0, 100), |&x| {
+            if x <= 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        // Property: x < 40. Fails for x >= 40; shrinker should walk down
+        // to exactly 40 (the minimal counterexample).
+        let r = check_with(
+            7,
+            256,
+            int_range(0, 1000),
+            shrink_usize(0),
+            |&x| if x < 40 { Ok(()) } else { Err(format!("{x} >= 40")) },
+        );
+        match r {
+            PropResult::Failed { input, .. } => assert_eq!(input, 40),
+            PropResult::Ok => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = XorShift::new(5);
+        let mut b = XorShift::new(5);
+        let g = vec_of(f32_range(0.0, 1.0), int_range(1, 8));
+        assert_eq!(g.generate(&mut a), g.generate(&mut b));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_panics_on_failure() {
+        check(2, int_range(0, 10), |&x| {
+            if x < 5 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! Row-major `f32` matrix with cache-line-aligned storage.
+//!
+//! Alignment matters twice in this codebase: (1) the solvers' unrolled inner
+//! loops auto-vectorize best on 64-byte-aligned rows, and (2) the paper's
+//! false-sharing analysis (§5.2.4) assumes "the data is memory aligned" so
+//! that threads touching adjacent row blocks never share a cache line.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+
+/// Cache-line size we align to (paper §5.2.4 assumes 64 B lines).
+pub const CACHE_LINE: usize = 64;
+
+/// A heap buffer of `f32` aligned to [`CACHE_LINE`].
+struct AlignedBuf {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively; f32 is Send + Sync.
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    fn new_zeroed(len: usize) -> Self {
+        assert!(len > 0, "empty buffer");
+        let layout = Layout::from_size_align(len * 4, CACHE_LINE).expect("layout");
+        // SAFETY: layout has non-zero size (len > 0).
+        let ptr = unsafe { alloc_zeroed(layout) } as *mut f32;
+        if ptr.is_null() {
+            handle_alloc_error(layout);
+        }
+        Self { ptr, len }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        let layout = Layout::from_size_align(self.len * 4, CACHE_LINE).expect("layout");
+        // SAFETY: ptr was allocated with exactly this layout.
+        unsafe { dealloc(self.ptr as *mut u8, layout) };
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr valid for len f32s for the lifetime of self.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: exclusive access through &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+/// Row-major `m × n` matrix of `f32` with 64-byte-aligned storage.
+pub struct Matrix {
+    buf: AlignedBuf,
+    m: usize,
+    n: usize,
+}
+
+impl Matrix {
+    /// Zero-filled `m × n` matrix.
+    pub fn zeros(m: usize, n: usize) -> Self {
+        assert!(m > 0 && n > 0, "matrix dims must be positive ({m}x{n})");
+        Self { buf: AlignedBuf::new_zeroed(m * n), m, n }
+    }
+
+    /// Matrix from a row-major slice.
+    pub fn from_slice(m: usize, n: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), m * n, "data length != m*n");
+        let mut out = Self::zeros(m, n);
+        out.buf.copy_from_slice(data);
+        out
+    }
+
+    /// Matrix filled by `f(i, j)`.
+    pub fn from_fn(m: usize, n: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut out = Self::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                out.buf[i * n + j] = f(i, j);
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.m * self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false // dims are validated positive at construction
+    }
+
+    /// Immutable view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.buf[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.buf[i * self.n..(i + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.buf[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.buf[i * self.n + j] = v;
+    }
+
+    /// Whole storage, row-major.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Whole storage, row-major, mutable.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+
+    /// Column sums (one row-major sweep).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        for i in 0..self.m {
+            for (acc, &v) in out.iter_mut().zip(self.row(i)) {
+                *acc += v;
+            }
+        }
+        out
+    }
+
+    /// Row sums.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.m).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Max absolute element-wise difference against `other`.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.m, self.n), (other.m, other.n), "shape mismatch");
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max)
+    }
+
+    /// Max relative difference (denominator clamped at `atol`).
+    pub fn max_rel_diff(&self, other: &Matrix, atol: f32) -> f32 {
+        assert_eq!((self.m, self.n), (other.m, other.n), "shape mismatch");
+        self.as_slice()
+            .iter()
+            .zip(other.as_slice())
+            .map(|(a, b)| (a - b).abs() / a.abs().max(atol))
+            .fold(0f32, f32::max)
+    }
+}
+
+impl Clone for Matrix {
+    fn clone(&self) -> Self {
+        Self::from_slice(self.m, self.n, self.as_slice())
+    }
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.m, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_cache_line() {
+        for n in [1, 3, 17, 1024] {
+            let m = Matrix::zeros(3, n);
+            assert_eq!(m.as_slice().as_ptr() as usize % CACHE_LINE, 0);
+        }
+    }
+
+    #[test]
+    fn row_access_and_sums() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(m.row_sums(), vec![6.0, 22.0, 38.0]);
+        assert_eq!(m.col_sums(), vec![12.0, 15.0, 18.0, 21.0]);
+    }
+
+    #[test]
+    fn from_slice_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let m = Matrix::from_slice(3, 4, &data);
+        assert_eq!(m.as_slice(), &data[..]);
+        let c = m.clone();
+        assert_eq!(c.max_abs_diff(&m), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims must be positive")]
+    fn zero_dims_panic() {
+        let _ = Matrix::zeros(0, 4);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Matrix::from_slice(1, 3, &[1.0, 2.0, 4.0]);
+        let b = Matrix::from_slice(1, 3, &[1.0, 2.5, 4.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+        assert!((a.max_rel_diff(&b, 1e-9) - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared low-level utilities: aligned matrix storage, RNG, stats, timing.
+
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use matrix::Matrix;
+pub use rng::XorShift;
+pub use timer::Timer;

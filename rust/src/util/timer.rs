@@ -1,0 +1,69 @@
+//! Wall-clock timing helpers for benches and service metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/elapsed timer.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Times `f()`, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Runs `f` `reps` times after `warmup` unmeasured runs; returns the
+/// per-rep seconds (minimum is the usual bench statistic; the harness
+/// decides the aggregation).
+pub fn sample<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Timer::start();
+            std::hint::black_box(f());
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let (v, s) = time_it(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(s >= 0.004, "s={s}");
+    }
+
+    #[test]
+    fn sample_counts() {
+        let mut calls = 0;
+        let xs = sample(2, 3, || calls += 1);
+        assert_eq!(xs.len(), 3);
+        assert_eq!(calls, 5);
+    }
+}

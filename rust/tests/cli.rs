@@ -1,0 +1,92 @@
+//! CLI smoke tests: the `map-uot` binary's subcommands run and print what
+//! they promise. Uses the cargo-provided binary path.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_map-uot"))
+        .args(args)
+        .env("MAP_UOT_BENCH_FAST", "1")
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["solve", "serve", "app", "fig", "info"] {
+        assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
+    }
+}
+
+#[test]
+fn solve_reports_convergence() {
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "64", "--n", "48", "--solver", "mapuot", "--max-iter", "200",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("MAP-UOT solve 64x48"), "{stdout}");
+    assert!(stdout.contains("converged=true"), "{stdout}");
+}
+
+#[test]
+fn solve_all_solver_names_parse() {
+    for s in ["pot", "coffee", "map-uot"] {
+        let (stdout, _, ok) = run(&["solve", "--m", "16", "--n", "16", "--solver", s]);
+        assert!(ok, "solver {s}: {stdout}");
+    }
+}
+
+#[test]
+fn fig_roofline_prints_eq1() {
+    let (stdout, _, ok) = run(&["fig", "3"]);
+    assert!(ok);
+    assert!(stdout.contains("0.250"), "Eq. 1 intensity missing:\n{stdout}");
+    assert!(stdout.contains("39.7"), "GPU ridge point missing:\n{stdout}");
+}
+
+#[test]
+fn fig_16_prints_cluster_scaling() {
+    let (stdout, _, ok) = run(&["fig", "16"]);
+    assert!(ok);
+    assert!(stdout.contains("768"), "{stdout}");
+}
+
+#[test]
+fn unknown_figure_fails_cleanly() {
+    let (_, stderr, ok) = run(&["fig", "99"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown figure"), "{stderr}");
+}
+
+#[test]
+fn unknown_app_fails_cleanly() {
+    let (_, stderr, ok) = run(&["app", "nonsense"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown app"), "{stderr}");
+}
+
+#[test]
+fn serve_native_completes_workload() {
+    let (stdout, _, ok) = run(&[
+        "serve", "--requests", "6", "--workers", "2", "--size", "32", "--max-iter", "64",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("6/6 ok"), "{stdout}");
+}
+
+#[test]
+fn info_reports_platform_or_missing_artifacts() {
+    let (stdout, _, ok) = run(&["info"]);
+    assert!(ok);
+    assert!(
+        stdout.contains("pjrt platform") || stdout.contains("no artifacts"),
+        "{stdout}"
+    );
+}

@@ -1,0 +1,135 @@
+//! Cross-layer integration: the AOT artifacts (L1 Pallas kernel inside the
+//! L2 chunk graph) executed through the Rust PJRT runtime must match the
+//! native Rust solvers — the end-to-end correctness contract of the stack.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use map_uot::algo::{self, Problem, SolverKind};
+use map_uot::runtime::{ArtifactKind, Runtime};
+use map_uot::util::Matrix;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("MAP_UOT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn chunk_matches_native_mapuot() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let meta = rt.manifest().chunk_exact(256, 256).expect("256x256 bucket").clone();
+
+    let p = Problem::random(256, 256, 0.7, 42);
+    let mut plan = p.plan.clone();
+    let mut colsum = plan.col_sums();
+    let out = rt
+        .run_uot_chunk(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi)
+        .unwrap();
+    assert_eq!(out.steps, meta.steps);
+
+    // Native reference: the same number of fused iterations.
+    let mut native = p.plan.clone();
+    let mut native_cs = native.col_sums();
+    for _ in 0..meta.steps {
+        algo::iterate_once(SolverKind::MapUot, &mut native, &mut native_cs, &p.rpd, &p.cpd, p.fi, 1);
+    }
+    let diff = plan.max_rel_diff(&native, 1e-5);
+    assert!(diff < 5e-3, "PJRT vs native diff = {diff}");
+
+    // The device-side error must agree with the host-side metric.
+    let host_err = algo::convergence::marginal_error(&plan, &p.rpd, &p.cpd);
+    assert!(
+        (out.err - host_err).abs() <= 1e-3 * host_err.abs().max(1.0),
+        "device err {} vs host err {}",
+        out.err,
+        host_err
+    );
+}
+
+#[test]
+fn repeated_chunks_converge() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let p = Problem::random(256, 256, 1.0, 7);
+    // Balance total masses so fi=1 converges to feasibility.
+    let mut p = p;
+    let tr: f32 = p.rpd.iter().sum();
+    let tc: f32 = p.cpd.iter().sum();
+    for v in &mut p.cpd {
+        *v *= tr / tc;
+    }
+    let mut plan = p.plan.clone();
+    let mut colsum = plan.col_sums();
+    let mut last_err = f32::INFINITY;
+    for _ in 0..6 {
+        let out = rt
+            .run_uot_chunk(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi)
+            .unwrap();
+        assert!(out.err <= last_err * 1.05, "error rose: {last_err} -> {}", out.err);
+        last_err = out.err;
+    }
+    assert!(last_err < 1e-2, "did not converge: {last_err}");
+}
+
+#[test]
+fn gibbs_and_barycentric_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let (m, n, d) = (256usize, 256usize, 3usize);
+
+    let mut rng = map_uot::util::XorShift::new(9);
+    let xs: Vec<f32> = (0..m * d).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let ys: Vec<f32> = (0..n * d).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let eps = 0.25f32;
+
+    let (plan, colsum) = rt.run_gibbs_init(&xs, &ys, m, n, d, eps).unwrap();
+    // Native reference.
+    let native = Matrix::from_fn(m, n, |i, j| {
+        let d2: f32 = (0..d).map(|k| (xs[i * d + k] - ys[j * d + k]).powi(2)).sum();
+        (-d2 / eps).exp()
+    });
+    assert!(plan.max_rel_diff(&native, 1e-5) < 1e-3);
+    for (a, b) in colsum.iter().zip(native.col_sums()) {
+        assert!((a - b).abs() < 1e-2 * b.abs().max(1.0));
+    }
+
+    // Barycentric projection vs native.
+    let mapped = rt.run_barycentric(&plan, &ys, d).unwrap();
+    assert_eq!(mapped.len(), m * d);
+    for i in (0..m).step_by(37) {
+        let row = plan.row(i);
+        let rs: f32 = row.iter().sum();
+        for k in 0..d {
+            let expect: f32 =
+                row.iter().enumerate().map(|(j, &w)| w * ys[j * d + k]).sum::<f32>() / rs;
+            let got = mapped[i * d + k];
+            assert!((got - expect).abs() < 1e-3, "({i},{k}): {got} vs {expect}");
+        }
+    }
+}
+
+#[test]
+fn warmup_compiles_all_chunks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let n = rt.warmup(ArtifactKind::UotChunk).unwrap();
+    assert!(n >= 1, "no chunk artifacts found");
+}
+
+#[test]
+fn missing_bucket_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let p = Problem::random(7000, 7000, 0.5, 1);
+    let mut plan = p.plan.clone();
+    let mut colsum = plan.col_sums();
+    let err = rt
+        .run_uot_chunk(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi)
+        .unwrap_err();
+    assert!(err.to_string().contains("no uot_chunk"), "{err}");
+}

@@ -1,0 +1,113 @@
+//! End-to-end service integration: coordinator + PJRT backend.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::config::{Backend, ServiceConfig};
+use map_uot::coordinator::Service;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn pjrt_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        backend: Backend::Pjrt,
+        stop: StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 },
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn pjrt_service_solves_exact_bucket() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = Service::start(pjrt_cfg()).unwrap();
+    let p = Problem::random(256, 256, 0.8, 3);
+    let solved = svc.solve_blocking(p.clone()).unwrap();
+    assert_eq!(solved.backend, Backend::Pjrt);
+    assert!(solved.report.converged, "err={}", solved.report.err);
+
+    // Same answer as the native solver.
+    let (native, _) = algo::solve(
+        SolverKind::MapUot,
+        &p,
+        SolveOptions { stop: pjrt_cfg().stop, ..SolveOptions::default() },
+    );
+    let diff = solved.plan.max_rel_diff(&native, 1e-5);
+    assert!(diff < 2e-2, "pjrt vs native diff={diff}");
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_service_pads_odd_shapes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = Service::start(pjrt_cfg()).unwrap();
+    // 200x180 pads into the 256x256 bucket.
+    let p = Problem::random(200, 180, 0.7, 11);
+    let solved = svc.solve_blocking(p.clone()).unwrap();
+    assert_eq!(solved.plan.rows(), 200);
+    assert_eq!(solved.plan.cols(), 180);
+    let (native, _) = algo::solve(
+        SolverKind::MapUot,
+        &p,
+        SolveOptions { stop: pjrt_cfg().stop, ..SolveOptions::default() },
+    );
+    let diff = solved.plan.max_rel_diff(&native, 1e-5);
+    assert!(diff < 2e-2, "padded pjrt vs native diff={diff}");
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_burst_all_complete_with_metrics() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = Service::start(pjrt_cfg()).unwrap();
+    let mut rxs = Vec::new();
+    for seed in 0..12u64 {
+        let (m, n) = match seed % 3 {
+            0 => (256, 256),
+            1 => (128, 128),
+            _ => (200, 140),
+        };
+        rxs.push(svc.submit(Problem::random(m, n, 0.8, seed)).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        let solved = resp.result.expect("solve failed");
+        assert_eq!(solved.backend, Backend::Pjrt);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 12);
+    assert_eq!(m.failed, 0);
+    assert!(m.iterations > 0);
+    assert!(m.mean_latency_ms > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn oversized_request_fails_cleanly_not_fatally() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = Service::start(pjrt_cfg()).unwrap();
+    // Bigger than every bucket: the request must fail, the service must
+    // keep serving.
+    let big = Problem::random(4000, 4000, 0.5, 1);
+    assert!(svc.solve_blocking(big).is_err());
+    let ok = svc.solve_blocking(Problem::random(64, 64, 0.8, 2));
+    assert!(ok.is_ok());
+    let m = svc.metrics();
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.completed, 1);
+    svc.shutdown();
+}

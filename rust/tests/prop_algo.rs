@@ -1,0 +1,165 @@
+//! Property-based tests on solver invariants, via the in-repo harness.
+
+use map_uot::algo::{self, convergence, iterate_once, Problem, SolverKind};
+use map_uot::testing::check;
+use map_uot::util::XorShift;
+
+fn gen_problem(rng: &mut XorShift) -> (Problem, usize) {
+    let m = 2 + rng.below(20);
+    let n = 2 + rng.below(20);
+    let fi = rng.uniform(0.1, 1.0);
+    let iters = 1 + rng.below(6);
+    (Problem::random(m, n, fi, rng.next_u64()), iters)
+}
+
+/// All three solvers produce the same iterate, for any problem/iterations.
+#[test]
+fn prop_solver_equivalence() {
+    check(41, gen_problem, |(p, iters)| {
+        let mut plans = Vec::new();
+        for kind in SolverKind::ALL {
+            let mut plan = p.plan.clone();
+            let mut cs = plan.col_sums();
+            for _ in 0..*iters {
+                iterate_once(kind, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+            }
+            plans.push(plan);
+        }
+        let d1 = plans[0].max_rel_diff(&plans[2], 1e-6);
+        let d2 = plans[1].max_rel_diff(&plans[2], 1e-6);
+        if d1 > 1e-3 || d2 > 1e-3 {
+            return Err(format!("solvers diverged: pot {d1}, coffee {d2}"));
+        }
+        Ok(())
+    });
+}
+
+/// Mass positivity and finiteness are preserved by every iteration.
+#[test]
+fn prop_positivity_preserved() {
+    check(43, gen_problem, |(p, iters)| {
+        let mut plan = p.plan.clone();
+        let mut cs = plan.col_sums();
+        for _ in 0..*iters {
+            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+        }
+        if plan.as_slice().iter().any(|v| !v.is_finite() || *v < 0.0) {
+            return Err("negative or non-finite mass".into());
+        }
+        Ok(())
+    });
+}
+
+/// Carried column sums always equal fresh column sums of the plan.
+#[test]
+fn prop_carried_colsum_consistent() {
+    check(47, gen_problem, |(p, iters)| {
+        let mut plan = p.plan.clone();
+        let mut cs = plan.col_sums();
+        for _ in 0..*iters {
+            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+        }
+        for (carried, fresh) in cs.iter().zip(plan.col_sums()) {
+            if (carried - fresh).abs() > 1e-3 * fresh.abs().max(1e-3) {
+                return Err(format!("colsum drift: {carried} vs {fresh}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// With fi = 1, row marginals are exactly satisfied after every iteration
+/// (the rescaling ends on rows), regardless of the problem.
+#[test]
+fn prop_balanced_row_feasibility() {
+    check(53, gen_problem, |(p, iters)| {
+        let mut plan = p.plan.clone();
+        let mut cs = plan.col_sums();
+        for _ in 0..*iters {
+            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, 1);
+        }
+        for (rs, &t) in plan.row_sums().iter().zip(&p.rpd) {
+            if (rs - t).abs() > 1e-3 * t {
+                return Err(format!("row marginal violated: {rs} vs {t}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Scale-equivariance: multiplying the initial plan by a constant is
+/// cancelled by the first full iteration when fi = 1 (factors renormalize
+/// both dimensions), and never amplified for fi < 1.
+#[test]
+fn prop_scale_perturbation_contracts() {
+    check(59, gen_problem, |(p, iters)| {
+        let mut plan = p.plan.clone();
+        let mut cs = plan.col_sums();
+        let mut scaled = map_uot::util::Matrix::from_fn(p.rows(), p.cols(), |i, j| {
+            2.0 * p.plan.get(i, j)
+        });
+        let mut cs2 = scaled.col_sums();
+        for _ in 0..*iters {
+            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+            iterate_once(SolverKind::MapUot, &mut scaled, &mut cs2, &p.rpd, &p.cpd, p.fi, 1);
+        }
+        let diff = scaled.max_rel_diff(&plan, 1e-6);
+        if p.fi > 0.999 && diff > 1e-3 {
+            return Err(format!("fi=1 scale not cancelled: {diff}"));
+        }
+        if diff > 1.0 + 1e-3 {
+            return Err(format!("2x scale perturbation amplified: {diff}"));
+        }
+        Ok(())
+    });
+}
+
+/// Marginal error is non-increasing across iterations for fi = 1 with
+/// balanced total mass (classic Sinkhorn convergence).
+#[test]
+fn prop_error_monotone_balanced() {
+    check(61, |rng: &mut XorShift| {
+        let m = 3 + rng.below(14);
+        let n = 3 + rng.below(14);
+        let mut p = Problem::random(m, n, 1.0, rng.next_u64());
+        let tr: f32 = p.rpd.iter().sum();
+        let tc: f32 = p.cpd.iter().sum();
+        for v in &mut p.cpd {
+            *v *= tr / tc;
+        }
+        p
+    }, |p| {
+        let mut plan = p.plan.clone();
+        let mut cs = plan.col_sums();
+        let mut prev = f32::INFINITY;
+        for it in 0..12 {
+            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, 1);
+            let err = convergence::marginal_error(&plan, &p.rpd, &p.cpd);
+            if err > prev * 1.001 + 1e-5 {
+                return Err(format!("error rose at iter {it}: {prev} -> {err}"));
+            }
+            prev = err;
+        }
+        Ok(())
+    });
+}
+
+/// solve() respects its iteration budget and reports consistently.
+#[test]
+fn prop_solve_report_consistent() {
+    check(67, gen_problem, |(p, _)| {
+        let opts = algo::SolveOptions {
+            stop: algo::StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 64 },
+            ..Default::default()
+        };
+        let (plan, report) = algo::solve(SolverKind::MapUot, p, opts);
+        if report.iters > 64 + opts.check_every {
+            return Err(format!("budget exceeded: {}", report.iters));
+        }
+        let err = convergence::marginal_error(&plan, &p.rpd, &p.cpd);
+        if (err - report.err).abs() > 1e-3 * err.abs().max(1.0) {
+            return Err(format!("reported err {} vs actual {err}", report.err));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,203 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! padding) using the in-repo `testing` harness (proptest is unavailable
+//! offline — see DESIGN.md).
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use map_uot::algo::{iterate_once, Problem, SolverKind};
+use map_uot::coordinator::batcher::{Batcher, FullPolicy};
+use map_uot::coordinator::request::SolveRequest;
+use map_uot::coordinator::router;
+use map_uot::runtime::Manifest;
+use map_uot::testing::{check, int_range, Gen};
+use map_uot::util::XorShift;
+
+fn mk_req(id: u64, m: usize, n: usize) -> SolveRequest {
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    SolveRequest {
+        id,
+        problem: Problem::random(m, n, 0.5, id + 1),
+        reply: tx,
+        submitted_at: std::time::Instant::now(),
+    }
+}
+
+/// Batching conserves requests: no loss, no duplication, batch bounds hold,
+/// every batch is shape-homogeneous.
+#[test]
+fn prop_batcher_conserves_requests() {
+    check(11, |rng: &mut XorShift| {
+        let n_req = 1 + rng.below(40);
+        let batch_max = 1 + rng.below(8);
+        let shapes = [(8usize, 8usize), (16, 16), (8, 16)];
+        let reqs: Vec<(u64, (usize, usize))> = (0..n_req as u64)
+            .map(|i| (i, shapes[rng.below(shapes.len())]))
+            .collect();
+        (reqs, batch_max)
+    }, |(reqs, batch_max)| {
+        let b = Batcher::new(1024, *batch_max, Duration::from_micros(100));
+        for (id, (m, n)) in reqs {
+            b.push(mk_req(*id, *m, *n), FullPolicy::Reject)
+                .map_err(|_| "push rejected".to_string())?;
+        }
+        b.close();
+        let mut seen = BTreeSet::new();
+        while let Some(batch) = b.pop_batch() {
+            if batch.is_empty() || batch.len() > *batch_max {
+                return Err(format!("batch size {} out of bounds", batch.len()));
+            }
+            let shape = batch[0].shape();
+            for r in batch {
+                if r.shape() != shape {
+                    return Err("mixed shapes in batch".into());
+                }
+                if !seen.insert(r.id) {
+                    return Err(format!("duplicate id {}", r.id));
+                }
+            }
+        }
+        if seen.len() != reqs.len() {
+            return Err(format!("lost requests: {} of {}", seen.len(), reqs.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Concurrent producers + consumers: conservation still holds.
+#[test]
+fn prop_batcher_concurrent_conservation() {
+    for trial in 0..8u64 {
+        let b = Arc::new(Batcher::new(16, 4, Duration::from_micros(50)));
+        let n_producers = 4;
+        let per_producer = 25u64;
+
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    let id = p * 1000 + i + trial * 100_000;
+                    let mut req = mk_req(id, 8, 8);
+                    loop {
+                        match b.push(req, FullPolicy::Block) {
+                            Ok(()) => break,
+                            Err(r) => req = r, // closed would loop forever; not closed here
+                        }
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                while let Some(batch) = b.pop_batch() {
+                    ids.extend(batch.iter().map(|r| r.id));
+                }
+                ids
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let ids = consumer.join().unwrap();
+        let set: BTreeSet<u64> = ids.iter().copied().collect();
+        assert_eq!(ids.len() as u64, n_producers * per_producer, "trial {trial}");
+        assert_eq!(set.len(), ids.len(), "duplicates in trial {trial}");
+    }
+}
+
+/// Padding into any admissible bucket preserves solver semantics on the
+/// real support and keeps padding identically zero.
+#[test]
+fn prop_padding_preserves_semantics() {
+    check(23, |rng: &mut XorShift| {
+        let m = 2 + rng.below(12);
+        let n = 2 + rng.below(12);
+        let bm = m + rng.below(8);
+        let bn = n + rng.below(8);
+        let iters = 1 + rng.below(4);
+        let seed = rng.next_u64();
+        (m, n, bm, bn, iters, seed)
+    }, |&(m, n, bm, bn, iters, seed)| {
+        let p = Problem::random(m, n, 0.7, seed);
+        let mut padded = router::pad(&p, bm, bn);
+        let mut plain = p.plan.clone();
+        let mut plain_cs = plain.col_sums();
+        for _ in 0..iters {
+            iterate_once(SolverKind::MapUot, &mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, 1);
+            iterate_once(
+                SolverKind::MapUot,
+                &mut padded.plan,
+                &mut padded.colsum,
+                &padded.rpd,
+                &padded.cpd,
+                padded.fi,
+                1,
+            );
+        }
+        let diff = padded.unpad().max_rel_diff(&plain, 1e-6);
+        if diff > 1e-3 {
+            return Err(format!("support diverged: {diff}"));
+        }
+        for i in 0..bm {
+            for j in 0..bn {
+                if (i >= m || j >= n) && padded.plan.get(i, j) != 0.0 {
+                    return Err(format!("padding non-zero at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The router always picks the *smallest* fitting bucket.
+#[test]
+fn prop_router_bucket_minimality() {
+    let manifest = Manifest::parse(
+        "a file=a kind=uot_chunk m=64 n=64 steps=8 block_m=32\n\
+         b file=b kind=uot_chunk m=128 n=128 steps=8 block_m=32\n\
+         c file=c kind=uot_chunk m=256 n=128 steps=8 block_m=32\n\
+         d file=d kind=uot_chunk m=512 n=512 steps=8 block_m=32\n",
+    )
+    .unwrap();
+    let gen = |rng: &mut XorShift| (1 + rng.below(600), 1 + rng.below(600));
+    check(31, gen, |&(m, n)| {
+        let picked = manifest.chunk_for(m, n);
+        let fitting: Vec<_> = manifest
+            .iter()
+            .filter(|a| a.m >= m && a.n >= n)
+            .collect();
+        match picked {
+            None => {
+                if !fitting.is_empty() {
+                    return Err(format!("router found nothing but {} fit", fitting.len()));
+                }
+            }
+            Some(p) => {
+                for f in fitting {
+                    if f.m * f.n < p.m * p.n {
+                        return Err(format!(
+                            "picked {}x{} but {}x{} is smaller",
+                            p.m, p.n, f.m, f.n
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generator sanity for the harness itself (meta-property).
+#[test]
+fn prop_int_range_bounds() {
+    check(1, |rng: &mut XorShift| int_range(5, 9).generate(rng), |&v| {
+        if (5..=9).contains(&v) { Ok(()) } else { Err(format!("{v} out of range")) }
+    });
+}
