@@ -1,24 +1,32 @@
-//! Quickstart: solve one unbalanced-optimal-transport problem with each
-//! solver and verify they agree.
+//! Quickstart: the workspace-centric session API.
+//!
+//! Builds one `SolverSession` per solver kind, solves the same problem
+//! with each (watching convergence through an observer), verifies all
+//! three agree, then shows the steady-state pattern: one reused session
+//! solving a batch with zero heap allocations after warmup.
 //!
 //!     cargo run --release --example quickstart
 
-use map_uot::algo::{solve, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::algo::{
+    CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule,
+};
 
 fn main() {
     // A 512x512 problem: random positive plan, random positive marginals,
     // relaxation exponent fi = er/(er+ep) = 0.7.
     let problem = Problem::random(512, 512, 0.7, 42);
-    let opts = SolveOptions {
-        threads: 1,
-        stop: StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 2000 },
-        check_every: 8,
-    };
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 2000 };
 
     println!("solving 512x512 UOT (fi = 0.7) with all three solvers...\n");
     let mut plans = Vec::new();
     for kind in SolverKind::ALL {
-        let (plan, report) = solve(kind, &problem, opts);
+        // The builder owns all the knobs; `build` sizes the workspace once.
+        let mut session = SolverSession::builder(kind)
+            .threads(1)
+            .stop(stop)
+            .check_every(8)
+            .build(&problem);
+        let report = session.solve(&problem).expect("no observer to cancel");
         println!(
             "  {:8} iters={:4}  err={:.3e}  {:7.1} ms  ({:.3} ms/iter)",
             kind.name(),
@@ -27,7 +35,7 @@ fn main() {
             report.seconds * 1e3,
             report.seconds * 1e3 / report.iters.max(1) as f64,
         );
-        plans.push(plan);
+        plans.push(session.into_plan());
     }
 
     // All three implement identical numerics; only memory traffic differs.
@@ -36,5 +44,30 @@ fn main() {
     println!("\nmax relative deviation of MAP-UOT vs POT:    {d_pot:.2e}");
     println!("max relative deviation of MAP-UOT vs COFFEE: {d_cof:.2e}");
     assert!(d_pot < 1e-2 && d_cof < 1e-2);
-    println!("\nall solvers agree — MAP-UOT just reads the matrix 3x less.");
+    println!("all solvers agree — MAP-UOT just reads the matrix 3x less.\n");
+
+    // Observers see every check boundary and can cancel (typed
+    // Error::Canceled); here one just narrates the first solve's tail.
+    let mut watched = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(64)
+        .observer(|ev: CheckEvent| {
+            println!("  [observer] iter {:4}  err={:.3e}  delta={:.3e}", ev.iters, ev.err, ev.delta);
+            ObserverAction::Continue
+        })
+        .build(&problem);
+    watched.solve(&problem).expect("continue-only observer");
+
+    // Steady state: one session, many same-shape problems. After the first
+    // solve the hot loop performs zero heap allocations — the service's
+    // workers run exactly this pattern.
+    let batch: Vec<Problem> = (0..4).map(|s| Problem::random(512, 512, 0.7, s)).collect();
+    let mut session = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .build(&batch[0]);
+    println!("\nbatch of {} through one reused workspace:", batch.len());
+    for (i, outcome) in session.solve_batch(&batch).into_iter().enumerate() {
+        let (_plan, report) = outcome.expect("batch solve");
+        println!("  problem {i}: iters={:4}  err={:.3e}", report.iters, report.err);
+    }
 }

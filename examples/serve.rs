@@ -13,7 +13,7 @@
 //!
 //!     cargo run --release --example serve
 
-use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
 use map_uot::config::{Backend, ServiceConfig};
 use map_uot::coordinator::Service;
 use map_uot::util::{Timer, XorShift};
@@ -85,8 +85,9 @@ fn main() {
 
     // Cross-check one answer against the native MAP-UOT solver.
     let p = sample.expect("sample problem");
-    let (native, _) = algo::solve(SolverKind::MapUot, &p, SolveOptions { stop, ..Default::default() });
-    let diff = sample_plan.expect("sample plan").max_rel_diff(&native, 1e-5);
+    let mut native_session = SolverSession::builder(SolverKind::MapUot).stop(stop).build(&p);
+    native_session.solve(&p).expect("native cross-check");
+    let diff = sample_plan.expect("sample plan").max_rel_diff(native_session.plan(), 1e-5);
     println!("\ncross-check vs native solver: max rel diff = {diff:.2e}");
     assert!(diff < 2e-2, "PJRT and native answers diverged");
     println!("three-layer stack verified: pallas kernel -> jax chunk -> HLO text -> PJRT -> coordinator");

@@ -15,15 +15,18 @@ fn main() {
 
     // f32 row.
     let p = algo::Problem::random(s, s, 0.7, 1);
+    let mut ws = algo::Workspace::new(s, s, 1);
     let mut plan = p.plan.clone();
     let mut cs = plan.col_sums();
+    let pot_solver = algo::solver_for(SolverKind::Pot);
     let pot32 = measure(policy, || {
-        algo::iterate_once(SolverKind::Pot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1)
+        pot_solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws)
     }) * 1e3;
     let mut plan2 = p.plan.clone();
     let mut cs2 = plan2.col_sums();
+    let map_solver = algo::solver_for(SolverKind::MapUot);
     let map32 = measure(policy, || {
-        algo::iterate_once(SolverKind::MapUot, &mut plan2, &mut cs2, &p.rpd, &p.cpd, p.fi, 1)
+        map_solver.iterate(&mut plan2, &mut cs2, &p.rpd, &p.cpd, p.fi, &mut ws)
     }) * 1e3;
     t.row(&["f32".into(), format!("{pot32:.2}"), format!("{map32:.2}"), format!("{:.2}x", pot32 / map32)]);
 

@@ -27,12 +27,14 @@ fn streaming_peak_gbs() -> f64 {
 
 fn solver_gbs(kind: SolverKind) -> (f64, f64) {
     let p = algo::Problem::random(S, S, 0.7, 1);
+    let solver = algo::solver_for(kind);
+    let mut ws = algo::Workspace::new(S, S, 1);
     let mut plan = p.plan.clone();
     let mut cs = plan.col_sums();
     let sec = measure(Policy { warmup: 1, reps: 5 }, || {
-        algo::iterate_once(kind, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+        solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
     });
-    let bytes = kind.sweeps_per_iter() as f64 * (S * S * 4) as f64;
+    let bytes = kind.accesses_per_element() as f64 * (S * S * 4) as f64;
     (bytes / sec / 1e9, sec * 1e3)
 }
 

@@ -14,19 +14,27 @@
 use crate::algo::scaling::{factor, factors_into};
 use crate::util::Matrix;
 
-/// One COFFEE iteration (column then row rescaling, carried `colsum`).
-pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
-    let (m, n) = (plan.rows(), plan.cols());
-    debug_assert_eq!(colsum.len(), n);
+/// One COFFEE iteration (column then row rescaling, carried `colsum`),
+/// allocation-free: `fcol` (length N) and `rowsum` (length M) are
+/// caller-provided scratch (see `session::Workspace`).
+pub fn iterate_into(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+) {
+    let m = plan.rows();
+    debug_assert_eq!(colsum.len(), plan.cols());
 
     // Phase A: column rescaling fused with row-sum accumulation.
-    let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, colsum, fi);
+    factors_into(fcol, cpd, colsum, fi);
     // Same 16-lane fused primitive as MAP-UOT: COFFEE's CPU optimizations
     // include vectorization, so the comparator gets the identical inner loop.
-    let mut rowsum = vec![0f32; m];
     for i in 0..m {
-        rowsum[i] = crate::algo::mapuot::scale_by_vec_and_sum(plan.row_mut(i), &fcol);
+        rowsum[i] = crate::algo::mapuot::scale_by_vec_and_sum(plan.row_mut(i), fcol);
     }
 
     // Phase B: row rescaling fused with next-column-sum accumulation.
@@ -38,6 +46,51 @@ pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], 
             *s += *v;
         }
     }
+}
+
+/// [`iterate_into`] with in-sweep delta tracking; returns the iteration's
+/// max element change. Phase B holds `v1 = v0 · Factor_col[j]`, so the
+/// pre-iteration value is recovered as `v1 · inv_fcol[j]` — no snapshot.
+#[allow(clippy::too_many_arguments)]
+pub fn iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+) -> f32 {
+    let m = plan.rows();
+    debug_assert_eq!(colsum.len(), plan.cols());
+
+    factors_into(fcol, cpd, colsum, fi);
+    crate::algo::scaling::recip_into(inv_fcol, fcol);
+    for i in 0..m {
+        rowsum[i] = crate::algo::mapuot::scale_by_vec_and_sum(plan.row_mut(i), fcol);
+    }
+
+    colsum.fill(0.0);
+    let mut delta = 0f32;
+    for i in 0..m {
+        let fr = factor(rpd[i], rowsum[i], fi);
+        delta = delta.max(crate::algo::mapuot::scale_by_scalar_and_accumulate_tracked(
+            plan.row_mut(i),
+            fr,
+            inv_fcol,
+            colsum,
+        ));
+    }
+    delta
+}
+
+/// One COFFEE iteration; allocates its own scratch — prefer
+/// [`iterate_into`] on hot paths.
+pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
+    let mut fcol = vec![0f32; plan.cols()];
+    let mut rowsum = vec![0f32; plan.rows()];
+    iterate_into(plan, colsum, rpd, cpd, fi, &mut fcol, &mut rowsum);
 }
 
 #[cfg(test)]

@@ -4,24 +4,37 @@ use crate::util::Matrix;
 
 /// L-inf distance of the plan's marginals from `(rpd, cpd)`, computed in a
 /// single row-major sweep (same definition as `ref.marginal_error` in L1).
-pub fn marginal_error(plan: &Matrix, rpd: &[f32], cpd: &[f32]) -> f32 {
-    let n = plan.cols();
-    let mut colsum = vec![0f32; n];
+/// `colsum_scratch` (length N) is caller-provided so the convergence check
+/// stays allocation-free on the session hot path.
+pub fn marginal_error_with(
+    plan: &Matrix,
+    rpd: &[f32],
+    cpd: &[f32],
+    colsum_scratch: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(colsum_scratch.len(), plan.cols());
+    colsum_scratch.fill(0.0);
     let mut row_err = 0f32;
     for i in 0..plan.rows() {
         let mut rs = 0f32;
-        for (s, &v) in colsum.iter_mut().zip(plan.row(i)) {
+        for (s, &v) in colsum_scratch.iter_mut().zip(plan.row(i)) {
             rs += v;
             *s += v;
         }
         row_err = row_err.max((rs - rpd[i]).abs());
     }
-    let col_err = colsum
+    let col_err = colsum_scratch
         .iter()
         .zip(cpd)
         .map(|(s, &t)| (s - t).abs())
         .fold(0f32, f32::max);
     row_err.max(col_err)
+}
+
+/// [`marginal_error_with`] with its own scratch allocation.
+pub fn marginal_error(plan: &Matrix, rpd: &[f32], cpd: &[f32]) -> f32 {
+    let mut colsum = vec![0f32; plan.cols()];
+    marginal_error_with(plan, rpd, cpd, &mut colsum)
 }
 
 /// Max element-wise change between consecutive plans; UOT with `fi < 1`

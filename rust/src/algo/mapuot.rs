@@ -54,6 +54,29 @@ pub fn scale_by_scalar_and_accumulate(row: &mut [f32], fr: f32, next_colsum: &mu
     }
 }
 
+/// [`scale_by_scalar_and_accumulate`] that also returns the row's max
+/// element change for this iteration, recovered in-register: the incoming
+/// `row` holds `v1 = v0 · Factor_col[j]`, so the pre-iteration value is
+/// `v1 · inv_fcol[j]` and the new value is `v1 · fr` — no snapshot needed.
+#[inline]
+pub fn scale_by_scalar_and_accumulate_tracked(
+    row: &mut [f32],
+    fr: f32,
+    inv_fcol: &[f32],
+    next_colsum: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(row.len(), next_colsum.len());
+    debug_assert_eq!(row.len(), inv_fcol.len());
+    let mut delta = 0f32;
+    for ((v, s), &inv) in row.iter_mut().zip(next_colsum.iter_mut()).zip(inv_fcol) {
+        let old = *v * inv;
+        *v *= fr;
+        *s += *v;
+        delta = delta.max((*v - old).abs());
+    }
+    delta
+}
+
 /// One MAP-UOT iteration over a contiguous block of rows.
 ///
 /// This is the body every execution mode shares: the serial solver calls it
@@ -75,13 +98,66 @@ pub fn fused_rows(
     }
 }
 
-/// One full MAP-UOT iteration (Algorithm 1, serial).
-pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
+/// [`fused_rows`] with in-sweep delta tracking; returns the block's max
+/// element change (see [`scale_by_scalar_and_accumulate_tracked`]).
+pub fn fused_rows_tracked(
+    rows: &mut [f32],
+    n: usize,
+    rpd_block: &[f32],
+    fcol: &[f32],
+    inv_fcol: &[f32],
+    fi: f32,
+    next_colsum: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(rows.len(), rpd_block.len() * n);
+    let mut delta = 0f32;
+    for (i, row) in rows.chunks_exact_mut(n).enumerate() {
+        let sum_row = scale_by_vec_and_sum(row, fcol);
+        let fr = factor(rpd_block[i], sum_row, fi);
+        delta = delta.max(scale_by_scalar_and_accumulate_tracked(row, fr, inv_fcol, next_colsum));
+    }
+    delta
+}
+
+/// One full MAP-UOT iteration (Algorithm 1, serial), allocation-free:
+/// `fcol` is caller-provided scratch (see `session::Workspace`).
+pub fn iterate_into(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+) {
     let n = plan.cols();
-    let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, colsum, fi);
+    factors_into(fcol, cpd, colsum, fi);
     colsum.fill(0.0); // becomes NextSum_col
-    fused_rows(plan.as_mut_slice(), n, rpd, &fcol, fi, colsum);
+    fused_rows(plan.as_mut_slice(), n, rpd, fcol, fi, colsum);
+}
+
+/// [`iterate_into`] with in-sweep delta tracking; returns the iteration's
+/// max element change. `fcol` and `inv_fcol` are caller-provided scratch.
+pub fn iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+) -> f32 {
+    let n = plan.cols();
+    factors_into(fcol, cpd, colsum, fi);
+    crate::algo::scaling::recip_into(inv_fcol, fcol);
+    colsum.fill(0.0); // becomes NextSum_col
+    fused_rows_tracked(plan.as_mut_slice(), n, rpd, fcol, inv_fcol, fi, colsum)
+}
+
+/// One full MAP-UOT iteration (Algorithm 1, serial); allocates its own
+/// column-factor scratch — prefer [`iterate_into`] on hot paths.
+pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
+    let mut fcol = vec![0f32; plan.cols()];
+    iterate_into(plan, colsum, rpd, cpd, fi, &mut fcol);
 }
 
 #[cfg(test)]

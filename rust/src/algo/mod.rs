@@ -4,13 +4,27 @@
 //! cross-layer oracle): per iteration, a column rescaling from the carried
 //! column sums followed by a row rescaling, with relaxation exponent `fi`.
 //! They differ **only** in how many times the matrix streams through memory
-//! — which is the paper's entire subject:
+//! — which is the paper's entire subject. Two numbers describe that, and
+//! they are *not* the same thing:
 //!
-//! | solver  | sweeps/iter | element traffic | layout        |
-//! |---------|-------------|-----------------|---------------|
-//! | POT     | 4           | 6·M·N           | row-major     |
-//! | COFFEE  | 2           | 4·M·N           | row-major     |
-//! | MAP-UOT | 1 (fused)   | 2·M·N           | row-major     |
+//! * **passes/iter** — how many times the loop nest walks the full matrix
+//!   ([`SolverKind::passes_per_iter`]);
+//! * **element accesses** — DRAM traffic per matrix element per iteration,
+//!   counting a read-only pass as 1 access and a read+write pass as 2
+//!   ([`SolverKind::accesses_per_element`]). This is the multiplier the
+//!   sim layer's traffic models and the Roofline `Q` use.
+//!
+//! | solver  | passes/iter          | element accesses | layout    |
+//! |---------|----------------------|------------------|-----------|
+//! | POT     | 4 (2 ro + 2 rw)      | 6·M·N            | row-major |
+//! | COFFEE  | 2 (both rw)          | 4·M·N            | row-major |
+//! | MAP-UOT | 1 (fused rw)         | 2·M·N            | row-major |
+//!
+//! The public solving surface is the workspace-centric [`session`] API:
+//! [`SolverSession`] for reusable, observer-instrumented, allocation-free
+//! solves, and the [`Solver`] trait + [`Workspace`] for direct iteration
+//! control (benches, golden tests). The free functions [`solve`] and
+//! [`iterate_once`] remain as deprecated one-release shims.
 
 pub mod balancing;
 pub mod coffee;
@@ -18,25 +32,30 @@ pub mod convergence;
 pub mod fp64;
 pub mod lazy;
 pub mod mapuot;
-pub mod sparse;
 pub mod parallel;
 pub mod pot;
 pub mod problem;
 pub mod scaling;
+pub mod session;
+pub mod sparse;
 
 pub use convergence::StopRule;
 pub use problem::Problem;
+pub use session::{
+    solver_for, CheckEvent, CoffeeSolver, ConvergenceObserver, MapUotSolver, ObserverAction,
+    PotSolver, SessionBuilder, Solver, SolverSession, Workspace,
+};
 
-use crate::util::{Matrix, Timer};
+use crate::util::Matrix;
 
 /// Which solver implementation to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SolverKind {
-    /// POT / NumPy 4-sweep baseline.
+    /// POT / NumPy 4-pass baseline.
     Pot,
-    /// COFFEE phase-fused 2-sweep comparator.
+    /// COFFEE phase-fused 2-pass comparator.
     Coffee,
-    /// MAP-UOT fused single-sweep (the paper's contribution).
+    /// MAP-UOT fused single-pass (the paper's contribution).
     MapUot,
 }
 
@@ -51,13 +70,36 @@ impl SolverKind {
         }
     }
 
-    /// Matrix-touching sweeps per iteration (drives traffic models & sims).
-    pub fn sweeps_per_iter(self) -> usize {
+    /// Full-matrix passes per iteration — how many times the loop nest
+    /// walks the plan (the module-header table's first column).
+    pub fn passes_per_iter(self) -> usize {
         match self {
-            SolverKind::Pot => 6,    // 4 passes, 2 of them read+write
-            SolverKind::Coffee => 4, // 2 read+write passes
-            SolverKind::MapUot => 2, // 1 read + 1 write
+            SolverKind::Pot => 4,    // sum(0), col-rescale, sum(1), row-rescale
+            SolverKind::Coffee => 2, // two fused read+write phases
+            SolverKind::MapUot => 1, // single fused read+write pass
         }
+    }
+
+    /// DRAM element accesses per matrix element per iteration — the traffic
+    /// multiplier the sims and the Roofline `Q` plug in. A read-only pass
+    /// costs 1 access per element, a read+write pass costs 2: POT's 4
+    /// passes (2 ro + 2 rw) ⇒ 6, COFFEE's 2 rw passes ⇒ 4, MAP-UOT's one
+    /// fused rw pass ⇒ 2 (the streaming minimum).
+    pub fn accesses_per_element(self) -> usize {
+        match self {
+            SolverKind::Pot => 6,
+            SolverKind::Coffee => 4,
+            SolverKind::MapUot => 2,
+        }
+    }
+
+    /// Former name of [`SolverKind::accesses_per_element`]; it never counted
+    /// passes, despite the name.
+    #[deprecated(
+        note = "use `accesses_per_element` (traffic multiplier) or `passes_per_iter` (loop-nest walks)"
+    )]
+    pub fn sweeps_per_iter(self) -> usize {
+        self.accesses_per_element()
     }
 
     /// Parse from a CLI string.
@@ -71,7 +113,8 @@ impl SolverKind {
     }
 }
 
-/// Execution options for [`solve`].
+/// Execution options for the deprecated [`solve`] shim (the session builder
+/// carries the same knobs: [`SolverSession::builder`]).
 #[derive(Debug, Clone, Copy)]
 pub struct SolveOptions {
     /// Worker threads (1 = serial paths).
@@ -90,17 +133,21 @@ impl Default for SolveOptions {
     }
 }
 
-/// Outcome of a [`solve`] run.
+/// Outcome of a solve.
 #[derive(Debug, Clone, Copy)]
 pub struct SolveReport {
     pub iters: usize,
     pub err: f32,
+    /// Plan motion over the final check interval, tracked inside the fused
+    /// sweep (sum of per-iteration max element changes — an upper bound on
+    /// the old snapshot-based `plan_delta`; see [`session`]).
     pub delta: f32,
     pub converged: bool,
     pub seconds: f64,
 }
 
 /// Advance one iteration of `kind` (serial if `threads == 1`).
+#[deprecated(note = "use `solver_for(kind).iterate(...)` with a reusable `Workspace`")]
 pub fn iterate_once(
     kind: SolverKind,
     plan: &mut Matrix,
@@ -110,58 +157,49 @@ pub fn iterate_once(
     fi: f32,
     threads: usize,
 ) {
-    match (kind, threads) {
-        (SolverKind::Pot, 1) => pot::iterate(plan, colsum, rpd, cpd, fi),
-        (SolverKind::Coffee, 1) => coffee::iterate(plan, colsum, rpd, cpd, fi),
-        (SolverKind::MapUot, 1) => mapuot::iterate(plan, colsum, rpd, cpd, fi),
-        (SolverKind::Pot, t) => parallel::pot_iterate(plan, colsum, rpd, cpd, fi, t),
-        (SolverKind::Coffee, t) => parallel::coffee_iterate(plan, colsum, rpd, cpd, fi, t),
-        (SolverKind::MapUot, t) => parallel::mapuot_iterate(plan, colsum, rpd, cpd, fi, t),
-    }
+    let mut ws = Workspace::new(plan.rows(), plan.cols(), threads);
+    solver_for(kind).iterate(plan, colsum, rpd, cpd, fi, &mut ws);
 }
 
 /// Solve `problem` to the stop rule; returns the final plan and a report.
+///
+/// One-release shim over [`SolverSession`]: it builds (and throws away) a
+/// session per call, so it pays the warmup allocations every time and
+/// cannot observe or cancel.
+#[deprecated(note = "use `SolverSession::builder(kind)...build(&problem)` — reusable \
+                     workspaces, observers, typed errors, batch solve")]
 pub fn solve(kind: SolverKind, problem: &Problem, opts: SolveOptions) -> (Matrix, SolveReport) {
-    let timer = Timer::start();
-    let mut plan = problem.plan.clone();
-    let mut colsum = plan.col_sums();
-    let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
-
-    let mut iters = 0;
-    let mut prev = plan.clone();
-    let (mut err, mut delta);
-    loop {
-        let steps = opts.check_every.max(1);
-        for _ in 0..steps {
-            iterate_once(kind, &mut plan, &mut colsum, rpd, cpd, fi, opts.threads);
-        }
-        iters += steps;
-        err = convergence::marginal_error(&plan, rpd, cpd);
-        delta = convergence::plan_delta(&prev, &plan);
-        if opts.stop.is_done(err, delta, iters) {
-            break;
-        }
-        prev = plan.clone();
-    }
-
-    let converged = err <= opts.stop.tol || delta <= opts.stop.delta_tol;
-    (
-        plan,
-        SolveReport { iters, err, delta, converged, seconds: timer.elapsed().as_secs_f64() },
-    )
+    let mut session = SolverSession::builder(kind)
+        .threads(opts.threads)
+        .stop(opts.stop)
+        .check_every(opts.check_every)
+        .build(problem);
+    let report = session
+        .solve(problem)
+        .expect("observer-free solve cannot be canceled");
+    (session.into_plan(), report)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn run(kind: SolverKind, p: &Problem, check_every: usize, stop: StopRule) -> (Matrix, SolveReport) {
+        let mut session = SolverSession::builder(kind)
+            .check_every(check_every)
+            .stop(stop)
+            .build(p);
+        let report = session.solve(p).unwrap();
+        (session.into_plan(), report)
+    }
+
     #[test]
     fn all_kinds_agree_after_full_solve() {
         let p = Problem::random(24, 18, 0.8, 42);
-        let opts = SolveOptions { check_every: 4, ..Default::default() };
-        let (a, ra) = solve(SolverKind::MapUot, &p, opts);
-        let (b, rb) = solve(SolverKind::Pot, &p, opts);
-        let (c, rc) = solve(SolverKind::Coffee, &p, opts);
+        let stop = StopRule::default();
+        let (a, ra) = run(SolverKind::MapUot, &p, 4, stop);
+        let (b, rb) = run(SolverKind::Pot, &p, 4, stop);
+        let (c, rc) = run(SolverKind::Coffee, &p, 4, stop);
         assert!(ra.converged && rb.converged && rc.converged);
         assert!(a.max_rel_diff(&b, 1e-6) < 1e-2);
         assert!(a.max_rel_diff(&c, 1e-6) < 1e-2);
@@ -176,11 +214,8 @@ mod tests {
         for v in &mut p.cpd {
             *v *= total_r / total_c;
         }
-        let opts = SolveOptions {
-            stop: StopRule { tol: 1e-4, delta_tol: 0.0, max_iter: 5_000 },
-            ..Default::default()
-        };
-        let (plan, report) = solve(SolverKind::MapUot, &p, opts);
+        let stop = StopRule { tol: 1e-4, delta_tol: 0.0, max_iter: 5_000 };
+        let (plan, report) = run(SolverKind::MapUot, &p, 8, stop);
         assert!(report.converged, "err={}", report.err);
         for (rs, &t) in plan.row_sums().iter().zip(&p.rpd) {
             assert!((rs - t).abs() < 1e-3);
@@ -190,11 +225,31 @@ mod tests {
     #[test]
     fn parallel_solve_matches_serial_solve() {
         let p = Problem::random(32, 20, 0.6, 9);
-        let serial = SolveOptions::default();
-        let par = SolveOptions { threads: 4, ..Default::default() };
-        let (a, _) = solve(SolverKind::MapUot, &p, serial);
-        let (b, _) = solve(SolverKind::MapUot, &p, par);
-        assert!(a.max_rel_diff(&b, 1e-6) < 1e-3);
+        let mut serial = SolverSession::builder(SolverKind::MapUot).build(&p);
+        let mut par = SolverSession::builder(SolverKind::MapUot).threads(4).build(&p);
+        serial.solve(&p).unwrap();
+        par.solve(&p).unwrap();
+        assert!(serial.plan().max_rel_diff(par.plan(), 1e-6) < 1e-3);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_session() {
+        let p = Problem::random(20, 14, 0.7, 11);
+        let opts = SolveOptions { check_every: 4, ..Default::default() };
+        let (shim_plan, shim_report) = solve(SolverKind::MapUot, &p, opts);
+        let (plan, report) = run(SolverKind::MapUot, &p, 4, opts.stop);
+        assert_eq!(shim_plan.as_slice(), plan.as_slice());
+        assert_eq!(shim_report.iters, report.iters);
+
+        let mut a = p.plan.clone();
+        let mut cs_a = a.col_sums();
+        iterate_once(SolverKind::MapUot, &mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, 1);
+        let mut b = p.plan.clone();
+        let mut cs_b = b.col_sums();
+        let mut ws = Workspace::new(20, 14, 1);
+        solver_for(SolverKind::MapUot).iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws);
+        assert_eq!(a.as_slice(), b.as_slice());
     }
 
     #[test]
@@ -206,8 +261,23 @@ mod tests {
     }
 
     #[test]
-    fn traffic_ordering() {
-        assert!(SolverKind::Pot.sweeps_per_iter() > SolverKind::Coffee.sweeps_per_iter());
-        assert!(SolverKind::Coffee.sweeps_per_iter() > SolverKind::MapUot.sweeps_per_iter());
+    fn traffic_accounting_is_consistent() {
+        // Element accesses strictly order the solvers, POT 6 > COFFEE 4 >
+        // MAP-UOT 2, and relate to passes as "read-only pass = 1 access,
+        // read+write pass = 2": POT has 2 ro + 2 rw, the fused kinds are
+        // all-rw, so accesses = 2·passes there.
+        assert_eq!(SolverKind::Pot.accesses_per_element(), 6);
+        assert_eq!(SolverKind::Coffee.accesses_per_element(), 4);
+        assert_eq!(SolverKind::MapUot.accesses_per_element(), 2);
+        assert_eq!(SolverKind::Pot.passes_per_iter(), 4);
+        assert_eq!(SolverKind::Coffee.passes_per_iter(), 2);
+        assert_eq!(SolverKind::MapUot.passes_per_iter(), 1);
+        for kind in [SolverKind::Coffee, SolverKind::MapUot] {
+            assert_eq!(kind.accesses_per_element(), 2 * kind.passes_per_iter());
+        }
+        assert_eq!(
+            SolverKind::Pot.accesses_per_element(),
+            SolverKind::Pot.passes_per_iter() + 2 // the 2 rw passes count twice
+        );
     }
 }

@@ -12,11 +12,25 @@
 //! sweeps and COFFEE's two phases need a barrier between sweeps, realized
 //! as one scope per sweep group — this extra synchronization is part of
 //! what Fig. 10 measures.
+//!
+//! Every solver comes in three forms: `*_iterate_into` (caller-provided
+//! scratch — the allocation-free workspace path), `*_iterate_tracked`
+//! (additionally returns the iteration's max element change, folded into
+//! the sweep), and the legacy `*_iterate` wrappers that allocate their own
+//! scratch per call. The per-thread `NextSum_col` blocks arrive as
+//! `acc: &mut [Vec<f32>]` — still separately allocated vectors, so no two
+//! threads ever share a cache line of accumulator state.
+
+// The workspace variants take each scratch buffer explicitly — that is the
+// point of the allocation-free contract, not an accident of design.
+#![allow(clippy::too_many_arguments)]
 
 use std::thread;
 
-use crate::algo::mapuot::fused_rows;
-use crate::algo::scaling::{factor, factors_into};
+use crate::algo::mapuot::{
+    fused_rows, fused_rows_tracked, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
+};
+use crate::algo::scaling::{factor, factors_into, recip_into};
 use crate::util::Matrix;
 
 /// Clamp a thread-count request to something usable.
@@ -24,7 +38,134 @@ pub fn effective_threads(requested: usize, rows: usize) -> usize {
     requested.max(1).min(rows.max(1))
 }
 
-/// One parallel MAP-UOT iteration with `threads` workers.
+/// Row-block partition for `m` rows over `threads` workers capped by the
+/// number of per-thread accumulators: `(rows_per_block, blocks_used)`.
+fn partition(m: usize, threads: usize, acc_len: usize) -> (usize, usize) {
+    let t = effective_threads(threads, m).min(acc_len.max(1));
+    let rows_per = m.div_ceil(t);
+    (rows_per, m.div_ceil(rows_per))
+}
+
+/// Reduce the first `used` per-thread accumulators into `colsum`
+/// (Algorithm 1 lines 16–20, main thread).
+fn reduce_acc(colsum: &mut [f32], acc: &[Vec<f32>], used: usize) {
+    colsum.fill(0.0);
+    for local in &acc[..used] {
+        for (s, &v) in colsum.iter_mut().zip(local.iter()) {
+            *s += v;
+        }
+    }
+}
+
+/// Parallel column sums of `plan` into `out`, using `acc` for the
+/// per-thread partials.
+fn par_col_sums_into(plan: &Matrix, rows_per: usize, out: &mut [f32], acc: &mut [Vec<f32>]) {
+    let n = plan.cols();
+    thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_slice()
+            .chunks(rows_per * n)
+            .zip(acc.iter_mut())
+            .map(|(block, local)| {
+                s.spawn(move || {
+                    local.fill(0.0);
+                    for row in block.chunks_exact(n) {
+                        for (sl, &v) in local.iter_mut().zip(row) {
+                            *sl += v;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    let used = plan.rows().div_ceil(rows_per);
+    reduce_acc(out, acc, used);
+}
+
+/// One parallel MAP-UOT iteration out of caller-provided scratch:
+/// `fcol` (length N) and the per-thread `NextSum_col` blocks `acc`.
+pub fn mapuot_iterate_into(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    acc: &mut [Vec<f32>],
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let (rows_per, used) = partition(m, threads, acc.len());
+    factors_into(fcol, cpd, colsum, fi);
+
+    let fcol_ref: &[f32] = fcol;
+    thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .zip(rpd.chunks(rows_per))
+            .zip(acc.iter_mut())
+            .map(|((block, rpd_block), local)| {
+                s.spawn(move || {
+                    local.fill(0.0);
+                    fused_rows(block, n, rpd_block, fcol_ref, fi, local);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    reduce_acc(colsum, acc, used);
+}
+
+/// [`mapuot_iterate_into`] with in-sweep delta tracking; returns the
+/// iteration's max element change across all row blocks.
+pub fn mapuot_iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    acc: &mut [Vec<f32>],
+) -> f32 {
+    let (m, n) = (plan.rows(), plan.cols());
+    let (rows_per, used) = partition(m, threads, acc.len());
+    factors_into(fcol, cpd, colsum, fi);
+    recip_into(inv_fcol, fcol);
+
+    let fcol_ref: &[f32] = fcol;
+    let inv_ref: &[f32] = inv_fcol;
+    let mut delta = 0f32;
+    thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .zip(rpd.chunks(rows_per))
+            .zip(acc.iter_mut())
+            .map(|((block, rpd_block), local)| {
+                s.spawn(move || {
+                    local.fill(0.0);
+                    fused_rows_tracked(block, n, rpd_block, fcol_ref, inv_ref, fi, local)
+                })
+            })
+            .collect();
+        for h in handles {
+            delta = delta.max(h.join().expect("worker panicked"));
+        }
+    });
+    reduce_acc(colsum, acc, used);
+    delta
+}
+
+/// One parallel MAP-UOT iteration with `threads` workers; allocates its own
+/// scratch per call — prefer [`mapuot_iterate_into`] on hot paths.
 pub fn mapuot_iterate(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -36,38 +177,128 @@ pub fn mapuot_iterate(
     let (m, n) = (plan.rows(), plan.cols());
     let t = effective_threads(threads, m);
     let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, colsum, fi);
-    let rows_per = m.div_ceil(t);
+    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    mapuot_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut acc);
+}
 
-    let fcol_ref = &fcol;
-    let locals: Vec<Vec<f32>> = thread::scope(|s| {
+/// One parallel COFFEE iteration (two phase-sweeps with a barrier between)
+/// out of caller-provided scratch.
+pub fn coffee_iterate_into(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
+) {
+    coffee_phases(plan, colsum, rpd, cpd, fi, threads, fcol, None, rowsum, acc);
+}
+
+/// [`coffee_iterate_into`] with in-sweep delta tracking.
+pub fn coffee_iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
+) -> f32 {
+    coffee_phases(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), rowsum, acc)
+}
+
+/// Shared body of the parallel COFFEE iteration; tracks deltas in phase B
+/// when `inv_fcol` is provided (same pattern as [`pot_sweeps`]).
+fn coffee_phases(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
+) -> f32 {
+    let (m, n) = (plan.rows(), plan.cols());
+    let (rows_per, used) = partition(m, threads, acc.len());
+    factors_into(fcol, cpd, colsum, fi);
+    let inv_fcol: Option<&[f32]> = match inv_fcol {
+        Some(inv) => {
+            recip_into(inv, fcol);
+            Some(inv)
+        }
+        None => None,
+    };
+
+    // Phase A: column rescale + row sums.
+    let fcol_ref: &[f32] = fcol;
+    thread::scope(|s| {
+        for (block, rs_block) in plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .zip(rowsum.chunks_mut(rows_per))
+        {
+            s.spawn(move || {
+                for (row, rs) in block.chunks_exact_mut(n).zip(rs_block.iter_mut()) {
+                    *rs = scale_by_vec_and_sum(row, fcol_ref);
+                }
+            });
+        }
+    });
+
+    // Phase B: row rescale + next column sums (tracked when the reciprocal
+    // factors are given).
+    let rowsum_ref: &[f32] = rowsum;
+    let mut delta = 0f32;
+    thread::scope(|s| {
         let handles: Vec<_> = plan
             .as_mut_slice()
             .chunks_mut(rows_per * n)
-            .zip(rpd.chunks(rows_per))
-            .map(|(block, rpd_block)| {
+            .enumerate()
+            .zip(acc.iter_mut())
+            .map(|((b, block), local)| {
                 s.spawn(move || {
-                    // Private NextSum_col: separately allocated, so no two
-                    // threads ever share a cache line of accumulator state.
-                    let mut local = vec![0f32; n];
-                    fused_rows(block, n, rpd_block, fcol_ref, fi, &mut local);
-                    local
+                    local.fill(0.0);
+                    let mut block_delta = 0f32;
+                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
+                        let gi = b * rows_per + i;
+                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
+                        match inv_fcol {
+                            Some(inv) => {
+                                block_delta = block_delta.max(
+                                    scale_by_scalar_and_accumulate_tracked(row, fr, inv, local),
+                                );
+                            }
+                            None => {
+                                for (v, sl) in row.iter_mut().zip(local.iter_mut()) {
+                                    *v *= fr;
+                                    *sl += *v;
+                                }
+                            }
+                        }
+                    }
+                    block_delta
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-
-    // Algorithm 1 lines 16–20: reduce per-thread NextSum_col on the main thread.
-    colsum.fill(0.0);
-    for local in &locals {
-        for (s, &v) in colsum.iter_mut().zip(local) {
-            *s += v;
+        for h in handles {
+            delta = delta.max(h.join().expect("worker panicked"));
         }
-    }
+    });
+    reduce_acc(colsum, acc, used);
+    delta
 }
 
-/// One parallel COFFEE iteration: two phase-sweeps with a barrier between.
+/// One parallel COFFEE iteration; allocates its own scratch per call —
+/// prefer [`coffee_iterate_into`] on hot paths.
 pub fn coffee_iterate(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -79,91 +310,75 @@ pub fn coffee_iterate(
     let (m, n) = (plan.rows(), plan.cols());
     let t = effective_threads(threads, m);
     let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, colsum, fi);
-    let rows_per = m.div_ceil(t);
-
-    // Phase A: column rescale + row sums.
-    let fcol_ref = &fcol;
-    let rowsum: Vec<f32> = thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .map(|block| {
-                s.spawn(move || {
-                    block
-                        .chunks_exact_mut(n)
-                        .map(|row| {
-                            let mut acc = 0f32;
-                            for (v, &f) in row.iter_mut().zip(fcol_ref) {
-                                *v *= f;
-                                acc += *v;
-                            }
-                            acc
-                        })
-                        .collect::<Vec<f32>>()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("worker panicked"))
-            .collect()
-    });
-
-    // Phase B: row rescale + next column sums.
-    let rowsum_ref = &rowsum;
-    let locals: Vec<Vec<f32>> = thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .enumerate()
-            .map(|(b, block)| {
-                s.spawn(move || {
-                    let mut local = vec![0f32; n];
-                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
-                        let gi = b * rows_per + i;
-                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
-                        for (v, sl) in row.iter_mut().zip(local.iter_mut()) {
-                            *v *= fr;
-                            *sl += *v;
-                        }
-                    }
-                    local
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-    colsum.fill(0.0);
-    for local in &locals {
-        for (s, &v) in colsum.iter_mut().zip(local) {
-            *s += v;
-        }
-    }
+    let mut rowsum = vec![0f32; m];
+    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    coffee_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut rowsum, &mut acc);
 }
 
-/// One parallel POT iteration: four sweeps, each row-partitioned, with
-/// barriers between sweeps (the NumPy execution model under a parallel
-/// BLAS-style backend).
-pub fn pot_iterate(
+/// One parallel POT iteration (four sweeps, each row-partitioned, with
+/// barriers between — the NumPy execution model under a parallel BLAS-style
+/// backend) out of caller-provided scratch.
+pub fn pot_iterate_into(
     plan: &mut Matrix,
     colsum: &mut [f32],
     rpd: &[f32],
     cpd: &[f32],
     fi: f32,
     threads: usize,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
 ) {
+    pot_sweeps(plan, colsum, rpd, cpd, fi, threads, fcol, None, rowsum, acc);
+}
+
+/// [`pot_iterate_into`] with in-sweep delta tracking.
+pub fn pot_iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
+) -> f32 {
+    pot_sweeps(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), rowsum, acc)
+}
+
+/// Shared body of the parallel POT iteration; tracks deltas in sweep 4
+/// when `inv_fcol` is provided.
+#[allow(clippy::too_many_arguments)]
+fn pot_sweeps(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
+    acc: &mut [Vec<f32>],
+) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
-    let t = effective_threads(threads, m);
-    let rows_per = m.div_ceil(t);
+    let (rows_per, _) = partition(m, threads, acc.len());
 
     // Sweep 1: column sums.
-    let sums = par_col_sums(plan, rows_per);
-    let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, &sums, fi);
+    par_col_sums_into(plan, rows_per, colsum, acc);
+    factors_into(fcol, cpd, colsum, fi);
+    let inv_fcol: Option<&[f32]> = match inv_fcol {
+        Some(inv) => {
+            recip_into(inv, fcol);
+            Some(inv)
+        }
+        None => None,
+    };
 
     // Sweep 2: column rescale.
-    let fcol_ref = &fcol;
+    let fcol_ref: &[f32] = fcol;
     thread::scope(|s| {
         for block in plan.as_mut_slice().chunks_mut(rows_per * n) {
             s.spawn(move || {
@@ -177,73 +392,79 @@ pub fn pot_iterate(
     });
 
     // Sweep 3: row sums.
-    let rowsum: Vec<f32> = thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .map(|block| {
-                s.spawn(move || {
-                    block
-                        .chunks_exact(n)
-                        .map(|row| row.iter().sum::<f32>())
-                        .collect::<Vec<f32>>()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("worker panicked"))
-            .collect()
-    });
-
-    // Sweep 4: row rescale.
-    let rowsum_ref = &rowsum;
     thread::scope(|s| {
-        for (b, block) in plan.as_mut_slice().chunks_mut(rows_per * n).enumerate() {
+        for (block, rs_block) in plan
+            .as_slice()
+            .chunks(rows_per * n)
+            .zip(rowsum.chunks_mut(rows_per))
+        {
             s.spawn(move || {
-                for (i, row) in block.chunks_exact_mut(n).enumerate() {
-                    let gi = b * rows_per + i;
-                    let fr = factor(rpd[gi], rowsum_ref[gi], fi);
-                    for v in row {
-                        *v *= fr;
-                    }
+                for (row, rs) in block.chunks_exact(n).zip(rs_block.iter_mut()) {
+                    *rs = row.iter().sum::<f32>();
                 }
             });
         }
     });
 
-    // Refresh carried colsum (POT recomputes it next iteration anyway).
-    let fresh = par_col_sums(plan, rows_per);
-    colsum.copy_from_slice(&fresh);
-}
-
-fn par_col_sums(plan: &mut Matrix, rows_per: usize) -> Vec<f32> {
-    let n = plan.cols();
-    let locals: Vec<Vec<f32>> = thread::scope(|s| {
+    // Sweep 4: row rescale (tracked when the reciprocal factors are given).
+    let rowsum_ref: &[f32] = rowsum;
+    let mut delta = 0f32;
+    thread::scope(|s| {
         let handles: Vec<_> = plan
             .as_mut_slice()
             .chunks_mut(rows_per * n)
-            .map(|block| {
+            .enumerate()
+            .map(|(b, block)| {
                 s.spawn(move || {
-                    let mut local = vec![0f32; n];
-                    for row in block.chunks_exact(n) {
-                        for (sl, &v) in local.iter_mut().zip(row) {
-                            *sl += v;
+                    let mut block_delta = 0f32;
+                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
+                        let gi = b * rows_per + i;
+                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
+                        match inv_fcol {
+                            Some(inv) => {
+                                for (v, &iv) in row.iter_mut().zip(inv) {
+                                    let old = *v * iv;
+                                    *v *= fr;
+                                    block_delta = block_delta.max((*v - old).abs());
+                                }
+                            }
+                            None => {
+                                for v in row {
+                                    *v *= fr;
+                                }
+                            }
                         }
                     }
-                    local
+                    block_delta
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-    let mut out = vec![0f32; n];
-    for local in &locals {
-        for (s, &v) in out.iter_mut().zip(local) {
-            *s += v;
+        for h in handles {
+            delta = delta.max(h.join().expect("worker panicked"));
         }
-    }
-    out
+    });
+
+    // Refresh carried colsum (POT recomputes it next iteration anyway).
+    par_col_sums_into(plan, rows_per, colsum, acc);
+    delta
+}
+
+/// One parallel POT iteration; allocates its own scratch per call —
+/// prefer [`pot_iterate_into`] on hot paths.
+pub fn pot_iterate(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let t = effective_threads(threads, m);
+    let mut fcol = vec![0f32; n];
+    let mut rowsum = vec![0f32; m];
+    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    pot_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut rowsum, &mut acc);
 }
 
 #[cfg(test)]
@@ -305,5 +526,25 @@ mod tests {
         assert_eq!(effective_threads(0, 10), 1);
         assert_eq!(effective_threads(16, 4), 4);
         assert_eq!(effective_threads(8, 100), 8);
+    }
+
+    #[test]
+    fn into_variants_reuse_scratch_across_iterations() {
+        let p = Problem::random(19, 13, 0.6, 5);
+        let mut a = p.plan.clone();
+        let mut cs_a = a.col_sums();
+        let mut fcol = vec![0f32; 13];
+        let mut rowsum = vec![0f32; 19];
+        let mut acc: Vec<Vec<f32>> = (0..3).map(|_| vec![0f32; 13]).collect();
+        let mut b = p.plan.clone();
+        let mut cs_b = b.col_sums();
+        for _ in 0..4 {
+            coffee_iterate_into(
+                &mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, 3, &mut fcol, &mut rowsum, &mut acc,
+            );
+            coffee_iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, 3);
+        }
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(cs_a, cs_b);
     }
 }

@@ -14,34 +14,40 @@
 use crate::algo::scaling::factors_into;
 use crate::util::Matrix;
 
-/// One POT iteration: column rescaling then row rescaling (ref.py order).
+/// One POT iteration: column rescaling then row rescaling (ref.py order),
+/// allocation-free: `fcol` (length N) and `rowsum` (length M) are
+/// caller-provided scratch (see `session::Workspace`).
 ///
-/// `colsum` is ignored as carried state (POT recomputes sums every sweep)
-/// but is refreshed on exit so the caller's convergence bookkeeping works
-/// across solver kinds.
-pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
-    let (m, n) = (plan.rows(), plan.cols());
+/// `colsum` is ignored as carried state (POT recomputes sums every sweep —
+/// it doubles as the sweep-1 accumulator here) but holds fresh column sums
+/// on exit so the caller's convergence bookkeeping works across kinds.
+pub fn iterate_into(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+) {
+    let m = plan.rows();
 
     // Sweep 1: column sums (row-major accumulation, as numpy's sum(0)).
-    let mut sums = vec![0f32; n];
-    for i in 0..m {
-        for (s, &v) in sums.iter_mut().zip(plan.row(i)) {
-            *s += v;
-        }
-    }
+    plan.col_sums_into(colsum);
 
     // Sweep 2: column rescaling.
-    let mut fcol = vec![0f32; n];
-    factors_into(&mut fcol, cpd, &sums, fi);
+    factors_into(fcol, cpd, colsum, fi);
     for i in 0..m {
-        for (v, &f) in plan.row_mut(i).iter_mut().zip(&fcol) {
+        for (v, &f) in plan.row_mut(i).iter_mut().zip(fcol.iter()) {
             *v *= f;
         }
     }
 
     // Sweep 3: row sums (16-lane reduction — NumPy's pairwise-sum ufunc is
     // similarly vectorized, so a serial fold would pessimize the baseline).
-    let rowsum: Vec<f32> = (0..m).map(|i| wide_sum(plan.row(i))).collect();
+    for i in 0..m {
+        rowsum[i] = wide_sum(plan.row(i));
+    }
 
     // Sweep 4: row rescaling.
     for i in 0..m {
@@ -52,12 +58,60 @@ pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], 
     }
 
     // Refresh carried colsum for the uniform driver.
-    colsum.fill(0.0);
+    plan.col_sums_into(colsum);
+}
+
+/// [`iterate_into`] with in-sweep delta tracking; returns the iteration's
+/// max element change. At sweep 4 each element holds
+/// `v1 = v0 · Factor_col[j]`, so the pre-iteration value is recovered as
+/// `v1 · inv_fcol[j]` — no snapshot of the previous plan.
+#[allow(clippy::too_many_arguments)]
+pub fn iterate_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+) -> f32 {
+    let m = plan.rows();
+
+    plan.col_sums_into(colsum);
+
+    factors_into(fcol, cpd, colsum, fi);
+    crate::algo::scaling::recip_into(inv_fcol, fcol);
     for i in 0..m {
-        for (s, &v) in colsum.iter_mut().zip(plan.row(i)) {
-            *s += v;
+        for (v, &f) in plan.row_mut(i).iter_mut().zip(fcol.iter()) {
+            *v *= f;
         }
     }
+
+    for i in 0..m {
+        rowsum[i] = wide_sum(plan.row(i));
+    }
+
+    let mut delta = 0f32;
+    for i in 0..m {
+        let fr = crate::algo::scaling::factor(rpd[i], rowsum[i], fi);
+        for (v, &inv) in plan.row_mut(i).iter_mut().zip(inv_fcol.iter()) {
+            let old = *v * inv;
+            *v *= fr;
+            delta = delta.max((*v - old).abs());
+        }
+    }
+
+    plan.col_sums_into(colsum);
+    delta
+}
+
+/// One POT iteration; allocates its own scratch — prefer [`iterate_into`]
+/// on hot paths.
+pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
+    let mut fcol = vec![0f32; plan.cols()];
+    let mut rowsum = vec![0f32; plan.rows()];
+    iterate_into(plan, colsum, rpd, cpd, fi, &mut fcol, &mut rowsum);
 }
 
 /// Vectorizable 16-lane sum (see `mapuot::scale_by_vec_and_sum` §Perf note).

@@ -24,10 +24,31 @@ pub fn factors_into(out: &mut [f32], target: &[f32], sums: &[f32], fi: f32) {
     }
 }
 
-/// Per-iteration DRAM traffic in matrix-element accesses (paper §3.1):
+/// Fill `out[j] = 1 / factors[j]`, with the same zero guard as [`factor`]
+/// (`factors[j] = 0` ⇒ `0`). Used by the in-sweep `plan_delta` tracking:
+/// the pre-iteration value is recovered as `cur · (1 / Factor_col)`.
+///
+/// The zero guard is exact under the [`Problem`](crate::algo::Problem)
+/// invariant that marginals are strictly positive (enforced by
+/// `Problem::new` and all in-crate generators): then a zero column factor
+/// can only come from a zero column sum, i.e. an already-zero column, and
+/// the recovered `old = 0` is the true previous value. A hand-built
+/// problem that bypasses validation with a zero/negative `cpd[j]` over a
+/// nonzero column would see that column's collapse under-reported in the
+/// tracked delta for the one iteration where it happens.
+pub fn recip_into(out: &mut [f32], factors: &[f32]) {
+    debug_assert_eq!(out.len(), factors.len());
+    for (o, &f) in out.iter_mut().zip(factors) {
+        *o = if f > 0.0 { 1.0 / f } else { 0.0 };
+    }
+}
+
+/// Per-iteration DRAM traffic in matrix-element accesses (paper §3.1),
+/// given `accesses_per_element` from
+/// [`SolverKind::accesses_per_element`](crate::algo::SolverKind::accesses_per_element):
 /// POT 6·M·N, COFFEE 4·M·N, MAP-UOT 2·M·N (the Roofline minimum).
-pub fn traffic_elements(m: usize, n: usize, sweeps_touching_matrix: usize) -> usize {
-    sweeps_touching_matrix * m * n
+pub fn traffic_elements(m: usize, n: usize, accesses_per_element: usize) -> usize {
+    accesses_per_element * m * n
 }
 
 #[cfg(test)]

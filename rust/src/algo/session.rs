@@ -1,0 +1,713 @@
+//! Workspace-centric solver surface: reusable sessions, observers, batch solve.
+//!
+//! The paper's thesis is that UOT is memory-bound, so the public API must not
+//! reintroduce the matrix traffic the kernels removed. The old `algo::solve`
+//! free function cloned the plan on entry and re-cloned it into a `prev`
+//! snapshot every check interval just to compute `plan_delta` — 1–2 extra
+//! M·N passes per check — and re-allocated every scratch buffer per call.
+//!
+//! This module replaces that with three layers:
+//!
+//! * [`Workspace`] — owns every scratch buffer one solve needs (column
+//!   factors, reciprocal factors for in-sweep delta tracking, row sums,
+//!   per-thread `NextSum_col` blocks, a marginal-error scratch). Build once,
+//!   reuse forever.
+//! * [`Solver`] — object-safe trait over the three kernels (POT, COFFEE,
+//!   MAP-UOT). `iterate` advances one iteration allocation-free out of a
+//!   workspace; `iterate_tracked` additionally folds the `plan_delta`
+//!   computation *into the sweep* (no `prev` snapshot, no extra pass).
+//! * [`SolverSession`] — the service-facing API:
+//!   `SolverSession::builder(kind).threads(t).stop(rule).observer(cb).build(&p)`.
+//!   Repeated [`SolverSession::solve`] calls on same-shape problems perform
+//!   **zero heap allocations after warmup** (see the allocation contract on
+//!   [`Workspace`]), fire a [`ConvergenceObserver`] on every check boundary,
+//!   and can be cancelled mid-solve ([`crate::error::Error::Canceled`]).
+//!
+//! Incremental delta tracking: one iteration maps each element
+//! `v0 → v0 · Factor_col[j] · Factor_row[i]`. Inside the fused sweep the
+//! post-column-rescale value `v1 = v0 · Factor_col[j]` is in registers, so
+//! `|Δ| = |v1 · Factor_row[i] − v1 / Factor_col[j]|` needs only the
+//! precomputed reciprocal factors ([`crate::algo::scaling::recip_into`]) —
+//! no snapshot of the previous plan, only a handful of extra ALU ops per
+//! element, which a memory-bound kernel absorbs for free. The session sums
+//! the per-iteration maxima across each check interval, so the reported
+//! `delta` **upper-bounds** the old `plan_delta(prev, cur)` snapshot diff
+//! (triangle inequality); a `delta_tol` stop can only fire later than it
+//! would have under the old criterion, never earlier.
+
+use crate::algo::convergence::{self, StopRule};
+use crate::algo::problem::Problem;
+use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
+use crate::error::{Error, Result};
+use crate::util::{Matrix, Timer};
+
+/// Scratch buffers for one solver shape, reused across iterations and solves.
+///
+/// # Allocation contract
+///
+/// The hot path is allocation-free; only explicit (re)sizing allocates:
+///
+/// * **May allocate:** [`Workspace::new`], [`Workspace::ensure_shape`] with a
+///   shape larger than any seen before, [`SessionBuilder::build`],
+///   [`SolverSession::solve_cloned`] / [`SolverSession::solve_batch`] (they
+///   clone the result plan out), and the first [`SolverSession::solve`] on a
+///   new shape.
+/// * **Must not allocate:** [`Solver::iterate`] / [`Solver::iterate_tracked`]
+///   on the serial path (`threads == 1`), and the whole of
+///   [`SolverSession::solve`] for a same-shape problem after the first solve
+///   (asserted by the counting-allocator test `rust/tests/alloc_free.rs`).
+/// * **Threaded caveat:** with `threads > 1` the workspace buffers are still
+///   reused, but `std::thread::scope` itself allocates when spawning OS
+///   threads each iteration; only the serial path is allocation-free.
+#[derive(Debug)]
+pub struct Workspace {
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    /// Column rescaling factors (`Factor_col`), length N.
+    fcol: Vec<f32>,
+    /// Reciprocals of `fcol` (zero-guarded) for in-sweep delta tracking.
+    inv_fcol: Vec<f32>,
+    /// Row sums for the phase-split kernels (POT sweep 3, COFFEE phase A).
+    rowsum: Vec<f32>,
+    /// Scratch column sums for the marginal-error check.
+    err_scratch: Vec<f32>,
+    /// Per-thread private `NextSum_col` blocks (Algorithm 1 lines 5–15).
+    thread_acc: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// Workspace for `m × n` problems solved with `threads` workers.
+    pub fn new(m: usize, n: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            rows: m,
+            cols: n,
+            threads,
+            fcol: vec![0f32; n],
+            inv_fcol: vec![0f32; n],
+            rowsum: vec![0f32; m],
+            err_scratch: vec![0f32; n],
+            thread_acc: (0..threads).map(|_| vec![0f32; n]).collect(),
+        }
+    }
+
+    /// Current `(rows, cols)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Worker threads this workspace is provisioned for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resize for a new shape. No-op (and allocation-free) when the shape is
+    /// unchanged; growing past any previously seen size reallocates.
+    pub fn ensure_shape(&mut self, m: usize, n: usize) {
+        if self.rows == m && self.cols == n {
+            return;
+        }
+        self.rows = m;
+        self.cols = n;
+        self.fcol.resize(n, 0.0);
+        self.inv_fcol.resize(n, 0.0);
+        self.rowsum.resize(m, 0.0);
+        self.err_scratch.resize(n, 0.0);
+        for acc in &mut self.thread_acc {
+            acc.resize(n, 0.0);
+        }
+    }
+
+    /// Marginal L-inf error of `plan` using workspace scratch (no allocation).
+    pub fn marginal_error(&mut self, plan: &Matrix, rpd: &[f32], cpd: &[f32]) -> f32 {
+        convergence::marginal_error_with(plan, rpd, cpd, &mut self.err_scratch)
+    }
+}
+
+/// Object-safe interface over the three iteration kernels.
+///
+/// `plan` and `colsum` are the algorithm state (carried across iterations;
+/// seed `colsum` with the plan's column sums); the [`Workspace`] supplies
+/// every scratch buffer, so neither method allocates on the serial path.
+pub trait Solver: Sync {
+    /// Which kernel this is.
+    fn kind(&self) -> SolverKind;
+
+    /// Advance one iteration in place.
+    fn iterate(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    );
+
+    /// Advance one iteration and return the max element-wise change of the
+    /// plan (`plan_delta` of this single iteration), tracked inside the
+    /// sweep — no snapshot, no extra pass over the matrix.
+    fn iterate_tracked(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) -> f32;
+}
+
+/// The POT / NumPy 4-pass baseline as a [`Solver`].
+pub struct PotSolver;
+/// The COFFEE phase-fused 2-pass comparator as a [`Solver`].
+pub struct CoffeeSolver;
+/// The MAP-UOT fused single-pass kernel as a [`Solver`].
+pub struct MapUotSolver;
+
+impl Solver for PotSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Pot
+    }
+
+    fn iterate(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) {
+        if ws.threads <= 1 {
+            pot::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.rowsum);
+        } else {
+            parallel::pot_iterate_into(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.rowsum,
+                &mut ws.thread_acc,
+            );
+        }
+    }
+
+    fn iterate_tracked(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        if ws.threads <= 1 {
+            pot::iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+            )
+        } else {
+            parallel::pot_iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+                &mut ws.thread_acc,
+            )
+        }
+    }
+}
+
+impl Solver for CoffeeSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Coffee
+    }
+
+    fn iterate(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) {
+        if ws.threads <= 1 {
+            coffee::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.rowsum);
+        } else {
+            parallel::coffee_iterate_into(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.rowsum,
+                &mut ws.thread_acc,
+            );
+        }
+    }
+
+    fn iterate_tracked(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        if ws.threads <= 1 {
+            coffee::iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+            )
+        } else {
+            parallel::coffee_iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+                &mut ws.thread_acc,
+            )
+        }
+    }
+}
+
+impl Solver for MapUotSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::MapUot
+    }
+
+    fn iterate(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) {
+        if ws.threads <= 1 {
+            mapuot::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol);
+        } else {
+            parallel::mapuot_iterate_into(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.thread_acc,
+            );
+        }
+    }
+
+    fn iterate_tracked(
+        &self,
+        plan: &mut Matrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        if ws.threads <= 1 {
+            mapuot::iterate_tracked(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.inv_fcol)
+        } else {
+            parallel::mapuot_iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                ws.threads,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.thread_acc,
+            )
+        }
+    }
+}
+
+/// The [`Solver`] implementation for `kind` (stateless, `'static`).
+pub fn solver_for(kind: SolverKind) -> &'static dyn Solver {
+    match kind {
+        SolverKind::Pot => &PotSolver,
+        SolverKind::Coffee => &CoffeeSolver,
+        SolverKind::MapUot => &MapUotSolver,
+    }
+}
+
+/// Snapshot handed to a [`ConvergenceObserver`] at each check boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckEvent {
+    /// Iterations completed so far.
+    pub iters: usize,
+    /// Marginal L-inf error at this boundary.
+    pub err: f32,
+    /// In-sweep tracked plan motion over this check interval (sum of
+    /// per-iteration max element changes; upper-bounds the snapshot diff).
+    pub delta: f32,
+}
+
+/// What an observer wants the solve to do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObserverAction {
+    /// Keep iterating.
+    Continue,
+    /// Abort: the solve returns [`Error::Canceled`] within `check_every`
+    /// iterations of the request.
+    Cancel,
+}
+
+/// Per-check callback: convergence telemetry + cancellation.
+///
+/// Fires on **every** check boundary (every `check_every` iterations),
+/// including the final one. Must not allocate if the session's
+/// allocation-free contract is to hold end to end.
+pub trait ConvergenceObserver: Send {
+    /// Called at each check boundary with the latest metrics.
+    fn on_check(&mut self, event: CheckEvent) -> ObserverAction;
+}
+
+impl<F: FnMut(CheckEvent) -> ObserverAction + Send> ConvergenceObserver for F {
+    fn on_check(&mut self, event: CheckEvent) -> ObserverAction {
+        self(event)
+    }
+}
+
+/// Builder for [`SolverSession`] — see the module docs for the full flow.
+pub struct SessionBuilder {
+    kind: SolverKind,
+    threads: usize,
+    stop: StopRule,
+    check_every: usize,
+    observer: Option<Box<dyn ConvergenceObserver>>,
+}
+
+impl SessionBuilder {
+    /// Worker threads (1 = serial, allocation-free path). Default 1.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Stopping criteria. Default [`StopRule::default`].
+    pub fn stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    /// Evaluate the stop rule (and fire the observer) every `k` iterations.
+    /// Checks cost one extra sweep, so they are amortized. Default 8.
+    pub fn check_every(mut self, k: usize) -> Self {
+        self.check_every = k.max(1);
+        self
+    }
+
+    /// Attach a per-check [`ConvergenceObserver`] (closure or struct).
+    pub fn observer(mut self, observer: impl ConvergenceObserver + 'static) -> Self {
+        self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// Build a session sized for `problem`'s shape. This is the warmup
+    /// allocation; subsequent same-shape solves are allocation-free.
+    pub fn build(self, problem: &Problem) -> SolverSession {
+        let (m, n) = (problem.rows(), problem.cols());
+        SolverSession {
+            solver: solver_for(self.kind),
+            stop: self.stop,
+            check_every: self.check_every,
+            observer: self.observer,
+            ws: Workspace::new(m, n, self.threads),
+            plan: Matrix::zeros(m, n),
+            colsum: vec![0f32; n],
+        }
+    }
+}
+
+/// A reusable solve session: one [`Workspace`], one result plan buffer,
+/// stopping policy and optional observer. `Send`, so one session per worker
+/// thread is the intended service topology.
+pub struct SolverSession {
+    solver: &'static dyn Solver,
+    stop: StopRule,
+    check_every: usize,
+    observer: Option<Box<dyn ConvergenceObserver>>,
+    ws: Workspace,
+    plan: Matrix,
+    colsum: Vec<f32>,
+}
+
+impl SolverSession {
+    /// Start building a session for `kind`.
+    pub fn builder(kind: SolverKind) -> SessionBuilder {
+        SessionBuilder {
+            kind,
+            threads: 1,
+            stop: StopRule::default(),
+            check_every: 8,
+            observer: None,
+        }
+    }
+
+    /// Which kernel this session runs.
+    pub fn kind(&self) -> SolverKind {
+        self.solver.kind()
+    }
+
+    /// The plan produced by the most recent [`SolverSession::solve`]
+    /// (borrow; use [`SolverSession::solve_cloned`] to own it).
+    pub fn plan(&self) -> &Matrix {
+        &self.plan
+    }
+
+    /// Consume the session, keeping the final plan.
+    pub fn into_plan(self) -> Matrix {
+        self.plan
+    }
+
+    /// Solve `problem` in the session's plan buffer.
+    ///
+    /// Allocation-free for a same-shape problem after the first solve
+    /// (serial path — see the contract on [`Workspace`]); a shape change
+    /// re-sizes the buffers. Returns [`Error::Canceled`] if the observer
+    /// cancels; cancellation takes effect at the next check boundary, i.e.
+    /// within `check_every` iterations.
+    pub fn solve(&mut self, problem: &Problem) -> Result<SolveReport> {
+        let timer = Timer::start();
+        let (m, n) = (problem.rows(), problem.cols());
+        if self.plan.rows() != m || self.plan.cols() != n {
+            self.plan = problem.plan.clone();
+            self.colsum = vec![0f32; n];
+            self.ws.ensure_shape(m, n);
+        } else {
+            self.plan
+                .as_mut_slice()
+                .copy_from_slice(problem.plan.as_slice());
+        }
+        self.plan.col_sums_into(&mut self.colsum);
+        let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
+
+        let mut iters = 0;
+        let (mut err, mut delta);
+        loop {
+            // Sum of per-iteration max element changes ≥ the cross-interval
+            // snapshot diff the old API computed (triangle inequality), so
+            // the delta_tol stop is conservative w.r.t. the old criterion.
+            let steps = self.check_every;
+            delta = 0.0;
+            for _ in 0..steps {
+                delta += self.solver.iterate_tracked(
+                    &mut self.plan,
+                    &mut self.colsum,
+                    rpd,
+                    cpd,
+                    fi,
+                    &mut self.ws,
+                );
+            }
+            iters += steps;
+            err = self.ws.marginal_error(&self.plan, rpd, cpd);
+            if let Some(observer) = self.observer.as_mut() {
+                if observer.on_check(CheckEvent { iters, err, delta }) == ObserverAction::Cancel {
+                    return Err(Error::Canceled { iters });
+                }
+            }
+            if self.stop.is_done(err, delta, iters) {
+                break;
+            }
+        }
+
+        let converged = err <= self.stop.tol || delta <= self.stop.delta_tol;
+        Ok(SolveReport {
+            iters,
+            err,
+            delta,
+            converged,
+            seconds: timer.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// [`SolverSession::solve`] plus a clone of the result plan (the clone
+    /// is the one permitted allocation — the hot loop stays allocation-free).
+    pub fn solve_cloned(&mut self, problem: &Problem) -> Result<(Matrix, SolveReport)> {
+        let report = self.solve(problem)?;
+        Ok((self.plan.clone(), report))
+    }
+
+    /// Solve a batch through one workspace. Same-shape problems (the
+    /// batcher's contract) reuse every buffer; a shape change re-sizes once
+    /// and subsequent problems of that shape are again allocation-free.
+    /// Per-item results, so one canceled/failed solve does not sink a batch.
+    pub fn solve_batch(&mut self, problems: &[Problem]) -> Vec<Result<(Matrix, SolveReport)>> {
+        problems.iter().map(|p| self.solve_cloned(p)).collect()
+    }
+}
+
+impl std::fmt::Debug for SolverSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolverSession")
+            .field("kind", &self.kind())
+            .field("threads", &self.ws.threads())
+            .field("shape", &self.ws.shape())
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::convergence::plan_delta;
+
+    /// The in-sweep tracked delta must equal the snapshot-based definition.
+    #[test]
+    fn tracked_delta_matches_snapshot_delta() {
+        for kind in SolverKind::ALL {
+            let p = Problem::random(14, 11, 0.7, 3);
+            let solver = solver_for(kind);
+            let mut ws = Workspace::new(14, 11, 1);
+            let mut plan = p.plan.clone();
+            let mut colsum = plan.col_sums();
+            for it in 0..6 {
+                let prev = plan.clone();
+                let d =
+                    solver.iterate_tracked(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, &mut ws);
+                let reference = plan_delta(&prev, &plan);
+                assert!(
+                    (d - reference).abs() <= 1e-4 * reference.max(1e-3),
+                    "{} iter {it}: tracked {d} vs snapshot {reference}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tracked_delta_matches_snapshot_delta_threaded() {
+        for kind in SolverKind::ALL {
+            let p = Problem::random(23, 9, 0.6, 8);
+            let solver = solver_for(kind);
+            let mut ws = Workspace::new(23, 9, 3);
+            let mut plan = p.plan.clone();
+            let mut colsum = plan.col_sums();
+            for it in 0..4 {
+                let prev = plan.clone();
+                let d =
+                    solver.iterate_tracked(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, &mut ws);
+                let reference = plan_delta(&prev, &plan);
+                assert!(
+                    (d - reference).abs() <= 1e-4 * reference.max(1e-3),
+                    "{} iter {it}: tracked {d} vs snapshot {reference}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    /// `iterate` and `iterate_tracked` advance the plan identically.
+    #[test]
+    fn tracked_iteration_is_bit_identical_to_untracked() {
+        for kind in SolverKind::ALL {
+            let p = Problem::random(12, 13, 0.8, 5);
+            let solver = solver_for(kind);
+            let mut ws_a = Workspace::new(12, 13, 1);
+            let mut ws_b = Workspace::new(12, 13, 1);
+            let mut a = p.plan.clone();
+            let mut cs_a = a.col_sums();
+            let mut b = p.plan.clone();
+            let mut cs_b = b.col_sums();
+            for _ in 0..5 {
+                solver.iterate(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_a);
+                let _ = solver.iterate_tracked(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_b);
+            }
+            assert_eq!(a.as_slice(), b.as_slice(), "{}", kind.name());
+            assert_eq!(cs_a, cs_b, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn session_solves_and_reports() {
+        let p = Problem::random(24, 18, 0.8, 42);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .build(&p);
+        let report = session.solve(&p).unwrap();
+        assert!(report.converged, "err={} delta={}", report.err, report.delta);
+        assert_eq!(session.plan().rows(), 24);
+        assert_eq!(session.plan().cols(), 18);
+    }
+
+    #[test]
+    fn session_adapts_to_shape_change() {
+        let small = Problem::random(8, 6, 0.7, 1);
+        let big = Problem::random(20, 30, 0.7, 2);
+        let mut session = SolverSession::builder(SolverKind::MapUot).build(&small);
+        session.solve(&small).unwrap();
+        let report = session.solve(&big).unwrap();
+        assert!(report.iters > 0);
+        assert_eq!(session.plan().rows(), 20);
+        assert_eq!(session.plan().cols(), 30);
+    }
+
+    #[test]
+    fn batch_matches_individual_solves() {
+        let problems: Vec<Problem> =
+            (0..4).map(|s| Problem::random(16, 16, 0.7, s)).collect();
+        let mut session = SolverSession::builder(SolverKind::MapUot).build(&problems[0]);
+        let batch = session.solve_batch(&problems);
+        assert_eq!(batch.len(), 4);
+        for (p, out) in problems.iter().zip(batch) {
+            let (plan, report) = out.unwrap();
+            let mut fresh = SolverSession::builder(SolverKind::MapUot).build(p);
+            let fresh_report = fresh.solve(p).unwrap();
+            assert_eq!(plan.as_slice(), fresh.plan().as_slice());
+            assert_eq!(report.iters, fresh_report.iters);
+        }
+    }
+
+    #[test]
+    fn observer_cancellation_is_typed() {
+        let p = Problem::random(16, 16, 0.7, 9);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .observer(|_: CheckEvent| ObserverAction::Cancel)
+            .build(&p);
+        match session.solve(&p) {
+            Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
+            other => panic!("expected Canceled, got {other:?}"),
+        }
+    }
+}

@@ -7,7 +7,7 @@
 //! M=N=1024; the surrounding work is only matrix setup and the final
 //! argmax decoding.
 
-use crate::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use crate::algo::{Problem, SolverKind, SolverSession, StopRule};
 use crate::apps::AppReport;
 use crate::util::{Matrix, Timer, XorShift};
 
@@ -60,15 +60,12 @@ pub fn run(cfg: Config) -> Output {
     let problem = Problem { plan, rpd: rpd.clone(), cpd: cpd.clone(), fi: 1.0 };
 
     let uot = Timer::start();
-    let (teaching, solve_report) = algo::solve(
-        cfg.solver,
-        &problem,
-        SolveOptions {
-            threads: cfg.threads,
-            stop: StopRule { tol: 1e-5, delta_tol: 1e-9, max_iter: cfg.max_iter },
-            check_every: 8,
-        },
-    );
+    let mut session = SolverSession::builder(cfg.solver)
+        .threads(cfg.threads)
+        .stop(StopRule { tol: 1e-5, delta_tol: 1e-9, max_iter: cfg.max_iter })
+        .build(&problem);
+    let solve_report = session.solve(&problem).expect("observer-free solve");
+    let teaching = session.into_plan();
     let uot_s = uot.elapsed().as_secs_f64();
 
     let marginal_err = crate::algo::convergence::marginal_error(&teaching, &rpd, &cpd);

@@ -7,7 +7,7 @@
 //! noise), matching the paper's use of photographs only as RGB histogram
 //! sources.
 
-use crate::algo::{self, Problem, SolveOptions, SolverKind};
+use crate::algo::{Problem, SolverKind, SolverSession, StopRule};
 use crate::apps::AppReport;
 use crate::util::{Timer, XorShift};
 
@@ -152,17 +152,14 @@ pub fn run(cfg: Config) -> Output {
     problem.fi = cfg.fi;
 
     let uot = Timer::start();
-    let (plan, solve_report) = algo::solve(
-        cfg.solver,
-        &problem,
-        SolveOptions {
-            threads: cfg.threads,
-            // Fixed iteration budget, like the paper's performance figures
-            // (no early exit — the budget IS the workload definition).
-            stop: crate::algo::StopRule { tol: 0.0, delta_tol: 0.0, max_iter: cfg.max_iter },
-            check_every: 8,
-        },
-    );
+    let mut session = SolverSession::builder(cfg.solver)
+        .threads(cfg.threads)
+        // Fixed iteration budget, like the paper's performance figures
+        // (no early exit — the budget IS the workload definition).
+        .stop(StopRule { tol: 0.0, delta_tol: 0.0, max_iter: cfg.max_iter })
+        .build(&problem);
+    let solve_report = session.solve(&problem).expect("observer-free solve");
+    let plan = session.into_plan();
     let uot_s = uot.elapsed().as_secs_f64();
 
     // Barycentric projection: palette_i -> sum_j plan_ij * y_j / rowsum_i.

@@ -5,7 +5,7 @@
 //! plan, and we score transfer accuracy — the paper's Fig. 2 uses this app
 //! to show UOT's share of end-to-end time growing with the matrix size.
 
-use crate::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use crate::algo::{Problem, SolverKind, SolverSession, StopRule};
 use crate::apps::AppReport;
 use crate::util::{Timer, XorShift};
 
@@ -87,15 +87,12 @@ pub fn run(cfg: Config) -> Output {
     let problem = Problem::from_point_clouds(&ds.source, &ds.target, cfg.eps, cfg.fi);
 
     let uot = Timer::start();
-    let (plan, solve_report) = algo::solve(
-        cfg.solver,
-        &problem,
-        SolveOptions {
-            threads: cfg.threads,
-            stop: StopRule { max_iter: cfg.max_iter, ..Default::default() },
-            check_every: 8,
-        },
-    );
+    let mut session = SolverSession::builder(cfg.solver)
+        .threads(cfg.threads)
+        .stop(StopRule { max_iter: cfg.max_iter, ..Default::default() })
+        .build(&problem);
+    let solve_report = session.solve(&problem).expect("observer-free solve");
+    let plan = session.into_plan();
     let uot_s = uot.elapsed().as_secs_f64();
 
     // Label transfer: target j takes the argmax over classes of the plan

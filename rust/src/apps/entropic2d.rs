@@ -6,7 +6,7 @@
 //! distributions. Unbalanced (fi < 1) because the images carry different
 //! total mass — the canonical UOT use case.
 
-use crate::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use crate::algo::{Problem, SolverKind, SolverSession, StopRule};
 use crate::apps::AppReport;
 use crate::util::{Matrix, Timer, XorShift};
 
@@ -82,15 +82,12 @@ pub fn run(cfg: Config) -> Output {
     let problem = Problem { plan: plan0, rpd: src.clone(), cpd: dst.clone(), fi: cfg.fi };
 
     let uot = Timer::start();
-    let (plan, solve_report) = algo::solve(
-        cfg.solver,
-        &problem,
-        SolveOptions {
-            threads: cfg.threads,
-            stop: StopRule { tol: 0.0, delta_tol: 1e-7, max_iter: cfg.max_iter },
-            check_every: 8,
-        },
-    );
+    let mut session = SolverSession::builder(cfg.solver)
+        .threads(cfg.threads)
+        .stop(StopRule { tol: 0.0, delta_tol: 1e-7, max_iter: cfg.max_iter })
+        .build(&problem);
+    let solve_report = session.solve(&problem).expect("observer-free solve");
+    let plan = session.into_plan();
     let uot_s = uot.elapsed().as_secs_f64();
 
     let mut mass = 0f64;

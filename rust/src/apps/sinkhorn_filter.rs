@@ -7,7 +7,7 @@
 //! fraction of points whose argmax match is within `k` of the ground-truth
 //! correspondence along the curve.
 
-use crate::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use crate::algo::{Problem, SolverKind, SolverSession, StopRule};
 use crate::apps::AppReport;
 use crate::util::{Timer, XorShift};
 
@@ -58,15 +58,12 @@ pub fn run(cfg: Config) -> Output {
     // Balanced Sinkhorn filter over the affinity kernel.
     let problem = Problem::from_point_clouds(&src, &dst, cfg.eps, 1.0);
     let uot = Timer::start();
-    let (plan, solve_report) = algo::solve(
-        cfg.solver,
-        &problem,
-        SolveOptions {
-            threads: cfg.threads,
-            stop: StopRule { tol: 1e-5, delta_tol: 1e-9, max_iter: cfg.max_iter },
-            check_every: 8,
-        },
-    );
+    let mut session = SolverSession::builder(cfg.solver)
+        .threads(cfg.threads)
+        .stop(StopRule { tol: 1e-5, delta_tol: 1e-9, max_iter: cfg.max_iter })
+        .build(&problem);
+    let solve_report = session.solve(&problem).expect("observer-free solve");
+    let plan = session.into_plan();
     let uot_s = uot.elapsed().as_secs_f64();
 
     // Score: argmax along each row vs. identity correspondence, modulo the

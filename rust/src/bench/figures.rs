@@ -44,14 +44,17 @@ pub fn cache_sizes() -> Vec<usize> {
 /// Median seconds per iteration of `kind` on an `m × n` problem.
 pub fn iter_seconds(kind: SolverKind, m: usize, n: usize, threads: usize) -> f64 {
     let p = algo::Problem::random(m, n, 0.7, 42);
+    let solver = algo::solver_for(kind);
+    let mut ws = algo::Workspace::new(m, n, threads);
     let mut plan = p.plan.clone();
     let mut colsum = plan.col_sums();
-    // Measure a small batch of iterations to amortize timer noise.
+    // Measure a small batch of iterations to amortize timer noise; the
+    // reused workspace keeps allocation out of the measured loop.
     let iters_per_rep = if m * n >= 4096 * 4096 { 2 } else { 4 };
     let policy = Policy { warmup: 1, reps: if fast_mode() { 3 } else { 5 } };
     let sec = measure(policy, || {
         for _ in 0..iters_per_rep {
-            algo::iterate_once(kind, &mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, threads);
+            solver.iterate(&mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, &mut ws);
         }
     });
     sec / iters_per_rep as f64

@@ -19,7 +19,7 @@ pub enum PjrtJob {
     Solve {
         problem: Problem,
         stop: StopRule,
-        reply: Sender<std::result::Result<(Matrix, SolveReport), String>>,
+        reply: Sender<Result<(Matrix, SolveReport)>>,
     },
     Shutdown,
 }
@@ -39,7 +39,6 @@ impl PjrtHandle {
             .map_err(|_| Error::Service("pjrt executor gone".into()))?;
         rx.recv()
             .map_err(|_| Error::Service("pjrt executor dropped reply".into()))?
-            .map_err(Error::Runtime)
     }
 
     pub fn shutdown(&self) {
@@ -80,7 +79,7 @@ fn run_loop(rt: &mut Runtime, rx: Receiver<PjrtJob>) {
         match job {
             PjrtJob::Shutdown => break,
             PjrtJob::Solve { problem, stop, reply } => {
-                let _ = reply.send(solve_on(rt, &problem, stop).map_err(|e| e.to_string()));
+                let _ = reply.send(solve_on(rt, &problem, stop));
             }
         }
     }

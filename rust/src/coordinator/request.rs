@@ -4,6 +4,7 @@ use std::sync::mpsc::Sender;
 
 use crate::algo::{Problem, SolveReport, SolverKind};
 use crate::config::Backend;
+use crate::error::Error;
 use crate::util::Matrix;
 
 /// Monotonic request id assigned at submission.
@@ -27,11 +28,12 @@ impl SolveRequest {
     }
 }
 
-/// The service's answer to one request.
+/// The service's answer to one request. Failures carry the crate's typed
+/// [`Error`] (e.g. `Error::Canceled`, `Error::Runtime`), not a string.
 #[derive(Debug)]
 pub struct SolveResponse {
     pub id: RequestId,
-    pub result: Result<Solved, String>,
+    pub result: Result<Solved, Error>,
 }
 
 /// Successful solve payload.

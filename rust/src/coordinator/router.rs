@@ -71,7 +71,7 @@ impl Padded {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::{iterate_once, SolverKind};
+    use crate::algo::{solver_for, SolverKind, Workspace};
     use crate::runtime::Manifest;
 
     const MANIFEST: &str = "\
@@ -95,18 +95,20 @@ c512 file=b kind=uot_chunk m=512 n=512 steps=8 block_m=64
         let p = Problem::random(10, 7, 0.6, 3);
         let mut padded = pad(&p, 16, 12);
 
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws_plain = Workspace::new(10, 7, 1);
+        let mut ws_padded = Workspace::new(16, 12, 1);
         let mut plain = p.plan.clone();
         let mut plain_cs = plain.col_sums();
         for _ in 0..4 {
-            iterate_once(SolverKind::MapUot, &mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, 1);
-            iterate_once(
-                SolverKind::MapUot,
+            solver.iterate(&mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, &mut ws_plain);
+            solver.iterate(
                 &mut padded.plan,
                 &mut padded.colsum,
                 &padded.rpd,
                 &padded.cpd,
                 padded.fi,
-                1,
+                &mut ws_padded,
             );
         }
         let unpadded = padded.unpad();

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::algo::{self, Problem, SolveOptions};
+use crate::algo::{Problem, SolverSession};
 use crate::config::{Backend, ServiceConfig};
 use crate::coordinator::batcher::{Batcher, FullPolicy};
 use crate::coordinator::metrics::Metrics;
@@ -83,7 +83,7 @@ impl Service {
         let resp = rx
             .recv()
             .map_err(|_| Error::Service("service dropped request".into()))?;
-        resp.result.map_err(Error::Service)
+        resp.result
     }
 
     pub fn metrics(&self) -> crate::coordinator::metrics::Snapshot {
@@ -117,10 +117,15 @@ fn worker_loop(
     cfg: &ServiceConfig,
     pjrt: Option<&PjrtHandle>,
 ) {
+    // One reusable session per worker: the service's steady state is a
+    // stream of same-shape problems (the batcher groups by shape), so after
+    // the first solve of each shape the native path allocates only the
+    // result plan it hands back.
+    let mut session: Option<SolverSession> = None;
     while let Some(batch) = batcher.pop_batch() {
         metrics.record_batch(batch.len());
         for req in batch {
-            let result = execute(cfg, pjrt, &req);
+            let result = execute(cfg, pjrt, &mut session, &req);
             match &result {
                 Ok(s) => {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -132,27 +137,30 @@ fn worker_loop(
                 }
             }
             // Receiver may have given up; dropping the response is fine.
-            let _ = req.reply.send(SolveResponse {
-                id: req.id,
-                result: result.map_err(|e| e.to_string()),
-            });
+            let _ = req.reply.send(SolveResponse { id: req.id, result });
         }
     }
 }
 
-fn execute(cfg: &ServiceConfig, pjrt: Option<&PjrtHandle>, req: &SolveRequest) -> Result<Solved> {
+fn execute(
+    cfg: &ServiceConfig,
+    pjrt: Option<&PjrtHandle>,
+    session: &mut Option<SolverSession>,
+    req: &SolveRequest,
+) -> Result<Solved> {
     let (plan, report, backend) = match pjrt {
         Some(handle) => {
             let (plan, report) = handle.solve(req.problem.clone(), cfg.stop)?;
             (plan, report, Backend::Pjrt)
         }
         None => {
-            let opts = SolveOptions {
-                threads: cfg.solver_threads,
-                stop: cfg.stop,
-                check_every: 8,
-            };
-            let (plan, report) = algo::solve(cfg.solver, &req.problem, opts);
+            let sess = session.get_or_insert_with(|| {
+                SolverSession::builder(cfg.solver)
+                    .threads(cfg.solver_threads)
+                    .stop(cfg.stop)
+                    .build(&req.problem)
+            });
+            let (plan, report) = sess.solve_cloned(&req.problem)?;
             (plan, report, Backend::Native)
         }
     };

@@ -29,6 +29,10 @@ pub enum Error {
     #[error("no convergence after {iters} iterations (err={err})")]
     NoConvergence { iters: usize, err: f32 },
 
+    /// A `ConvergenceObserver` canceled the solve at a check boundary.
+    #[error("solve canceled by observer after {iters} iterations")]
+    Canceled { iters: usize },
+
     #[error(transparent)]
     Io(#[from] std::io::Error),
 }

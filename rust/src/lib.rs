@@ -15,15 +15,37 @@
 //! * **L1 (build time)** — `python/compile/kernels/mapuot.py`: the fused
 //!   interweaved iteration as a Pallas kernel.
 //!
-//! Quickstart:
+//! Quickstart — build a [`SolverSession`] once, solve many times. The
+//! session owns every scratch buffer (see [`algo::Workspace`] for the
+//! allocation contract), tracks `plan_delta` inside the fused sweep
+//! instead of snapshotting the plan, and can report progress or cancel
+//! through a [`algo::ConvergenceObserver`]:
 //!
 //! ```no_run
-//! use map_uot::algo::{solve, Problem, SolverKind, SolveOptions};
+//! use map_uot::algo::{CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule};
 //!
 //! let problem = Problem::random(512, 512, 0.7, 42);
-//! let (plan, report) = solve(SolverKind::MapUot, &problem, SolveOptions::default());
+//! let mut session = SolverSession::builder(SolverKind::MapUot)
+//!     .threads(1)
+//!     .stop(StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 2000 })
+//!     .observer(|ev: CheckEvent| {
+//!         println!("iter {:4}  err={:.3e}  delta={:.3e}", ev.iters, ev.err, ev.delta);
+//!         ObserverAction::Continue
+//!     })
+//!     .build(&problem);
+//!
+//! let report = session.solve(&problem)?;
 //! println!("converged={} iters={} err={}", report.converged, report.iters, report.err);
-//! # let _ = plan;
+//! let _plan = session.plan(); // borrow the result, no clone
+//!
+//! // Steady state: same-shape re-solves reuse every buffer (zero heap
+//! // allocations after warmup), and batches share one workspace.
+//! let more: Vec<Problem> = (0..8).map(|s| Problem::random(512, 512, 0.7, s)).collect();
+//! for outcome in session.solve_batch(&more) {
+//!     let (plan, report) = outcome?;
+//!     # let _ = (plan, report);
+//! }
+//! # Ok::<(), map_uot::Error>(())
 //! ```
 
 pub mod algo;
@@ -37,5 +59,11 @@ pub mod sim;
 pub mod testing;
 pub mod util;
 
-pub use algo::{solve, Problem, SolveOptions, SolverKind};
+pub use algo::{
+    solver_for, CheckEvent, ConvergenceObserver, ObserverAction, Problem, SolveOptions,
+    Solver, SolverKind, SolverSession, Workspace,
+};
 pub use error::{Error, Result};
+
+#[allow(deprecated)]
+pub use algo::solve;

@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::algo::{CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule};
 use map_uot::apps;
 use map_uot::bench::figures;
 use map_uot::config::{Backend, ServiceConfig};
@@ -30,9 +30,18 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_else(|| "true".into());
-                flags.insert(key.to_string(), val);
-                i += 2;
+                // A following `--token` is the next flag, not this flag's
+                // value — bare switches like `--progress` read as "true".
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), "true".into());
+                        i += 1;
+                    }
+                }
             } else {
                 i += 1;
             }
@@ -79,6 +88,7 @@ fn print_help() {
          COMMANDS\n\
          \x20 solve  --m 1024 --n 1024 --fi 0.7 --solver mapuot|coffee|pot\n\
          \x20        --threads 1 --max-iter 1000 --tol 1e-4 --seed 42 --backend native|pjrt\n\
+         \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
          \x20 fig    2|3|4|5|8|9|10|11|12|13|14|15|16|17|all\n\
@@ -120,8 +130,24 @@ fn cmd_solve(a: &Args) -> i32 {
         });
     }
 
-    let opts = SolveOptions { threads: a.get("threads", 1usize), stop, check_every: 8 };
-    let (plan, report) = algo::solve(solver, &problem, opts);
+    let mut builder = SolverSession::builder(solver)
+        .threads(a.get("threads", 1usize))
+        .stop(stop);
+    if a.get("progress", false) {
+        builder = builder.observer(|ev: CheckEvent| {
+            eprintln!("  iter {:5}  err={:.3e}  delta={:.3e}", ev.iters, ev.err, ev.delta);
+            ObserverAction::Continue
+        });
+    }
+    let mut session = builder.build(&problem);
+    let report = match session.solve(&problem) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let plan = session.into_plan();
     println!(
         "{} solve {m}x{n} fi={fi}: iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
         solver.name(),

@@ -71,7 +71,7 @@ fn allreduces_per_iter(kind: SolverKind) -> usize {
 pub fn iter_time_s(cfg: &ClusterConfig, kind: SolverKind, m: usize, n: usize, p: usize) -> f64 {
     let p = p.max(1);
     let rows = (m as f64 / p as f64).ceil();
-    let traffic_elems = kind.sweeps_per_iter() as f64 * rows * n as f64;
+    let traffic_elems = kind.accesses_per_element() as f64 * rows * n as f64;
     let compute = traffic_elems / cfg.per_proc_rate(p);
     let comm = allreduces_per_iter(kind) as f64 * cfg.allreduce_s(n, p);
     compute + comm + cfg.py_overhead_us * 1e-6

@@ -57,7 +57,7 @@ fn clipped_rates(cpu: &HybridCpu) -> (f64, f64) {
 }
 
 /// Predicted seconds for one iteration of `kind` over `m × n` under a
-/// schedule. Work per row is `sweeps · n` element accesses.
+/// schedule. Work per row is `accesses_per_element · n` element accesses.
 pub fn iter_time_s(
     cpu: &HybridCpu,
     kind: SolverKind,
@@ -66,7 +66,7 @@ pub fn iter_time_s(
     schedule: Schedule,
 ) -> f64 {
     let (p, e) = clipped_rates(cpu);
-    let row_work = kind.sweeps_per_iter() as f64 * n as f64; // accesses/row
+    let row_work = kind.accesses_per_element() as f64 * n as f64; // accesses/row
     let total_rows = m as f64;
     match schedule {
         Schedule::Uniform => {

@@ -31,7 +31,7 @@ pub fn single_thread_bw_gbs(kind: SolverKind) -> f64 {
 /// Projected time of one iteration (arbitrary units: bytes / GB/s) with
 /// `threads` threads on `machine`.
 pub fn iter_time_units(machine: &Machine, kind: SolverKind, m: usize, n: usize, threads: usize) -> f64 {
-    let bytes = kind.sweeps_per_iter() as f64 * m as f64 * n as f64 * 4.0;
+    let bytes = kind.accesses_per_element() as f64 * m as f64 * n as f64 * 4.0;
     let bw = (threads as f64 * single_thread_bw_gbs(kind)).min(machine.peak_bw_gbs);
     // Mild parallel-efficiency tail for thread launch/join + reduction
     // (Algorithm 1 lines 16-20): 1.5% per extra thread.

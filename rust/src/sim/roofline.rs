@@ -35,9 +35,10 @@ pub fn work_ops(m: usize, n: usize) -> f64 {
     6.0 * (m as f64) * (n as f64) + 6.0 * (m as f64 + n as f64)
 }
 
-/// Memory traffic `Q` in bytes for one iteration of `kind` (FP32).
+/// Memory traffic `Q` in bytes for one iteration of `kind` (FP32):
+/// element accesses per element (POT 6, COFFEE 4, MAP-UOT 2) × M·N × 4 B.
 pub fn traffic_bytes(kind: SolverKind, m: usize, n: usize) -> f64 {
-    (kind.sweeps_per_iter() as f64) * (m as f64) * (n as f64) * 4.0
+    (kind.accesses_per_element() as f64) * (m as f64) * (n as f64) * 4.0
 }
 
 /// Operational intensity `I = W / Q` of one iteration of `kind`.

@@ -144,14 +144,22 @@ impl Matrix {
         &mut self.buf
     }
 
-    /// Column sums (one row-major sweep).
-    pub fn col_sums(&self) -> Vec<f32> {
-        let mut out = vec![0f32; self.n];
+    /// Column sums into a caller-provided buffer (one row-major sweep,
+    /// no allocation — the solver-session warmup contract relies on this).
+    pub fn col_sums_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n, "col_sums_into length mismatch");
+        out.fill(0.0);
         for i in 0..self.m {
             for (acc, &v) in out.iter_mut().zip(self.row(i)) {
                 *acc += v;
             }
         }
+    }
+
+    /// Column sums (one row-major sweep).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        self.col_sums_into(&mut out);
         out
     }
 

@@ -1,0 +1,80 @@
+//! Counting-allocator proof of the session allocation contract: after the
+//! first (warmup) solve, `SolverSession::solve` on same-shape problems must
+//! perform **zero heap allocations** on the serial path — no `plan.clone()`
+//! for delta tracking, no per-iteration scratch, no per-check buffers.
+//!
+//! This file holds exactly one test so no concurrent test in the same
+//! binary can pollute the global allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
+
+struct CountingAllocator;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+#[test]
+fn hot_loop_allocates_nothing_after_warmup() {
+    // Problems are constructed (and allocate) before counting starts.
+    let problems: Vec<Problem> = (0..3).map(|s| Problem::random(48, 40, 0.7, s)).collect();
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 200 };
+
+    for kind in SolverKind::ALL {
+        let mut session = SolverSession::builder(kind)
+            .threads(1)
+            .stop(stop)
+            .check_every(8)
+            .build(&problems[0]);
+        // Warmup: first solve may allocate (it sizes nothing extra today,
+        // but the contract only starts after it).
+        session.solve(&problems[0]).expect("warmup solve");
+
+        ALLOCATIONS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        for p in &problems {
+            session.solve(p).expect("steady-state solve");
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+
+        let count = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            count,
+            0,
+            "{}: {count} heap allocations in the post-warmup hot loop",
+            kind.name()
+        );
+    }
+}

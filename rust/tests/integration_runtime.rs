@@ -4,7 +4,7 @@
 //!
 //! Requires `make artifacts` (skips with a notice otherwise).
 
-use map_uot::algo::{self, Problem, SolverKind};
+use map_uot::algo::{self, solver_for, Problem, SolverKind, Workspace};
 use map_uot::runtime::{ArtifactKind, Runtime};
 use map_uot::util::Matrix;
 
@@ -33,10 +33,12 @@ fn chunk_matches_native_mapuot() {
     assert_eq!(out.steps, meta.steps);
 
     // Native reference: the same number of fused iterations.
+    let solver = solver_for(SolverKind::MapUot);
+    let mut ws = Workspace::new(256, 256, 1);
     let mut native = p.plan.clone();
     let mut native_cs = native.col_sums();
     for _ in 0..meta.steps {
-        algo::iterate_once(SolverKind::MapUot, &mut native, &mut native_cs, &p.rpd, &p.cpd, p.fi, 1);
+        solver.iterate(&mut native, &mut native_cs, &p.rpd, &p.cpd, p.fi, &mut ws);
     }
     let diff = plan.max_rel_diff(&native, 1e-5);
     assert!(diff < 5e-3, "PJRT vs native diff = {diff}");

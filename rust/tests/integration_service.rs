@@ -2,9 +2,16 @@
 //!
 //! Requires `make artifacts` (skips with a notice otherwise).
 
-use map_uot::algo::{self, Problem, SolveOptions, SolverKind, StopRule};
+use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
 use map_uot::config::{Backend, ServiceConfig};
 use map_uot::coordinator::Service;
+
+/// Native one-shot reference solve through the session API.
+fn native_solve(p: &Problem, stop: StopRule) -> map_uot::util::Matrix {
+    let mut session = SolverSession::builder(SolverKind::MapUot).stop(stop).build(p);
+    session.solve(p).expect("native reference solve");
+    session.into_plan()
+}
 
 fn artifacts_ready() -> bool {
     let ok = std::path::Path::new("artifacts/manifest.txt").exists();
@@ -35,11 +42,7 @@ fn pjrt_service_solves_exact_bucket() {
     assert!(solved.report.converged, "err={}", solved.report.err);
 
     // Same answer as the native solver.
-    let (native, _) = algo::solve(
-        SolverKind::MapUot,
-        &p,
-        SolveOptions { stop: pjrt_cfg().stop, ..SolveOptions::default() },
-    );
+    let native = native_solve(&p, pjrt_cfg().stop);
     let diff = solved.plan.max_rel_diff(&native, 1e-5);
     assert!(diff < 2e-2, "pjrt vs native diff={diff}");
     svc.shutdown();
@@ -56,11 +59,7 @@ fn pjrt_service_pads_odd_shapes() {
     let solved = svc.solve_blocking(p.clone()).unwrap();
     assert_eq!(solved.plan.rows(), 200);
     assert_eq!(solved.plan.cols(), 180);
-    let (native, _) = algo::solve(
-        SolverKind::MapUot,
-        &p,
-        SolveOptions { stop: pjrt_cfg().stop, ..SolveOptions::default() },
-    );
+    let native = native_solve(&p, pjrt_cfg().stop);
     let diff = solved.plan.max_rel_diff(&native, 1e-5);
     assert!(diff < 2e-2, "padded pjrt vs native diff={diff}");
     svc.shutdown();

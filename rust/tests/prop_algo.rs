@@ -1,6 +1,6 @@
 //! Property-based tests on solver invariants, via the in-repo harness.
 
-use map_uot::algo::{self, convergence, iterate_once, Problem, SolverKind};
+use map_uot::algo::{convergence, solver_for, Problem, SolverKind, SolverSession, StopRule, Workspace};
 use map_uot::testing::check;
 use map_uot::util::XorShift;
 
@@ -18,10 +18,12 @@ fn prop_solver_equivalence() {
     check(41, gen_problem, |(p, iters)| {
         let mut plans = Vec::new();
         for kind in SolverKind::ALL {
+            let solver = solver_for(kind);
+            let mut ws = Workspace::new(p.rows(), p.cols(), 1);
             let mut plan = p.plan.clone();
             let mut cs = plan.col_sums();
             for _ in 0..*iters {
-                iterate_once(kind, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+                solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
             }
             plans.push(plan);
         }
@@ -38,10 +40,12 @@ fn prop_solver_equivalence() {
 #[test]
 fn prop_positivity_preserved() {
     check(43, gen_problem, |(p, iters)| {
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws = Workspace::new(p.rows(), p.cols(), 1);
         let mut plan = p.plan.clone();
         let mut cs = plan.col_sums();
         for _ in 0..*iters {
-            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+            solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
         }
         if plan.as_slice().iter().any(|v| !v.is_finite() || *v < 0.0) {
             return Err("negative or non-finite mass".into());
@@ -54,10 +58,12 @@ fn prop_positivity_preserved() {
 #[test]
 fn prop_carried_colsum_consistent() {
     check(47, gen_problem, |(p, iters)| {
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws = Workspace::new(p.rows(), p.cols(), 1);
         let mut plan = p.plan.clone();
         let mut cs = plan.col_sums();
         for _ in 0..*iters {
-            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
+            solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
         }
         for (carried, fresh) in cs.iter().zip(plan.col_sums()) {
             if (carried - fresh).abs() > 1e-3 * fresh.abs().max(1e-3) {
@@ -73,10 +79,12 @@ fn prop_carried_colsum_consistent() {
 #[test]
 fn prop_balanced_row_feasibility() {
     check(53, gen_problem, |(p, iters)| {
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws = Workspace::new(p.rows(), p.cols(), 1);
         let mut plan = p.plan.clone();
         let mut cs = plan.col_sums();
         for _ in 0..*iters {
-            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, 1);
+            solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, &mut ws);
         }
         for (rs, &t) in plan.row_sums().iter().zip(&p.rpd) {
             if (rs - t).abs() > 1e-3 * t {
@@ -93,6 +101,8 @@ fn prop_balanced_row_feasibility() {
 #[test]
 fn prop_scale_perturbation_contracts() {
     check(59, gen_problem, |(p, iters)| {
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws = Workspace::new(p.rows(), p.cols(), 1);
         let mut plan = p.plan.clone();
         let mut cs = plan.col_sums();
         let mut scaled = map_uot::util::Matrix::from_fn(p.rows(), p.cols(), |i, j| {
@@ -100,8 +110,8 @@ fn prop_scale_perturbation_contracts() {
         });
         let mut cs2 = scaled.col_sums();
         for _ in 0..*iters {
-            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, 1);
-            iterate_once(SolverKind::MapUot, &mut scaled, &mut cs2, &p.rpd, &p.cpd, p.fi, 1);
+            solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
+            solver.iterate(&mut scaled, &mut cs2, &p.rpd, &p.cpd, p.fi, &mut ws);
         }
         let diff = scaled.max_rel_diff(&plan, 1e-6);
         if p.fi > 0.999 && diff > 1e-3 {
@@ -129,11 +139,13 @@ fn prop_error_monotone_balanced() {
         }
         p
     }, |p| {
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws = Workspace::new(p.rows(), p.cols(), 1);
         let mut plan = p.plan.clone();
         let mut cs = plan.col_sums();
         let mut prev = f32::INFINITY;
         for it in 0..12 {
-            iterate_once(SolverKind::MapUot, &mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, 1);
+            solver.iterate(&mut plan, &mut cs, &p.rpd, &p.cpd, 1.0, &mut ws);
             let err = convergence::marginal_error(&plan, &p.rpd, &p.cpd);
             if err > prev * 1.001 + 1e-5 {
                 return Err(format!("error rose at iter {it}: {prev} -> {err}"));
@@ -144,19 +156,22 @@ fn prop_error_monotone_balanced() {
     });
 }
 
-/// solve() respects its iteration budget and reports consistently.
+/// A session solve respects its iteration budget and reports consistently.
 #[test]
 fn prop_solve_report_consistent() {
     check(67, gen_problem, |(p, _)| {
-        let opts = algo::SolveOptions {
-            stop: algo::StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 64 },
-            ..Default::default()
-        };
-        let (plan, report) = algo::solve(SolverKind::MapUot, p, opts);
-        if report.iters > 64 + opts.check_every {
+        let check_every = 8;
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .stop(StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 64 })
+            .check_every(check_every)
+            .build(p);
+        let report = session
+            .solve(p)
+            .map_err(|e| format!("unexpected solve error: {e}"))?;
+        if report.iters > 64 + check_every {
             return Err(format!("budget exceeded: {}", report.iters));
         }
-        let err = convergence::marginal_error(&plan, &p.rpd, &p.cpd);
+        let err = convergence::marginal_error(session.plan(), &p.rpd, &p.cpd);
         if (err - report.err).abs() > 1e-3 * err.abs().max(1.0) {
             return Err(format!("reported err {} vs actual {err}", report.err));
         }

@@ -7,7 +7,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
-use map_uot::algo::{iterate_once, Problem, SolverKind};
+use map_uot::algo::{solver_for, Problem, SolverKind, Workspace};
 use map_uot::coordinator::batcher::{Batcher, FullPolicy};
 use map_uot::coordinator::request::SolveRequest;
 use map_uot::coordinator::router;
@@ -127,18 +127,20 @@ fn prop_padding_preserves_semantics() {
     }, |&(m, n, bm, bn, iters, seed)| {
         let p = Problem::random(m, n, 0.7, seed);
         let mut padded = router::pad(&p, bm, bn);
+        let solver = solver_for(SolverKind::MapUot);
+        let mut ws_plain = Workspace::new(m, n, 1);
+        let mut ws_padded = Workspace::new(bm, bn, 1);
         let mut plain = p.plan.clone();
         let mut plain_cs = plain.col_sums();
         for _ in 0..iters {
-            iterate_once(SolverKind::MapUot, &mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, 1);
-            iterate_once(
-                SolverKind::MapUot,
+            solver.iterate(&mut plain, &mut plain_cs, &p.rpd, &p.cpd, p.fi, &mut ws_plain);
+            solver.iterate(
                 &mut padded.plan,
                 &mut padded.colsum,
                 &padded.rpd,
                 &padded.cpd,
                 padded.fi,
-                1,
+                &mut ws_padded,
             );
         }
         let diff = padded.unpad().max_rel_diff(&plain, 1e-6);

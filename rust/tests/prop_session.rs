@@ -1,0 +1,174 @@
+//! Property-based tests of the workspace-centric session API: workspace
+//! reuse must be invisible (bit-identical to fresh one-shot solves), the
+//! observer must fire on every check boundary, and cancellation must take
+//! effect within one check interval.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use map_uot::algo::{
+    CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule,
+};
+use map_uot::error::Error;
+use map_uot::testing::check;
+use map_uot::util::XorShift;
+
+const STOP: StopRule = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 256 };
+
+/// N consecutive solves through one reused session (same shape, different
+/// problems) bit-match fresh one-shot sessions, for every solver kind.
+#[test]
+fn prop_workspace_reuse_bit_matches_fresh_solves() {
+    check(71, |rng: &mut XorShift| {
+        let m = 2 + rng.below(14);
+        let n = 2 + rng.below(14);
+        let fi = rng.uniform(0.2, 1.0);
+        let n_solves = 2 + rng.below(4);
+        let seeds: Vec<u64> = (0..n_solves).map(|_| rng.next_u64()).collect();
+        (m, n, fi, seeds)
+    }, |(m, n, fi, seeds)| {
+        for kind in SolverKind::ALL {
+            let problems: Vec<Problem> = seeds
+                .iter()
+                .map(|&s| Problem::random(*m, *n, *fi, s))
+                .collect();
+            let mut reused = SolverSession::builder(kind)
+                .stop(STOP)
+                .check_every(4)
+                .build(&problems[0]);
+            for (i, p) in problems.iter().enumerate() {
+                let report = reused
+                    .solve(p)
+                    .map_err(|e| format!("reused solve failed: {e}"))?;
+                let mut fresh = SolverSession::builder(kind)
+                    .stop(STOP)
+                    .check_every(4)
+                    .build(p);
+                let fresh_report = fresh
+                    .solve(p)
+                    .map_err(|e| format!("fresh solve failed: {e}"))?;
+                if reused.plan().as_slice() != fresh.plan().as_slice() {
+                    return Err(format!(
+                        "{} solve {i}: reused workspace diverged from fresh solve",
+                        kind.name()
+                    ));
+                }
+                if report.iters != fresh_report.iters
+                    || report.err != fresh_report.err
+                    || report.delta != fresh_report.delta
+                {
+                    return Err(format!(
+                        "{} solve {i}: reports differ ({} vs {} iters)",
+                        kind.name(),
+                        report.iters,
+                        fresh_report.iters
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Threaded sessions reuse per-thread accumulators; results must still
+/// bit-match a fresh threaded session.
+#[test]
+fn threaded_workspace_reuse_bit_matches_fresh() {
+    let problems: Vec<Problem> = (0..3).map(|s| Problem::random(21, 13, 0.7, s)).collect();
+    let mut reused = SolverSession::builder(SolverKind::MapUot)
+        .threads(3)
+        .stop(STOP)
+        .build(&problems[0]);
+    for p in &problems {
+        reused.solve(p).unwrap();
+        let mut fresh = SolverSession::builder(SolverKind::MapUot)
+            .threads(3)
+            .stop(STOP)
+            .build(p);
+        fresh.solve(p).unwrap();
+        assert_eq!(reused.plan().as_slice(), fresh.plan().as_slice());
+    }
+}
+
+/// The observer fires exactly once per check boundary: iters/check_every
+/// times, with iters strictly increasing by check_every.
+#[test]
+fn observer_fires_on_every_check_boundary() {
+    let p = Problem::random(24, 24, 0.7, 5);
+    let check_every = 4;
+    let calls = Arc::new(AtomicUsize::new(0));
+    let last_iters = Arc::new(AtomicUsize::new(0));
+    let calls_obs = Arc::clone(&calls);
+    let last_obs = Arc::clone(&last_iters);
+    let mut session = SolverSession::builder(SolverKind::MapUot)
+        .stop(STOP)
+        .check_every(check_every)
+        .observer(move |ev: CheckEvent| {
+            calls_obs.fetch_add(1, Ordering::Relaxed);
+            let prev = last_obs.swap(ev.iters, Ordering::Relaxed);
+            assert_eq!(ev.iters, prev + check_every, "non-contiguous check boundary");
+            assert!(ev.err.is_finite() && ev.delta.is_finite());
+            ObserverAction::Continue
+        })
+        .build(&p);
+    let report = session.solve(&p).unwrap();
+    assert_eq!(
+        calls.load(Ordering::Relaxed),
+        report.iters / check_every,
+        "observer calls != check boundaries (iters={})",
+        report.iters
+    );
+    assert_eq!(last_iters.load(Ordering::Relaxed), report.iters);
+}
+
+/// Cancellation stops the solve within `check_every` iterations of the
+/// boundary that requested it, and surfaces as the typed error.
+#[test]
+fn cancellation_stops_within_check_every() {
+    let p = Problem::random(32, 32, 0.6, 7);
+    for cancel_at_call in [1usize, 3] {
+        let check_every = 8;
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_obs = Arc::clone(&calls);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .stop(StopRule { tol: 0.0, delta_tol: 0.0, max_iter: 10_000 })
+            .check_every(check_every)
+            .observer(move |_: CheckEvent| {
+                if calls_obs.fetch_add(1, Ordering::Relaxed) + 1 == cancel_at_call {
+                    ObserverAction::Cancel
+                } else {
+                    ObserverAction::Continue
+                }
+            })
+            .build(&p);
+        match session.solve(&p) {
+            Err(Error::Canceled { iters }) => {
+                assert_eq!(iters, cancel_at_call * check_every);
+            }
+            other => panic!("expected Canceled, got {other:?}"),
+        }
+        // A canceled session stays usable: the observer's one-shot cancel
+        // has fired, so the next solve runs until the budget — or until the
+        // f32 iterate hits an exact fixed point (tracked delta == 0.0).
+        let report = session.solve(&p).expect("session reusable after cancel");
+        assert!(report.iters >= check_every, "iters={}", report.iters);
+    }
+}
+
+/// Batch solving through one session matches per-problem fresh sessions.
+#[test]
+fn solve_batch_matches_fresh_sessions() {
+    let problems: Vec<Problem> = (0..5).map(|s| Problem::random(18, 12, 0.8, 100 + s)).collect();
+    let mut session = SolverSession::builder(SolverKind::Coffee)
+        .stop(STOP)
+        .build(&problems[0]);
+    let outcomes = session.solve_batch(&problems);
+    assert_eq!(outcomes.len(), problems.len());
+    for (p, outcome) in problems.iter().zip(outcomes) {
+        let (plan, report) = outcome.unwrap();
+        let mut fresh = SolverSession::builder(SolverKind::Coffee).stop(STOP).build(p);
+        let fresh_report = fresh.solve(p).unwrap();
+        assert_eq!(plan.as_slice(), fresh.plan().as_slice());
+        assert_eq!(report.iters, fresh_report.iters);
+    }
+}
