@@ -3,12 +3,25 @@
 //! Builds one `SolverSession` per solver kind, solves the same problem
 //! with each (watching convergence through an observer), verifies all
 //! three agree, then shows the steady-state pattern: one reused session
-//! solving a batch with zero heap allocations after warmup.
+//! solving a batch with zero heap allocations after warmup — serial and
+//! threaded.
+//!
+//! Threading model in one paragraph: `.threads(t)` gives the session a
+//! persistent worker pool (`algo::pool::ThreadPool`). Its `t - 1` workers
+//! spawn once at `build` time, park between iterations, and wake on an
+//! epoch barrier (atomic generation counter + park/unpark), so a threaded
+//! iteration costs zero thread spawns and zero heap allocations — the
+//! pool lives exactly as long as the session (or as long as any session
+//! sharing its `Arc` via `SessionBuilder::pool`, the pattern
+//! `solve_batch` and the coordinator workers use: one pool per OS worker
+//! thread, reused for every request). `.affinity(AffinityHint::Pinned)`
+//! pins workers to cores; `.backend(ParallelBackend::SpawnPerIter)` keeps
+//! the legacy scope-per-iteration dispatch for comparison benches.
 //!
 //!     cargo run --release --example quickstart
 
 use map_uot::algo::{
-    CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule,
+    AffinityHint, CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule,
 };
 
 fn main() {
@@ -69,5 +82,25 @@ fn main() {
     for (i, outcome) in session.solve_batch(&batch).into_iter().enumerate() {
         let (_plan, report) = outcome.expect("batch solve");
         println!("  problem {i}: iters={:4}  err={:.3e}", report.iters, report.err);
+    }
+
+    // Threaded steady state: same contract, persistent pool. The workers
+    // spawn once here (at build) and every solve in the batch reuses them
+    // — no spawn/join per iteration, no allocations after warmup.
+    let threads = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(2).min(4);
+    let mut pooled = SolverSession::builder(SolverKind::MapUot)
+        .threads(threads)
+        .affinity(AffinityHint::Pinned)
+        .stop(stop)
+        .build(&batch[0]);
+    println!("\nsame batch on a persistent {threads}-thread pinned pool:");
+    for (i, outcome) in pooled.solve_batch(&batch).into_iter().enumerate() {
+        let (_plan, report) = outcome.expect("pooled batch solve");
+        println!(
+            "  problem {i}: iters={:4}  err={:.3e}  {:6.1} ms",
+            report.iters,
+            report.err,
+            report.seconds * 1e3
+        );
     }
 }

@@ -1,7 +1,17 @@
-//! `cargo bench` harness regenerating paper Figure 12.
+//! `cargo bench` harness regenerating paper Figure 12, plus the measured
+//! Fig. 12b companion: spawn-per-iteration vs persistent-pool backends ×
+//! thread counts, and the accumulator ablation (padded arena vs packed
+//! arena vs `Vec<Vec<f32>>`). Emits `BENCH_pool.json` (iters/sec per
+//! backend × thread count) for the perf trajectory.
 //! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
 //! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
 
 fn main() {
+    // The bench harness (unlike the side-effect-free CLI) emits the
+    // machine-readable series by default.
+    if std::env::var("MAP_UOT_BENCH_JSON").is_err() {
+        std::env::set_var("MAP_UOT_BENCH_JSON", "BENCH_pool.json");
+    }
     map_uot::bench::figures::fig12().print();
+    map_uot::bench::figures::fig12_pool().print();
 }

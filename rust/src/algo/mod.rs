@@ -23,8 +23,13 @@
 //! The public solving surface is the workspace-centric [`session`] API:
 //! [`SolverSession`] for reusable, observer-instrumented, allocation-free
 //! solves, and the [`Solver`] trait + [`Workspace`] for direct iteration
-//! control (benches, golden tests). The free functions [`solve`] and
-//! [`iterate_once`] remain as deprecated one-release shims.
+//! control (benches, golden tests). Threaded iterations run on the
+//! persistent worker-pool engine ([`pool::ThreadPool`], the default
+//! [`ParallelBackend::Pool`]) — workers spawned once, parked between
+//! epoch-barrier dispatches — with the legacy scope-per-iteration path
+//! kept as [`ParallelBackend::SpawnPerIter`] for benchmarking. The free
+//! functions [`solve`] and [`iterate_once`] remain as deprecated
+//! one-release shims.
 
 pub mod balancing;
 pub mod coffee;
@@ -33,6 +38,7 @@ pub mod fp64;
 pub mod lazy;
 pub mod mapuot;
 pub mod parallel;
+pub mod pool;
 pub mod pot;
 pub mod problem;
 pub mod scaling;
@@ -40,6 +46,7 @@ pub mod session;
 pub mod sparse;
 
 pub use convergence::StopRule;
+pub use pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 pub use problem::Problem;
 pub use session::{
     solver_for, CheckEvent, CoffeeSolver, ConvergenceObserver, MapUotSolver, ObserverAction,

@@ -1,25 +1,38 @@
-//! Threaded variants of the three solvers (paper §4.1.2).
+//! Threaded variants of the three solvers (paper §4.1.2), on two backends.
 //!
 //! The matrix is split into contiguous row blocks, one per thread — "which
 //! makes the most sense since all computations are done in row order"
 //! (§4.1.2). Each MAP-UOT thread runs the same fused double-loop over its
-//! block with a *private* `NextSum_col` (Algorithm 1 lines 5–15); the main
-//! thread reduces the per-thread sums (lines 16–20). Private, separately
-//! allocated accumulators + 64-byte-aligned row blocks are what make the
-//! false-sharing figure (Fig. 12) flat.
+//! block with a *private* `NextSum_col` (Algorithm 1 lines 5–15), and the
+//! per-thread partials are reduced into the carried column sums (lines
+//! 16–20). Blocks are balanced ([`Partition`]): every thread gets
+//! `floor(m/t)` or `ceil(m/t)` rows, never a near-empty straggler.
 //!
-//! std::thread::scope plays the role of Pthreads create/join. POT's four
-//! sweeps and COFFEE's two phases need a barrier between sweeps, realized
-//! as one scope per sweep group — this extra synchronization is part of
-//! what Fig. 10 measures.
+//! Two execution engines drive the same block kernels
+//! ([`crate::algo::pool::ParallelBackend`]):
 //!
-//! Every solver comes in three forms: `*_iterate_into` (caller-provided
-//! scratch — the allocation-free workspace path), `*_iterate_tracked`
-//! (additionally returns the iteration's max element change, folded into
-//! the sweep), and the legacy `*_iterate` wrappers that allocate their own
-//! scratch per call. The per-thread `NextSum_col` blocks arrive as
-//! `acc: &mut [Vec<f32>]` — still separately allocated vectors, so no two
-//! threads ever share a cache line of accumulator state.
+//! * **Pool** (default) — a persistent [`ThreadPool`]: workers are created
+//!   once, parked between dispatches, and synchronized by an epoch
+//!   barrier. POT's four sweeps and COFFEE's two phases become one epoch
+//!   wait each instead of a scope teardown, and the whole iteration is
+//!   spawn-free and allocation-free. The `NextSum_col` partials live in a
+//!   cache-line-padded [`AccArena`] and the final reduction
+//!   (`reduce_acc_pool`) is column-parallel on the same pool.
+//! * **SpawnPerIter** (legacy) — `std::thread::scope` create/join per
+//!   sweep group, kept so the `fig12` bench can measure the dispatch
+//!   overhead head-to-head.
+//!
+//! Both backends share [`Partition`], the block kernels, and the
+//! block-ascending reduction order, so for identical inputs they produce
+//! **bit-identical** plans, column sums and tracked deltas (property-tested
+//! in `rust/tests/prop_pool.rs`). The column-parallel reduction keeps each
+//! column's partial sums in ascending block order — a pairwise tree would
+//! round differently and break that contract.
+//!
+//! Every solver comes as `*_iterate_into` / `*_iterate_tracked` (scope
+//! backend, caller-provided scratch), `*_iterate_pool` /
+//! `*_iterate_pool_tracked` (pool backend), and the legacy `*_iterate`
+//! wrappers that allocate their own scratch per call.
 
 // The workspace variants take each scratch buffer explicitly — that is the
 // point of the allocation-free contract, not an accident of design.
@@ -30,6 +43,7 @@ use std::thread;
 use crate::algo::mapuot::{
     fused_rows, fused_rows_tracked, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
 };
+use crate::algo::pool::{AccArena, PaddedSlots, Partition, SliceRef, ThreadPool};
 use crate::algo::scaling::{factor, factors_into, recip_into};
 use crate::util::Matrix;
 
@@ -38,35 +52,57 @@ pub fn effective_threads(requested: usize, rows: usize) -> usize {
     requested.max(1).min(rows.max(1))
 }
 
-/// Row-block partition for `m` rows over `threads` workers capped by the
-/// number of per-thread accumulators: `(rows_per_block, blocks_used)`.
-fn partition(m: usize, threads: usize, acc_len: usize) -> (usize, usize) {
-    let t = effective_threads(threads, m).min(acc_len.max(1));
-    let rows_per = m.div_ceil(t);
-    (rows_per, m.div_ceil(rows_per))
-}
+/// Columns below which the post-sweep reduction stays on the dispatching
+/// thread: one epoch of pool dispatch costs more than summing a few
+/// hundred floats per accumulator.
+const PAR_REDUCE_MIN_COLS: usize = 1024;
 
-/// Reduce the first `used` per-thread accumulators into `colsum`
-/// (Algorithm 1 lines 16–20, main thread).
-fn reduce_acc(colsum: &mut [f32], acc: &[Vec<f32>], used: usize) {
+/// Reduce the first `used` accumulators into `colsum` (Algorithm 1 lines
+/// 16–20) on the calling thread, in ascending block order.
+fn reduce_acc(colsum: &mut [f32], acc: &AccArena, used: usize) {
     colsum.fill(0.0);
-    for local in &acc[..used] {
-        for (s, &v) in colsum.iter_mut().zip(local.iter()) {
+    for b in 0..used {
+        for (s, &v) in colsum.iter_mut().zip(acc.row(b)) {
             *s += v;
         }
     }
 }
 
-/// Parallel column sums of `plan` into `out`, using `acc` for the
-/// per-thread partials.
-fn par_col_sums_into(plan: &Matrix, rows_per: usize, out: &mut [f32], acc: &mut [Vec<f32>]) {
+/// Column-parallel reduction on the pool: part `k` owns a contiguous
+/// column segment and sums it across accumulators in ascending block
+/// order — bit-identical to [`reduce_acc`], just split by column.
+fn reduce_acc_pool(colsum: &mut [f32], acc: &AccArena, used: usize, pool: &ThreadPool) {
+    let n = colsum.len();
+    if pool.threads() <= 1 || used <= 1 || n < PAR_REDUCE_MIN_COLS {
+        reduce_acc(colsum, acc, used);
+        return;
+    }
+    let cols = Partition::new(n, pool.threads(), usize::MAX);
+    let out = SliceRef::new(colsum);
+    pool.run(cols.blocks(), |k| {
+        let r = cols.range(k);
+        // SAFETY: column segments are pairwise disjoint.
+        let seg = unsafe { out.range_mut(r.start, r.end) };
+        seg.fill(0.0);
+        for b in 0..used {
+            for (s, &v) in seg.iter_mut().zip(&acc.row(b)[r.start..r.end]) {
+                *s += v;
+            }
+        }
+    });
+}
+
+/// Parallel column sums of `plan` into `out` (scope backend).
+fn par_col_sums_into(plan: &Matrix, part: &Partition, out: &mut [f32], acc: &mut AccArena) {
     let n = plan.cols();
     thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_slice()
-            .chunks(rows_per * n)
-            .zip(acc.iter_mut())
-            .map(|(block, local)| {
+        let handles: Vec<_> = acc
+            .rows_mut()
+            .take(part.blocks())
+            .enumerate()
+            .map(|(b, local)| {
+                let r = part.range(b);
+                let block = &plan.as_slice()[r.start * n..r.end * n];
                 s.spawn(move || {
                     local.fill(0.0);
                     for row in block.chunks_exact(n) {
@@ -81,12 +117,39 @@ fn par_col_sums_into(plan: &Matrix, rows_per: usize, out: &mut [f32], acc: &mut 
             h.join().expect("worker panicked");
         }
     });
-    let used = plan.rows().div_ceil(rows_per);
-    reduce_acc(out, acc, used);
+    reduce_acc(out, acc, part.blocks());
 }
 
+/// Parallel column sums of `plan` into `out` (pool backend).
+fn par_col_sums_pool(
+    plan: &Matrix,
+    part: &Partition,
+    out: &mut [f32],
+    acc: &mut AccArena,
+    pool: &ThreadPool,
+) {
+    let n = plan.cols();
+    let arena = acc.shared();
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        // SAFETY: part `b` is the only user of accumulator `b`.
+        let local = unsafe { arena.row_mut(b) };
+        local.fill(0.0);
+        for row in plan.as_slice()[r.start * n..r.end * n].chunks_exact(n) {
+            for (sl, &v) in local.iter_mut().zip(row) {
+                *sl += v;
+            }
+        }
+    });
+    reduce_acc_pool(out, acc, part.blocks(), pool);
+}
+
+// ---------------------------------------------------------------------------
+// MAP-UOT
+// ---------------------------------------------------------------------------
+
 /// One parallel MAP-UOT iteration out of caller-provided scratch:
-/// `fcol` (length N) and the per-thread `NextSum_col` blocks `acc`.
+/// `fcol` (length N) and the `NextSum_col` arena `acc` (scope backend).
 pub fn mapuot_iterate_into(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -95,31 +158,9 @@ pub fn mapuot_iterate_into(
     fi: f32,
     threads: usize,
     fcol: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) {
-    let (m, n) = (plan.rows(), plan.cols());
-    let (rows_per, used) = partition(m, threads, acc.len());
-    factors_into(fcol, cpd, colsum, fi);
-
-    let fcol_ref: &[f32] = fcol;
-    thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .zip(rpd.chunks(rows_per))
-            .zip(acc.iter_mut())
-            .map(|((block, rpd_block), local)| {
-                s.spawn(move || {
-                    local.fill(0.0);
-                    fused_rows(block, n, rpd_block, fcol_ref, fi, local);
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().expect("worker panicked");
-        }
-    });
-    reduce_acc(colsum, acc, used);
+    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, None, acc);
 }
 
 /// [`mapuot_iterate_into`] with in-sweep delta tracking; returns the
@@ -133,26 +174,58 @@ pub fn mapuot_iterate_tracked(
     threads: usize,
     fcol: &mut [f32],
     inv_fcol: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
+) -> f32 {
+    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), acc)
+}
+
+/// Shared body of the scope-backend MAP-UOT iteration.
+fn mapuot_scope(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    acc: &mut AccArena,
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
-    let (rows_per, used) = partition(m, threads, acc.len());
+    let part = Partition::new(m, effective_threads(threads, m), acc.rows());
     factors_into(fcol, cpd, colsum, fi);
-    recip_into(inv_fcol, fcol);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
 
     let fcol_ref: &[f32] = fcol;
-    let inv_ref: &[f32] = inv_fcol;
     let mut delta = 0f32;
     thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .zip(rpd.chunks(rows_per))
-            .zip(acc.iter_mut())
-            .map(|((block, rpd_block), local)| {
+        let mut rest: &mut [f32] = plan.as_mut_slice();
+        let handles: Vec<_> = acc
+            .rows_mut()
+            .take(part.blocks())
+            .enumerate()
+            .map(|(b, local)| {
+                let r = part.range(b);
+                let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
+                rest = tail;
+                let rpd_block = &rpd[r.start..r.end];
                 s.spawn(move || {
                     local.fill(0.0);
-                    fused_rows_tracked(block, n, rpd_block, fcol_ref, inv_ref, fi, local)
+                    match inv {
+                        Some(iv) => {
+                            fused_rows_tracked(block, n, rpd_block, fcol_ref, iv, fi, local)
+                        }
+                        None => {
+                            fused_rows(block, n, rpd_block, fcol_ref, fi, local);
+                            0.0
+                        }
+                    }
                 })
             })
             .collect();
@@ -160,8 +233,92 @@ pub fn mapuot_iterate_tracked(
             delta = delta.max(h.join().expect("worker panicked"));
         }
     });
-    reduce_acc(colsum, acc, used);
+    reduce_acc(colsum, acc, part.blocks());
     delta
+}
+
+/// One MAP-UOT iteration on the persistent pool: zero spawns, zero
+/// allocations, one epoch for the fused sweep + one for the reduction.
+pub fn mapuot_iterate_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    acc: &mut AccArena,
+) {
+    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, acc, None);
+}
+
+/// [`mapuot_iterate_pool`] with in-sweep delta tracking.
+pub fn mapuot_iterate_pool_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+) -> f32 {
+    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, Some(inv_fcol), acc, Some(deltas))
+}
+
+/// Shared body of the pool-backend MAP-UOT iteration.
+fn mapuot_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    acc: &mut AccArena,
+    deltas: Option<&mut PaddedSlots>,
+) -> f32 {
+    let (m, n) = (plan.rows(), plan.cols());
+    let part = Partition::new(m, pool.threads(), acc.rows());
+    factors_into(fcol, cpd, colsum, fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+
+    let fcol_ref: &[f32] = fcol;
+    let plan_ref = SliceRef::new(plan.as_mut_slice());
+    let arena = acc.shared();
+    let mut deltas = deltas;
+    let slots = deltas.as_mut().map(|d| d.shared());
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        // SAFETY: row blocks are disjoint; accumulator/slot `b` belongs to
+        // part `b` alone.
+        let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+        let local = unsafe { arena.row_mut(b) };
+        local.fill(0.0);
+        let rpd_block = &rpd[r.start..r.end];
+        let bd = match inv {
+            Some(iv) => fused_rows_tracked(block, n, rpd_block, fcol_ref, iv, fi, local),
+            None => {
+                fused_rows(block, n, rpd_block, fcol_ref, fi, local);
+                0.0
+            }
+        };
+        if let Some(slots) = slots {
+            // SAFETY: slot `b` belongs to part `b` alone.
+            unsafe { slots.set(b, bd) };
+        }
+    });
+    reduce_acc_pool(colsum, acc, part.blocks(), pool);
+    deltas.map(|d| d.fold_max(part.blocks())).unwrap_or(0.0)
 }
 
 /// One parallel MAP-UOT iteration with `threads` workers; allocates its own
@@ -177,12 +334,16 @@ pub fn mapuot_iterate(
     let (m, n) = (plan.rows(), plan.cols());
     let t = effective_threads(threads, m);
     let mut fcol = vec![0f32; n];
-    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    let mut acc = AccArena::padded(t, n);
     mapuot_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut acc);
 }
 
+// ---------------------------------------------------------------------------
+// COFFEE
+// ---------------------------------------------------------------------------
+
 /// One parallel COFFEE iteration (two phase-sweeps with a barrier between)
-/// out of caller-provided scratch.
+/// out of caller-provided scratch (scope backend).
 pub fn coffee_iterate_into(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -192,7 +353,7 @@ pub fn coffee_iterate_into(
     threads: usize,
     fcol: &mut [f32],
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) {
     coffee_phases(plan, colsum, rpd, cpd, fi, threads, fcol, None, rowsum, acc);
 }
@@ -208,13 +369,13 @@ pub fn coffee_iterate_tracked(
     fcol: &mut [f32],
     inv_fcol: &mut [f32],
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) -> f32 {
     coffee_phases(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), rowsum, acc)
 }
 
-/// Shared body of the parallel COFFEE iteration; tracks deltas in phase B
-/// when `inv_fcol` is provided (same pattern as [`pot_sweeps`]).
+/// Shared body of the scope-backend COFFEE iteration; tracks deltas in
+/// phase B when `inv_fcol` is provided (same pattern as [`pot_sweeps`]).
 fn coffee_phases(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -225,15 +386,15 @@ fn coffee_phases(
     fcol: &mut [f32],
     inv_fcol: Option<&mut [f32]>,
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
-    let (rows_per, used) = partition(m, threads, acc.len());
+    let part = Partition::new(m, effective_threads(threads, m), acc.rows());
     factors_into(fcol, cpd, colsum, fi);
-    let inv_fcol: Option<&[f32]> = match inv_fcol {
-        Some(inv) => {
-            recip_into(inv, fcol);
-            Some(inv)
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
         }
         None => None,
     };
@@ -241,11 +402,14 @@ fn coffee_phases(
     // Phase A: column rescale + row sums.
     let fcol_ref: &[f32] = fcol;
     thread::scope(|s| {
-        for (block, rs_block) in plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .zip(rowsum.chunks_mut(rows_per))
-        {
+        let mut rest: &mut [f32] = plan.as_mut_slice();
+        let mut rs_rest: &mut [f32] = &mut *rowsum;
+        for b in 0..part.blocks() {
+            let r = part.range(b);
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
+            rest = tail;
+            let (rs_block, rs_tail) = std::mem::take(&mut rs_rest).split_at_mut(r.len());
+            rs_rest = rs_tail;
             s.spawn(move || {
                 for (row, rs) in block.chunks_exact_mut(n).zip(rs_block.iter_mut()) {
                     *rs = scale_by_vec_and_sum(row, fcol_ref);
@@ -259,33 +423,18 @@ fn coffee_phases(
     let rowsum_ref: &[f32] = rowsum;
     let mut delta = 0f32;
     thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
+        let mut rest: &mut [f32] = plan.as_mut_slice();
+        let handles: Vec<_> = acc
+            .rows_mut()
+            .take(part.blocks())
             .enumerate()
-            .zip(acc.iter_mut())
-            .map(|((b, block), local)| {
+            .map(|(b, local)| {
+                let r = part.range(b);
+                let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
+                rest = tail;
                 s.spawn(move || {
                     local.fill(0.0);
-                    let mut block_delta = 0f32;
-                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
-                        let gi = b * rows_per + i;
-                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
-                        match inv_fcol {
-                            Some(inv) => {
-                                block_delta = block_delta.max(
-                                    scale_by_scalar_and_accumulate_tracked(row, fr, inv, local),
-                                );
-                            }
-                            None => {
-                                for (v, sl) in row.iter_mut().zip(local.iter_mut()) {
-                                    *v *= fr;
-                                    *sl += *v;
-                                }
-                            }
-                        }
-                    }
-                    block_delta
+                    coffee_phase_b_block(block, n, r.start, rpd, rowsum_ref, fi, inv, local)
                 })
             })
             .collect();
@@ -293,8 +442,136 @@ fn coffee_phases(
             delta = delta.max(h.join().expect("worker panicked"));
         }
     });
-    reduce_acc(colsum, acc, used);
+    reduce_acc(colsum, acc, part.blocks());
     delta
+}
+
+/// COFFEE phase B over one row block: row rescale + `NextSum_col`
+/// accumulation, tracked when `inv` is provided. Shared by both backends.
+fn coffee_phase_b_block(
+    block: &mut [f32],
+    n: usize,
+    row0: usize,
+    rpd: &[f32],
+    rowsum: &[f32],
+    fi: f32,
+    inv: Option<&[f32]>,
+    local: &mut [f32],
+) -> f32 {
+    let mut block_delta = 0f32;
+    for (i, row) in block.chunks_exact_mut(n).enumerate() {
+        let gi = row0 + i;
+        let fr = factor(rpd[gi], rowsum[gi], fi);
+        match inv {
+            Some(iv) => {
+                block_delta =
+                    block_delta.max(scale_by_scalar_and_accumulate_tracked(row, fr, iv, local));
+            }
+            None => {
+                for (v, sl) in row.iter_mut().zip(local.iter_mut()) {
+                    *v *= fr;
+                    *sl += *v;
+                }
+            }
+        }
+    }
+    block_delta
+}
+
+/// One COFFEE iteration on the persistent pool (two epochs + reduction;
+/// the phase barrier is an epoch wait, not a scope teardown).
+pub fn coffee_iterate_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+) {
+    coffee_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, rowsum, acc, None);
+}
+
+/// [`coffee_iterate_pool`] with in-sweep delta tracking.
+pub fn coffee_iterate_pool_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+) -> f32 {
+    coffee_pool(plan, colsum, rpd, cpd, fi, pool, fcol, Some(inv_fcol), rowsum, acc, Some(deltas))
+}
+
+/// Shared body of the pool-backend COFFEE iteration.
+fn coffee_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    deltas: Option<&mut PaddedSlots>,
+) -> f32 {
+    let (m, n) = (plan.rows(), plan.cols());
+    let part = Partition::new(m, pool.threads(), acc.rows());
+    factors_into(fcol, cpd, colsum, fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+
+    // Phase A: column rescale + row sums (epoch 1).
+    let fcol_ref: &[f32] = fcol;
+    {
+        let plan_ref = SliceRef::new(plan.as_mut_slice());
+        let rows_ref = SliceRef::new(rowsum);
+        pool.run(part.blocks(), |b| {
+            let r = part.range(b);
+            // SAFETY: row blocks (and their rowsum segments) are disjoint.
+            let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+            let rs_block = unsafe { rows_ref.range_mut(r.start, r.end) };
+            for (row, rs) in block.chunks_exact_mut(n).zip(rs_block.iter_mut()) {
+                *rs = scale_by_vec_and_sum(row, fcol_ref);
+            }
+        });
+    }
+
+    // Phase B: row rescale + next column sums (epoch 2).
+    let rowsum_ref: &[f32] = rowsum;
+    let plan_ref = SliceRef::new(plan.as_mut_slice());
+    let arena = acc.shared();
+    let mut deltas = deltas;
+    let slots = deltas.as_mut().map(|d| d.shared());
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        // SAFETY: disjoint row blocks; accumulator/slot `b` is part-owned.
+        let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+        let local = unsafe { arena.row_mut(b) };
+        local.fill(0.0);
+        let bd = coffee_phase_b_block(block, n, r.start, rpd, rowsum_ref, fi, inv, local);
+        if let Some(slots) = slots {
+            // SAFETY: slot `b` belongs to part `b` alone.
+            unsafe { slots.set(b, bd) };
+        }
+    });
+    reduce_acc_pool(colsum, acc, part.blocks(), pool);
+    deltas.map(|d| d.fold_max(part.blocks())).unwrap_or(0.0)
 }
 
 /// One parallel COFFEE iteration; allocates its own scratch per call —
@@ -311,13 +588,17 @@ pub fn coffee_iterate(
     let t = effective_threads(threads, m);
     let mut fcol = vec![0f32; n];
     let mut rowsum = vec![0f32; m];
-    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    let mut acc = AccArena::padded(t, n);
     coffee_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut rowsum, &mut acc);
 }
 
+// ---------------------------------------------------------------------------
+// POT
+// ---------------------------------------------------------------------------
+
 /// One parallel POT iteration (four sweeps, each row-partitioned, with
 /// barriers between — the NumPy execution model under a parallel BLAS-style
-/// backend) out of caller-provided scratch.
+/// backend) out of caller-provided scratch (scope backend).
 pub fn pot_iterate_into(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -327,7 +608,7 @@ pub fn pot_iterate_into(
     threads: usize,
     fcol: &mut [f32],
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) {
     pot_sweeps(plan, colsum, rpd, cpd, fi, threads, fcol, None, rowsum, acc);
 }
@@ -343,14 +624,13 @@ pub fn pot_iterate_tracked(
     fcol: &mut [f32],
     inv_fcol: &mut [f32],
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) -> f32 {
     pot_sweeps(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), rowsum, acc)
 }
 
-/// Shared body of the parallel POT iteration; tracks deltas in sweep 4
+/// Shared body of the scope-backend POT iteration; tracks deltas in sweep 4
 /// when `inv_fcol` is provided.
-#[allow(clippy::too_many_arguments)]
 fn pot_sweeps(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -361,18 +641,18 @@ fn pot_sweeps(
     fcol: &mut [f32],
     inv_fcol: Option<&mut [f32]>,
     rowsum: &mut [f32],
-    acc: &mut [Vec<f32>],
+    acc: &mut AccArena,
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
-    let (rows_per, _) = partition(m, threads, acc.len());
+    let part = Partition::new(m, effective_threads(threads, m), acc.rows());
 
     // Sweep 1: column sums.
-    par_col_sums_into(plan, rows_per, colsum, acc);
+    par_col_sums_into(plan, &part, colsum, acc);
     factors_into(fcol, cpd, colsum, fi);
-    let inv_fcol: Option<&[f32]> = match inv_fcol {
-        Some(inv) => {
-            recip_into(inv, fcol);
-            Some(inv)
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
         }
         None => None,
     };
@@ -380,7 +660,11 @@ fn pot_sweeps(
     // Sweep 2: column rescale.
     let fcol_ref: &[f32] = fcol;
     thread::scope(|s| {
-        for block in plan.as_mut_slice().chunks_mut(rows_per * n) {
+        let mut rest: &mut [f32] = plan.as_mut_slice();
+        for b in 0..part.blocks() {
+            let r = part.range(b);
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
+            rest = tail;
             s.spawn(move || {
                 for row in block.chunks_exact_mut(n) {
                     for (v, &f) in row.iter_mut().zip(fcol_ref) {
@@ -393,11 +677,12 @@ fn pot_sweeps(
 
     // Sweep 3: row sums.
     thread::scope(|s| {
-        for (block, rs_block) in plan
-            .as_slice()
-            .chunks(rows_per * n)
-            .zip(rowsum.chunks_mut(rows_per))
-        {
+        let mut rs_rest: &mut [f32] = &mut *rowsum;
+        for b in 0..part.blocks() {
+            let r = part.range(b);
+            let block = &plan.as_slice()[r.start * n..r.end * n];
+            let (rs_block, rs_tail) = std::mem::take(&mut rs_rest).split_at_mut(r.len());
+            rs_rest = rs_tail;
             s.spawn(move || {
                 for (row, rs) in block.chunks_exact(n).zip(rs_block.iter_mut()) {
                     *rs = row.iter().sum::<f32>();
@@ -410,33 +695,13 @@ fn pot_sweeps(
     let rowsum_ref: &[f32] = rowsum;
     let mut delta = 0f32;
     thread::scope(|s| {
-        let handles: Vec<_> = plan
-            .as_mut_slice()
-            .chunks_mut(rows_per * n)
-            .enumerate()
-            .map(|(b, block)| {
-                s.spawn(move || {
-                    let mut block_delta = 0f32;
-                    for (i, row) in block.chunks_exact_mut(n).enumerate() {
-                        let gi = b * rows_per + i;
-                        let fr = factor(rpd[gi], rowsum_ref[gi], fi);
-                        match inv_fcol {
-                            Some(inv) => {
-                                for (v, &iv) in row.iter_mut().zip(inv) {
-                                    let old = *v * iv;
-                                    *v *= fr;
-                                    block_delta = block_delta.max((*v - old).abs());
-                                }
-                            }
-                            None => {
-                                for v in row {
-                                    *v *= fr;
-                                }
-                            }
-                        }
-                    }
-                    block_delta
-                })
+        let mut rest: &mut [f32] = plan.as_mut_slice();
+        let handles: Vec<_> = (0..part.blocks())
+            .map(|b| {
+                let r = part.range(b);
+                let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
+                rest = tail;
+                s.spawn(move || pot_sweep4_block(block, n, r.start, rpd, rowsum_ref, fi, inv))
             })
             .collect();
         for h in handles {
@@ -445,7 +710,158 @@ fn pot_sweeps(
     });
 
     // Refresh carried colsum (POT recomputes it next iteration anyway).
-    par_col_sums_into(plan, rows_per, colsum, acc);
+    par_col_sums_into(plan, &part, colsum, acc);
+    delta
+}
+
+/// POT sweep 4 over one row block: row rescale, tracked when `inv` is
+/// provided. Shared by both backends.
+fn pot_sweep4_block(
+    block: &mut [f32],
+    n: usize,
+    row0: usize,
+    rpd: &[f32],
+    rowsum: &[f32],
+    fi: f32,
+    inv: Option<&[f32]>,
+) -> f32 {
+    let mut block_delta = 0f32;
+    for (i, row) in block.chunks_exact_mut(n).enumerate() {
+        let gi = row0 + i;
+        let fr = factor(rpd[gi], rowsum[gi], fi);
+        match inv {
+            Some(iv) => {
+                for (v, &ivj) in row.iter_mut().zip(iv) {
+                    let old = *v * ivj;
+                    *v *= fr;
+                    block_delta = block_delta.max((*v - old).abs());
+                }
+            }
+            None => {
+                for v in row.iter_mut() {
+                    *v *= fr;
+                }
+            }
+        }
+    }
+    block_delta
+}
+
+/// One POT iteration on the persistent pool: the four sweep barriers are
+/// epoch waits (five epochs per iteration with the colsum refresh), not
+/// four scope teardowns.
+pub fn pot_iterate_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+) {
+    pot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, rowsum, acc, None);
+}
+
+/// [`pot_iterate_pool`] with in-sweep delta tracking.
+pub fn pot_iterate_pool_tracked(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+) -> f32 {
+    pot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, Some(inv_fcol), rowsum, acc, Some(deltas))
+}
+
+/// Shared body of the pool-backend POT iteration.
+fn pot_pool(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    deltas: Option<&mut PaddedSlots>,
+) -> f32 {
+    let (m, n) = (plan.rows(), plan.cols());
+    let part = Partition::new(m, pool.threads(), acc.rows());
+
+    // Sweep 1: column sums.
+    par_col_sums_pool(plan, &part, colsum, acc, pool);
+    factors_into(fcol, cpd, colsum, fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+
+    // Sweep 2: column rescale.
+    let fcol_ref: &[f32] = fcol;
+    {
+        let plan_ref = SliceRef::new(plan.as_mut_slice());
+        pool.run(part.blocks(), |b| {
+            let r = part.range(b);
+            // SAFETY: row blocks are disjoint.
+            let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+            for row in block.chunks_exact_mut(n) {
+                for (v, &f) in row.iter_mut().zip(fcol_ref) {
+                    *v *= f;
+                }
+            }
+        });
+    }
+
+    // Sweep 3: row sums (plan is read-only here).
+    {
+        let rows_ref = SliceRef::new(rowsum);
+        let plan_view: &Matrix = plan;
+        pool.run(part.blocks(), |b| {
+            let r = part.range(b);
+            // SAFETY: rowsum segments are disjoint.
+            let rs_block = unsafe { rows_ref.range_mut(r.start, r.end) };
+            let data = &plan_view.as_slice()[r.start * n..r.end * n];
+            for (row, rs) in data.chunks_exact(n).zip(rs_block.iter_mut()) {
+                *rs = row.iter().sum::<f32>();
+            }
+        });
+    }
+
+    // Sweep 4: row rescale (tracked when the reciprocal factors are given).
+    let rowsum_ref: &[f32] = rowsum;
+    let delta;
+    {
+        let plan_ref = SliceRef::new(plan.as_mut_slice());
+        let mut deltas = deltas;
+        let slots = deltas.as_mut().map(|d| d.shared());
+        pool.run(part.blocks(), |b| {
+            let r = part.range(b);
+            // SAFETY: disjoint row blocks; slot `b` is part-owned.
+            let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+            let bd = pot_sweep4_block(block, n, r.start, rpd, rowsum_ref, fi, inv);
+            if let Some(slots) = slots {
+                // SAFETY: slot `b` belongs to part `b` alone.
+                unsafe { slots.set(b, bd) };
+            }
+        });
+        delta = deltas.map(|d| d.fold_max(part.blocks())).unwrap_or(0.0);
+    }
+
+    // Refresh carried colsum (POT recomputes it next iteration anyway).
+    par_col_sums_pool(plan, &part, colsum, acc, pool);
     delta
 }
 
@@ -463,7 +879,7 @@ pub fn pot_iterate(
     let t = effective_threads(threads, m);
     let mut fcol = vec![0f32; n];
     let mut rowsum = vec![0f32; m];
-    let mut acc: Vec<Vec<f32>> = (0..t).map(|_| vec![0f32; n]).collect();
+    let mut acc = AccArena::padded(t, n);
     pot_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut rowsum, &mut acc);
 }
 
@@ -513,6 +929,25 @@ mod tests {
     }
 
     #[test]
+    fn pool_backed_mapuot_matches_serial() {
+        for t in [1, 2, 3, 8] {
+            let p = Problem::random(23, 17, 0.7, 7);
+            let pool = ThreadPool::new(t);
+            let mut fcol = vec![0f32; 17];
+            let mut acc = AccArena::padded(t, 17);
+            let mut a = p.plan.clone();
+            let mut cs_a = a.col_sums();
+            let mut b = p.plan.clone();
+            let mut cs_b = b.col_sums();
+            for _ in 0..5 {
+                mapuot_iterate_pool(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &pool, &mut fcol, &mut acc);
+                mapuot::iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi);
+            }
+            assert!(a.max_rel_diff(&b, 1e-6) < 1e-3, "pool threads={t}");
+        }
+    }
+
+    #[test]
     fn more_threads_than_rows_is_safe() {
         let p = Problem::random(3, 5, 0.5, 4);
         let mut a = p.plan.clone();
@@ -535,7 +970,7 @@ mod tests {
         let mut cs_a = a.col_sums();
         let mut fcol = vec![0f32; 13];
         let mut rowsum = vec![0f32; 19];
-        let mut acc: Vec<Vec<f32>> = (0..3).map(|_| vec![0f32; 13]).collect();
+        let mut acc = AccArena::padded(3, 13);
         let mut b = p.plan.clone();
         let mut cs_b = b.col_sums();
         for _ in 0..4 {
@@ -546,5 +981,17 @@ mod tests {
         }
         assert_eq!(a.as_slice(), b.as_slice());
         assert_eq!(cs_a, cs_b);
+    }
+
+    #[test]
+    fn balanced_partition_uses_all_threads() {
+        // m=9, t=8 used to produce 5 blocks (4x2 rows + a 1-row straggler);
+        // the balanced partition gives all 8 threads work.
+        let part = Partition::new(9, 8, usize::MAX);
+        assert_eq!(part.blocks(), 8);
+        assert_eq!(part.len(0), 2);
+        for b in 1..8 {
+            assert_eq!(part.len(b), 1);
+        }
     }
 }

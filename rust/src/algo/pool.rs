@@ -1,0 +1,866 @@
+//! Persistent pinned worker-pool execution engine (the "pool" backend).
+//!
+//! The paper's parallel results (§4.1.2, Figs. 10/12) assume workers that
+//! live for the whole solve. The original `thread::scope`-per-iteration
+//! dispatch in [`crate::algo::parallel`] instead creates and joins fresh OS
+//! threads every iteration — POT pays this four times per iteration, once
+//! per sweep group — so on small/medium problems thread create/join and
+//! cold stacks dominate wall time and defeat the zero-allocation
+//! [`Workspace`](crate::algo::Workspace) contract. Sinkhorn-family UOT
+//! iterations are short, memory-bound passes, exactly the regime where
+//! per-iteration dispatch overhead shows up (Pham et al. 2020; Séjourné
+//! et al. 2022).
+//!
+//! [`ThreadPool`] replaces that with workers created **once** (optionally
+//! pinned to cores via [`AffinityHint`]), parked between dispatches, and
+//! coordinated by a lightweight **epoch barrier**: an atomic generation
+//! counter plus `park`/`unpark`. One dispatch ([`ThreadPool::run`]) costs
+//! zero thread creation and zero heap allocation:
+//!
+//! 1. the caller publishes a borrowed job (`&dyn Fn(usize)`) and bumps the
+//!    epoch (release store), then unparks **only the participating**
+//!    workers — a small job on a big shared pool wakes nobody else;
+//! 2. each participating worker observes the new epoch (acquire load),
+//!    runs its part, and decrements the outstanding-worker counter;
+//! 3. the caller executes **part 0 itself** (a pool of `t` threads spawns
+//!    only `t − 1` workers), then spins-then-parks until the counter drains
+//!    — that wait *is* the sweep barrier, replacing a whole scope teardown.
+//!
+//! Panics are contained, never deadlocks: a panicking part (worker or
+//! caller) is caught so the barrier still drains and the borrowed job
+//! outlives every use, then re-raised on the dispatching thread —
+//! mirroring the `join().expect(..)` semantics of the scope backend. The
+//! pool itself stays usable afterwards.
+//!
+//! A sweep-structured solver (POT's four sweeps, COFFEE's two phases) runs
+//! one `run` call per sweep: the barrier between sweeps becomes an epoch
+//! wait instead of a join+respawn cycle.
+//!
+//! The module also owns the shared-state plumbing the pool kernels need:
+//!
+//! * [`Partition`] — balanced row-block partition (no straggler blocks;
+//!   every block gets at least half the average rows);
+//! * [`AccArena`] — the per-thread `NextSum_col` partials as one 64-byte-
+//!   aligned, cache-line-padded arena (replacing `Vec<Vec<f32>>`), so the
+//!   tree-free column-parallel reduction streams one contiguous buffer;
+//! * [`PaddedSlots`] — one f32 per worker on its own cache line, for the
+//!   tracked-delta maxima;
+//! * [`SliceRef`] / [`ArenaRef`] / [`SlotsRef`] — `Sync` raw-pointer views
+//!   that let the `Fn(usize)` job hand each part a disjoint sub-slice
+//!   (the role `thread::scope`'s move closures played before).
+
+use std::cell::UnsafeCell;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle, Thread};
+
+use crate::util::matrix::{Matrix, CACHE_LINE};
+
+/// f32 lanes per cache line: arena rows are padded to a multiple of this.
+const LINE_F32: usize = CACHE_LINE / std::mem::size_of::<f32>();
+
+/// Spin iterations before falling back to `park` (epoch waits are usually
+/// shorter than one memory-bound sweep, so a short spin catches most of
+/// them without burning a syscall).
+const SPIN_LIMIT: u32 = 4096;
+
+/// Which parallel execution engine drives the threaded kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelBackend {
+    /// Legacy `thread::scope` spawn/join per iteration (per sweep for the
+    /// phase-split kernels). Kept for head-to-head benchmarking.
+    SpawnPerIter,
+    /// Persistent parked worker pool with an epoch barrier (default).
+    Pool,
+}
+
+impl ParallelBackend {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "spawn" | "scope" | "spawn-per-iter" => Some(ParallelBackend::SpawnPerIter),
+            "pool" | "persistent" => Some(ParallelBackend::Pool),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParallelBackend::SpawnPerIter => "spawn",
+            ParallelBackend::Pool => "pool",
+        }
+    }
+}
+
+/// Core-affinity hint for pool workers.
+///
+/// `Pinned` pins worker `i` to core `(i + 1) % cores` (part 0 runs on the
+/// dispatching thread, which stays wherever the OS put it). Best-effort:
+/// unsupported platforms and restricted cgroups silently ignore it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AffinityHint {
+    /// Let the scheduler place workers (default).
+    #[default]
+    None,
+    /// Pin each worker to one core, round-robin.
+    Pinned,
+}
+
+/// Best-effort thread pinning (Linux only; no-op elsewhere).
+#[cfg(target_os = "linux")]
+fn pin_to_core(core: usize) {
+    const WORDS: usize = 1024 / 64; // glibc cpu_set_t is 1024 bits
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let mut mask = [0u64; WORDS];
+    let bit = core % (WORDS * 64);
+    mask[bit / 64] |= 1u64 << (bit % 64);
+    // SAFETY: pid 0 targets the calling thread; the mask buffer outlives
+    // the call. Failure (e.g. a restricted cpuset) is a ignorable hint.
+    let _ = unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_core: usize) {}
+
+/// Low bits of the packed epoch word that carry the participant count.
+///
+/// `epoch` is `(generation << PARTS_BITS) | parts`: a worker learns from
+/// the **same atomic load** that woke it both that a new job exists and
+/// whether it participates. Non-participants never touch the job slot —
+/// they have no happens-before edge to the dispatcher's post-barrier
+/// clear/republish (the barrier only waits for participants), so reading
+/// the slot from them would be a data race.
+const PARTS_BITS: u32 = 16;
+const PARTS_MASK: u64 = (1 << PARTS_BITS) - 1;
+
+/// The job slot: valid only between an epoch publish and the matching
+/// barrier drain, while `run_dyn` keeps the original borrow alive. Read
+/// **only** by participating workers (`idx < parts` from the packed
+/// epoch), whose barrier decrement the dispatcher awaits before touching
+/// the slot again.
+struct Job {
+    /// Type-erased `&(dyn Fn(usize) + Sync)` from the dispatching caller.
+    task: Option<*const (dyn Fn(usize) + Sync)>,
+    /// Dispatching thread, unparked by the last worker to finish.
+    caller: Option<Thread>,
+}
+
+struct Shared {
+    /// Packed `(generation << PARTS_BITS) | parts`; published (release)
+    /// once per dispatched job. Writers are serialized (dispatch lock /
+    /// exclusive Drop).
+    epoch: AtomicU64,
+    /// Participating workers that have not yet finished the current epoch.
+    remaining: AtomicUsize,
+    job: UnsafeCell<Job>,
+    shutdown: AtomicBool,
+    /// Set by a worker whose part panicked (the panic is contained so the
+    /// barrier still drains); the dispatcher re-raises it after the wait.
+    poisoned: AtomicBool,
+}
+
+impl Shared {
+    /// Publish the next packed epoch (writers are already serialized).
+    fn publish_epoch(&self, parts: usize) {
+        let generation = self.epoch.load(Ordering::Relaxed) >> PARTS_BITS;
+        self.epoch
+            .store(((generation + 1) << PARTS_BITS) | parts as u64, Ordering::Release);
+    }
+}
+
+// SAFETY: the `job` slot is written only by the dispatcher while it holds
+// the dispatch lock and before the epoch's release bump; workers read it
+// only after the matching acquire load. The raw task pointer is
+// dereferenced only while `run_dyn` keeps the underlying borrow alive.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+/// A persistent worker pool. See the module docs for the protocol.
+///
+/// `run` takes `&self` and serializes dispatches internally, so one pool
+/// can be shared (`Arc`) by several sessions — e.g. `solve_batch` and the
+/// coordinator's per-worker sessions reuse one pool for every solve.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serializes dispatches from concurrent `run` callers.
+    dispatch: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Pool executing jobs over `threads` parts (spawns `threads - 1`
+    /// workers; part 0 always runs on the dispatching thread).
+    pub fn new(threads: usize) -> Self {
+        Self::with_affinity(threads, AffinityHint::None)
+    }
+
+    /// [`ThreadPool::new`] with a core-affinity hint for the workers.
+    pub fn with_affinity(threads: usize, affinity: AffinityHint) -> Self {
+        // The participant count must fit the packed epoch's low bits (and
+        // no OS spawns 65k threads anyway).
+        let threads = threads.max(1).min(PARTS_MASK as usize);
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            remaining: AtomicUsize::new(0),
+            job: UnsafeCell::new(Job { task: None, caller: None }),
+            shutdown: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+        });
+        let cores = thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let workers = (0..threads - 1)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("uot-pool-{}", i + 1))
+                    .spawn(move || {
+                        if affinity == AffinityHint::Pinned {
+                            pin_to_core((i + 1) % cores);
+                        }
+                        worker_loop(&shared, i + 1);
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers, dispatch: Mutex::new(()) }
+    }
+
+    /// Total parts per dispatch (workers + the dispatching caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `task(p)` for every `p in 0..parts`, in parallel, returning
+    /// once all parts finished (the epoch barrier). Allocation-free and
+    /// spawn-free: the steady-state cost is one atomic bump, `parts - 1`
+    /// unparks and one barrier wait.
+    ///
+    /// `parts` must not exceed [`ThreadPool::threads`]. Concurrent callers
+    /// on a shared pool serialize on an internal lock.
+    pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, task: F) {
+        self.run_dyn(parts, &task);
+    }
+
+    fn run_dyn(&self, parts: usize, task: &(dyn Fn(usize) + Sync)) {
+        let parts = parts.max(1);
+        assert!(
+            parts <= self.threads(),
+            "{} parts dispatched to a {}-thread pool",
+            parts,
+            self.threads()
+        );
+        if self.workers.is_empty() || parts == 1 {
+            // Serial fast path: no atomics, no wakeups; panics propagate
+            // directly (no worker holds the closure).
+            for p in 0..parts {
+                task(p);
+            }
+            return;
+        }
+        // A panic inside a previous dispatch releases the lock cleanly
+        // (see the guard drop below), but recover from poisoning anyway so
+        // a shared pool never becomes permanently unusable.
+        let guard = match self.dispatch.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // Publish the job. Erasing the borrow to a raw pointer is sound
+        // because this function does not return (or unwind past the
+        // barrier below) until every participating worker has drained, so
+        // the borrow outlives all uses.
+        {
+            // SAFETY: exclusive via the dispatch lock; only participating
+            // workers read the slot, and only after the packed-epoch
+            // publish below (release/acquire pair).
+            let job = unsafe { &mut *self.shared.job.get() };
+            job.task = Some(task as *const (dyn Fn(usize) + Sync));
+            job.caller = Some(thread::current());
+        }
+        // Only workers 1..parts participate: `remaining` counts them and
+        // only they are unparked — a small job on a big shared pool wakes
+        // nobody else. A non-participant that spins through the epoch
+        // learns `parts` from the packed word itself and never touches
+        // the job slot (idle workers sleep through skipped generations;
+        // the `epoch != seen` compare tolerates that).
+        self.shared.remaining.store(parts - 1, Ordering::Relaxed);
+        self.shared.publish_epoch(parts);
+        for w in &self.workers[..parts - 1] {
+            w.thread().unpark();
+        }
+
+        // The caller is part 0: it works instead of idling. Contain a
+        // panic until the barrier has drained — unwinding here would drop
+        // the `task` borrow while workers still execute through the
+        // published raw pointer.
+        let caller_result = catch_unwind(AssertUnwindSafe(|| task(0)));
+
+        // Epoch barrier: spin briefly, then park until the last worker's
+        // unpark. Spurious park returns are fine — the loop re-checks.
+        let mut spins = 0u32;
+        while self.shared.remaining.load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                thread::park();
+            }
+        }
+
+        // SAFETY: all participating workers are back in their wait loop;
+        // clearing the slot keeps no dangling pointer past the borrow.
+        let job = unsafe { &mut *self.shared.job.get() };
+        job.task = None;
+        job.caller = None;
+
+        // Re-raise contained panics — worker panics first (mirroring the
+        // `join().expect` semantics of the scope backend), then the
+        // caller's own. Release the lock first so the pool stays usable.
+        let worker_panicked = self.shared.poisoned.swap(false, Ordering::AcqRel);
+        drop(guard);
+        if worker_panicked {
+            panic!("pool worker panicked during a dispatched part");
+        }
+        if let Err(payload) = caller_result {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // parts = 0: no worker can mistake the shutdown bump for a job.
+        self.shared.publish_epoch(0);
+        for w in &self.workers {
+            w.thread().unpark();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads()).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        // Wait for a new packed epoch (or shutdown), spinning briefly then
+        // parking.
+        let mut spins = 0u32;
+        let packed = loop {
+            let e = shared.epoch.load(Ordering::Acquire);
+            if e != seen {
+                seen = e;
+                break e;
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            spins += 1;
+            if spins < SPIN_LIMIT {
+                std::hint::spin_loop();
+            } else {
+                thread::park();
+            }
+        };
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Participation comes from the packed word itself, NOT the job
+        // slot: a non-participant (idx >= parts) was neither counted in
+        // `remaining` nor unparked, so the dispatcher will not wait for it
+        // before clearing/republishing the slot — reading the slot here
+        // would race those writes. It just goes back to waiting.
+        let parts = (packed & PARTS_MASK) as usize;
+        if idx >= parts {
+            continue;
+        }
+        // SAFETY: participating worker. The acquire epoch load
+        // synchronizes with the dispatcher's release publish, which
+        // happens after the job slot was written; the dispatcher keeps the
+        // task borrow alive (and the slot untouched) until this worker's
+        // `remaining` decrement below is observed.
+        let (task, caller) = unsafe {
+            let job = &*shared.job.get();
+            (job.task, job.caller.clone())
+        };
+        if let Some(task) = task {
+            // Contain panics so the barrier always drains: a dead or
+            // unwound worker would leave the dispatcher waiting forever.
+            // SAFETY: pointer valid per the publish protocol above.
+            if catch_unwind(AssertUnwindSafe(|| (unsafe { &*task })(idx))).is_err() {
+                shared.poisoned.store(true, Ordering::Release);
+            }
+        }
+        if shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            if let Some(caller) = caller {
+                caller.unpark();
+            }
+        }
+    }
+}
+
+/// Balanced row-block partition of `rows` over at most `threads` blocks
+/// (further capped by `cap`, the number of available accumulators).
+///
+/// Unlike the old `ceil(m/t)`-sized uniform chunks — where `m = 9, t = 8`
+/// produced four 2-row blocks and one 1-row straggler on only five threads
+/// — every block here gets `floor(m/b)` or `ceil(m/b)` rows, so no worker
+/// receives fewer than half the average rows and all requested threads
+/// participate whenever `m >= t`.
+#[derive(Debug, Clone, Copy)]
+pub struct Partition {
+    blocks: usize,
+    base: usize,
+    extra: usize,
+}
+
+impl Partition {
+    pub fn new(rows: usize, threads: usize, cap: usize) -> Self {
+        let blocks = threads.max(1).min(rows.max(1)).min(cap.max(1));
+        Partition { blocks, base: rows / blocks, extra: rows % blocks }
+    }
+
+    /// Number of non-empty blocks (== parts to dispatch).
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Rows in block `b` (the first `rows % blocks` blocks get one extra).
+    pub fn len(&self, b: usize) -> usize {
+        self.base + usize::from(b < self.extra)
+    }
+
+    /// First row of block `b`.
+    pub fn start(&self, b: usize) -> usize {
+        b * self.base + b.min(self.extra)
+    }
+
+    /// Row range of block `b`.
+    pub fn range(&self, b: usize) -> Range<usize> {
+        let start = self.start(b);
+        start..start + self.len(b)
+    }
+}
+
+/// Cache-line-padded accumulator arena: the per-thread `NextSum_col`
+/// partials (Algorithm 1 lines 5–15) as rows of **one** 64-byte-aligned
+/// buffer, each row padded to a whole number of cache lines so adjacent
+/// workers never share a line — the property Fig. 12 measures — while the
+/// reduction streams a single contiguous allocation instead of chasing
+/// `Vec<Vec<f32>>` pointers.
+///
+/// The unpadded constructor packs rows back-to-back (adjacent workers *do*
+/// share lines); it exists only for the Fig. 12 false-sharing ablation.
+#[derive(Debug)]
+pub struct AccArena {
+    buf: Matrix,
+    cols: usize,
+    padded: bool,
+}
+
+impl AccArena {
+    /// Arena with `rows` padded accumulators of `cols` columns each.
+    pub fn padded(rows: usize, cols: usize) -> Self {
+        Self::build(rows, cols, true)
+    }
+
+    /// Ablation arena: rows packed contiguously, no padding (false-sharing
+    /// baseline for the Fig. 12 bench).
+    pub fn unpadded(rows: usize, cols: usize) -> Self {
+        Self::build(rows, cols, false)
+    }
+
+    fn build(rows: usize, cols: usize, padded: bool) -> Self {
+        let cols = cols.max(1);
+        let stride = if padded { cols.div_ceil(LINE_F32) * LINE_F32 } else { cols };
+        Self { buf: Matrix::zeros(rows.max(1), stride), cols, padded }
+    }
+
+    /// Accumulator count.
+    pub fn rows(&self) -> usize {
+        self.buf.rows()
+    }
+
+    /// Logical columns (N) per accumulator.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Resize the logical width. Allocation-free while `cols` fits the
+    /// existing stride; growing past it rebuilds the arena.
+    pub fn ensure_cols(&mut self, cols: usize) {
+        let cols = cols.max(1);
+        if cols <= self.buf.cols() {
+            self.cols = cols;
+        } else {
+            *self = Self::build(self.buf.rows(), cols, self.padded);
+        }
+    }
+
+    /// Accumulator `b`, read-only.
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.buf.row(b)[..self.cols]
+    }
+
+    /// Accumulator `b`, mutable.
+    pub fn row_mut(&mut self, b: usize) -> &mut [f32] {
+        let cols = self.cols;
+        &mut self.buf.row_mut(b)[..cols]
+    }
+
+    /// Iterate all accumulators mutably (the `thread::scope` path zips
+    /// this with its spawned blocks).
+    pub fn rows_mut(&mut self) -> impl Iterator<Item = &mut [f32]> + '_ {
+        let cols = self.cols;
+        let stride = self.buf.cols();
+        self.buf.as_mut_slice().chunks_mut(stride).map(move |r| &mut r[..cols])
+    }
+
+    /// Concurrent view for pool jobs: each part touches only its own row.
+    pub fn shared(&mut self) -> ArenaRef {
+        ArenaRef {
+            ptr: self.buf.as_mut_slice().as_mut_ptr(),
+            stride: self.buf.cols(),
+            cols: self.cols,
+            rows: self.buf.rows(),
+        }
+    }
+}
+
+/// `Sync` raw view over an [`AccArena`] for in-flight pool jobs.
+#[derive(Clone, Copy)]
+pub struct ArenaRef {
+    ptr: *mut f32,
+    stride: usize,
+    cols: usize,
+    rows: usize,
+}
+
+// SAFETY: every part of a pool job accesses a distinct row index (the
+// caller's discipline, documented on `row_mut`), so no two threads alias.
+unsafe impl Send for ArenaRef {}
+unsafe impl Sync for ArenaRef {}
+
+impl ArenaRef {
+    /// Accumulator `b` of the underlying arena.
+    ///
+    /// # Safety
+    /// No two concurrent callers may pass the same `b`, and the arena must
+    /// outlive the returned slice (both hold within one `ThreadPool::run`
+    /// where part `b` is the only user of row `b`).
+    #[allow(clippy::mut_from_ref)] // disjoint-row discipline, see above
+    pub unsafe fn row_mut(&self, b: usize) -> &mut [f32] {
+        debug_assert!(b < self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(b * self.stride), self.cols)
+    }
+}
+
+/// One f32 per worker, each on its own cache line — the per-block tracked
+/// `plan_delta` maxima land here without false sharing or allocation.
+#[derive(Debug)]
+pub struct PaddedSlots {
+    buf: Matrix,
+}
+
+impl PaddedSlots {
+    pub fn new(slots: usize) -> Self {
+        Self { buf: Matrix::zeros(slots.max(1), LINE_F32) }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.buf.rows()
+    }
+
+    /// Concurrent view for pool jobs: each part writes only its own slot.
+    pub fn shared(&mut self) -> SlotsRef {
+        SlotsRef { ptr: self.buf.as_mut_slice().as_mut_ptr(), rows: self.buf.rows() }
+    }
+
+    /// Max over the first `used` slots.
+    pub fn fold_max(&self, used: usize) -> f32 {
+        (0..used.min(self.buf.rows())).map(|i| self.buf.get(i, 0)).fold(0f32, f32::max)
+    }
+}
+
+/// `Sync` raw view over [`PaddedSlots`] for in-flight pool jobs.
+#[derive(Clone, Copy)]
+pub struct SlotsRef {
+    ptr: *mut f32,
+    rows: usize,
+}
+
+// SAFETY: each pool part writes a distinct slot index (caller discipline).
+unsafe impl Send for SlotsRef {}
+unsafe impl Sync for SlotsRef {}
+
+impl SlotsRef {
+    /// Store `v` into slot `i`.
+    ///
+    /// # Safety
+    /// No two concurrent callers may pass the same `i`, and the slots must
+    /// outlive the call (both hold within one `ThreadPool::run` where part
+    /// `i` is the only writer of slot `i`).
+    pub unsafe fn set(&self, i: usize, v: f32) {
+        debug_assert!(i < self.rows);
+        *self.ptr.add(i * LINE_F32) = v;
+    }
+}
+
+/// `Sync` raw view over a caller's `&mut [f32]`, handed to pool jobs that
+/// carve it into disjoint ranges (plan row blocks, rowsum blocks, colsum
+/// segments). The scoped-thread equivalent was `split_at_mut` + move
+/// closures; a `Fn(usize)` job needs the split to happen inside the part.
+#[derive(Clone, Copy)]
+pub struct SliceRef {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: parts access disjoint ranges (caller discipline, see range_mut).
+unsafe impl Send for SliceRef {}
+unsafe impl Sync for SliceRef {}
+
+impl SliceRef {
+    pub fn new(slice: &mut [f32]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Mutable view of `start..end`.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges, and the
+    /// underlying slice must outlive the use (both hold within one
+    /// `ThreadPool::run` whose parts split the slice by block).
+    #[allow(clippy::mut_from_ref)] // disjoint-range discipline, see above
+    pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [f32] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_every_part_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for parts in 1..=4 {
+            let hits: Vec<AtomicU32> = (0..parts).map(|_| AtomicU32::new(0)).collect();
+            pool.run(parts, |p| {
+                hits[p].fetch_add(1, Ordering::Relaxed);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "parts={parts} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_across_many_dispatches() {
+        let pool = ThreadPool::new(3);
+        let total = AtomicU32::new(0);
+        for _ in 0..200 {
+            pool.run(3, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 600);
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let seen = AtomicU32::new(0);
+        let caller = thread::current().id();
+        pool.run(1, |p| {
+            assert_eq!(p, 0);
+            assert_eq!(thread::current().id(), caller, "part 0 must run inline");
+            seen.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parts_see_disjoint_writes() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0f32; 17];
+        let part = Partition::new(17, 4, usize::MAX);
+        let view = SliceRef::new(&mut data);
+        pool.run(part.blocks(), |b| {
+            let r = part.range(b);
+            // SAFETY: partition ranges are disjoint.
+            for v in unsafe { view.range_mut(r.start, r.end) } {
+                *v += 1.0 + b as f32;
+            }
+        });
+        for b in 0..part.blocks() {
+            for i in part.range(b) {
+                assert_eq!(data[i], 1.0 + b as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_balanced() {
+        for (rows, threads) in [(9usize, 8usize), (1, 4), (100, 7), (16, 16), (3, 16), (64, 1)] {
+            let part = Partition::new(rows, threads, usize::MAX);
+            let total: usize = (0..part.blocks()).map(|b| part.len(b)).sum();
+            assert_eq!(total, rows, "rows={rows} t={threads}");
+            let min = (0..part.blocks()).map(|b| part.len(b)).min().unwrap();
+            let max = (0..part.blocks()).map(|b| part.len(b)).max().unwrap();
+            assert!(max - min <= 1, "rows={rows} t={threads}: {min}..{max}");
+            // The satellite requirement: no block below half the average.
+            assert!(
+                (min * 2 * part.blocks()) >= rows,
+                "rows={rows} t={threads}: min {min} below half the mean"
+            );
+            // Ranges tile [0, rows).
+            let mut next = 0;
+            for b in 0..part.blocks() {
+                assert_eq!(part.range(b).start, next);
+                next = part.range(b).end;
+            }
+            assert_eq!(next, rows);
+        }
+    }
+
+    #[test]
+    fn partition_caps_at_rows_and_cap() {
+        assert_eq!(Partition::new(3, 16, usize::MAX).blocks(), 3);
+        assert_eq!(Partition::new(100, 16, 4).blocks(), 4);
+        assert_eq!(Partition::new(100, 0, 0).blocks(), 1);
+    }
+
+    #[test]
+    fn arena_rows_are_line_padded_and_disjoint() {
+        let mut arena = AccArena::padded(4, 9);
+        assert_eq!(arena.cols(), 9);
+        for b in 0..4 {
+            arena.row_mut(b).fill(b as f32);
+        }
+        for b in 0..4 {
+            assert!(arena.row(b).iter().all(|&v| v == b as f32));
+            let addr = arena.row(b).as_ptr() as usize;
+            assert_eq!(addr % CACHE_LINE, 0, "row {b} not line-aligned");
+        }
+        // Growing reallocates; shrinking is free and keeps the stride.
+        arena.ensure_cols(5);
+        assert_eq!(arena.cols(), 5);
+        arena.ensure_cols(40);
+        assert_eq!(arena.cols(), 40);
+        assert_eq!(arena.rows(), 4);
+    }
+
+    #[test]
+    fn unpadded_arena_packs_rows() {
+        let arena = AccArena::unpadded(3, 9);
+        let a0 = arena.row(0).as_ptr() as usize;
+        let a1 = arena.row(1).as_ptr() as usize;
+        assert_eq!(a1 - a0, 9 * 4, "ablation arena must pack rows tight");
+    }
+
+    #[test]
+    fn padded_slots_fold() {
+        let mut slots = PaddedSlots::new(3);
+        let view = slots.shared();
+        // SAFETY: distinct indices, serial test.
+        unsafe {
+            view.set(0, 0.5);
+            view.set(1, 2.0);
+            view.set(2, 1.0);
+        }
+        assert_eq!(slots.fold_max(3), 2.0);
+        assert_eq!(slots.fold_max(1), 0.5);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, |p| {
+                if p == 2 {
+                    panic!("boom in worker part");
+                }
+            });
+        }));
+        assert!(outcome.is_err(), "worker panic must re-raise on the dispatcher");
+        // The barrier drained and the pool is still usable.
+        let total = AtomicU32::new(0);
+        pool.run(3, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn caller_part_panic_waits_for_workers_then_resumes() {
+        let pool = ThreadPool::new(2);
+        let worker_ran = AtomicU32::new(0);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, |p| {
+                if p == 0 {
+                    panic!("boom in caller part");
+                }
+                worker_ran.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(outcome.is_err());
+        // The worker's part completed before the panic resumed — the
+        // borrowed job was never dropped out from under it.
+        assert_eq!(worker_ran.load(Ordering::Relaxed), 1);
+        let total = AtomicU32::new(0);
+        pool.run(2, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn oversubscribed_pool_still_correct() {
+        // More pool threads than cores (and than work): every part must
+        // still run exactly once through park/unpark cycles.
+        let pool = ThreadPool::with_affinity(16, AffinityHint::Pinned);
+        let total = AtomicU32::new(0);
+        for _ in 0..50 {
+            pool.run(5, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 250);
+    }
+
+    #[test]
+    fn shared_pool_serializes_dispatch() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let total = Arc::new(AtomicU32::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                let total = Arc::clone(&total);
+                thread::spawn(move || {
+                    for _ in 0..50 {
+                        pool.run(4, |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 50 * 4);
+    }
+}

@@ -34,8 +34,43 @@
 //! `delta` **upper-bounds** the old `plan_delta(prev, cur)` snapshot diff
 //! (triangle inequality); a `delta_tol` stop can only fire later than it
 //! would have under the old criterion, never earlier.
+//!
+//! # Threading model
+//!
+//! With `threads == 1` every iteration runs serially on the calling thread.
+//! With `threads > 1` the workspace carries a parallel execution engine,
+//! selected by [`ParallelBackend`]:
+//!
+//! * **`Pool`** (default) — a persistent [`ThreadPool`] owned by the
+//!   workspace (or shared, see below). Its `threads - 1` workers are
+//!   spawned **once** at build time, parked between dispatches, and
+//!   coordinated by an epoch barrier (atomic generation counter +
+//!   park/unpark), so an iteration performs **zero thread spawns and zero
+//!   heap allocations** — the same contract as the serial path, extended
+//!   to the threaded one (asserted in `rust/tests/alloc_free.rs`). The
+//!   per-thread `NextSum_col` partials live in one cache-line-padded
+//!   [`AccArena`] and the final reduction is column-parallel on the pool.
+//!   An [`AffinityHint`] optionally pins workers to cores.
+//! * **`SpawnPerIter`** — the legacy `thread::scope` create/join per
+//!   sweep group, kept for head-to-head benchmarking (`fig12`).
+//!
+//! Both backends bit-match each other (`rust/tests/prop_pool.rs`).
+//!
+//! **Pool lifetime and sharing.** The pool lives as long as its
+//! `Arc<ThreadPool>`: a session built with [`SessionBuilder::threads`]
+//! owns one pool for its whole life, so [`SolverSession::solve_batch`]
+//! reuses one pool across the entire batch, and each coordinator worker
+//! (one session per OS thread — see [`crate::coordinator::Service`])
+//! reuses one pool across every request it serves. To share a pool across
+//! sessions explicitly, build it once and pass the `Arc` to each builder
+//! via [`SessionBuilder::pool`]; `ThreadPool::run` serializes concurrent
+//! dispatches internally, so sharing trades parallelism for memory, never
+//! correctness.
+
+use std::sync::Arc;
 
 use crate::algo::convergence::{self, StopRule};
+use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
 use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
 use crate::error::{Error, Result};
@@ -53,17 +88,21 @@ use crate::util::{Matrix, Timer};
 ///   clone the result plan out), and the first [`SolverSession::solve`] on a
 ///   new shape.
 /// * **Must not allocate:** [`Solver::iterate`] / [`Solver::iterate_tracked`]
-///   on the serial path (`threads == 1`), and the whole of
-///   [`SolverSession::solve`] for a same-shape problem after the first solve
-///   (asserted by the counting-allocator test `rust/tests/alloc_free.rs`).
-/// * **Threaded caveat:** with `threads > 1` the workspace buffers are still
-///   reused, but `std::thread::scope` itself allocates when spawning OS
-///   threads each iteration; only the serial path is allocation-free.
+///   on the serial path (`threads == 1`) **and** on the pool backend
+///   (`threads > 1`, [`ParallelBackend::Pool`] — the default), and the
+///   whole of [`SolverSession::solve`] for a same-shape problem after the
+///   first solve (asserted by the counting-allocator test
+///   `rust/tests/alloc_free.rs`).
+/// * **Spawn-backend caveat:** with [`ParallelBackend::SpawnPerIter`] the
+///   workspace buffers are still reused, but `std::thread::scope` itself
+///   allocates when spawning OS threads each iteration; that legacy
+///   backend exists only for head-to-head benchmarking.
 #[derive(Debug)]
 pub struct Workspace {
     rows: usize,
     cols: usize,
     threads: usize,
+    backend: ParallelBackend,
     /// Column rescaling factors (`Factor_col`), length N.
     fcol: Vec<f32>,
     /// Reciprocals of `fcol` (zero-guarded) for in-sweep delta tracking.
@@ -72,23 +111,63 @@ pub struct Workspace {
     rowsum: Vec<f32>,
     /// Scratch column sums for the marginal-error check.
     err_scratch: Vec<f32>,
-    /// Per-thread private `NextSum_col` blocks (Algorithm 1 lines 5–15).
-    thread_acc: Vec<Vec<f32>>,
+    /// Per-thread `NextSum_col` partials (Algorithm 1 lines 5–15) as one
+    /// cache-line-padded arena.
+    acc: AccArena,
+    /// Per-thread tracked-delta maxima, one cache line each.
+    delta_slots: PaddedSlots,
+    /// The persistent execution engine (pool backend, `threads > 1`).
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Workspace {
-    /// Workspace for `m × n` problems solved with `threads` workers.
+    /// Workspace for `m × n` problems solved with `threads` workers on the
+    /// default pool backend (workers spawned here, once).
     pub fn new(m: usize, n: usize, threads: usize) -> Self {
+        Self::with_backend(m, n, threads, ParallelBackend::Pool, AffinityHint::None)
+    }
+
+    /// Workspace with an explicit parallel backend and affinity hint.
+    pub fn with_backend(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        affinity: AffinityHint,
+    ) -> Self {
         let threads = threads.max(1);
+        let pool = (threads > 1 && backend == ParallelBackend::Pool)
+            .then(|| Arc::new(ThreadPool::with_affinity(threads, affinity)));
+        Self::assemble(m, n, threads, backend, pool)
+    }
+
+    /// Workspace sharing an existing pool (its thread count wins). The
+    /// pool serializes concurrent dispatches, so any number of workspaces
+    /// may share one `Arc`.
+    pub fn with_pool(m: usize, n: usize, pool: Arc<ThreadPool>) -> Self {
+        let threads = pool.threads();
+        Self::assemble(m, n, threads, ParallelBackend::Pool, Some(pool))
+    }
+
+    fn assemble(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
         Self {
             rows: m,
             cols: n,
             threads,
+            backend,
             fcol: vec![0f32; n],
             inv_fcol: vec![0f32; n],
             rowsum: vec![0f32; m],
             err_scratch: vec![0f32; n],
-            thread_acc: (0..threads).map(|_| vec![0f32; n]).collect(),
+            acc: AccArena::padded(threads, n),
+            delta_slots: PaddedSlots::new(threads),
+            pool,
         }
     }
 
@@ -100,6 +179,17 @@ impl Workspace {
     /// Worker threads this workspace is provisioned for.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Which parallel execution engine drives `threads > 1` iterations.
+    pub fn backend(&self) -> ParallelBackend {
+        self.backend
+    }
+
+    /// The persistent pool, when the pool backend is active — share it
+    /// with other workspaces via [`Workspace::with_pool`].
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
     }
 
     /// Resize for a new shape. No-op (and allocation-free) when the shape is
@@ -114,9 +204,7 @@ impl Workspace {
         self.inv_fcol.resize(n, 0.0);
         self.rowsum.resize(m, 0.0);
         self.err_scratch.resize(n, 0.0);
-        for acc in &mut self.thread_acc {
-            acc.resize(n, 0.0);
-        }
+        self.acc.ensure_cols(n);
     }
 
     /// Marginal L-inf error of `plan` using workspace scratch (no allocation).
@@ -182,6 +270,18 @@ impl Solver for PotSolver {
     ) {
         if ws.threads <= 1 {
             pot::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.rowsum);
+        } else if let Some(pool) = &ws.pool {
+            parallel::pot_iterate_pool(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.rowsum,
+                &mut ws.acc,
+            );
         } else {
             parallel::pot_iterate_into(
                 plan,
@@ -192,7 +292,7 @@ impl Solver for PotSolver {
                 ws.threads,
                 &mut ws.fcol,
                 &mut ws.rowsum,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             );
         }
     }
@@ -217,6 +317,20 @@ impl Solver for PotSolver {
                 &mut ws.inv_fcol,
                 &mut ws.rowsum,
             )
+        } else if let Some(pool) = &ws.pool {
+            parallel::pot_iterate_pool_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+                &mut ws.acc,
+                &mut ws.delta_slots,
+            )
         } else {
             parallel::pot_iterate_tracked(
                 plan,
@@ -228,7 +342,7 @@ impl Solver for PotSolver {
                 &mut ws.fcol,
                 &mut ws.inv_fcol,
                 &mut ws.rowsum,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             )
         }
     }
@@ -250,6 +364,18 @@ impl Solver for CoffeeSolver {
     ) {
         if ws.threads <= 1 {
             coffee::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.rowsum);
+        } else if let Some(pool) = &ws.pool {
+            parallel::coffee_iterate_pool(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.rowsum,
+                &mut ws.acc,
+            );
         } else {
             parallel::coffee_iterate_into(
                 plan,
@@ -260,7 +386,7 @@ impl Solver for CoffeeSolver {
                 ws.threads,
                 &mut ws.fcol,
                 &mut ws.rowsum,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             );
         }
     }
@@ -285,6 +411,20 @@ impl Solver for CoffeeSolver {
                 &mut ws.inv_fcol,
                 &mut ws.rowsum,
             )
+        } else if let Some(pool) = &ws.pool {
+            parallel::coffee_iterate_pool_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+                &mut ws.acc,
+                &mut ws.delta_slots,
+            )
         } else {
             parallel::coffee_iterate_tracked(
                 plan,
@@ -296,7 +436,7 @@ impl Solver for CoffeeSolver {
                 &mut ws.fcol,
                 &mut ws.inv_fcol,
                 &mut ws.rowsum,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             )
         }
     }
@@ -318,6 +458,17 @@ impl Solver for MapUotSolver {
     ) {
         if ws.threads <= 1 {
             mapuot::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol);
+        } else if let Some(pool) = &ws.pool {
+            parallel::mapuot_iterate_pool(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.acc,
+            );
         } else {
             parallel::mapuot_iterate_into(
                 plan,
@@ -327,7 +478,7 @@ impl Solver for MapUotSolver {
                 fi,
                 ws.threads,
                 &mut ws.fcol,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             );
         }
     }
@@ -343,6 +494,19 @@ impl Solver for MapUotSolver {
     ) -> f32 {
         if ws.threads <= 1 {
             mapuot::iterate_tracked(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.inv_fcol)
+        } else if let Some(pool) = &ws.pool {
+            parallel::mapuot_iterate_pool_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.acc,
+                &mut ws.delta_slots,
+            )
         } else {
             parallel::mapuot_iterate_tracked(
                 plan,
@@ -353,7 +517,7 @@ impl Solver for MapUotSolver {
                 ws.threads,
                 &mut ws.fcol,
                 &mut ws.inv_fcol,
-                &mut ws.thread_acc,
+                &mut ws.acc,
             )
         }
     }
@@ -410,15 +574,41 @@ impl<F: FnMut(CheckEvent) -> ObserverAction + Send> ConvergenceObserver for F {
 pub struct SessionBuilder {
     kind: SolverKind,
     threads: usize,
+    backend: ParallelBackend,
+    affinity: AffinityHint,
+    pool: Option<Arc<ThreadPool>>,
     stop: StopRule,
     check_every: usize,
     observer: Option<Box<dyn ConvergenceObserver>>,
 }
 
 impl SessionBuilder {
-    /// Worker threads (1 = serial, allocation-free path). Default 1.
+    /// Worker threads (1 = serial path). Default 1. With the default
+    /// [`ParallelBackend::Pool`], `build` spawns the workers once and every
+    /// solve reuses them.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Parallel execution engine for `threads > 1`. Default
+    /// [`ParallelBackend::Pool`].
+    pub fn backend(mut self, backend: ParallelBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Core-affinity hint for pool workers. Default [`AffinityHint::None`].
+    pub fn affinity(mut self, affinity: AffinityHint) -> Self {
+        self.affinity = affinity;
+        self
+    }
+
+    /// Share an existing pool instead of spawning one (overrides
+    /// [`SessionBuilder::threads`] with the pool's thread count and forces
+    /// the pool backend).
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
         self
     }
 
@@ -442,15 +632,20 @@ impl SessionBuilder {
     }
 
     /// Build a session sized for `problem`'s shape. This is the warmup
-    /// allocation; subsequent same-shape solves are allocation-free.
+    /// allocation (including the one-time pool spawn); subsequent
+    /// same-shape solves are allocation-free.
     pub fn build(self, problem: &Problem) -> SolverSession {
         let (m, n) = (problem.rows(), problem.cols());
+        let ws = match self.pool {
+            Some(pool) => Workspace::with_pool(m, n, pool),
+            None => Workspace::with_backend(m, n, self.threads, self.backend, self.affinity),
+        };
         SolverSession {
             solver: solver_for(self.kind),
             stop: self.stop,
             check_every: self.check_every,
             observer: self.observer,
-            ws: Workspace::new(m, n, self.threads),
+            ws,
             plan: Matrix::zeros(m, n),
             colsum: vec![0f32; n],
         }
@@ -476,6 +671,9 @@ impl SolverSession {
         SessionBuilder {
             kind,
             threads: 1,
+            backend: ParallelBackend::Pool,
+            affinity: AffinityHint::None,
+            pool: None,
             stop: StopRule::default(),
             check_every: 8,
             observer: None,
@@ -696,6 +894,54 @@ mod tests {
             assert_eq!(plan.as_slice(), fresh.plan().as_slice());
             assert_eq!(report.iters, fresh_report.iters);
         }
+    }
+
+    /// Pool and spawn backends are the same numerics on the same partition
+    /// — bit-identical plans (the full property test is
+    /// `rust/tests/prop_pool.rs`; this covers the session dispatch).
+    #[test]
+    fn pool_backend_bitmatches_spawn_backend() {
+        for kind in SolverKind::ALL {
+            let p = Problem::random(23, 9, 0.6, 8);
+            let solver = solver_for(kind);
+            let mut ws_spawn =
+                Workspace::with_backend(23, 9, 3, ParallelBackend::SpawnPerIter, AffinityHint::None);
+            let mut ws_pool = Workspace::new(23, 9, 3);
+            assert!(ws_pool.pool().is_some());
+            assert!(ws_spawn.pool().is_none());
+            let mut a = p.plan.clone();
+            let mut cs_a = a.col_sums();
+            let mut b = p.plan.clone();
+            let mut cs_b = b.col_sums();
+            for _ in 0..4 {
+                let da = solver.iterate_tracked(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_spawn);
+                let db = solver.iterate_tracked(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_pool);
+                assert_eq!(da, db, "{}", kind.name());
+            }
+            assert_eq!(a.as_slice(), b.as_slice(), "{}", kind.name());
+            assert_eq!(cs_a, cs_b, "{}", kind.name());
+        }
+    }
+
+    /// One pool shared across sessions: dispatches serialize internally,
+    /// results match sessions with private pools.
+    #[test]
+    fn sessions_share_one_pool() {
+        let p = Problem::random(24, 18, 0.8, 42);
+        let pool = std::sync::Arc::new(ThreadPool::new(3));
+        let mut shared_a = SolverSession::builder(SolverKind::MapUot)
+            .pool(std::sync::Arc::clone(&pool))
+            .build(&p);
+        let mut shared_b = SolverSession::builder(SolverKind::Pot)
+            .pool(std::sync::Arc::clone(&pool))
+            .build(&p);
+        let mut private = SolverSession::builder(SolverKind::MapUot).threads(3).build(&p);
+        let ra = shared_a.solve(&p).unwrap();
+        let rb = shared_b.solve(&p).unwrap();
+        let rp = private.solve(&p).unwrap();
+        assert!(ra.converged && rb.converged && rp.converged);
+        assert_eq!(shared_a.plan().as_slice(), private.plan().as_slice());
+        assert_eq!(ra.iters, rp.iters);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! measure real wall time on this machine; hardware-gated figures run the
 //! simulators (DESIGN.md §Substitutions).
 
-use crate::algo::{self, SolverKind};
+use crate::algo::pool::{AccArena, ThreadPool};
+use crate::algo::{self, parallel, SolverKind};
 use crate::apps;
 use crate::bench::{fast_mode, measure, speedup_summary, Policy, Table};
 use crate::config::presets;
@@ -323,6 +324,161 @@ pub fn fig12() -> Table {
     t
 }
 
+/// Fig. 12 companion (measured): MAP-UOT iterations/second under the
+/// legacy spawn-per-iteration scope backend vs the persistent worker pool,
+/// plus the accumulator ablation (cache-line-padded arena vs packed
+/// unpadded arena vs the pre-arena `Vec<Vec<f32>>` rows).
+///
+/// The small-N shapes are where per-iteration dispatch overhead dominates
+/// — the pool's biggest win; the square shape shows the memory-bound
+/// regime where the backends converge. When `MAP_UOT_BENCH_JSON` is set
+/// (the `fig12_false_sharing` bench harness defaults it to
+/// `BENCH_pool.json`), also emits the machine-readable series so the perf
+/// trajectory can be tracked run-over-run; the plain CLI `fig 12` stays
+/// side-effect-free.
+pub fn fig12_pool() -> Table {
+    let threads: &[usize] = if fast_mode() { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let shapes: &[(usize, usize)] = if fast_mode() {
+        &[(256, 64), (256, 256)]
+    } else {
+        &[(1024, 64), (1024, 1024), (4096, 256)]
+    };
+    let mut headers = vec!["matrix".to_string(), "backend".to_string()];
+    headers.extend(threads.iter().map(|t| format!("T={t}")));
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        "Fig 12b (measured): MAP-UOT iterations/sec by backend x threads",
+        &hdr,
+    );
+    let mut json_rows = String::new();
+    for &(m, n) in shapes {
+        for backend in ["spawn", "pool", "pool-unpadded", "vecvec"] {
+            let mut cells = vec![format!("{m}x{n}"), backend.to_string()];
+            for &tc in threads {
+                let ips = mapuot_iters_per_sec(backend, m, n, tc);
+                if !json_rows.is_empty() {
+                    json_rows.push(',');
+                }
+                json_rows.push_str(&format!(
+                    "\n    {{\"m\": {m}, \"n\": {n}, \"backend\": \"{backend}\", \
+                     \"threads\": {tc}, \"iters_per_sec\": {ips:.2}}}"
+                ));
+                cells.push(format!("{ips:.0}"));
+            }
+            t.row(&cells);
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fig12_pool\",\n  \"unit\": \"iters_per_sec\",\n  \
+         \"rows\": [{json_rows}\n  ]\n}}\n"
+    );
+    // The CLI path stays side-effect-free: only an explicit opt-in (set by
+    // the bench harness, or the user) writes the JSON file.
+    if let Ok(path) = std::env::var("MAP_UOT_BENCH_JSON") {
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("[fig12_pool] wrote {path}"),
+            Err(e) => eprintln!("[fig12_pool] could not write {path}: {e}"),
+        }
+    }
+    t
+}
+
+/// Median MAP-UOT iterations/second for one Fig. 12b configuration.
+fn mapuot_iters_per_sec(backend: &str, m: usize, n: usize, threads: usize) -> f64 {
+    let p = algo::Problem::random(m, n, 0.7, 42);
+    let mut plan = p.plan.clone();
+    let mut colsum = plan.col_sums();
+    let mut fcol = vec![0f32; n];
+    let iters_per_rep = if m * n >= 1024 * 1024 { 4 } else { 16 };
+    let policy = Policy { warmup: 1, reps: if fast_mode() { 3 } else { 5 } };
+    let sec = match backend {
+        "pool" | "pool-unpadded" => {
+            // The pool is built once, outside the measured loop — that is
+            // the whole point of the persistent engine.
+            let pool = ThreadPool::new(threads);
+            let mut acc = if backend == "pool" {
+                AccArena::padded(threads, n)
+            } else {
+                AccArena::unpadded(threads, n)
+            };
+            measure(policy, || {
+                for _ in 0..iters_per_rep {
+                    parallel::mapuot_iterate_pool(
+                        &mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, &pool, &mut fcol, &mut acc,
+                    );
+                }
+            })
+        }
+        "spawn" => {
+            let mut acc = AccArena::padded(threads, n);
+            measure(policy, || {
+                for _ in 0..iters_per_rep {
+                    parallel::mapuot_iterate_into(
+                        &mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, threads, &mut fcol, &mut acc,
+                    );
+                }
+            })
+        }
+        _ => {
+            let mut acc: Vec<Vec<f32>> = (0..threads.max(1)).map(|_| vec![0f32; n]).collect();
+            measure(policy, || {
+                for _ in 0..iters_per_rep {
+                    mapuot_iterate_vecvec(
+                        &mut plan, &mut colsum, &p.rpd, &p.cpd, p.fi, threads, &mut fcol, &mut acc,
+                    );
+                }
+            })
+        }
+    };
+    iters_per_rep as f64 / sec
+}
+
+/// The pre-arena accumulator layout — separately allocated `Vec<Vec<f32>>`
+/// rows, uniform `ceil(m/t)` blocks, scope dispatch — kept **only** as the
+/// Fig. 12b ablation baseline; every production path uses the padded
+/// [`AccArena`].
+#[allow(clippy::too_many_arguments)]
+fn mapuot_iterate_vecvec(
+    plan: &mut crate::util::Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    acc: &mut [Vec<f32>],
+) {
+    let (m, n) = (plan.rows(), plan.cols());
+    let t = threads.max(1).min(m.max(1)).min(acc.len().max(1));
+    let rows_per = m.div_ceil(t);
+    crate::algo::scaling::factors_into(fcol, cpd, colsum, fi);
+    let fcol_ref: &[f32] = fcol;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = plan
+            .as_mut_slice()
+            .chunks_mut(rows_per * n)
+            .zip(rpd.chunks(rows_per))
+            .zip(acc.iter_mut())
+            .map(|((block, rpd_block), local)| {
+                s.spawn(move || {
+                    local.fill(0.0);
+                    crate::algo::mapuot::fused_rows(block, n, rpd_block, fcol_ref, fi, local);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    let used = m.div_ceil(rows_per);
+    colsum.fill(0.0);
+    for local in &acc[..used] {
+        for (sum, &v) in colsum.iter_mut().zip(local.iter()) {
+            *sum += v;
+        }
+    }
+}
+
 /// Fig. 13: GPU performance vs POT (3090 Ti model).
 pub fn fig13() -> (Table, String) {
     let g = presets::rtx_3090ti_gpu();
@@ -486,6 +642,7 @@ pub fn all() {
     fig10().print();
     fig11().print();
     fig12().print();
+    fig12_pool().print();
     let (t, s) = fig13();
     t.print();
     println!("summary (paper §5.3.1): {s}\n");

@@ -3,7 +3,7 @@
 pub mod parser;
 pub mod presets;
 
-use crate::algo::{SolverKind, StopRule};
+use crate::algo::{AffinityHint, ParallelBackend, SolverKind, StopRule};
 use crate::error::Result;
 use parser::RawConfig;
 
@@ -33,6 +33,11 @@ pub struct ServiceConfig {
     pub solver: SolverKind,
     /// Threads per native solve.
     pub solver_threads: usize,
+    /// Parallel engine for threaded native solves (each coordinator worker
+    /// keeps one persistent pool for its whole life under `Pool`).
+    pub parallel: ParallelBackend,
+    /// Core-affinity hint for pool workers.
+    pub affinity: AffinityHint,
     /// Stopping criteria.
     pub stop: StopRule,
     /// Artifact directory for the PJRT backend.
@@ -49,6 +54,8 @@ impl Default for ServiceConfig {
             backend: Backend::Native,
             solver: SolverKind::MapUot,
             solver_threads: 1,
+            parallel: ParallelBackend::Pool,
+            affinity: AffinityHint::None,
             stop: StopRule::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -71,6 +78,17 @@ impl ServiceConfig {
             Some(s) => SolverKind::parse(s)
                 .ok_or_else(|| crate::error::Error::Config(format!("unknown solver {s:?}")))?,
         };
+        let parallel = match c.get("solver", "parallel") {
+            None => d.parallel,
+            Some(s) => ParallelBackend::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("unknown parallel backend {s:?}"))
+            })?,
+        };
+        let affinity = if c.get_or("solver", "pin", false)? {
+            AffinityHint::Pinned
+        } else {
+            AffinityHint::None
+        };
         Ok(Self {
             workers: c.get_or("coordinator", "workers", d.workers)?,
             batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
@@ -79,6 +97,8 @@ impl ServiceConfig {
             backend,
             solver,
             solver_threads: c.get_or("solver", "threads", d.solver_threads)?,
+            parallel,
+            affinity,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -104,7 +124,8 @@ mod tests {
     #[test]
     fn from_raw_full() {
         let raw = parser::RawConfig::parse(
-            "[coordinator]\nworkers=3\nbackend=pjrt\n[solver]\nkind=coffee\nthreads=2\nmax_iter=50\n",
+            "[coordinator]\nworkers=3\nbackend=pjrt\n\
+             [solver]\nkind=coffee\nthreads=2\nmax_iter=50\nparallel=spawn\npin=true\n",
         )
         .unwrap();
         let c = ServiceConfig::from_raw(&raw).unwrap();
@@ -112,7 +133,18 @@ mod tests {
         assert_eq!(c.backend, Backend::Pjrt);
         assert_eq!(c.solver, SolverKind::Coffee);
         assert_eq!(c.solver_threads, 2);
+        assert_eq!(c.parallel, ParallelBackend::SpawnPerIter);
+        assert_eq!(c.affinity, AffinityHint::Pinned);
         assert_eq!(c.stop.max_iter, 50);
+    }
+
+    #[test]
+    fn parallel_backend_defaults_to_pool() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.parallel, ParallelBackend::Pool);
+        assert_eq!(c.affinity, AffinityHint::None);
+        let raw = parser::RawConfig::parse("[solver]\nparallel=forkbomb\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! dedicated thread that owns it for its whole life; workers talk to it
 //! over a channel. One executor serializes device work — fine on the CPU
 //! plugin, which parallelizes internally across the XLA thread pool.
+//!
+//! Threading model: this executor is the PJRT counterpart of the native
+//! path's persistent solver pool (`algo::pool`) — in both cases the
+//! expensive resource (XLA client here, parked OS workers there) is
+//! created once and owned by a long-lived thread, and the per-request
+//! cost is a channel round-trip, never a spawn/join. The executor thread
+//! itself never runs the native pool; `Backend::Pjrt` and the native
+//! `ParallelBackend` are orthogonal knobs.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;

@@ -120,7 +120,10 @@ fn worker_loop(
     // One reusable session per worker: the service's steady state is a
     // stream of same-shape problems (the batcher groups by shape), so after
     // the first solve of each shape the native path allocates only the
-    // result plan it hands back.
+    // result plan it hands back. With `solver_threads > 1` the session also
+    // owns one persistent solver pool (spawned on the first request, parked
+    // between iterations), so this OS thread reuses the same workers for
+    // every solve it ever executes — no spawn/join on the request path.
     let mut session: Option<SolverSession> = None;
     while let Some(batch) = batcher.pop_batch() {
         metrics.record_batch(batch.len());
@@ -157,6 +160,8 @@ fn execute(
             let sess = session.get_or_insert_with(|| {
                 SolverSession::builder(cfg.solver)
                     .threads(cfg.solver_threads)
+                    .backend(cfg.parallel)
+                    .affinity(cfg.affinity)
                     .stop(cfg.stop)
                     .build(&req.problem)
             });
@@ -214,6 +219,25 @@ mod tests {
         assert_eq!(m.completed, 32);
         assert_eq!(m.submitted, 32);
         assert!(m.mean_batch_size >= 1.0);
+        Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn threaded_workers_use_persistent_pools() {
+        // Two coordinator workers, each with a 2-thread solver pool: many
+        // same-shape requests reuse each worker's pool and workspace.
+        let mut cfg = native_cfg(2);
+        cfg.solver_threads = 2;
+        let svc = Arc::new(Service::start(cfg).unwrap());
+        let mut rxs = Vec::new();
+        for seed in 0..16u64 {
+            rxs.push(svc.submit(Problem::random(24, 24, 0.7, seed)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.result.unwrap().report.converged);
+        }
+        assert_eq!(svc.metrics().completed, 16);
         Arc::try_unwrap(svc).ok().unwrap().shutdown();
     }
 

@@ -1,44 +1,73 @@
 //! Crate-wide error type.
-
-use thiserror::Error;
+//!
+//! Display/Error impls are hand-rolled (no `thiserror`): the build
+//! environment is offline, and the crate's no-external-deps contract
+//! (see `rust/Cargo.toml`) is what keeps the tier-1 gate runnable there.
 
 /// Errors surfaced by the MAP-UOT library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Problem construction or solver-input validation failed.
-    #[error("invalid problem: {0}")]
     InvalidProblem(String),
 
     /// Configuration file / preset errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// AOT artifact manifest / loading errors.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT runtime failures (compile, execute, literal conversion).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator/service lifecycle errors (queue closed, worker died...).
-    #[error("service error: {0}")]
     Service(String),
 
     /// Solver did not converge within the iteration budget.
-    #[error("no convergence after {iters} iterations (err={err})")]
     NoConvergence { iters: usize, err: f32 },
 
     /// A `ConvergenceObserver` canceled the solve at a check boundary.
-    #[error("solve canceled by observer after {iters} iterations")]
     Canceled { iters: usize },
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure (artifact files, config files).
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidProblem(msg) => write!(f, "invalid problem: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Service(msg) => write!(f, "service error: {msg}"),
+            Error::NoConvergence { iters, err } => {
+                write!(f, "no convergence after {iters} iterations (err={err})")
+            }
+            Error::Canceled { iters } => {
+                write!(f, "solve canceled by observer after {iters} iterations")
+            }
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::xla_stub::Error> for Error {
+    fn from(e: crate::xla_stub::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }

@@ -19,7 +19,11 @@
 //! session owns every scratch buffer (see [`algo::Workspace`] for the
 //! allocation contract), tracks `plan_delta` inside the fused sweep
 //! instead of snapshotting the plan, and can report progress or cancel
-//! through a [`algo::ConvergenceObserver`]:
+//! through a [`algo::ConvergenceObserver`]. With `.threads(t)` the session
+//! also owns a persistent worker pool ([`algo::pool`]): workers spawn once
+//! at build time and every iteration dispatches to them over an epoch
+//! barrier — zero thread spawns and zero heap allocations per solve after
+//! warmup, serial or threaded:
 //!
 //! ```no_run
 //! use map_uot::algo::{CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule};
@@ -58,10 +62,11 @@ pub mod runtime;
 pub mod sim;
 pub mod testing;
 pub mod util;
+pub mod xla_stub;
 
 pub use algo::{
-    solver_for, CheckEvent, ConvergenceObserver, ObserverAction, Problem, SolveOptions,
-    Solver, SolverKind, SolverSession, Workspace,
+    solver_for, AffinityHint, CheckEvent, ConvergenceObserver, ObserverAction, ParallelBackend,
+    Problem, SolveOptions, Solver, SolverKind, SolverSession, ThreadPool, Workspace,
 };
 pub use error::{Error, Result};
 

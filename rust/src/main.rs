@@ -10,7 +10,10 @@
 
 use std::collections::HashMap;
 
-use map_uot::algo::{CheckEvent, ObserverAction, Problem, SolverKind, SolverSession, StopRule};
+use map_uot::algo::{
+    AffinityHint, CheckEvent, ObserverAction, ParallelBackend, Problem, SolverKind, SolverSession,
+    StopRule,
+};
 use map_uot::apps;
 use map_uot::bench::figures;
 use map_uot::config::{Backend, ServiceConfig};
@@ -88,6 +91,8 @@ fn print_help() {
          COMMANDS\n\
          \x20 solve  --m 1024 --n 1024 --fi 0.7 --solver mapuot|coffee|pot\n\
          \x20        --threads 1 --max-iter 1000 --tol 1e-4 --seed 42 --backend native|pjrt\n\
+         \x20        --par pool|spawn (threaded engine: persistent worker pool, default,\n\
+         \x20        or legacy scope-per-iteration) --pin (pin pool workers to cores)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -130,8 +135,20 @@ fn cmd_solve(a: &Args) -> i32 {
         });
     }
 
+    // Unlike --solver, a typo here must not silently fall back: the flag
+    // exists to benchmark the two backends head-to-head.
+    let par = match ParallelBackend::parse(&a.str("par", "pool")) {
+        Some(par) => par,
+        None => {
+            eprintln!("error: unknown --par backend {:?} (expected pool|spawn)", a.str("par", ""));
+            return 1;
+        }
+    };
+    let affinity = if a.get("pin", false) { AffinityHint::Pinned } else { AffinityHint::None };
     let mut builder = SolverSession::builder(solver)
         .threads(a.get("threads", 1usize))
+        .backend(par)
+        .affinity(affinity)
         .stop(stop);
     if a.get("progress", false) {
         builder = builder.observer(|ev: CheckEvent| {
@@ -283,7 +300,10 @@ fn cmd_fig(which: &str) -> i32 {
         }
         "10" => figures::fig10().print(),
         "11" => figures::fig11().print(),
-        "12" => figures::fig12().print(),
+        "12" => {
+            figures::fig12().print();
+            figures::fig12_pool().print();
+        }
         "13" => {
             let (t, s) = figures::fig13();
             t.print();

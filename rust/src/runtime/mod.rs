@@ -15,6 +15,10 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::util::Matrix;
+// Offline build: the real xla-rs binding is unavailable, so the PJRT
+// surface compiles against the in-repo stub (fails fast at `open`).
+// Swap this alias for the real crate when the build gains the binding.
+use crate::xla_stub as xla;
 
 /// Output of one UOT chunk execution.
 #[derive(Debug, Clone, Copy)]

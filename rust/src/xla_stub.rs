@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` PJRT binding (xla-rs API surface).
+//!
+//! The build environment is fully offline and ships no XLA extension, so
+//! the crate cannot link the real `xla` crate. This module mirrors the
+//! exact subset of its API that [`crate::runtime`] uses; every entry
+//! point fails fast with [`Error::unavailable`], which `Runtime::open`
+//! surfaces as a typed `Error::Runtime` — the PJRT backend degrades into
+//! a clean "unavailable" error while the native solvers (the tier-1
+//! surface) stay fully functional.
+//!
+//! Swapping in the real binding is a two-line change per importer:
+//! replace `use crate::xla_stub as xla;` with the real crate once it is
+//! available in the build environment (see `coordinator::pjrt_exec` for
+//! the threading constraints the real client imposes: `PjRtClient` is
+//! `Rc`-based and must stay on one thread).
+
+/// Error from the (stubbed) XLA runtime.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error("PJRT backend unavailable: built against the in-repo xla stub (offline build)".into())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stubbed PJRT client (`xla::PjRtClient`).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding opens the CPU plugin; the stub fails fast.
+    pub fn cpu() -> Result<Self, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stubbed compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors xla-rs: returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stubbed device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stubbed HLO module proto (text-parsed artifacts).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Stubbed XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stubbed host literal.
+pub struct Literal;
+
+impl Literal {
+    /// 1-D literal from a host slice (real binding copies; stub is inert —
+    /// it can never reach an executable, which fails at compile()).
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_and_typed() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("unavailable"), "{msg}");
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1f32]).reshape(&[1]).is_err());
+    }
+}

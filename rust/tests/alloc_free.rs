@@ -1,7 +1,13 @@
 //! Counting-allocator proof of the session allocation contract: after the
 //! first (warmup) solve, `SolverSession::solve` on same-shape problems must
-//! perform **zero heap allocations** on the serial path — no `plan.clone()`
-//! for delta tracking, no per-iteration scratch, no per-check buffers.
+//! perform **zero heap allocations** — no `plan.clone()` for delta
+//! tracking, no per-iteration scratch, no per-check buffers. The contract
+//! covers the serial path **and** the threaded pool backend: the pool's
+//! workers are spawned at build time, parked between epoch dispatches, and
+//! the job is published as a borrowed `&dyn Fn` — so the counter (which
+//! sees every thread's allocations) must stay at zero there too. The
+//! legacy spawn-per-iteration backend is exempt: `thread::scope` allocates
+//! per spawned thread, which is exactly why it is no longer the default.
 //!
 //! This file holds exactly one test so no concurrent test in the same
 //! binary can pollute the global allocation counter.
@@ -52,29 +58,35 @@ fn hot_loop_allocates_nothing_after_warmup() {
     let problems: Vec<Problem> = (0..3).map(|s| Problem::random(48, 40, 0.7, s)).collect();
     let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 200 };
 
-    for kind in SolverKind::ALL {
-        let mut session = SolverSession::builder(kind)
-            .threads(1)
-            .stop(stop)
-            .check_every(8)
-            .build(&problems[0]);
-        // Warmup: first solve may allocate (it sizes nothing extra today,
-        // but the contract only starts after it).
-        session.solve(&problems[0]).expect("warmup solve");
+    // Serial and pooled-threaded paths share one contract: zero heap
+    // allocations after warmup. (threads = 4 exercises the pool's epoch
+    // dispatch, the padded arena and the column-parallel reduction.)
+    for threads in [1usize, 4] {
+        for kind in SolverKind::ALL {
+            let mut session = SolverSession::builder(kind)
+                .threads(threads)
+                .stop(stop)
+                .check_every(8)
+                .build(&problems[0]);
+            // Warmup: the build spawned the pool workers; the first solve
+            // may allocate (it sizes nothing extra today, but the contract
+            // only starts after it).
+            session.solve(&problems[0]).expect("warmup solve");
 
-        ALLOCATIONS.store(0, Ordering::SeqCst);
-        COUNTING.store(true, Ordering::SeqCst);
-        for p in &problems {
-            session.solve(p).expect("steady-state solve");
+            ALLOCATIONS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+            for p in &problems {
+                session.solve(p).expect("steady-state solve");
+            }
+            COUNTING.store(false, Ordering::SeqCst);
+
+            let count = ALLOCATIONS.load(Ordering::SeqCst);
+            assert_eq!(
+                count,
+                0,
+                "{} (threads={threads}): {count} heap allocations in the post-warmup hot loop",
+                kind.name()
+            );
         }
-        COUNTING.store(false, Ordering::SeqCst);
-
-        let count = ALLOCATIONS.load(Ordering::SeqCst);
-        assert_eq!(
-            count,
-            0,
-            "{}: {count} heap allocations in the post-warmup hot loop",
-            kind.name()
-        );
     }
 }

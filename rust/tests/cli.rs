@@ -44,6 +44,25 @@ fn solve_all_solver_names_parse() {
 }
 
 #[test]
+fn solve_threaded_on_both_parallel_backends() {
+    for par in ["pool", "spawn"] {
+        let (stdout, _, ok) = run(&[
+            "solve", "--m", "48", "--n", "32", "--threads", "3", "--par", par, "--pin",
+            "--max-iter", "200",
+        ]);
+        assert!(ok, "par={par}: {stdout}");
+        assert!(stdout.contains("converged=true"), "par={par}: {stdout}");
+    }
+}
+
+#[test]
+fn solve_rejects_unknown_parallel_backend() {
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--par", "sapwn"]);
+    assert!(!ok, "typoed --par must not silently fall back");
+    assert!(stderr.contains("unknown --par backend"), "{stderr}");
+}
+
+#[test]
 fn fig_roofline_prints_eq1() {
     let (stdout, _, ok) = run(&["fig", "3"]);
     assert!(ok);

@@ -1,0 +1,178 @@
+//! Property tests for the persistent-pool execution engine: for every
+//! solver, shape and thread count — including m < threads and heavy
+//! oversubscription — the pool backend must produce **bit-identical**
+//! plans, carried column sums and tracked deltas to the legacy
+//! `thread::scope` backend. Both backends share the balanced `Partition`,
+//! the block kernels and the block-ascending reduction order, so equality
+//! is exact, not approximate.
+//!
+//! CI runs this file under a thread-oversubscription matrix: set
+//! `MAP_UOT_POOL_THREADS=t` to restrict the sweep to one thread count
+//! (e.g. 16 on a 2-core runner).
+
+use std::sync::Arc;
+
+use map_uot::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
+use map_uot::algo::{parallel, solver_for, Problem, SolverKind, SolverSession, Workspace};
+
+/// Thread counts to sweep: the full ladder by default, or the single value
+/// from `MAP_UOT_POOL_THREADS` (the CI oversubscription matrix).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("MAP_UOT_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("MAP_UOT_POOL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 3, 4, 8, 16],
+    }
+}
+
+// (8, 1200) crosses PAR_REDUCE_MIN_COLS so the column-parallel
+// `reduce_acc_pool` branch is exercised, not just the serial reduction.
+const SHAPES: &[(usize, usize)] = &[(1, 1), (2, 3), (9, 8), (23, 17), (64, 48), (8, 1200)];
+
+/// Pool-backed `Solver::iterate` bit-matches the scope backend for all
+/// three solvers across shapes and thread counts.
+#[test]
+fn pool_iterate_bitmatches_scope() {
+    for kind in SolverKind::ALL {
+        for &(m, n) in SHAPES {
+            for &t in &thread_counts() {
+                let p = Problem::random(m, n, 0.7, (m * 31 + n) as u64);
+                let solver = solver_for(kind);
+                let mut ws_spawn = Workspace::with_backend(
+                    m,
+                    n,
+                    t,
+                    ParallelBackend::SpawnPerIter,
+                    AffinityHint::None,
+                );
+                let mut ws_pool =
+                    Workspace::with_backend(m, n, t, ParallelBackend::Pool, AffinityHint::None);
+                let mut a = p.plan.clone();
+                let mut cs_a = a.col_sums();
+                let mut b = p.plan.clone();
+                let mut cs_b = b.col_sums();
+                for it in 0..4 {
+                    solver.iterate(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_spawn);
+                    solver.iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_pool);
+                    assert_eq!(
+                        a.as_slice(),
+                        b.as_slice(),
+                        "{} {m}x{n} t={t} iter={it}: plans diverged",
+                        kind.name()
+                    );
+                }
+                assert_eq!(cs_a, cs_b, "{} {m}x{n} t={t}: colsums diverged", kind.name());
+            }
+        }
+    }
+}
+
+/// Same contract for the tracked variants, including the returned delta.
+#[test]
+fn pool_tracked_bitmatches_scope_tracked() {
+    for kind in SolverKind::ALL {
+        for &(m, n) in SHAPES {
+            for &t in &thread_counts() {
+                let p = Problem::random(m, n, 0.6, (m * 7 + n * 3) as u64);
+                let solver = solver_for(kind);
+                let mut ws_spawn = Workspace::with_backend(
+                    m,
+                    n,
+                    t,
+                    ParallelBackend::SpawnPerIter,
+                    AffinityHint::None,
+                );
+                let mut ws_pool =
+                    Workspace::with_backend(m, n, t, ParallelBackend::Pool, AffinityHint::None);
+                let mut a = p.plan.clone();
+                let mut cs_a = a.col_sums();
+                let mut b = p.plan.clone();
+                let mut cs_b = b.col_sums();
+                for it in 0..4 {
+                    let da =
+                        solver.iterate_tracked(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_spawn);
+                    let db =
+                        solver.iterate_tracked(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_pool);
+                    assert_eq!(
+                        da.to_bits(),
+                        db.to_bits(),
+                        "{} {m}x{n} t={t} iter={it}: deltas diverged ({da} vs {db})",
+                        kind.name()
+                    );
+                }
+                assert_eq!(a.as_slice(), b.as_slice(), "{} {m}x{n} t={t}", kind.name());
+                assert_eq!(cs_a, cs_b, "{} {m}x{n} t={t}", kind.name());
+            }
+        }
+    }
+}
+
+/// Direct kernel-level check of the MAP-UOT pool path (no session in the
+/// loop), with fewer rows than pool threads.
+#[test]
+fn direct_mapuot_pool_matches_scope_with_few_rows() {
+    for &t in &thread_counts() {
+        let (m, n) = (3usize, 29usize);
+        let p = Problem::random(m, n, 0.8, 11);
+        let pool = ThreadPool::new(t);
+        let mut fcol_a = vec![0f32; n];
+        let mut fcol_b = vec![0f32; n];
+        let mut inv_a = vec![0f32; n];
+        let mut inv_b = vec![0f32; n];
+        let mut acc_a = AccArena::padded(t, n);
+        let mut acc_b = AccArena::padded(t, n);
+        let mut deltas = PaddedSlots::new(t);
+        let mut a = p.plan.clone();
+        let mut cs_a = a.col_sums();
+        let mut b = p.plan.clone();
+        let mut cs_b = b.col_sums();
+        for _ in 0..3 {
+            let da = parallel::mapuot_iterate_tracked(
+                &mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, t, &mut fcol_a, &mut inv_a, &mut acc_a,
+            );
+            let db = parallel::mapuot_iterate_pool_tracked(
+                &mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &pool, &mut fcol_b, &mut inv_b,
+                &mut acc_b, &mut deltas,
+            );
+            assert_eq!(da.to_bits(), db.to_bits(), "t={t}");
+        }
+        assert_eq!(a.as_slice(), b.as_slice(), "t={t}");
+        assert_eq!(cs_a, cs_b, "t={t}");
+    }
+}
+
+/// Full solves agree across backends: same plans (bit-exact), same
+/// iteration counts.
+#[test]
+fn full_solve_agrees_across_backends() {
+    for &t in &thread_counts() {
+        let p = Problem::random(32, 24, 0.7, 21);
+        let mut spawn = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .backend(ParallelBackend::SpawnPerIter)
+            .build(&p);
+        let mut pool = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .backend(ParallelBackend::Pool)
+            .build(&p);
+        let rs = spawn.solve(&p).unwrap();
+        let rp = pool.solve(&p).unwrap();
+        assert_eq!(rs.iters, rp.iters, "t={t}");
+        assert_eq!(spawn.plan().as_slice(), pool.plan().as_slice(), "t={t}");
+    }
+}
+
+/// A shared pool serving two sessions produces the same bits as private
+/// pools (dispatches serialize; arithmetic is unchanged).
+#[test]
+fn shared_pool_bitmatches_private_pool() {
+    let t = *thread_counts().first().unwrap();
+    let p = Problem::random(24, 16, 0.7, 5);
+    let shared = Arc::new(ThreadPool::new(t));
+    let mut a = SolverSession::builder(SolverKind::Coffee)
+        .pool(Arc::clone(&shared))
+        .build(&p);
+    let mut b = SolverSession::builder(SolverKind::Coffee).threads(t).build(&p);
+    a.solve(&p).unwrap();
+    b.solve(&p).unwrap();
+    assert_eq!(a.plan().as_slice(), b.plan().as_slice());
+}
