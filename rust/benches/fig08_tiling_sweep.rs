@@ -1,9 +1,24 @@
-//! `cargo bench` harness regenerating paper Figure 8.
-//! Thin wrapper over `map_uot::bench::figures` (criterion is unavailable
-//! offline; see DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
+//! `cargo bench` harness for the tiling sweep: the paper's Figure 8 GPU
+//! tables (3090 Ti model) plus the **measured CPU tiled kernel** — MAP-UOT
+//! ms/iter across shapes × tile widths × kernel backends on this host.
+//! Emits `BENCH_tiling.json` for the perf trajectory. Thin wrapper over
+//! `map_uot::bench::figures` (criterion is unavailable offline; see
+//! DESIGN.md). Set MAP_UOT_BENCH_FAST=1 for a quick pass.
 
 fn main() {
+    // The bench harness (unlike the side-effect-free CLI) emits the
+    // machine-readable series by default — into the committed repo-root
+    // snapshot, regardless of the invocation cwd (CI runs from rust/).
+    // Own env var, distinct from fig12's MAP_UOT_BENCH_JSON, so running
+    // both benches in one process clobbers neither series.
+    if std::env::var("MAP_UOT_TILING_JSON").is_err() {
+        std::env::set_var(
+            "MAP_UOT_TILING_JSON",
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_tiling.json"),
+        );
+    }
     let (a, b) = map_uot::bench::figures::fig08();
     a.print();
     b.print();
+    map_uot::bench::figures::fig08_cpu().print();
 }

@@ -1,0 +1,905 @@
+//! Kernel backends: runtime-dispatched SIMD implementations of the two
+//! fused row primitives, plus the cache-aware tiling/streaming policy.
+//!
+//! The paper's whole argument is that UOT iteration is memory-bound, so the
+//! inner loops must run as close to the hardware as the hardware allows.
+//! This module turns the two fused row primitives of `algo::mapuot` —
+//! `scale_by_vec_and_sum` (Computations I+II) and
+//! `scale_by_scalar_and_accumulate{,_tracked}` (Computations III+IV) — into
+//! a [`Kernel`] trait with three implementations:
+//!
+//! * [`KernelKind::Scalar`] — plain element loops; the portable reference
+//!   every other backend is property-tested against
+//!   (`rust/tests/prop_kernels.rs`).
+//! * [`KernelKind::Unrolled`] — the 16-lane unrolled loops (LLVM
+//!   auto-vectorizes them); today's default numerics, bit-identical to the
+//!   free functions in `algo::mapuot`.
+//! * [`KernelKind::Avx2`] — hand-written `std::arch` AVX2+FMA intrinsics,
+//!   with optional **non-temporal stores** in Computations III/IV: once the
+//!   plan exceeds the last-level cache, every iteration streams it from
+//!   DRAM anyway, so the plan write pays a read-for-ownership (RFO) line
+//!   fill it never uses — ~3 matrix transfers per iteration instead of the
+//!   Roofline-minimum 2. `_mm256_stream_ps` bypasses the RFO; below the LLC
+//!   threshold regular stores keep the matrix cache-resident across
+//!   iterations, which is strictly better, so streaming is gated on
+//!   [`KernelPolicy::stream_for`] (threshold = detected LLC size,
+//!   `util::cputopo`).
+//!
+//! Selection happens **once per session build** ([`KernelPolicy::for_shape`]):
+//! explicit CLI/config choice wins, then the `MAP_UOT_KERNEL` /
+//! `MAP_UOT_TILE` environment overrides, then runtime CPUID detection
+//! (`is_x86_feature_detected!`). Requesting `avx2` on hardware without it
+//! falls back to `unrolled` — no `target-cpu` compile flag is ever required
+//! for correctness, only for letting LLVM use wider codegen in the
+//! portable paths.
+//!
+//! **Tiling.** [`KernelPolicy`] also owns the column-tiling parameters the
+//! tiled fused sweep (`mapuot::fused_rows_policy`) uses at large `n`:
+//! column panels of [`KernelPolicy::tile_cols`] columns keep `Factor_col` +
+//! `inv_fcol` + `NextSum_col` + a row panel L1-resident, and row chunks of
+//! [`KernelPolicy::row_chunk`] rows keep the chunk L2-resident between the
+//! two phases, with `Sum_row` carried across panels in workspace scratch.
+//! `auto` sizes both from the detected topology; `tune` additionally runs a
+//! one-shot measurement ([`autotune_tile_cols`]) at workspace build.
+
+use crate::util::{cputopo, simd};
+
+// ---------------------------------------------------------------------------
+// Kinds and parsing
+// ---------------------------------------------------------------------------
+
+/// Which kernel backend to run (CLI `--kernel`, config `[solver] kernel`,
+/// env `MAP_UOT_KERNEL`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Runtime CPUID dispatch: AVX2+FMA when detected, else unrolled.
+    Auto,
+    /// Plain element loops — the portable reference.
+    Scalar,
+    /// 16-lane unrolled loops (auto-vectorized by LLVM).
+    Unrolled,
+    /// Hand-written AVX2+FMA intrinsics (falls back to unrolled when the
+    /// host lacks the features).
+    Avx2,
+}
+
+impl KernelKind {
+    /// Parse from a CLI/config/env string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" | "detect" => Some(KernelKind::Auto),
+            "scalar" | "ref" => Some(KernelKind::Scalar),
+            "unrolled" | "lanes" => Some(KernelKind::Unrolled),
+            "avx2" | "avx2fma" | "simd" => Some(KernelKind::Avx2),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Unrolled => "unrolled",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    /// The best backend this host supports, by runtime feature detection.
+    pub fn detect() -> Self {
+        if avx2_available() {
+            KernelKind::Avx2
+        } else {
+            KernelKind::Unrolled
+        }
+    }
+
+    /// Every backend that can actually execute on this host (what the
+    /// property tests sweep). Always starts with the scalar reference.
+    pub fn available() -> Vec<KernelKind> {
+        let mut v = vec![KernelKind::Scalar, KernelKind::Unrolled];
+        if avx2_available() {
+            v.push(KernelKind::Avx2);
+        }
+        v
+    }
+
+    /// Resolve `Auto` and unsupported requests to a concrete, runnable kind.
+    pub fn resolve(self) -> Self {
+        match self {
+            KernelKind::Auto => Self::detect(),
+            KernelKind::Avx2 if !avx2_available() => KernelKind::Unrolled,
+            k => k,
+        }
+    }
+}
+
+/// Runtime AVX2+FMA detection (false on non-x86 targets).
+pub fn avx2_available() -> bool {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Column-tiling request (CLI `--tile`, config `[solver] tile`, env
+/// `MAP_UOT_TILE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileSpec {
+    /// Size panels from the detected cache topology.
+    Auto,
+    /// Untiled sweep (today's single-pass row order).
+    Off,
+    /// One-shot auto-tuner: measure a few candidates at workspace build.
+    Tune,
+    /// Explicit panel width in columns.
+    Cols(usize),
+}
+
+impl TileSpec {
+    /// Parse from a CLI/config/env string: `auto | off | tune | <cols>`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(TileSpec::Auto),
+            "off" | "none" | "0" => Some(TileSpec::Off),
+            "tune" => Some(TileSpec::Tune),
+            other => other.parse::<usize>().ok().map(TileSpec::Cols),
+        }
+    }
+
+    pub fn describe(self) -> String {
+        match self {
+            TileSpec::Auto => "auto".into(),
+            TileSpec::Off => "off".into(),
+            TileSpec::Tune => "tune".into(),
+            TileSpec::Cols(c) => c.to_string(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Kernel trait and its three implementations
+// ---------------------------------------------------------------------------
+
+/// Object-safe interface over the two fused row primitives.
+///
+/// `stream` requests non-temporal plan stores in Computations III/IV; only
+/// the AVX2 backend honors it (scalar/unrolled stores always go through the
+/// cache), and callers should pass `policy.stream_for(plan_elements)`.
+pub trait Kernel: Sync {
+    /// Concrete kind of this backend.
+    fn kind(&self) -> KernelKind;
+
+    /// Computations I+II: `row *= fcol` element-wise, returns the row sum.
+    fn scale_by_vec_and_sum(&self, row: &mut [f32], fcol: &[f32]) -> f32;
+
+    /// Computations III+IV: `row *= fr`, accumulating into `next_colsum`.
+    fn scale_by_scalar_and_accumulate(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        next_colsum: &mut [f32],
+        stream: bool,
+    );
+
+    /// Tracked Computations III+IV: also returns the row's max element
+    /// change, recovering the pre-iteration value as `v · inv_fcol[j]`.
+    fn scale_by_scalar_and_accumulate_tracked(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        inv_fcol: &[f32],
+        next_colsum: &mut [f32],
+        stream: bool,
+    ) -> f32;
+}
+
+/// The [`Kernel`] implementation for `kind`, resolved to something runnable
+/// on this host (stateless, `'static`).
+pub fn kernel_for(kind: KernelKind) -> &'static dyn Kernel {
+    match kind.resolve() {
+        KernelKind::Scalar => &ScalarKernel,
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelKind::Avx2 => &AVX2_FMA_KERNEL,
+        _ => &UnrolledKernel,
+    }
+}
+
+/// Portable reference: plain element loops, no unrolling.
+pub struct ScalarKernel;
+
+impl Kernel for ScalarKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Scalar
+    }
+
+    fn scale_by_vec_and_sum(&self, row: &mut [f32], fcol: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), fcol.len());
+        let mut s = 0f32;
+        for (v, &f) in row.iter_mut().zip(fcol) {
+            *v *= f;
+            s += *v;
+        }
+        s
+    }
+
+    fn scale_by_scalar_and_accumulate(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        next_colsum: &mut [f32],
+        _stream: bool,
+    ) {
+        debug_assert_eq!(row.len(), next_colsum.len());
+        for (v, s) in row.iter_mut().zip(next_colsum.iter_mut()) {
+            *v *= fr;
+            *s += *v;
+        }
+    }
+
+    fn scale_by_scalar_and_accumulate_tracked(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        inv_fcol: &[f32],
+        next_colsum: &mut [f32],
+        _stream: bool,
+    ) -> f32 {
+        debug_assert_eq!(row.len(), next_colsum.len());
+        debug_assert_eq!(row.len(), inv_fcol.len());
+        let mut delta = 0f32;
+        for ((v, s), &inv) in row.iter_mut().zip(next_colsum.iter_mut()).zip(inv_fcol) {
+            let old = *v * inv;
+            *v *= fr;
+            *s += *v;
+            delta = delta.max((*v - old).abs());
+        }
+        delta
+    }
+}
+
+/// The 16-lane unrolled loops — delegates to the free functions in
+/// `algo::mapuot`, so it is bit-identical to the pre-kernel-subsystem
+/// behavior (which every existing bit-match test pins down).
+pub struct UnrolledKernel;
+
+impl Kernel for UnrolledKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Unrolled
+    }
+
+    fn scale_by_vec_and_sum(&self, row: &mut [f32], fcol: &[f32]) -> f32 {
+        crate::algo::mapuot::scale_by_vec_and_sum(row, fcol)
+    }
+
+    fn scale_by_scalar_and_accumulate(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        next_colsum: &mut [f32],
+        _stream: bool,
+    ) {
+        crate::algo::mapuot::scale_by_scalar_and_accumulate(row, fr, next_colsum)
+    }
+
+    fn scale_by_scalar_and_accumulate_tracked(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        inv_fcol: &[f32],
+        next_colsum: &mut [f32],
+        _stream: bool,
+    ) -> f32 {
+        crate::algo::mapuot::scale_by_scalar_and_accumulate_tracked(row, fr, inv_fcol, next_colsum)
+    }
+}
+
+/// Hand-written AVX2+FMA backend. Not publicly constructible: the only
+/// instances are crate-internal and handed out behind [`avx2_available`]
+/// (see [`kernel_for`]), which is what makes the `unsafe` intrinsic calls
+/// inside the safe trait methods sound.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub struct Avx2FmaKernel {
+    _detection_gated: (),
+}
+
+/// The crate-internal AVX2 instance — use only behind [`avx2_available`].
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub(crate) const AVX2_FMA_KERNEL: Avx2FmaKernel = Avx2FmaKernel { _detection_gated: () };
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+impl Kernel for Avx2FmaKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Avx2
+    }
+
+    fn scale_by_vec_and_sum(&self, row: &mut [f32], fcol: &[f32]) -> f32 {
+        debug_assert_eq!(row.len(), fcol.len());
+        // SAFETY: kernel_for only hands out this backend when AVX2+FMA are
+        // runtime-detected.
+        unsafe { avx2::scale_by_vec_and_sum(row, fcol) }
+    }
+
+    fn scale_by_scalar_and_accumulate(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        next_colsum: &mut [f32],
+        stream: bool,
+    ) {
+        debug_assert_eq!(row.len(), next_colsum.len());
+        // SAFETY: feature-gated construction, see above.
+        unsafe { avx2::scale_by_scalar_and_accumulate(row, fr, next_colsum, stream) }
+    }
+
+    fn scale_by_scalar_and_accumulate_tracked(
+        &self,
+        row: &mut [f32],
+        fr: f32,
+        inv_fcol: &[f32],
+        next_colsum: &mut [f32],
+        stream: bool,
+    ) -> f32 {
+        debug_assert_eq!(row.len(), next_colsum.len());
+        debug_assert_eq!(row.len(), inv_fcol.len());
+        // SAFETY: feature-gated construction, see above.
+        unsafe {
+            avx2::scale_by_scalar_and_accumulate_tracked(row, fr, inv_fcol, next_colsum, stream)
+        }
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+mod avx2 {
+    //! The intrinsic bodies. All loads are unaligned (`loadu`): tiled
+    //! panels start at arbitrary column offsets. Non-temporal stores need
+    //! 32-byte-aligned addresses, so the streaming paths peel a scalar
+    //! head up to alignment and a scalar tail, and fence (`sfence`) before
+    //! returning — MOVNT stores are weakly ordered, and the pool barrier's
+    //! release/acquire pair does not order them on its own.
+
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of one 8-lane register.
+    ///
+    /// # Safety
+    /// Requires AVX at runtime (callers are `avx2`-gated, which implies it).
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Horizontal max of one 8-lane register (non-negative inputs).
+    ///
+    /// # Safety
+    /// Requires AVX at runtime (callers are `avx2`-gated, which implies it).
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Computations I+II: four independent 8-lane FMA accumulators (32
+    /// floats per step) break the add-latency chain exactly like the
+    /// portable kernel's 16 scalar lanes.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (runtime-checked by
+    /// [`super::avx2_available`] before this backend is handed out).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
+        let n = row.len();
+        let r = row.as_mut_ptr();
+        let f = fcol.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 32 <= n {
+            let v0 = _mm256_loadu_ps(r.add(j));
+            let v1 = _mm256_loadu_ps(r.add(j + 8));
+            let v2 = _mm256_loadu_ps(r.add(j + 16));
+            let v3 = _mm256_loadu_ps(r.add(j + 24));
+            let f0 = _mm256_loadu_ps(f.add(j));
+            let f1 = _mm256_loadu_ps(f.add(j + 8));
+            let f2 = _mm256_loadu_ps(f.add(j + 16));
+            let f3 = _mm256_loadu_ps(f.add(j + 24));
+            _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v0, f0));
+            _mm256_storeu_ps(r.add(j + 8), _mm256_mul_ps(v1, f1));
+            _mm256_storeu_ps(r.add(j + 16), _mm256_mul_ps(v2, f2));
+            _mm256_storeu_ps(r.add(j + 24), _mm256_mul_ps(v3, f3));
+            // FMA accumulation: the sum sees the unrounded products (≤ 1
+            // ulp/element from the stored values — inside every agreement
+            // tolerance, and one add cheaper per vector).
+            acc0 = _mm256_fmadd_ps(v0, f0, acc0);
+            acc1 = _mm256_fmadd_ps(v1, f1, acc1);
+            acc2 = _mm256_fmadd_ps(v2, f2, acc2);
+            acc3 = _mm256_fmadd_ps(v3, f3, acc3);
+            j += 32;
+        }
+        while j + 8 <= n {
+            let v = _mm256_loadu_ps(r.add(j));
+            let fv = _mm256_loadu_ps(f.add(j));
+            _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v, fv));
+            acc0 = _mm256_fmadd_ps(v, fv, acc0);
+            j += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
+        while j < n {
+            let v = *r.add(j) * *f.add(j);
+            *r.add(j) = v;
+            s += v;
+            j += 1;
+        }
+        s
+    }
+
+    /// Computations III+IV. `stream = true` writes the plan with
+    /// `_mm256_stream_ps` (no RFO); `next_colsum` always goes through the
+    /// cache — it is re-read every row.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (runtime-checked by
+    /// [`super::avx2_available`] before this backend is handed out).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale_by_scalar_and_accumulate(
+        row: &mut [f32],
+        fr: f32,
+        next_colsum: &mut [f32],
+        stream: bool,
+    ) {
+        let n = row.len();
+        let r = row.as_mut_ptr();
+        let c = next_colsum.as_mut_ptr();
+        let vf = _mm256_set1_ps(fr);
+        let mut j = 0usize;
+        if stream {
+            while j < n && (r.add(j) as usize) % 32 != 0 {
+                let v = *r.add(j) * fr;
+                *r.add(j) = v;
+                *c.add(j) += v;
+                j += 1;
+            }
+            while j + 8 <= n {
+                let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
+                _mm256_stream_ps(r.add(j), p);
+                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                j += 8;
+            }
+        } else {
+            while j + 8 <= n {
+                let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
+                _mm256_storeu_ps(r.add(j), p);
+                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                j += 8;
+            }
+        }
+        while j < n {
+            let v = *r.add(j) * fr;
+            *r.add(j) = v;
+            *c.add(j) += v;
+            j += 1;
+        }
+        if stream {
+            _mm_sfence();
+        }
+    }
+
+    /// Tracked Computations III+IV: per-lane |new − old| maxima folded at
+    /// the end (max is order-independent, so this matches the scalar fold
+    /// bit-for-bit).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (runtime-checked by
+    /// [`super::avx2_available`] before this backend is handed out).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale_by_scalar_and_accumulate_tracked(
+        row: &mut [f32],
+        fr: f32,
+        inv_fcol: &[f32],
+        next_colsum: &mut [f32],
+        stream: bool,
+    ) -> f32 {
+        let n = row.len();
+        let r = row.as_mut_ptr();
+        let c = next_colsum.as_mut_ptr();
+        let iv = inv_fcol.as_ptr();
+        let vf = _mm256_set1_ps(fr);
+        let abs_mask = _mm256_set1_ps(-0.0);
+        let mut dmax = _mm256_setzero_ps();
+        let mut d = 0f32;
+        let mut j = 0usize;
+        if stream {
+            while j < n && (r.add(j) as usize) % 32 != 0 {
+                let v = *r.add(j);
+                let old = v * *iv.add(j);
+                let p = v * fr;
+                *r.add(j) = p;
+                *c.add(j) += p;
+                d = d.max((p - old).abs());
+                j += 1;
+            }
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(r.add(j));
+                let p = _mm256_mul_ps(v, vf);
+                let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
+                _mm256_stream_ps(r.add(j), p);
+                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
+                j += 8;
+            }
+        } else {
+            while j + 8 <= n {
+                let v = _mm256_loadu_ps(r.add(j));
+                let p = _mm256_mul_ps(v, vf);
+                let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
+                _mm256_storeu_ps(r.add(j), p);
+                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
+                j += 8;
+            }
+        }
+        while j < n {
+            let v = *r.add(j);
+            let old = v * *iv.add(j);
+            let p = v * fr;
+            *r.add(j) = p;
+            *c.add(j) += p;
+            d = d.max((p - old).abs());
+            j += 1;
+        }
+        if stream {
+            _mm_sfence();
+        }
+        d.max(hmax(dmax))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policy: resolved kernel + tiling + streaming thresholds
+// ---------------------------------------------------------------------------
+
+/// Auto tile width from the L1 budget: a panel touches four f32 streams
+/// per column (row element, `Factor_col`, `inv_fcol`, `NextSum_col`), and
+/// we target half of L1d to leave room for `Sum_row` and prefetch depth.
+fn auto_tile_cols(topo: cputopo::CacheTopo) -> usize {
+    ((topo.l1d / 2 / 16) / simd::LANES * simd::LANES).max(128)
+}
+
+/// Resolved execution policy for the fused sweep: which kernel backend,
+/// whether/how to tile, and when to engage non-temporal stores. Built once
+/// per `Workspace` ([`KernelPolicy::for_shape`]) and copied around freely.
+#[derive(Clone, Copy)]
+pub struct KernelPolicy {
+    /// Concrete (resolved, runnable) backend kind — the sweep dispatches
+    /// on it once per call and then runs monomorphized, so no `dyn` call
+    /// ever lands in the per-row loop.
+    kind: KernelKind,
+    /// Column panel width; 0 = untiled.
+    tile_cols: usize,
+    /// L2 budget for the phase-resident row chunk.
+    l2_bytes: usize,
+    /// Plan bytes beyond which Computations III/IV use streaming stores
+    /// (`usize::MAX` disables).
+    nt_bytes: usize,
+}
+
+impl KernelPolicy {
+    /// Resolve `(kind, tile)` for an `m × n` workspace: explicit choices
+    /// win, `Auto` consults `MAP_UOT_KERNEL` / `MAP_UOT_TILE`, then runtime
+    /// detection and the cache topology. `MAP_UOT_NT=off` disables
+    /// streaming stores. `TileSpec::Tune` measures candidates once, here.
+    pub fn for_shape(kind: KernelKind, tile: TileSpec, m: usize, n: usize) -> Self {
+        let kind = match kind {
+            KernelKind::Auto => env_kernel().unwrap_or(KernelKind::Auto).resolve(),
+            k => k.resolve(),
+        };
+        let topo = cputopo::get();
+        let tile = match tile {
+            TileSpec::Auto => env_tile().unwrap_or(TileSpec::Auto),
+            t => t,
+        };
+        let tile_cols = match tile {
+            TileSpec::Off => 0,
+            TileSpec::Cols(c) => c,
+            TileSpec::Auto => auto_tile_cols(topo),
+            TileSpec::Tune => autotune_tile_cols(kernel_for(kind), m, n, topo),
+        };
+        let nt_off = matches!(
+            std::env::var("MAP_UOT_NT").as_deref(),
+            Ok("off") | Ok("0") | Ok("false")
+        );
+        Self {
+            kind,
+            tile_cols,
+            l2_bytes: topo.l2,
+            nt_bytes: if nt_off { usize::MAX } else { topo.llc },
+        }
+    }
+
+    /// The pre-subsystem behavior: unrolled kernel, untiled, no streaming
+    /// stores. The legacy free-function entry points use this, so their
+    /// numerics are bit-stable across the refactor.
+    pub fn legacy() -> Self {
+        Self {
+            kind: KernelKind::Unrolled,
+            tile_cols: 0,
+            l2_bytes: cputopo::FALLBACK.l2,
+            nt_bytes: usize::MAX,
+        }
+    }
+
+    /// Fully explicit policy (benches and property tests). `nt_bytes =
+    /// None` disables streaming stores.
+    pub fn explicit(kind: KernelKind, tile_cols: usize, nt_bytes: Option<usize>) -> Self {
+        Self {
+            kind: kind.resolve(),
+            tile_cols,
+            l2_bytes: cputopo::get().l2,
+            nt_bytes: nt_bytes.unwrap_or(usize::MAX),
+        }
+    }
+
+    /// The resolved (concrete) backend kind.
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// The kernel implementation (trait-object view; the hot sweep instead
+    /// dispatches on [`KernelPolicy::kind`] once and runs monomorphized).
+    pub fn kernel(&self) -> &'static dyn Kernel {
+        kernel_for(self.kind)
+    }
+
+    /// Column panel width; 0 = untiled.
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols
+    }
+
+    /// `Some(panel_width)` when an `n`-column sweep should tile: a panel
+    /// narrower than the row is the only case where tiling changes the
+    /// access pattern at all.
+    pub fn tile_for(&self, n: usize) -> Option<usize> {
+        (self.tile_cols > 0 && self.tile_cols < n).then_some(self.tile_cols)
+    }
+
+    /// Rows per L2-resident chunk for an `n`-column tiled sweep (the chunk
+    /// is re-read by phase 2, so it targets half of L2).
+    pub fn row_chunk(&self, n: usize) -> usize {
+        ((self.l2_bytes / 2) / (n.max(1) * 4)).max(1)
+    }
+
+    /// Whether a sweep over `elements` plan cells should use non-temporal
+    /// stores: only once the plan exceeds the LLC — below that, regular
+    /// stores keep it cache-resident for the *next* iteration.
+    pub fn stream_for(&self, elements: usize) -> bool {
+        elements.saturating_mul(4) > self.nt_bytes
+    }
+}
+
+impl std::fmt::Debug for KernelPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelPolicy")
+            .field("kind", &self.kind.name())
+            .field("tile_cols", &self.tile_cols)
+            .field("nt_bytes", &self.nt_bytes)
+            .finish()
+    }
+}
+
+/// `MAP_UOT_KERNEL` override, ignoring unset/empty/invalid values.
+fn env_kernel() -> Option<KernelKind> {
+    std::env::var("MAP_UOT_KERNEL").ok().as_deref().and_then(KernelKind::parse)
+}
+
+/// `MAP_UOT_TILE` override, ignoring unset/empty/invalid values.
+fn env_tile() -> Option<TileSpec> {
+    std::env::var("MAP_UOT_TILE").ok().as_deref().and_then(TileSpec::parse)
+}
+
+/// One-shot tile auto-tuner: time the tiled fused sweep over a synthetic
+/// row block of this shape for a few topology-derived candidates (plus
+/// untiled) and return the fastest panel width. Runs at workspace build —
+/// the one place the allocation contract permits setup cost.
+pub fn autotune_tile_cols(
+    kernel: &'static dyn Kernel,
+    m: usize,
+    n: usize,
+    topo: cputopo::CacheTopo,
+) -> usize {
+    let base = auto_tile_cols(topo);
+    let mut candidates = vec![0usize, base / 2, base, base * 2];
+    candidates.dedup();
+    // Cap the probe block so tuning stays a few milliseconds even at
+    // service-scale shapes.
+    let rows = m.clamp(1, 64.max((topo.l2 / 2) / (n.max(1) * 4)).min(256));
+    let mut rowbuf = vec![1.0f32; rows * n];
+    let fcol = vec![1.000_001f32; n];
+    let rpd = vec![1.0f32; rows];
+    let mut colsum = vec![0f32; n];
+    let mut sum_row = vec![0f32; rows];
+    let mut best = (f64::INFINITY, 0usize);
+    for &tile in &candidates {
+        let policy = KernelPolicy {
+            kind: kernel.kind(),
+            tile_cols: tile,
+            l2_bytes: topo.l2,
+            nt_bytes: usize::MAX,
+        };
+        let mut elapsed = f64::INFINITY;
+        for _ in 0..3 {
+            let t = crate::util::Timer::start();
+            crate::algo::mapuot::fused_rows_policy(
+                &mut rowbuf,
+                n,
+                &rpd,
+                &fcol,
+                1.0,
+                &mut colsum,
+                &mut sum_row,
+                &policy,
+            );
+            elapsed = elapsed.min(t.elapsed().as_secs_f64());
+        }
+        if elapsed < best.0 {
+            best = (elapsed, tile);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::XorShift::new(seed);
+        let row: Vec<f32> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let fcol: Vec<f32> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let inv: Vec<f32> = fcol.iter().map(|f| 1.0 / f).collect();
+        let colsum: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        (row, fcol, inv, colsum)
+    }
+
+    fn assert_close(a: f32, b: f32, what: &str) {
+        assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "{what}: {a} vs {b}");
+    }
+
+    /// Every available backend reproduces the scalar reference on both
+    /// primitives, across awkward lengths and both store modes.
+    #[test]
+    fn backends_match_scalar_reference() {
+        for kind in KernelKind::available() {
+            let k = kernel_for(kind);
+            assert_eq!(k.kind(), kind, "{:?} resolved to {:?}", kind, k.kind());
+            for n in [0usize, 1, 3, 7, 8, 9, 31, 32, 33, 257, 1000] {
+                for stream in [false, true] {
+                    let (row0, fcol, inv, colsum0) = rand_vecs(n, 11 + n as u64);
+
+                    let mut r_ref = row0.clone();
+                    let s_ref = ScalarKernel.scale_by_vec_and_sum(&mut r_ref, &fcol);
+                    let mut r = row0.clone();
+                    let s = k.scale_by_vec_and_sum(&mut r, &fcol);
+                    assert_close(s, s_ref, "rowsum");
+                    for (a, b) in r.iter().zip(&r_ref) {
+                        // Element-wise products are identical in every
+                        // backend — same multiply, same rounding.
+                        assert_eq!(a, b, "{} n={n}", kind.name());
+                    }
+
+                    let mut cs_ref = colsum0.clone();
+                    let d_ref = ScalarKernel.scale_by_scalar_and_accumulate_tracked(
+                        &mut r_ref, 0.9, &inv, &mut cs_ref, false,
+                    );
+                    let mut cs = colsum0.clone();
+                    let d = k.scale_by_scalar_and_accumulate_tracked(
+                        &mut r, 0.9, &inv, &mut cs, stream,
+                    );
+                    assert_close(d, d_ref, "delta");
+                    for (a, b) in r.iter().zip(&r_ref) {
+                        assert_eq!(a, b, "{} n={n} stream={stream}", kind.name());
+                    }
+                    for (a, b) in cs.iter().zip(&cs_ref) {
+                        assert_close(*a, *b, "colsum");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Streaming and cached stores must produce identical bits (streaming
+    /// changes the cache protocol, never the values).
+    #[test]
+    fn stream_mode_is_bit_identical() {
+        for kind in KernelKind::available() {
+            let k = kernel_for(kind);
+            // Offset sub-slices exercise the unaligned head/tail peeling.
+            for (n, off) in [(64usize, 0usize), (65, 1), (130, 3), (17, 5)] {
+                let (row0, _, inv, colsum0) = rand_vecs(n + off, 3 + n as u64);
+                let mut a = row0.clone();
+                let mut ca = colsum0.clone();
+                k.scale_by_scalar_and_accumulate(&mut a[off..], 1.1, &mut ca[off..], false);
+                let mut b = row0.clone();
+                let mut cb = colsum0.clone();
+                k.scale_by_scalar_and_accumulate(&mut b[off..], 1.1, &mut cb[off..], true);
+                assert_eq!(a, b, "{} n={n} off={off}", kind.name());
+                assert_eq!(ca, cb, "{} n={n} off={off}", kind.name());
+
+                let mut da_in = row0.clone();
+                let mut dca = colsum0.clone();
+                let da = k.scale_by_scalar_and_accumulate_tracked(
+                    &mut da_in[off..], 0.8, &inv[off..], &mut dca[off..], false,
+                );
+                let mut db_in = row0.clone();
+                let mut dcb = colsum0.clone();
+                let db = k.scale_by_scalar_and_accumulate_tracked(
+                    &mut db_in[off..], 0.8, &inv[off..], &mut dcb[off..], true,
+                );
+                assert_eq!(da_in, db_in, "{} tracked n={n} off={off}", kind.name());
+                assert_eq!(dca, dcb, "{} tracked n={n} off={off}", kind.name());
+                assert_eq!(da.to_bits(), db.to_bits(), "{} delta n={n}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parsing_and_resolution() {
+        assert_eq!(KernelKind::parse("AVX2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("auto"), Some(KernelKind::Auto));
+        assert_eq!(KernelKind::parse("sse9"), None);
+        assert_eq!(TileSpec::parse("off"), Some(TileSpec::Off));
+        assert_eq!(TileSpec::parse("auto"), Some(TileSpec::Auto));
+        assert_eq!(TileSpec::parse("tune"), Some(TileSpec::Tune));
+        assert_eq!(TileSpec::parse("384"), Some(TileSpec::Cols(384)));
+        assert_eq!(TileSpec::parse("0"), Some(TileSpec::Off));
+        assert_eq!(TileSpec::parse("wide"), None);
+        // Auto always resolves to something runnable, and an avx2 request
+        // never escapes unresolved on hosts without the features.
+        let r = KernelKind::Auto.resolve();
+        assert_ne!(r, KernelKind::Auto);
+        let a = KernelKind::Avx2.resolve();
+        assert!(a == KernelKind::Avx2 && avx2_available() || a == KernelKind::Unrolled);
+    }
+
+    #[test]
+    fn policy_thresholds() {
+        let p = KernelPolicy::explicit(KernelKind::Unrolled, 256, Some(1024 * 1024));
+        assert_eq!(p.tile_for(1000), Some(256));
+        assert_eq!(p.tile_for(256), None, "panel == row width: untiled");
+        assert_eq!(p.tile_for(64), None);
+        assert!(p.row_chunk(1024) >= 1);
+        assert!(!p.stream_for(1024), "4 KiB plan must not stream");
+        assert!(p.stream_for(1024 * 1024), "4 MiB plan exceeds the 1 MiB LLC");
+        let legacy = KernelPolicy::legacy();
+        assert_eq!(legacy.kind(), KernelKind::Unrolled);
+        assert_eq!(legacy.tile_for(1 << 20), None);
+        assert!(!legacy.stream_for(usize::MAX / 8));
+    }
+
+    #[test]
+    fn autotune_returns_a_candidate() {
+        let topo = cputopo::get();
+        let k = kernel_for(KernelKind::Unrolled);
+        let tile = autotune_tile_cols(k, 64, 512, topo);
+        let base = auto_tile_cols(topo);
+        assert!(
+            [0, base / 2, base, base * 2].contains(&tile),
+            "tile {tile} not among candidates (base {base})"
+        );
+    }
+}

@@ -9,22 +9,27 @@
 //! element accesses — the Roofline-model minimum of §3.1); the second inner
 //! loop re-touches the same row out of L1/L2. All accesses are contiguous.
 //!
-//! The inner loops are written as 4-way unrolled chunk loops; LLVM turns
+//! The inner loops are written as 16-lane unrolled chunk loops; LLVM turns
 //! them into the AVX2 code the paper writes by hand (verified against the
 //! plain form in `tests::unrolled_matches_plain` and in the perf log).
+//! These free functions double as the [`crate::algo::kernels`] `Unrolled`
+//! backend; the hand-written AVX2+FMA backend and the cache-tiled sweep
+//! live behind [`fused_rows_policy`] / [`fused_rows_tracked_policy`].
 
+use crate::algo::kernels::KernelPolicy;
 use crate::algo::scaling::{factor, factors_into};
-use crate::util::Matrix;
+use crate::util::{simd, Matrix};
 
 /// Fused pass over one row: `row *= fcol` element-wise, returns the row sum.
 /// (Computations I + II.)
 #[inline]
 pub fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
     debug_assert_eq!(row.len(), fcol.len());
-    // 16 independent accumulator lanes: wide enough for AVX2/AVX-512
-    // auto-vectorization AND to break the add-latency dependency chain
-    // (4 lanes capped the primitive at ~47% of streaming peak — §Perf log).
-    const W: usize = 16;
+    // 16 independent accumulator lanes (`util::simd::LANES`): wide enough
+    // for AVX2/AVX-512 auto-vectorization AND to break the add-latency
+    // dependency chain (4 lanes capped the primitive at ~47% of streaming
+    // peak — §Perf log).
+    const W: usize = simd::LANES;
     let mut acc = [0f32; W];
     let chunks = row.len() / W;
     let (rh, rt) = row.split_at_mut(chunks * W);
@@ -35,7 +40,7 @@ pub fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
             acc[k] += rw[k];
         }
     }
-    let mut s = acc.iter().sum::<f32>();
+    let mut s = simd::fold(&acc);
     for (r, &f) in rt.iter_mut().zip(ft) {
         *r *= f;
         s += *r;
@@ -44,11 +49,23 @@ pub fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
 }
 
 /// Fused pass over one row: `row *= fr`, accumulating into `next_colsum`.
-/// (Computations III + IV.)
+/// (Computations III + IV.) Same 16-lane unroll as
+/// [`scale_by_vec_and_sum`] — the plain zip loop left the column
+/// accumulation add-latency-bound.
 #[inline]
 pub fn scale_by_scalar_and_accumulate(row: &mut [f32], fr: f32, next_colsum: &mut [f32]) {
     debug_assert_eq!(row.len(), next_colsum.len());
-    for (v, s) in row.iter_mut().zip(next_colsum.iter_mut()) {
+    const W: usize = simd::LANES;
+    let chunks = row.len() / W;
+    let (rh, rt) = row.split_at_mut(chunks * W);
+    let (sh, st) = next_colsum.split_at_mut(chunks * W);
+    for (rw, sw) in rh.chunks_exact_mut(W).zip(sh.chunks_exact_mut(W)) {
+        for k in 0..W {
+            rw[k] *= fr;
+            sw[k] += rw[k];
+        }
+    }
+    for (v, s) in rt.iter_mut().zip(st.iter_mut()) {
         *v *= fr;
         *s += *v;
     }
@@ -58,6 +75,8 @@ pub fn scale_by_scalar_and_accumulate(row: &mut [f32], fr: f32, next_colsum: &mu
 /// element change for this iteration, recovered in-register: the incoming
 /// `row` holds `v1 = v0 · Factor_col[j]`, so the pre-iteration value is
 /// `v1 · inv_fcol[j]` and the new value is `v1 · fr` — no snapshot needed.
+/// The per-lane delta maxima fold at the end; `max` is order-independent,
+/// so the result is bit-identical to the sequential form.
 #[inline]
 pub fn scale_by_scalar_and_accumulate_tracked(
     row: &mut [f32],
@@ -67,8 +86,26 @@ pub fn scale_by_scalar_and_accumulate_tracked(
 ) -> f32 {
     debug_assert_eq!(row.len(), next_colsum.len());
     debug_assert_eq!(row.len(), inv_fcol.len());
-    let mut delta = 0f32;
-    for ((v, s), &inv) in row.iter_mut().zip(next_colsum.iter_mut()).zip(inv_fcol) {
+    const W: usize = simd::LANES;
+    let mut dl = [0f32; W];
+    let chunks = row.len() / W;
+    let (rh, rt) = row.split_at_mut(chunks * W);
+    let (sh, st) = next_colsum.split_at_mut(chunks * W);
+    let (ih, it) = inv_fcol.split_at(chunks * W);
+    for ((rw, sw), iw) in rh
+        .chunks_exact_mut(W)
+        .zip(sh.chunks_exact_mut(W))
+        .zip(ih.chunks_exact(W))
+    {
+        for k in 0..W {
+            let old = rw[k] * iw[k];
+            rw[k] *= fr;
+            sw[k] += rw[k];
+            dl[k] = dl[k].max((rw[k] - old).abs());
+        }
+    }
+    let mut delta = dl.iter().copied().fold(0f32, f32::max);
+    for ((v, s), &inv) in rt.iter_mut().zip(st.iter_mut()).zip(it) {
         let old = *v * inv;
         *v *= fr;
         *s += *v;
@@ -119,6 +156,208 @@ pub fn fused_rows_tracked(
     delta
 }
 
+/// [`fused_rows`] under an explicit [`KernelPolicy`]: kernel-backend
+/// dispatch (scalar / unrolled / AVX2+FMA), non-temporal stores past the
+/// LLC threshold, and cache-aware column tiling at large `n`.
+///
+/// `sum_row` is caller scratch of at least `rpd_block.len()` floats (the
+/// workspace's `rowsum`); it carries each row's `Sum_row` across column
+/// panels in the tiled sweep and is untouched when the policy is untiled.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_rows_policy(
+    rows: &mut [f32],
+    n: usize,
+    rpd_block: &[f32],
+    fcol: &[f32],
+    fi: f32,
+    next_colsum: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+) {
+    let stream = policy.stream_for(rows.len());
+    fused_rows_opt(rows, n, rpd_block, fcol, None, fi, next_colsum, sum_row, policy, stream);
+}
+
+/// [`fused_rows_policy`] with in-sweep delta tracking; returns the block's
+/// max element change.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_rows_tracked_policy(
+    rows: &mut [f32],
+    n: usize,
+    rpd_block: &[f32],
+    fcol: &[f32],
+    inv_fcol: &[f32],
+    fi: f32,
+    next_colsum: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+) -> f32 {
+    let stream = policy.stream_for(rows.len());
+    fused_rows_opt(
+        rows,
+        n,
+        rpd_block,
+        fcol,
+        Some(inv_fcol),
+        fi,
+        next_colsum,
+        sum_row,
+        policy,
+        stream,
+    )
+}
+
+/// Shared body of the policy-driven fused sweep (tracked when `inv` is
+/// given). `stream` is the caller's non-temporal-store decision: the
+/// parallel engines compute it from the **whole** plan, not the block —
+/// all row blocks of one iteration stream the same matrix.
+///
+/// Untiled, the loop is the classic Algorithm 1 double-loop through the
+/// selected kernel. Tiled, each L2-sized row chunk runs two panel-major
+/// phases — (I+II) accumulating `Sum_row` across panels, then (III+IV)
+/// with the per-row factors — so `Factor_col`/`inv_fcol`/`NextSum_col`
+/// panels stay L1-resident across the chunk's rows while the chunk itself
+/// stays L2-resident between the phases. DRAM traffic is unchanged (the
+/// chunk is read once and written once per iteration); only the cache
+/// behavior above DRAM improves.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_rows_opt(
+    rows: &mut [f32],
+    n: usize,
+    rpd_block: &[f32],
+    fcol: &[f32],
+    inv: Option<&[f32]>,
+    fi: f32,
+    next_colsum: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+    stream: bool,
+) -> f32 {
+    use crate::algo::kernels::{KernelKind, ScalarKernel, UnrolledKernel};
+    // Dispatch the backend ONCE per sweep, not per row: the generic body
+    // monomorphizes per kernel, so the per-row primitive calls stay
+    // statically dispatched (and the unrolled free functions inline,
+    // exactly as they did before the kernel subsystem existed).
+    match policy.kind() {
+        KernelKind::Scalar => fused_rows_generic(
+            &ScalarKernel, rows, n, rpd_block, fcol, inv, fi, next_colsum, sum_row, policy, stream,
+        ),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelKind::Avx2 => fused_rows_generic(
+            &crate::algo::kernels::AVX2_FMA_KERNEL,
+            rows,
+            n,
+            rpd_block,
+            fcol,
+            inv,
+            fi,
+            next_colsum,
+            sum_row,
+            policy,
+            stream,
+        ),
+        _ => fused_rows_generic(
+            &UnrolledKernel, rows, n, rpd_block, fcol, inv, fi, next_colsum, sum_row, policy,
+            stream,
+        ),
+    }
+}
+
+/// Monomorphized body of [`fused_rows_opt`] — see its docs.
+#[allow(clippy::too_many_arguments)]
+fn fused_rows_generic<K: crate::algo::kernels::Kernel>(
+    k: &K,
+    rows: &mut [f32],
+    n: usize,
+    rpd_block: &[f32],
+    fcol: &[f32],
+    inv: Option<&[f32]>,
+    fi: f32,
+    next_colsum: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+    stream: bool,
+) -> f32 {
+    debug_assert_eq!(rows.len(), rpd_block.len() * n);
+    let mut delta = 0f32;
+    match policy.tile_for(n) {
+        None => {
+            for (i, row) in rows.chunks_exact_mut(n).enumerate() {
+                let s = k.scale_by_vec_and_sum(row, fcol);
+                let fr = factor(rpd_block[i], s, fi);
+                match inv {
+                    Some(iv) => {
+                        delta = delta.max(k.scale_by_scalar_and_accumulate_tracked(
+                            row,
+                            fr,
+                            iv,
+                            next_colsum,
+                            stream,
+                        ));
+                    }
+                    None => k.scale_by_scalar_and_accumulate(row, fr, next_colsum, stream),
+                }
+            }
+        }
+        Some(tile) => {
+            let m_block = rpd_block.len();
+            debug_assert!(sum_row.len() >= m_block, "sum_row scratch too small");
+            let chunk_rows = policy.row_chunk(n);
+            let mut r0 = 0usize;
+            while r0 < m_block {
+                let r1 = (r0 + chunk_rows).min(m_block);
+                let chunk = &mut rows[r0 * n..r1 * n];
+                let srow = &mut sum_row[..r1 - r0];
+                srow.fill(0.0);
+                // Phase 1 (Computations I+II), panel-major: each fcol
+                // panel serves every row of the chunk while L1-hot.
+                let mut j0 = 0usize;
+                while j0 < n {
+                    let j1 = (j0 + tile).min(n);
+                    for (i, row) in chunk.chunks_exact_mut(n).enumerate() {
+                        srow[i] += k.scale_by_vec_and_sum(&mut row[j0..j1], &fcol[j0..j1]);
+                    }
+                    j0 = j1;
+                }
+                // Row factors once per row (not once per row × panel —
+                // powf is the only non-streaming cost in the sweep).
+                for (i, s) in srow.iter_mut().enumerate() {
+                    *s = factor(rpd_block[r0 + i], *s, fi);
+                }
+                // Phase 2 (Computations III+IV), panel-major again; the
+                // chunk re-reads from L2, never DRAM.
+                let mut j0 = 0usize;
+                while j0 < n {
+                    let j1 = (j0 + tile).min(n);
+                    for (i, row) in chunk.chunks_exact_mut(n).enumerate() {
+                        let fr = srow[i];
+                        match inv {
+                            Some(iv) => {
+                                delta = delta.max(k.scale_by_scalar_and_accumulate_tracked(
+                                    &mut row[j0..j1],
+                                    fr,
+                                    &iv[j0..j1],
+                                    &mut next_colsum[j0..j1],
+                                    stream,
+                                ));
+                            }
+                            None => k.scale_by_scalar_and_accumulate(
+                                &mut row[j0..j1],
+                                fr,
+                                &mut next_colsum[j0..j1],
+                                stream,
+                            ),
+                        }
+                    }
+                    j0 = j1;
+                }
+                r0 = r1;
+            }
+        }
+    }
+    delta
+}
+
 /// One full MAP-UOT iteration (Algorithm 1, serial), allocation-free:
 /// `fcol` is caller-provided scratch (see `session::Workspace`).
 pub fn iterate_into(
@@ -151,6 +390,56 @@ pub fn iterate_tracked(
     crate::algo::scaling::recip_into(inv_fcol, fcol);
     colsum.fill(0.0); // becomes NextSum_col
     fused_rows_tracked(plan.as_mut_slice(), n, rpd, fcol, inv_fcol, fi, colsum)
+}
+
+/// [`iterate_into`] under an explicit [`KernelPolicy`] (the session path):
+/// kernel dispatch + tiling + NT stores. `sum_row` is workspace scratch of
+/// at least `plan.rows()` floats.
+#[allow(clippy::too_many_arguments)]
+pub fn iterate_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+) {
+    let n = plan.cols();
+    factors_into(fcol, cpd, colsum, fi);
+    colsum.fill(0.0); // becomes NextSum_col
+    fused_rows_policy(plan.as_mut_slice(), n, rpd, fcol, fi, colsum, sum_row, policy);
+}
+
+/// [`iterate_policy`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn iterate_tracked_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    sum_row: &mut [f32],
+    policy: &KernelPolicy,
+) -> f32 {
+    let n = plan.cols();
+    factors_into(fcol, cpd, colsum, fi);
+    crate::algo::scaling::recip_into(inv_fcol, fcol);
+    colsum.fill(0.0); // becomes NextSum_col
+    fused_rows_tracked_policy(
+        plan.as_mut_slice(),
+        n,
+        rpd,
+        fcol,
+        inv_fcol,
+        fi,
+        colsum,
+        sum_row,
+        policy,
+    )
 }
 
 /// One full MAP-UOT iteration (Algorithm 1, serial); allocates its own
@@ -209,6 +498,79 @@ mod tests {
             let s = scale_by_vec_and_sum(&mut row, &fcol);
             assert_eq!(row, plain, "n={n}");
             assert!((s - plain_sum).abs() <= 1e-4 * plain_sum.abs().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn unrolled_accumulate_matches_plain() {
+        let mut rng = crate::util::XorShift::new(9);
+        for n in [1usize, 3, 4, 7, 8, 15, 16, 33, 257] {
+            let row0: Vec<f32> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let inv: Vec<f32> = (0..n).map(|_| rng.uniform(0.5, 2.0)).collect();
+            let cs0: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let fr = 0.875f32;
+
+            // Plain forms (the pre-unroll loops).
+            let mut row_p = row0.clone();
+            let mut cs_p = cs0.clone();
+            for (v, s) in row_p.iter_mut().zip(cs_p.iter_mut()) {
+                *v *= fr;
+                *s += *v;
+            }
+            let mut row = row0.clone();
+            let mut cs = cs0.clone();
+            scale_by_scalar_and_accumulate(&mut row, fr, &mut cs);
+            assert_eq!(row, row_p, "n={n}");
+            assert_eq!(cs, cs_p, "n={n}");
+
+            let mut row_p = row0.clone();
+            let mut cs_p = cs0.clone();
+            let mut d_p = 0f32;
+            for ((v, s), &iv) in row_p.iter_mut().zip(cs_p.iter_mut()).zip(&inv) {
+                let old = *v * iv;
+                *v *= fr;
+                *s += *v;
+                d_p = d_p.max((*v - old).abs());
+            }
+            let mut row = row0.clone();
+            let mut cs = cs0.clone();
+            let d = scale_by_scalar_and_accumulate_tracked(&mut row, fr, &inv, &mut cs);
+            assert_eq!(row, row_p, "tracked n={n}");
+            assert_eq!(cs, cs_p, "tracked n={n}");
+            assert_eq!(d.to_bits(), d_p.to_bits(), "tracked delta n={n}");
+        }
+    }
+
+    #[test]
+    fn tiled_policy_matches_untiled() {
+        use crate::algo::kernels::{KernelKind, KernelPolicy};
+        // Tile widths crossing every edge: divides n, doesn't divide n,
+        // exceeds n (degenerates to untiled), and n = 1.
+        for (m, n) in [(7usize, 129usize), (5, 64), (1, 1), (3, 8), (16, 33)] {
+            let p = Problem::random(m, n, 0.7, (m + n) as u64);
+            for tile in [3usize, 7, 16, 64, 1000] {
+                let policy = KernelPolicy::explicit(KernelKind::Unrolled, tile, None);
+                let mut a = p.plan.clone();
+                let mut cs_a = a.col_sums();
+                let mut fcol = vec![0f32; n];
+                let mut srow = vec![0f32; m];
+                let mut b = p.plan.clone();
+                let mut cs_b = b.col_sums();
+                for _ in 0..3 {
+                    iterate_policy(
+                        &mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut fcol, &mut srow, &policy,
+                    );
+                    iterate(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi);
+                }
+                assert!(
+                    a.max_rel_diff(&b, 1e-6) < 1e-5,
+                    "{m}x{n} tile={tile}: {}",
+                    a.max_rel_diff(&b, 1e-6)
+                );
+                for (x, y) in cs_a.iter().zip(&cs_b) {
+                    assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "{m}x{n} tile={tile}");
+                }
+            }
         }
     }
 

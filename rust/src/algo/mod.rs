@@ -27,7 +27,10 @@
 //! persistent worker-pool engine ([`pool::ThreadPool`], the default
 //! [`ParallelBackend::Pool`]) — workers spawned once, parked between
 //! epoch-barrier dispatches — with the legacy scope-per-iteration path
-//! kept as [`ParallelBackend::SpawnPerIter`] for benchmarking. The free
+//! kept as [`ParallelBackend::SpawnPerIter`] for benchmarking. The MAP-UOT
+//! inner loops themselves run on a runtime-dispatched kernel backend
+//! ([`kernels`]: scalar / unrolled / AVX2+FMA with non-temporal stores)
+//! under a cache-aware tiling policy ([`KernelPolicy`]). The free
 //! functions [`solve`] and [`iterate_once`] remain as deprecated
 //! one-release shims.
 
@@ -35,6 +38,7 @@ pub mod balancing;
 pub mod coffee;
 pub mod convergence;
 pub mod fp64;
+pub mod kernels;
 pub mod lazy;
 pub mod mapuot;
 pub mod parallel;
@@ -46,6 +50,7 @@ pub mod session;
 pub mod sparse;
 
 pub use convergence::StopRule;
+pub use kernels::{kernel_for, Kernel, KernelKind, KernelPolicy, TileSpec};
 pub use pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 pub use problem::Problem;
 pub use session::{

@@ -40,8 +40,9 @@
 
 use std::thread;
 
+use crate::algo::kernels::KernelPolicy;
 use crate::algo::mapuot::{
-    fused_rows, fused_rows_tracked, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
+    fused_rows_opt, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
 };
 use crate::algo::pool::{AccArena, PaddedSlots, Partition, SliceRef, ThreadPool};
 use crate::algo::scaling::{factor, factors_into, recip_into};
@@ -150,6 +151,9 @@ fn par_col_sums_pool(
 
 /// One parallel MAP-UOT iteration out of caller-provided scratch:
 /// `fcol` (length N) and the `NextSum_col` arena `acc` (scope backend).
+/// Runs the legacy policy (unrolled kernel, untiled, cached stores) so its
+/// numerics are bit-stable; the session path uses
+/// [`mapuot_iterate_policy`].
 pub fn mapuot_iterate_into(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -160,7 +164,8 @@ pub fn mapuot_iterate_into(
     fcol: &mut [f32],
     acc: &mut AccArena,
 ) {
-    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, None, acc);
+    let legacy = KernelPolicy::legacy();
+    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, None, &mut [], acc, &legacy);
 }
 
 /// [`mapuot_iterate_into`] with in-sweep delta tracking; returns the
@@ -176,7 +181,58 @@ pub fn mapuot_iterate_tracked(
     inv_fcol: &mut [f32],
     acc: &mut AccArena,
 ) -> f32 {
-    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), acc)
+    mapuot_scope(
+        plan,
+        colsum,
+        rpd,
+        cpd,
+        fi,
+        threads,
+        fcol,
+        Some(inv_fcol),
+        &mut [],
+        acc,
+        &KernelPolicy::legacy(),
+    )
+}
+
+/// [`mapuot_iterate_into`] under an explicit [`KernelPolicy`]: kernel
+/// dispatch + NT stores + column tiling, composed with the row partition
+/// (each thread tiles its own row block). `rowsum` is `Sum_row` scratch of
+/// at least `plan.rows()` floats when the policy tiles (the workspace's
+/// `rowsum` buffer — blocks use disjoint segments of it).
+#[allow(clippy::too_many_arguments)]
+pub fn mapuot_iterate_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    policy: &KernelPolicy,
+) {
+    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, None, rowsum, acc, policy);
+}
+
+/// [`mapuot_iterate_policy`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn mapuot_iterate_tracked_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    threads: usize,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    policy: &KernelPolicy,
+) -> f32 {
+    mapuot_scope(plan, colsum, rpd, cpd, fi, threads, fcol, Some(inv_fcol), rowsum, acc, policy)
 }
 
 /// Shared body of the scope-backend MAP-UOT iteration.
@@ -189,7 +245,9 @@ fn mapuot_scope(
     threads: usize,
     fcol: &mut [f32],
     inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
     acc: &mut AccArena,
+    policy: &KernelPolicy,
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
     let part = Partition::new(m, effective_threads(threads, m), acc.rows());
@@ -201,11 +259,17 @@ fn mapuot_scope(
         }
         None => None,
     };
+    // The NT-store decision is made from the whole plan, once per
+    // iteration: every block streams the same matrix.
+    let stream = policy.stream_for(m * n);
+    let tiled = policy.tile_for(n).is_some();
+    let policy = *policy;
 
     let fcol_ref: &[f32] = fcol;
     let mut delta = 0f32;
     thread::scope(|s| {
         let mut rest: &mut [f32] = plan.as_mut_slice();
+        let mut rs_rest: &mut [f32] = rowsum;
         let handles: Vec<_> = acc
             .rows_mut()
             .take(part.blocks())
@@ -214,18 +278,17 @@ fn mapuot_scope(
                 let r = part.range(b);
                 let (block, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * n);
                 rest = tail;
+                // Sum_row scratch only exists (and is only needed) when
+                // the policy tiles; untiled blocks get an empty segment.
+                let (rs_block, rs_tail) =
+                    std::mem::take(&mut rs_rest).split_at_mut(if tiled { r.len() } else { 0 });
+                rs_rest = rs_tail;
                 let rpd_block = &rpd[r.start..r.end];
                 s.spawn(move || {
                     local.fill(0.0);
-                    match inv {
-                        Some(iv) => {
-                            fused_rows_tracked(block, n, rpd_block, fcol_ref, iv, fi, local)
-                        }
-                        None => {
-                            fused_rows(block, n, rpd_block, fcol_ref, fi, local);
-                            0.0
-                        }
-                    }
+                    fused_rows_opt(
+                        block, n, rpd_block, fcol_ref, inv, fi, local, rs_block, &policy, stream,
+                    )
                 })
             })
             .collect();
@@ -239,6 +302,8 @@ fn mapuot_scope(
 
 /// One MAP-UOT iteration on the persistent pool: zero spawns, zero
 /// allocations, one epoch for the fused sweep + one for the reduction.
+/// Legacy policy (see [`mapuot_iterate_into`]); the session path uses
+/// [`mapuot_iterate_pool_policy`].
 pub fn mapuot_iterate_pool(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -249,7 +314,8 @@ pub fn mapuot_iterate_pool(
     fcol: &mut [f32],
     acc: &mut AccArena,
 ) {
-    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, acc, None);
+    let legacy = KernelPolicy::legacy();
+    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, &mut [], acc, None, &legacy);
 }
 
 /// [`mapuot_iterate_pool`] with in-sweep delta tracking.
@@ -265,10 +331,75 @@ pub fn mapuot_iterate_pool_tracked(
     acc: &mut AccArena,
     deltas: &mut PaddedSlots,
 ) -> f32 {
-    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, Some(inv_fcol), acc, Some(deltas))
+    mapuot_pool(
+        plan,
+        colsum,
+        rpd,
+        cpd,
+        fi,
+        pool,
+        fcol,
+        Some(inv_fcol),
+        &mut [],
+        acc,
+        Some(deltas),
+        &KernelPolicy::legacy(),
+    )
+}
+
+/// [`mapuot_iterate_pool`] under an explicit [`KernelPolicy`] — tiling
+/// composes with the row partition exactly as in the scope backend, so
+/// pool and scope stay bit-identical for equal policies.
+#[allow(clippy::too_many_arguments)]
+pub fn mapuot_iterate_pool_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    policy: &KernelPolicy,
+) {
+    mapuot_pool(plan, colsum, rpd, cpd, fi, pool, fcol, None, rowsum, acc, None, policy);
+}
+
+/// [`mapuot_iterate_pool_policy`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn mapuot_iterate_pool_tracked_policy(
+    plan: &mut Matrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    rowsum: &mut [f32],
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+    policy: &KernelPolicy,
+) -> f32 {
+    mapuot_pool(
+        plan,
+        colsum,
+        rpd,
+        cpd,
+        fi,
+        pool,
+        fcol,
+        Some(inv_fcol),
+        rowsum,
+        acc,
+        Some(deltas),
+        policy,
+    )
 }
 
 /// Shared body of the pool-backend MAP-UOT iteration.
+#[allow(clippy::too_many_arguments)]
 fn mapuot_pool(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -278,8 +409,10 @@ fn mapuot_pool(
     pool: &ThreadPool,
     fcol: &mut [f32],
     inv_fcol: Option<&mut [f32]>,
+    rowsum: &mut [f32],
     acc: &mut AccArena,
     deltas: Option<&mut PaddedSlots>,
+    policy: &KernelPolicy,
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
     let part = Partition::new(m, pool.threads(), acc.rows());
@@ -291,27 +424,31 @@ fn mapuot_pool(
         }
         None => None,
     };
+    let stream = policy.stream_for(m * n);
+    let tiled = policy.tile_for(n).is_some();
 
     let fcol_ref: &[f32] = fcol;
     let plan_ref = SliceRef::new(plan.as_mut_slice());
+    let rows_ref = SliceRef::new(rowsum);
     let arena = acc.shared();
     let mut deltas = deltas;
     let slots = deltas.as_mut().map(|d| d.shared());
     pool.run(part.blocks(), |b| {
         let r = part.range(b);
-        // SAFETY: row blocks are disjoint; accumulator/slot `b` belongs to
-        // part `b` alone.
+        // SAFETY: row blocks (and their rowsum segments) are disjoint;
+        // accumulator/slot `b` belongs to part `b` alone.
         let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
         let local = unsafe { arena.row_mut(b) };
+        let rs_block = if tiled {
+            unsafe { rows_ref.range_mut(r.start, r.end) }
+        } else {
+            unsafe { rows_ref.range_mut(0, 0) }
+        };
         local.fill(0.0);
         let rpd_block = &rpd[r.start..r.end];
-        let bd = match inv {
-            Some(iv) => fused_rows_tracked(block, n, rpd_block, fcol_ref, iv, fi, local),
-            None => {
-                fused_rows(block, n, rpd_block, fcol_ref, fi, local);
-                0.0
-            }
-        };
+        let bd = fused_rows_opt(
+            block, n, rpd_block, fcol_ref, inv, fi, local, rs_block, policy, stream,
+        );
         if let Some(slots) = slots {
             // SAFETY: slot `b` belongs to part `b` alone.
             unsafe { slots.set(b, bd) };

@@ -114,20 +114,9 @@ pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], 
     iterate_into(plan, colsum, rpd, cpd, fi, &mut fcol, &mut rowsum);
 }
 
-/// Vectorizable 16-lane sum (see `mapuot::scale_by_vec_and_sum` §Perf note).
-#[inline]
-pub fn wide_sum(xs: &[f32]) -> f32 {
-    const W: usize = 16;
-    let mut acc = [0f32; W];
-    let chunks = xs.len() / W;
-    let (h, t) = xs.split_at(chunks * W);
-    for w in h.chunks_exact(W) {
-        for k in 0..W {
-            acc[k] += w[k];
-        }
-    }
-    acc.iter().sum::<f32>() + t.iter().sum::<f32>()
-}
+/// Vectorizable 16-lane sum, now shared via [`crate::util::simd`] (it was
+/// copy-pasted here and in `mapuot` before the kernel subsystem).
+pub use crate::util::simd::wide_sum;
 
 /// The paper's Fig. 1 *C-language* column rescaling: `j` outer, `i` inner —
 /// the stride-N access pattern §3.1 blames for the baseline's cache misses.

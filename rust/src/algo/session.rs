@@ -66,10 +66,41 @@
 //! via [`SessionBuilder::pool`]; `ThreadPool::run` serializes concurrent
 //! dispatches internally, so sharing trades parallelism for memory, never
 //! correctness.
+//!
+//! # Kernel selection and tiling
+//!
+//! The MAP-UOT hot path runs on a kernel backend ([`crate::algo::kernels`])
+//! resolved **once at build time** into the workspace's [`KernelPolicy`]:
+//!
+//! * [`SessionBuilder::kernel`] picks the backend —
+//!   `auto` (default: runtime CPUID dispatch, AVX2+FMA where detected),
+//!   `scalar` (portable reference), `unrolled` (16-lane auto-vectorized),
+//!   or `avx2` (hand-written intrinsics; falls back to `unrolled` on hosts
+//!   without the features, so no `target-cpu` flag is ever needed for
+//!   correctness).
+//! * [`SessionBuilder::tile`] controls the cache-aware column tiling of
+//!   the fused sweep — `auto` (panel width from the detected L1d, row
+//!   chunks from L2, via `util::cputopo`), `off`, `tune` (one-shot
+//!   measured auto-tune at build), or an explicit panel width. Tiling
+//!   composes with the row partition: each thread tiles its own row
+//!   block, with `Sum_row` carried across panels in workspace scratch.
+//! * Past the LLC threshold the AVX2 backend switches the plan writes of
+//!   Computations III/IV to non-temporal stores (`_mm256_stream_ps`),
+//!   cutting per-iteration DRAM traffic from ~3 matrix transfers
+//!   (read + RFO + writeback) to the Roofline-minimum 2; below it,
+//!   regular stores keep the plan cache-resident across iterations.
+//!
+//! Environment overrides `MAP_UOT_KERNEL` / `MAP_UOT_TILE` apply whenever
+//! the builder is left on `auto` (that is how CI forces the scalar
+//! fallback). All backends × tile settings agree within 1e-5 relative and
+//! are property-tested in `rust/tests/prop_kernels.rs`; POT and COFFEE
+//! keep their fixed comparator loops, so cross-solver speedup figures are
+//! like-for-like only under `--kernel unrolled` (see EXPERIMENTS.md).
 
 use std::sync::Arc;
 
 use crate::algo::convergence::{self, StopRule};
+use crate::algo::kernels::{KernelKind, KernelPolicy, TileSpec};
 use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
 use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
@@ -118,6 +149,8 @@ pub struct Workspace {
     delta_slots: PaddedSlots,
     /// The persistent execution engine (pool backend, `threads > 1`).
     pool: Option<Arc<ThreadPool>>,
+    /// Resolved kernel backend + tiling/streaming policy (MAP-UOT path).
+    policy: KernelPolicy,
 }
 
 impl Workspace {
@@ -135,18 +168,44 @@ impl Workspace {
         backend: ParallelBackend,
         affinity: AffinityHint,
     ) -> Self {
+        let policy = KernelPolicy::for_shape(KernelKind::Auto, TileSpec::Auto, m, n);
+        Self::with_backend_policy(m, n, threads, backend, affinity, policy)
+    }
+
+    /// [`Workspace::with_backend`] with an already-resolved kernel/tiling
+    /// policy (the session builder resolves exactly once and passes it
+    /// here, so `tune` never measures twice per build).
+    pub fn with_backend_policy(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        affinity: AffinityHint,
+        policy: KernelPolicy,
+    ) -> Self {
         let threads = threads.max(1);
         let pool = (threads > 1 && backend == ParallelBackend::Pool)
             .then(|| Arc::new(ThreadPool::with_affinity(threads, affinity)));
-        Self::assemble(m, n, threads, backend, pool)
+        Self::assemble(m, n, threads, backend, pool, policy)
     }
 
     /// Workspace sharing an existing pool (its thread count wins). The
     /// pool serializes concurrent dispatches, so any number of workspaces
     /// may share one `Arc`.
     pub fn with_pool(m: usize, n: usize, pool: Arc<ThreadPool>) -> Self {
+        let policy = KernelPolicy::for_shape(KernelKind::Auto, TileSpec::Auto, m, n);
+        Self::with_pool_policy(m, n, pool, policy)
+    }
+
+    /// [`Workspace::with_pool`] with an already-resolved policy.
+    pub fn with_pool_policy(
+        m: usize,
+        n: usize,
+        pool: Arc<ThreadPool>,
+        policy: KernelPolicy,
+    ) -> Self {
         let threads = pool.threads();
-        Self::assemble(m, n, threads, ParallelBackend::Pool, Some(pool))
+        Self::assemble(m, n, threads, ParallelBackend::Pool, Some(pool), policy)
     }
 
     fn assemble(
@@ -155,6 +214,7 @@ impl Workspace {
         threads: usize,
         backend: ParallelBackend,
         pool: Option<Arc<ThreadPool>>,
+        policy: KernelPolicy,
     ) -> Self {
         Self {
             rows: m,
@@ -168,7 +228,20 @@ impl Workspace {
             acc: AccArena::padded(threads, n),
             delta_slots: PaddedSlots::new(threads),
             pool,
+            policy,
         }
+    }
+
+    /// The resolved kernel/tiling policy driving the MAP-UOT hot path.
+    pub fn policy(&self) -> KernelPolicy {
+        self.policy
+    }
+
+    /// Replace the kernel/tiling policy (benches, property tests, and
+    /// [`SessionBuilder::build`] when the builder carries explicit
+    /// `kernel`/`tile` choices).
+    pub fn set_policy(&mut self, policy: KernelPolicy) {
+        self.policy = policy;
     }
 
     /// Current `(rows, cols)` shape.
@@ -456,10 +529,20 @@ impl Solver for MapUotSolver {
         fi: f32,
         ws: &mut Workspace,
     ) {
+        let policy = ws.policy;
         if ws.threads <= 1 {
-            mapuot::iterate_into(plan, colsum, rpd, cpd, fi, &mut ws.fcol);
+            mapuot::iterate_policy(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut ws.fcol,
+                &mut ws.rowsum,
+                &policy,
+            );
         } else if let Some(pool) = &ws.pool {
-            parallel::mapuot_iterate_pool(
+            parallel::mapuot_iterate_pool_policy(
                 plan,
                 colsum,
                 rpd,
@@ -467,10 +550,12 @@ impl Solver for MapUotSolver {
                 fi,
                 pool,
                 &mut ws.fcol,
+                &mut ws.rowsum,
                 &mut ws.acc,
+                &policy,
             );
         } else {
-            parallel::mapuot_iterate_into(
+            parallel::mapuot_iterate_policy(
                 plan,
                 colsum,
                 rpd,
@@ -478,7 +563,9 @@ impl Solver for MapUotSolver {
                 fi,
                 ws.threads,
                 &mut ws.fcol,
+                &mut ws.rowsum,
                 &mut ws.acc,
+                &policy,
             );
         }
     }
@@ -492,10 +579,21 @@ impl Solver for MapUotSolver {
         fi: f32,
         ws: &mut Workspace,
     ) -> f32 {
+        let policy = ws.policy;
         if ws.threads <= 1 {
-            mapuot::iterate_tracked(plan, colsum, rpd, cpd, fi, &mut ws.fcol, &mut ws.inv_fcol)
+            mapuot::iterate_tracked_policy(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut ws.fcol,
+                &mut ws.inv_fcol,
+                &mut ws.rowsum,
+                &policy,
+            )
         } else if let Some(pool) = &ws.pool {
-            parallel::mapuot_iterate_pool_tracked(
+            parallel::mapuot_iterate_pool_tracked_policy(
                 plan,
                 colsum,
                 rpd,
@@ -504,11 +602,13 @@ impl Solver for MapUotSolver {
                 pool,
                 &mut ws.fcol,
                 &mut ws.inv_fcol,
+                &mut ws.rowsum,
                 &mut ws.acc,
                 &mut ws.delta_slots,
+                &policy,
             )
         } else {
-            parallel::mapuot_iterate_tracked(
+            parallel::mapuot_iterate_tracked_policy(
                 plan,
                 colsum,
                 rpd,
@@ -517,7 +617,9 @@ impl Solver for MapUotSolver {
                 ws.threads,
                 &mut ws.fcol,
                 &mut ws.inv_fcol,
+                &mut ws.rowsum,
                 &mut ws.acc,
+                &policy,
             )
         }
     }
@@ -577,6 +679,8 @@ pub struct SessionBuilder {
     backend: ParallelBackend,
     affinity: AffinityHint,
     pool: Option<Arc<ThreadPool>>,
+    kernel: KernelKind,
+    tile: TileSpec,
     stop: StopRule,
     check_every: usize,
     observer: Option<Box<dyn ConvergenceObserver>>,
@@ -612,6 +716,22 @@ impl SessionBuilder {
         self
     }
 
+    /// Kernel backend for the MAP-UOT hot path. Default
+    /// [`KernelKind::Auto`] (runtime CPUID dispatch, honoring the
+    /// `MAP_UOT_KERNEL` environment override).
+    pub fn kernel(mut self, kernel: KernelKind) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Column-tiling policy for the fused sweep. Default
+    /// [`TileSpec::Auto`] (cache-topology sizing, honoring the
+    /// `MAP_UOT_TILE` environment override).
+    pub fn tile(mut self, tile: TileSpec) -> Self {
+        self.tile = tile;
+        self
+    }
+
     /// Stopping criteria. Default [`StopRule::default`].
     pub fn stop(mut self, stop: StopRule) -> Self {
         self.stop = stop;
@@ -636,9 +756,18 @@ impl SessionBuilder {
     /// same-shape solves are allocation-free.
     pub fn build(self, problem: &Problem) -> SolverSession {
         let (m, n) = (problem.rows(), problem.cols());
+        // Resolved exactly once per build (a `tune` tile measures here).
+        let policy = KernelPolicy::for_shape(self.kernel, self.tile, m, n);
         let ws = match self.pool {
-            Some(pool) => Workspace::with_pool(m, n, pool),
-            None => Workspace::with_backend(m, n, self.threads, self.backend, self.affinity),
+            Some(pool) => Workspace::with_pool_policy(m, n, pool, policy),
+            None => Workspace::with_backend_policy(
+                m,
+                n,
+                self.threads,
+                self.backend,
+                self.affinity,
+                policy,
+            ),
         };
         SolverSession {
             solver: solver_for(self.kind),
@@ -674,10 +803,17 @@ impl SolverSession {
             backend: ParallelBackend::Pool,
             affinity: AffinityHint::None,
             pool: None,
+            kernel: KernelKind::Auto,
+            tile: TileSpec::Auto,
             stop: StopRule::default(),
             check_every: 8,
             observer: None,
         }
+    }
+
+    /// The resolved kernel/tiling policy of this session's workspace.
+    pub fn policy(&self) -> KernelPolicy {
+        self.ws.policy()
     }
 
     /// Which kernel this session runs.
@@ -942,6 +1078,26 @@ mod tests {
         assert!(ra.converged && rb.converged && rp.converged);
         assert_eq!(shared_a.plan().as_slice(), private.plan().as_slice());
         assert_eq!(ra.iters, rp.iters);
+    }
+
+    /// Builder kernel/tile choices land in the workspace policy, and an
+    /// explicitly scalar+tiled session solves to the same plan as the
+    /// default session (within kernel-agreement tolerance).
+    #[test]
+    fn builder_kernel_and_tile_are_applied() {
+        let p = Problem::random(12, 300, 0.7, 17);
+        let mut forced = SolverSession::builder(SolverKind::MapUot)
+            .kernel(KernelKind::Scalar)
+            .tile(TileSpec::Cols(64))
+            .build(&p);
+        assert_eq!(forced.policy().kind(), KernelKind::Scalar);
+        assert_eq!(forced.policy().tile_cols(), 64);
+        // Explicit choices beat the MAP_UOT_* env overrides (those only
+        // apply to Auto), so this holds on the CI forced-scalar leg too.
+        let mut default = SolverSession::builder(SolverKind::MapUot).build(&p);
+        forced.solve(&p).unwrap();
+        default.solve(&p).unwrap();
+        assert!(forced.plan().max_rel_diff(default.plan(), 1e-6) < 1e-4);
     }
 
     #[test]

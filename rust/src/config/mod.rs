@@ -3,7 +3,7 @@
 pub mod parser;
 pub mod presets;
 
-use crate::algo::{AffinityHint, ParallelBackend, SolverKind, StopRule};
+use crate::algo::{AffinityHint, KernelKind, ParallelBackend, SolverKind, StopRule, TileSpec};
 use crate::error::Result;
 use parser::RawConfig;
 
@@ -38,6 +38,12 @@ pub struct ServiceConfig {
     pub parallel: ParallelBackend,
     /// Core-affinity hint for pool workers.
     pub affinity: AffinityHint,
+    /// Kernel backend for the MAP-UOT hot path (config key
+    /// `[solver] kernel = auto|scalar|unrolled|avx2`).
+    pub kernel: KernelKind,
+    /// Column-tiling policy for the fused sweep (config key
+    /// `[solver] tile = auto|off|tune|<cols>`).
+    pub tile: TileSpec,
     /// Stopping criteria.
     pub stop: StopRule,
     /// Artifact directory for the PJRT backend.
@@ -56,6 +62,8 @@ impl Default for ServiceConfig {
             solver_threads: 1,
             parallel: ParallelBackend::Pool,
             affinity: AffinityHint::None,
+            kernel: KernelKind::Auto,
+            tile: TileSpec::Auto,
             stop: StopRule::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -89,6 +97,17 @@ impl ServiceConfig {
         } else {
             AffinityHint::None
         };
+        let kernel = match c.get("solver", "kernel") {
+            None => d.kernel,
+            Some(s) => KernelKind::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!("unknown kernel backend {s:?}"))
+            })?,
+        };
+        let tile = match c.get("solver", "tile") {
+            None => d.tile,
+            Some(s) => TileSpec::parse(s)
+                .ok_or_else(|| crate::error::Error::Config(format!("unknown tile policy {s:?}")))?,
+        };
         Ok(Self {
             workers: c.get_or("coordinator", "workers", d.workers)?,
             batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
@@ -99,6 +118,8 @@ impl ServiceConfig {
             solver_threads: c.get_or("solver", "threads", d.solver_threads)?,
             parallel,
             affinity,
+            kernel,
+            tile,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -125,7 +146,8 @@ mod tests {
     fn from_raw_full() {
         let raw = parser::RawConfig::parse(
             "[coordinator]\nworkers=3\nbackend=pjrt\n\
-             [solver]\nkind=coffee\nthreads=2\nmax_iter=50\nparallel=spawn\npin=true\n",
+             [solver]\nkind=coffee\nthreads=2\nmax_iter=50\nparallel=spawn\npin=true\n\
+             kernel=scalar\ntile=512\n",
         )
         .unwrap();
         let c = ServiceConfig::from_raw(&raw).unwrap();
@@ -135,7 +157,24 @@ mod tests {
         assert_eq!(c.solver_threads, 2);
         assert_eq!(c.parallel, ParallelBackend::SpawnPerIter);
         assert_eq!(c.affinity, AffinityHint::Pinned);
+        assert_eq!(c.kernel, KernelKind::Scalar);
+        assert_eq!(c.tile, TileSpec::Cols(512));
         assert_eq!(c.stop.max_iter, 50);
+    }
+
+    #[test]
+    fn kernel_and_tile_default_and_reject() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.kernel, KernelKind::Auto);
+        assert_eq!(c.tile, TileSpec::Auto);
+        let raw = parser::RawConfig::parse("[solver]\nkernel=sse9\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = parser::RawConfig::parse("[solver]\ntile=wide\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err());
+        let raw = parser::RawConfig::parse("[solver]\nkernel=avx2\ntile=off\n").unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.kernel, KernelKind::Avx2);
+        assert_eq!(c.tile, TileSpec::Off);
     }
 
     #[test]

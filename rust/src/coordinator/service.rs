@@ -162,6 +162,8 @@ fn execute(
                     .threads(cfg.solver_threads)
                     .backend(cfg.parallel)
                     .affinity(cfg.affinity)
+                    .kernel(cfg.kernel)
+                    .tile(cfg.tile)
                     .stop(cfg.stop)
                     .build(&req.problem)
             });

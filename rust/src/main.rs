@@ -11,8 +11,8 @@
 use std::collections::HashMap;
 
 use map_uot::algo::{
-    AffinityHint, CheckEvent, ObserverAction, ParallelBackend, Problem, SolverKind, SolverSession,
-    StopRule,
+    AffinityHint, CheckEvent, KernelKind, ObserverAction, ParallelBackend, Problem, SolverKind,
+    SolverSession, StopRule, TileSpec,
 };
 use map_uot::apps;
 use map_uot::bench::figures;
@@ -93,6 +93,9 @@ fn print_help() {
          \x20        --threads 1 --max-iter 1000 --tol 1e-4 --seed 42 --backend native|pjrt\n\
          \x20        --par pool|spawn (threaded engine: persistent worker pool, default,\n\
          \x20        or legacy scope-per-iteration) --pin (pin pool workers to cores)\n\
+         \x20        --kernel auto|scalar|unrolled|avx2 (SIMD backend; auto = runtime\n\
+         \x20        CPUID dispatch) --tile auto|off|tune|<cols> (cache-aware column\n\
+         \x20        tiling of the fused sweep)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -144,11 +147,35 @@ fn cmd_solve(a: &Args) -> i32 {
             return 1;
         }
     };
+    // Same contract for the kernel/tiling knobs: these exist to pin down
+    // what exactly is being measured, so typos must fail loudly.
+    let kernel = match KernelKind::parse(&a.str("kernel", "auto")) {
+        Some(k) => k,
+        None => {
+            eprintln!(
+                "error: unknown --kernel backend {:?} (expected auto|scalar|unrolled|avx2)",
+                a.str("kernel", "")
+            );
+            return 1;
+        }
+    };
+    let tile = match TileSpec::parse(&a.str("tile", "auto")) {
+        Some(t) => t,
+        None => {
+            eprintln!(
+                "error: unknown --tile policy {:?} (expected auto|off|tune|<cols>)",
+                a.str("tile", "")
+            );
+            return 1;
+        }
+    };
     let affinity = if a.get("pin", false) { AffinityHint::Pinned } else { AffinityHint::None };
     let mut builder = SolverSession::builder(solver)
         .threads(a.get("threads", 1usize))
         .backend(par)
         .affinity(affinity)
+        .kernel(kernel)
+        .tile(tile)
         .stop(stop);
     if a.get("progress", false) {
         builder = builder.observer(|ev: CheckEvent| {
@@ -157,6 +184,7 @@ fn cmd_solve(a: &Args) -> i32 {
         });
     }
     let mut session = builder.build(&problem);
+    let policy = session.policy();
     let report = match session.solve(&problem) {
         Ok(r) => r,
         Err(e) => {
@@ -166,8 +194,10 @@ fn cmd_solve(a: &Args) -> i32 {
     };
     let plan = session.into_plan();
     println!(
-        "{} solve {m}x{n} fi={fi}: iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
+        "{} solve {m}x{n} fi={fi} [kernel={} tile={}]: iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
         solver.name(),
+        policy.kind().name(),
+        if policy.tile_cols() == 0 { "off".to_string() } else { policy.tile_cols().to_string() },
         report.iters,
         report.err,
         report.delta,
@@ -292,6 +322,7 @@ fn cmd_fig(which: &str) -> i32 {
             let (a, b) = figures::fig08();
             a.print();
             b.print();
+            figures::fig08_cpu().print();
         }
         "9" => {
             let (t, s) = figures::fig09();

@@ -1,0 +1,120 @@
+//! CPU cache-topology detection for the kernel tiling policy.
+//!
+//! The tiled fused sweep (`algo::kernels`) sizes its column panels so that
+//! `Factor_col` + `inv_fcol` + `NextSum_col` + a row panel stay L1-resident,
+//! its row chunks so a chunk stays L2-resident between the two phases, and
+//! its non-temporal-store threshold so streaming stores only engage once the
+//! plan exceeds the last-level cache (below that, regular stores keep the
+//! matrix cache-resident across iterations, which is strictly better).
+//!
+//! Detection reads the Linux sysfs cache hierarchy
+//! (`/sys/devices/system/cpu/cpu0/cache/index*/`), which works unprivileged
+//! in containers; anything missing or unparsable falls back to conservative
+//! defaults (32 KiB L1d / 512 KiB L2 / 8 MiB LLC — small enough to be safe
+//! on any x86/ARM server of the last decade: undersized tiles cost a few
+//! percent, oversized tiles thrash). The result is detected once and cached
+//! for the process.
+
+use std::sync::OnceLock;
+
+/// Per-core data-cache sizes in bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheTopo {
+    /// L1 data cache (per core).
+    pub l1d: usize,
+    /// L2 (per core or per cluster — sysfs reports what the core sees).
+    pub l2: usize,
+    /// Last-level cache (L3 when present, else the L2 figure).
+    pub llc: usize,
+}
+
+/// Safe fallback when detection is unavailable (non-Linux, masked sysfs).
+pub const FALLBACK: CacheTopo = CacheTopo {
+    l1d: 32 * 1024,
+    l2: 512 * 1024,
+    llc: 8 * 1024 * 1024,
+};
+
+/// The host topology, detected once per process.
+pub fn get() -> CacheTopo {
+    static TOPO: OnceLock<CacheTopo> = OnceLock::new();
+    *TOPO.get_or_init(detect)
+}
+
+/// Fresh detection (uncached — prefer [`get`]).
+pub fn detect() -> CacheTopo {
+    detect_sysfs().unwrap_or(FALLBACK)
+}
+
+fn detect_sysfs() -> Option<CacheTopo> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut l1d = None;
+    let mut l2 = None;
+    let mut l3 = None;
+    for idx in 0..=4u32 {
+        let dir = base.join(format!("index{idx}"));
+        let read = |leaf: &str| -> Option<String> {
+            std::fs::read_to_string(dir.join(leaf))
+                .ok()
+                .map(|s| s.trim().to_string())
+        };
+        let (Some(level), Some(kind), Some(size)) = (read("level"), read("type"), read("size"))
+        else {
+            continue;
+        };
+        let Some(bytes) = parse_size(&size) else { continue };
+        match (level.as_str(), kind.as_str()) {
+            ("1", "Data") | ("1", "Unified") => l1d = Some(bytes),
+            ("2", _) => l2 = Some(bytes),
+            ("3", _) => l3 = Some(bytes),
+            _ => {}
+        }
+    }
+    // Partial reads still beat the blanket fallback: fill holes per level.
+    if l1d.is_none() && l2.is_none() && l3.is_none() {
+        return None;
+    }
+    let l1d = l1d.unwrap_or(FALLBACK.l1d);
+    let l2 = l2.unwrap_or(FALLBACK.l2);
+    Some(CacheTopo { l1d, l2, llc: l3.unwrap_or(l2) })
+}
+
+/// Parse sysfs cache sizes: `"48K"`, `"1280K"`, `"30M"`, bare bytes.
+fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    let v: usize = digits.trim().parse().ok()?;
+    (v > 0).then_some(v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_units() {
+        assert_eq!(parse_size("48K"), Some(48 * 1024));
+        assert_eq!(parse_size("1280K"), Some(1280 * 1024));
+        assert_eq!(parse_size("30M"), Some(30 * 1024 * 1024));
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("0K"), None);
+        assert_eq!(parse_size("xK"), None);
+    }
+
+    #[test]
+    fn detection_is_sane() {
+        let t = get();
+        // Whatever the host, the hierarchy must be positive and ordered.
+        assert!(t.l1d >= 8 * 1024, "{t:?}");
+        assert!(t.l2 >= t.l1d, "{t:?}");
+        assert!(t.llc >= t.l2, "{t:?}");
+        // And stable across calls (OnceLock).
+        assert_eq!(t, get());
+    }
+}

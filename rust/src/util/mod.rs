@@ -1,7 +1,10 @@
-//! Shared low-level utilities: aligned matrix storage, RNG, stats, timing.
+//! Shared low-level utilities: aligned matrix storage, cache-topology
+//! detection, RNG, lane-reduction helpers, stats, timing.
 
+pub mod cputopo;
 pub mod matrix;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 

@@ -1,0 +1,63 @@
+//! Shared multi-lane reduction helpers for the portable (auto-vectorized)
+//! kernel paths.
+//!
+//! Every unrolled inner loop in the solver kernels uses the same trick: 16
+//! independent accumulator lanes, wide enough for AVX2/AVX-512
+//! auto-vectorization AND to break the add-latency dependency chain (4
+//! lanes capped the fused primitive at ~47% of streaming peak — see
+//! EXPERIMENTS.md §Perf). Before this module, the lane fold and the plain
+//! wide sum were copy-pasted between `algo::mapuot` and `algo::pot`; both
+//! now funnel through here so the lane width and fold order stay uniform
+//! (the fold is a *sequential* sum over the lanes — changing it to a tree
+//! would change results bit-for-bit and break the pool/scope bit-match
+//! contract).
+
+/// Accumulator lanes used by the unrolled kernel loops.
+pub const LANES: usize = 16;
+
+/// Fold the lane accumulators into one scalar (sequential order — part of
+/// the bit-exactness contract, see module docs).
+#[inline]
+pub fn fold(acc: &[f32; LANES]) -> f32 {
+    acc.iter().sum::<f32>()
+}
+
+/// Vectorizable 16-lane sum of a slice (NumPy's pairwise-sum ufunc is
+/// similarly vectorized, so the POT baseline uses this to stay honest).
+#[inline]
+pub fn wide_sum(xs: &[f32]) -> f32 {
+    let mut acc = [0f32; LANES];
+    let chunks = xs.len() / LANES;
+    let (h, t) = xs.split_at(chunks * LANES);
+    for w in h.chunks_exact(LANES) {
+        for k in 0..LANES {
+            acc[k] += w[k];
+        }
+    }
+    fold(&acc) + t.iter().sum::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_sum_matches_serial_sum() {
+        let mut rng = crate::util::XorShift::new(7);
+        for n in [0usize, 1, 15, 16, 17, 33, 257, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let serial: f32 = xs.iter().sum();
+            let wide = wide_sum(&xs);
+            assert!((wide - serial).abs() <= 1e-4 * serial.abs().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fold_is_sequential() {
+        let mut acc = [0f32; LANES];
+        for (k, a) in acc.iter_mut().enumerate() {
+            *a = k as f32;
+        }
+        assert_eq!(fold(&acc), (0..LANES).sum::<usize>() as f32);
+    }
+}

@@ -63,6 +63,37 @@ fn solve_rejects_unknown_parallel_backend() {
 }
 
 #[test]
+fn solve_rejects_unknown_kernel_and_tile() {
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--kernel", "sse9"]);
+    assert!(!ok, "typoed --kernel must not silently fall back");
+    assert!(stderr.contains("unknown --kernel backend"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--tile", "wide"]);
+    assert!(!ok, "typoed --tile must not silently fall back");
+    assert!(stderr.contains("unknown --tile policy"), "{stderr}");
+}
+
+#[test]
+fn solve_kernel_and_tile_combinations_converge() {
+    // `avx2` must work (via runtime fallback) even on hosts without AVX2,
+    // and the report line names the *resolved* kernel and tile.
+    for kernel in ["auto", "scalar", "unrolled", "avx2"] {
+        let (stdout, _, ok) = run(&[
+            "solve", "--m", "48", "--n", "300", "--kernel", kernel, "--tile", "64",
+            "--max-iter", "300",
+        ]);
+        assert!(ok, "kernel={kernel}: {stdout}");
+        assert!(stdout.contains("converged=true"), "kernel={kernel}: {stdout}");
+        assert!(stdout.contains("tile=64"), "kernel={kernel}: {stdout}");
+        assert!(stdout.contains("kernel="), "kernel={kernel}: {stdout}");
+    }
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "32", "--n", "32", "--tile", "off", "--max-iter", "300",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("tile=off"), "{stdout}");
+}
+
+#[test]
 fn fig_roofline_prints_eq1() {
     let (stdout, _, ok) = run(&["fig", "3"]);
     assert!(ok);

@@ -1,0 +1,212 @@
+//! Property tests for the kernel-backend subsystem (`algo::kernels`):
+//! every available backend (scalar reference, 16-lane unrolled, AVX2+FMA
+//! where the host supports it) × tile width (including `n_tile ∤ n`,
+//! `n_tile > n`, `n = 1`) × execution engine (serial, persistent pool)
+//! must agree with the scalar untiled reference within 1e-5 relative on
+//! random problems — and pool must stay **bit-identical** to the scope
+//! backend under any fixed policy, because both share the partition, the
+//! kernel and the reduction order.
+//!
+//! CI runs the whole test binary twice: once plain and once under
+//! `MAP_UOT_KERNEL=scalar MAP_UOT_TILE=off` (the dispatch-fallback leg) —
+//! these tests pin policies explicitly, so they exercise the same matrix
+//! either way.
+
+use map_uot::algo::pool::{AccArena, PaddedSlots, ThreadPool};
+use map_uot::algo::{
+    parallel, solver_for, KernelKind, KernelPolicy, Problem, SolverKind, SolverSession, TileSpec,
+    Workspace,
+};
+
+/// ≥ 6 shapes: single cell, single row, m < threads, tiny, tall, wide.
+const SHAPES: &[(usize, usize)] = &[(1, 1), (1, 37), (3, 8), (16, 16), (33, 257), (5, 1000)];
+
+/// Tile widths: off, pathological small (never divides 257/1000 evenly),
+/// lane-width, mid, and wider than every shape's n.
+const TILES: &[usize] = &[0, 3, 7, 16, 64, 2000];
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1e-3)
+}
+
+/// Serial: every backend × tile width reproduces the scalar untiled
+/// reference within 1e-5 relative (plans, carried colsums, tracked delta)
+/// over several iterations.
+#[test]
+fn kernels_by_tiles_match_scalar_reference() {
+    for &(m, n) in SHAPES {
+        let p = Problem::random(m, n, 0.7, (m * 131 + n) as u64);
+        let solver = solver_for(SolverKind::MapUot);
+
+        // Reference: scalar kernel, untiled, cached stores.
+        let mut ws_ref = Workspace::new(m, n, 1);
+        ws_ref.set_policy(KernelPolicy::explicit(KernelKind::Scalar, 0, None));
+        let mut plan_ref = p.plan.clone();
+        let mut cs_ref = plan_ref.col_sums();
+        let mut deltas_ref = Vec::new();
+        for _ in 0..3 {
+            deltas_ref.push(solver.iterate_tracked(
+                &mut plan_ref, &mut cs_ref, &p.rpd, &p.cpd, p.fi, &mut ws_ref,
+            ));
+        }
+
+        for kind in KernelKind::available() {
+            for &tile in TILES {
+                let mut ws = Workspace::new(m, n, 1);
+                ws.set_policy(KernelPolicy::explicit(kind, tile, None));
+                let mut plan = p.plan.clone();
+                let mut cs = plan.col_sums();
+                for (it, dref) in deltas_ref.iter().enumerate() {
+                    let d = solver.iterate_tracked(
+                        &mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws,
+                    );
+                    assert!(
+                        rel_close(d, *dref, 1e-4),
+                        "{} tile={tile} {m}x{n} iter={it}: delta {d} vs {dref}"
+                    );
+                }
+                let diff = plan.max_rel_diff(&plan_ref, 1e-6);
+                assert!(
+                    diff < 1e-5,
+                    "{} tile={tile} {m}x{n}: plan rel diff {diff}",
+                    kind.name()
+                );
+                for (a, b) in cs.iter().zip(&cs_ref) {
+                    assert!(
+                        rel_close(*a, *b, 1e-5),
+                        "{} tile={tile} {m}x{n}: colsum {a} vs {b}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Forced streaming stores change the cache protocol, never the bits:
+/// NT-on must bit-match NT-off for every backend × tile (the AVX2 path is
+/// the one actually exercising `_mm256_stream_ps`).
+#[test]
+fn nt_stores_are_bit_identical() {
+    for kind in KernelKind::available() {
+        for &(m, n) in SHAPES {
+            for &tile in &[0usize, 7, 64] {
+                let p = Problem::random(m, n, 0.6, (m + n * 13) as u64);
+                let solver = solver_for(SolverKind::MapUot);
+                let mut ws_a = Workspace::new(m, n, 1);
+                ws_a.set_policy(KernelPolicy::explicit(kind, tile, None));
+                let mut ws_b = Workspace::new(m, n, 1);
+                // nt threshold 0 bytes: every sweep streams.
+                ws_b.set_policy(KernelPolicy::explicit(kind, tile, Some(0)));
+                let mut a = p.plan.clone();
+                let mut cs_a = a.col_sums();
+                let mut b = p.plan.clone();
+                let mut cs_b = b.col_sums();
+                for _ in 0..3 {
+                    let da =
+                        solver.iterate_tracked(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_a);
+                    let db =
+                        solver.iterate_tracked(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_b);
+                    assert_eq!(da.to_bits(), db.to_bits(), "{} tile={tile} {m}x{n}", kind.name());
+                }
+                assert_eq!(a.as_slice(), b.as_slice(), "{} tile={tile} {m}x{n}", kind.name());
+                assert_eq!(cs_a, cs_b, "{} tile={tile} {m}x{n}", kind.name());
+            }
+        }
+    }
+}
+
+/// Pool and scope engines stay bit-identical under any fixed kernel/tile
+/// policy (tiling composes with the row partition identically in both).
+#[test]
+fn pool_bitmatches_scope_under_policy() {
+    for kind in KernelKind::available() {
+        for &(m, n) in SHAPES {
+            for &t in &[2usize, 4, 8] {
+                let tile = 7; // never divides the sweep shapes' n evenly
+                let policy = KernelPolicy::explicit(kind, tile, None);
+                let p = Problem::random(m, n, 0.7, (m * 7 + n + t) as u64);
+                let pool = ThreadPool::new(t);
+                let mut fcol_a = vec![0f32; n];
+                let mut fcol_b = vec![0f32; n];
+                let mut inv_a = vec![0f32; n];
+                let mut inv_b = vec![0f32; n];
+                let mut rs_a = vec![0f32; m];
+                let mut rs_b = vec![0f32; m];
+                let mut acc_a = AccArena::padded(t, n);
+                let mut acc_b = AccArena::padded(t, n);
+                let mut slots = PaddedSlots::new(t);
+                let mut a = p.plan.clone();
+                let mut cs_a = a.col_sums();
+                let mut b = p.plan.clone();
+                let mut cs_b = b.col_sums();
+                for _ in 0..3 {
+                    let da = parallel::mapuot_iterate_tracked_policy(
+                        &mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, t, &mut fcol_a, &mut inv_a,
+                        &mut rs_a, &mut acc_a, &policy,
+                    );
+                    let db = parallel::mapuot_iterate_pool_tracked_policy(
+                        &mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &pool, &mut fcol_b, &mut inv_b,
+                        &mut rs_b, &mut acc_b, &mut slots, &policy,
+                    );
+                    assert_eq!(
+                        da.to_bits(),
+                        db.to_bits(),
+                        "{} {m}x{n} t={t}: deltas diverged",
+                        kind.name()
+                    );
+                }
+                assert_eq!(a.as_slice(), b.as_slice(), "{} {m}x{n} t={t}", kind.name());
+                assert_eq!(cs_a, cs_b, "{} {m}x{n} t={t}", kind.name());
+            }
+        }
+    }
+}
+
+/// Full solves: a tiled, pooled session lands on the same plan as an
+/// untiled, serial one for every available backend — including shapes
+/// with fewer rows than threads.
+#[test]
+fn tiled_pooled_full_solve_matches_untiled_serial() {
+    for kind in KernelKind::available() {
+        for &(m, n) in &[(32usize, 24usize), (3, 40), (24, 257)] {
+            let p = Problem::random(m, n, 0.7, (m + n) as u64);
+            let mut serial = SolverSession::builder(SolverKind::MapUot)
+                .kernel(kind)
+                .tile(TileSpec::Off)
+                .build(&p);
+            let mut pooled = SolverSession::builder(SolverKind::MapUot)
+                .threads(4)
+                .kernel(kind)
+                .tile(TileSpec::Cols(16))
+                .build(&p);
+            let rs = serial.solve(&p).unwrap();
+            let rp = pooled.solve(&p).unwrap();
+            assert!(rs.converged && rp.converged, "{} {m}x{n}", kind.name());
+            let diff = serial.plan().max_rel_diff(pooled.plan(), 1e-6);
+            assert!(diff < 1e-3, "{} {m}x{n}: {diff}", kind.name());
+        }
+    }
+}
+
+/// The one-shot auto-tuner and the topology-derived auto width both
+/// produce sessions that agree with the reference (whatever width they
+/// pick on this host).
+#[test]
+fn auto_and_tuned_tiles_solve_correctly() {
+    let p = Problem::random(24, 600, 0.7, 9);
+    let mut reference = SolverSession::builder(SolverKind::MapUot)
+        .kernel(KernelKind::Scalar)
+        .tile(TileSpec::Off)
+        .build(&p);
+    reference.solve(&p).unwrap();
+    for tile in [TileSpec::Auto, TileSpec::Tune] {
+        let mut s = SolverSession::builder(SolverKind::MapUot)
+            .kernel(KernelKind::Auto)
+            .tile(tile)
+            .build(&p);
+        s.solve(&p).unwrap();
+        let diff = s.plan().max_rel_diff(reference.plan(), 1e-6);
+        assert!(diff < 1e-3, "{tile:?}: {diff}");
+    }
+}
