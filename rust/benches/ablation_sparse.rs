@@ -1,43 +1,115 @@
-//! Ablation: fused vs unfused sparse UOT (paper §6 future work), and the
-//! interweaving benefit as a function of density.
+//! Ablation: fused vs unfused sparse UOT (paper §6 future work) vs the
+//! dense fused kernel, across a density sweep.
+//!
+//! The interweaving benefit *grows* for sparse data — the unfused 4-pass
+//! baseline streams `values`+`col_idx` four times per iteration, the
+//! fused pass once — and the sweep locates the density below which the
+//! fused CSR pass beats the dense fused kernel outright (the dense kernel
+//! touches every M·N cell; CSR touches nnz cells plus an 8 B/nnz index
+//! tax and gather/scatter latency, so the crossover is well below 50%).
+//!
+//! Emits `BENCH_sparse.json` (committed at the repo root) for the perf
+//! trajectory, regardless of the invocation cwd — own env var
+//! `MAP_UOT_SPARSE_JSON`, so running alongside the other benches clobbers
+//! nothing. Set MAP_UOT_BENCH_FAST=1 for a quick pass.
 
+use map_uot::algo::mapuot;
 use map_uot::algo::sparse::{self, CsrMatrix};
 use map_uot::bench::{fast_mode, measure, Policy, Table};
 use map_uot::util::{Matrix, XorShift};
 
 fn main() {
-    let n = if fast_mode() { 512 } else { 4096 };
+    let n = if fast_mode() { 256 } else { 4096 };
+    let densities: &[f32] = if fast_mode() {
+        &[0.05, 0.5]
+    } else {
+        &[0.01, 0.02, 0.05, 0.1, 0.2, 0.35, 0.5, 0.75]
+    };
+    let fi = 0.7f32;
+    let policy = Policy { warmup: 1, reps: if fast_mode() { 3 } else { 5 } };
     let mut t = Table::new(
         format!("Ablation: sparse MAP-UOT at {n}x{n} (ms/iter)"),
-        &["density", "nnz", "unfused 4-pass", "fused 1-pass", "speedup"],
+        &["density", "nnz", "unfused 4-pass", "fused CSR", "dense fused", "vs 4-pass", "vs dense"],
     );
-    for &density in &[0.01f32, 0.05, 0.2, 0.5] {
+    let mut json_rows = String::new();
+    // Crossover = the largest density below which fused CSR won at *every*
+    // measured point (the first dense win truncates it), so a noisy
+    // non-monotone sweep cannot overstate the break-even density.
+    let mut crossover: Option<f32> = None;
+    let mut dense_won = false;
+    for &density in densities {
         let mut rng = XorShift::new(7);
-        let dense = Matrix::from_fn(n, n, |_, _| {
+        let dense_plan = Matrix::from_fn(n, n, |_, _| {
             if rng.next_f32() < density { rng.uniform(0.1, 2.0) } else { 0.0 }
         });
-        let a0 = CsrMatrix::from_dense(&dense, 0.0);
         let rpd = rng.uniform_vec(n, 0.3, 1.7);
         let cpd = rng.uniform_vec(n, 0.3, 1.7);
+        let a0 = CsrMatrix::from_dense(&dense_plan, 0.0).expect("finite nonnegative source");
+        let nnz = a0.nnz();
 
         let mut a = a0.clone();
-        let mut cs = a.col_sums();
-        let policy = Policy { warmup: 1, reps: 5 };
-        let unfused = measure(policy, || {
-            sparse::iterate_baseline(&mut a, &mut cs, &rpd, &cpd, 0.7)
-        }) * 1e3;
+        let mut cs_a = a.col_sums();
+        let unfused =
+            measure(policy, || sparse::iterate_baseline(&mut a, &mut cs_a, &rpd, &cpd, fi)) * 1e3;
+
         let mut b = a0.clone();
-        let mut cs2 = b.col_sums();
+        let mut cs_b = b.col_sums();
+        let mut fcol = vec![0f32; n];
         let fused = measure(policy, || {
-            sparse::iterate(&mut b, &mut cs2, &rpd, &cpd, 0.7)
+            sparse::iterate_into(&mut b, &mut cs_b, &rpd, &cpd, fi, &mut fcol)
         }) * 1e3;
+
+        let mut d = dense_plan.clone();
+        let mut cs_d = d.col_sums();
+        let mut dfcol = vec![0f32; n];
+        let dense_ms = measure(policy, || {
+            mapuot::iterate_into(&mut d, &mut cs_d, &rpd, &cpd, fi, &mut dfcol)
+        }) * 1e3;
+
+        if fused >= dense_ms {
+            dense_won = true;
+        } else if !dense_won {
+            crossover = Some(density);
+        }
+        for (variant, ms) in
+            [("csr-4pass", unfused), ("csr-fused", fused), ("dense-fused", dense_ms)]
+        {
+            if !json_rows.is_empty() {
+                json_rows.push(',');
+            }
+            json_rows.push_str(&format!(
+                "\n    {{\"n\": {n}, \"density\": {density}, \"nnz\": {nnz}, \
+                 \"variant\": \"{variant}\", \"ms_per_iter\": {ms:.4}}}"
+            ));
+        }
         t.row(&[
             format!("{density}"),
-            format!("{}", a0.nnz()),
+            format!("{nnz}"),
             format!("{unfused:.3}"),
             format!("{fused:.3}"),
+            format!("{dense_ms:.3}"),
             format!("{:.2}x", unfused / fused),
+            format!("{:.2}x", dense_ms / fused),
         ]);
     }
     t.print();
+    match crossover {
+        Some(d) => println!(
+            "crossover: fused CSR beats the dense fused kernel up to density ~{d} on this host"
+        ),
+        None => println!("crossover: dense fused kernel won at every measured density"),
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"ablation_sparse\",\n  \"unit\": \"ms_per_iter\",\n  \"n\": {n},\n  \
+         \"schema\": {{\"rows\": \"[{{n, density, nnz, variant, ms_per_iter}}]\", \
+         \"variant\": \"csr-4pass | csr-fused | dense-fused\"}},\n  \"rows\": [{json_rows}\n  ]\n}}\n"
+    );
+    let path = std::env::var("MAP_UOT_SPARSE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sparse.json").to_string()
+    });
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[ablation_sparse] wrote {path}"),
+        Err(e) => eprintln!("[ablation_sparse] could not write {path}: {e}"),
+    }
 }

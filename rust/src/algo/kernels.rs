@@ -570,6 +570,111 @@ mod avx2 {
 }
 
 // ---------------------------------------------------------------------------
+// CSR row primitives (sparse MAP-UOT)
+// ---------------------------------------------------------------------------
+//
+// The sparse fused sweep (`algo::sparse::fused_csr_rows`) runs on these
+// two primitives — the CSR analogues of `scale_by_vec_and_sum` and
+// `scale_by_scalar_and_accumulate{,_tracked}`. The gathers/scatters stay
+// scalar (there is no contiguity to exploit and no AVX2 gather is worth
+// its latency at these row lengths), but the multiply/sum runs on
+// `util::simd::LANES` independent accumulator lanes with the shared
+// sequential fold, so the row sum does not serialize on add latency and
+// the numerics match the dense kernels' conventions. The scatter adds
+// preserve element order within each unrolled chunk, so the tracked and
+// untracked forms (and any chunking) are bit-identical to the plain loop.
+
+/// CSR Computations I+II over one row's nonzeros:
+/// `vals[k] *= fcol[cols[k]]`, returning the sum of the scaled values.
+pub fn csr_scale_by_cols_and_sum(vals: &mut [f32], cols: &[u32], fcol: &[f32]) -> f32 {
+    debug_assert_eq!(vals.len(), cols.len());
+    const W: usize = simd::LANES;
+    let mut acc = [0f32; W];
+    let chunks = vals.len() / W;
+    let (vh, vt) = vals.split_at_mut(chunks * W);
+    let (ch, ct) = cols.split_at(chunks * W);
+    for (vw, cw) in vh.chunks_exact_mut(W).zip(ch.chunks_exact(W)) {
+        for k in 0..W {
+            vw[k] *= fcol[cw[k] as usize];
+            acc[k] += vw[k];
+        }
+    }
+    let mut s = simd::fold(&acc);
+    for (v, &c) in vt.iter_mut().zip(ct) {
+        *v *= fcol[c as usize];
+        s += *v;
+    }
+    s
+}
+
+/// CSR Computations III+IV: `vals[k] *= fr`, scatter-accumulating the new
+/// values into `next_colsum[cols[k]]`.
+pub fn csr_scale_and_accumulate(
+    vals: &mut [f32],
+    cols: &[u32],
+    fr: f32,
+    next_colsum: &mut [f32],
+) {
+    debug_assert_eq!(vals.len(), cols.len());
+    const W: usize = simd::LANES;
+    let chunks = vals.len() / W;
+    let (vh, vt) = vals.split_at_mut(chunks * W);
+    let (ch, ct) = cols.split_at(chunks * W);
+    for (vw, cw) in vh.chunks_exact_mut(W).zip(ch.chunks_exact(W)) {
+        for k in 0..W {
+            vw[k] *= fr;
+        }
+        // Scatter in element order — same accumulation order as the plain
+        // loop, so colsum bits do not depend on the unroll width.
+        for k in 0..W {
+            next_colsum[cw[k] as usize] += vw[k];
+        }
+    }
+    for (v, &c) in vt.iter_mut().zip(ct) {
+        *v *= fr;
+        next_colsum[c as usize] += *v;
+    }
+}
+
+/// Tracked CSR Computations III+IV: also returns the row's max element
+/// change, recovering the pre-iteration value as `v · inv_fcol[col]`
+/// (same reciprocal-factor trick as the dense tracked kernels; the lane
+/// maxima fold at the end, and `max` is order-independent, so the delta
+/// is bit-identical to the sequential form).
+pub fn csr_scale_and_accumulate_tracked(
+    vals: &mut [f32],
+    cols: &[u32],
+    fr: f32,
+    inv_fcol: &[f32],
+    next_colsum: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(vals.len(), cols.len());
+    const W: usize = simd::LANES;
+    let mut dl = [0f32; W];
+    let chunks = vals.len() / W;
+    let (vh, vt) = vals.split_at_mut(chunks * W);
+    let (ch, ct) = cols.split_at(chunks * W);
+    for (vw, cw) in vh.chunks_exact_mut(W).zip(ch.chunks_exact(W)) {
+        for k in 0..W {
+            let old = vw[k] * inv_fcol[cw[k] as usize];
+            vw[k] *= fr;
+            dl[k] = dl[k].max((vw[k] - old).abs());
+        }
+        for k in 0..W {
+            next_colsum[cw[k] as usize] += vw[k];
+        }
+    }
+    let mut delta = dl.iter().copied().fold(0f32, f32::max);
+    for (v, &c) in vt.iter_mut().zip(ct) {
+        let old = *v * inv_fcol[c as usize];
+        *v *= fr;
+        next_colsum[c as usize] += *v;
+        delta = delta.max((*v - old).abs());
+    }
+    delta
+}
+
+// ---------------------------------------------------------------------------
 // Policy: resolved kernel + tiling + streaming thresholds
 // ---------------------------------------------------------------------------
 
@@ -617,6 +722,13 @@ impl KernelPolicy {
             TileSpec::Off => 0,
             TileSpec::Cols(c) => c,
             TileSpec::Auto => auto_tile_cols(topo),
+            // A degenerate probe shape (e.g. the 1×1 placeholder a
+            // sparse-first session builds its dense buffers at) would
+            // "tune" on pure timer noise and that width would stick for
+            // any later real-shape solve — fall back to the topology
+            // width instead of measuring. Reachable via an explicit
+            // `tune` or the MAP_UOT_TILE=tune env override on Auto.
+            TileSpec::Tune if m.saturating_mul(n) < 64 * 64 => auto_tile_cols(topo),
             TileSpec::Tune => autotune_tile_cols(kernel_for(kind), m, n, topo),
         };
         let nt_off = matches!(
@@ -889,6 +1001,64 @@ mod tests {
         assert_eq!(legacy.kind(), KernelKind::Unrolled);
         assert_eq!(legacy.tile_for(1 << 20), None);
         assert!(!legacy.stream_for(usize::MAX / 8));
+    }
+
+    /// The CSR primitives reproduce plain gather/scatter loops exactly
+    /// (values and colsum bit-identical; sums/deltas within lane-fold
+    /// tolerance) across awkward nnz counts.
+    #[test]
+    fn csr_primitives_match_plain_loops() {
+        let mut rng = crate::util::XorShift::new(5);
+        let ncols = 40u32;
+        for nnz in [0usize, 1, 7, 15, 16, 17, 33, 257] {
+            let cols: Vec<u32> = (0..nnz)
+                .map(|_| (rng.next_f32() * ncols as f32) as u32 % ncols)
+                .collect();
+            let vals0: Vec<f32> = (0..nnz).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let fcol: Vec<f32> = (0..ncols).map(|_| rng.uniform(0.1, 2.0)).collect();
+            let inv: Vec<f32> = fcol.iter().map(|f| 1.0 / f).collect();
+            let cs0: Vec<f32> = (0..ncols).map(|_| rng.uniform(0.0, 1.0)).collect();
+
+            // Computations I+II vs the plain loop.
+            let mut vp = vals0.clone();
+            let mut sp = 0f32;
+            for (v, &c) in vp.iter_mut().zip(&cols) {
+                *v *= fcol[c as usize];
+                sp += *v;
+            }
+            let mut v = vals0.clone();
+            let s = csr_scale_by_cols_and_sum(&mut v, &cols, &fcol);
+            assert_eq!(v, vp, "nnz={nnz}");
+            assert!((s - sp).abs() <= 1e-5 * sp.abs().max(1.0), "nnz={nnz}: {s} vs {sp}");
+
+            // Computations III+IV, untracked.
+            let mut cs_p = cs0.clone();
+            for (v, &c) in vp.iter_mut().zip(&cols) {
+                *v *= 0.9;
+                cs_p[c as usize] += *v;
+            }
+            let mut cs = cs0.clone();
+            csr_scale_and_accumulate(&mut v, &cols, 0.9, &mut cs);
+            assert_eq!(v, vp, "nnz={nnz}");
+            assert_eq!(cs, cs_p, "nnz={nnz}");
+
+            // Tracked: identical updates plus the plain-loop delta bits.
+            let mut vt_p = vals0.clone();
+            let mut cst_p = cs0.clone();
+            let mut d_p = 0f32;
+            for (v, &c) in vt_p.iter_mut().zip(&cols) {
+                let old = *v * inv[c as usize];
+                *v *= 1.2;
+                cst_p[c as usize] += *v;
+                d_p = d_p.max((*v - old).abs());
+            }
+            let mut vt = vals0.clone();
+            let mut cst = cs0.clone();
+            let d = csr_scale_and_accumulate_tracked(&mut vt, &cols, 1.2, &inv, &mut cst);
+            assert_eq!(vt, vt_p, "tracked nnz={nnz}");
+            assert_eq!(cst, cst_p, "tracked nnz={nnz}");
+            assert_eq!(d.to_bits(), d_p.to_bits(), "tracked delta nnz={nnz}");
+        }
     }
 
     #[test]

@@ -33,6 +33,13 @@
 //! under a cache-aware tiling policy ([`KernelPolicy`]). The free
 //! functions [`solve`] and [`iterate_once`] remain as deprecated
 //! one-release shims.
+//!
+//! Sparse workloads (paper §6 future work) run the same fused iteration
+//! over CSR storage ([`sparse`]): one pass over nnz instead of M·N, with
+//! nnz-balanced row partitioning on both threaded engines — entered
+//! through [`SolverSession::solve_sparse`] / [`SessionBuilder::build_sparse`],
+//! the CLI `solve --sparse <threshold>`, or the `[solver] sparse` config
+//! key.
 
 pub mod balancing;
 pub mod coffee;
@@ -57,6 +64,7 @@ pub use session::{
     solver_for, CheckEvent, CoffeeSolver, ConvergenceObserver, MapUotSolver, ObserverAction,
     PotSolver, SessionBuilder, Solver, SolverSession, Workspace,
 };
+pub use sparse::{CsrMatrix, NnzPartition, SparseProblem, SparseWorkspace};
 
 use crate::util::Matrix;
 

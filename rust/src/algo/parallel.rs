@@ -46,6 +46,7 @@ use crate::algo::mapuot::{
 };
 use crate::algo::pool::{AccArena, PaddedSlots, Partition, SliceRef, ThreadPool};
 use crate::algo::scaling::{factor, factors_into, recip_into};
+use crate::algo::sparse::{fused_csr_rows, CsrMatrix, NnzPartition};
 use crate::util::Matrix;
 
 /// Clamp a thread-count request to something usable.
@@ -473,6 +474,247 @@ pub fn mapuot_iterate(
     let mut fcol = vec![0f32; n];
     let mut acc = AccArena::padded(t, n);
     mapuot_iterate_into(plan, colsum, rpd, cpd, fi, threads, &mut fcol, &mut acc);
+}
+
+// ---------------------------------------------------------------------------
+// Sparse MAP-UOT (CSR)
+// ---------------------------------------------------------------------------
+//
+// The CSR fused sweep parallelizes exactly like the dense one — contiguous
+// row blocks, private `NextSum_col` partials in the cache-line-padded
+// `AccArena`, block-ascending reduction — except that the blocks come from
+// an nnz-balanced `NnzPartition` (CSR row lengths are skewed, so an
+// even-rows split would leave stragglers). All three drivers (scope
+// engine, pool engine, and the partitioned serial reference) run the same
+// per-block body (`sparse::fused_csr_rows`) over the same partition and
+// reduce in the same order, so for identical inputs they produce
+// **bit-identical** values, column sums and tracked deltas — property-
+// tested in `rust/tests/prop_sparse.rs`.
+
+/// One sparse MAP-UOT iteration on the `thread::scope` engine out of
+/// caller-provided scratch: `fcol` (length N), the `NextSum_col` arena
+/// `acc`, and an [`NnzPartition`] that tiles `a`'s rows with at most
+/// `acc.rows()` blocks.
+pub fn sparse_mapuot_iterate_into(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    acc: &mut AccArena,
+    part: &NnzPartition,
+) {
+    sparse_scope(a, colsum, rpd, cpd, fi, fcol, None, acc, part);
+}
+
+/// [`sparse_mapuot_iterate_into`] with in-sweep delta tracking; returns
+/// the iteration's max element change across all row blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_mapuot_iterate_tracked(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    acc: &mut AccArena,
+    part: &NnzPartition,
+) -> f32 {
+    sparse_scope(a, colsum, rpd, cpd, fi, fcol, Some(inv_fcol), acc, part)
+}
+
+/// Shared body of the scope-engine sparse iteration.
+#[allow(clippy::too_many_arguments)]
+fn sparse_scope(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    acc: &mut AccArena,
+    part: &NnzPartition,
+) -> f32 {
+    debug_assert_eq!(part.rows(), a.m, "partition must tile the matrix rows");
+    debug_assert!(part.blocks() <= acc.rows());
+    factors_into(fcol, cpd, colsum, fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+    let fcol_ref: &[f32] = fcol;
+    let row_ptr: &[usize] = &a.row_ptr;
+    let col_idx: &[u32] = &a.col_idx;
+    let mut delta = 0f32;
+    thread::scope(|s| {
+        let mut rest: &mut [f32] = a.values.as_mut_slice();
+        let handles: Vec<_> = acc
+            .rows_mut()
+            .take(part.blocks())
+            .enumerate()
+            .map(|(b, local)| {
+                let r = part.range(b);
+                let (rs, re) = (r.start, r.end);
+                let base = row_ptr[rs];
+                let (block, tail) =
+                    std::mem::take(&mut rest).split_at_mut(row_ptr[re] - base);
+                rest = tail;
+                s.spawn(move || {
+                    local.fill(0.0);
+                    fused_csr_rows(
+                        block, base, row_ptr, col_idx, rs..re, rpd, fcol_ref, inv, fi, local,
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            delta = delta.max(h.join().expect("worker panicked"));
+        }
+    });
+    reduce_acc(colsum, acc, part.blocks());
+    delta
+}
+
+/// One sparse MAP-UOT iteration on the persistent pool: zero spawns, zero
+/// allocations, one epoch for the fused sweep + one for the reduction.
+/// `part.blocks()` must not exceed `pool.threads()` (a workspace built for
+/// the pool guarantees this).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_mapuot_iterate_pool(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    acc: &mut AccArena,
+    part: &NnzPartition,
+) {
+    sparse_pool(a, colsum, rpd, cpd, fi, pool, fcol, None, acc, None, part);
+}
+
+/// [`sparse_mapuot_iterate_pool`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_mapuot_iterate_pool_tracked(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+    part: &NnzPartition,
+) -> f32 {
+    sparse_pool(a, colsum, rpd, cpd, fi, pool, fcol, Some(inv_fcol), acc, Some(deltas), part)
+}
+
+/// Shared body of the pool-engine sparse iteration.
+#[allow(clippy::too_many_arguments)]
+fn sparse_pool(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    acc: &mut AccArena,
+    deltas: Option<&mut PaddedSlots>,
+    part: &NnzPartition,
+) -> f32 {
+    debug_assert_eq!(part.rows(), a.m, "partition must tile the matrix rows");
+    debug_assert!(part.blocks() <= acc.rows());
+    factors_into(fcol, cpd, colsum, fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+    let fcol_ref: &[f32] = fcol;
+    let row_ptr: &[usize] = &a.row_ptr;
+    let col_idx: &[u32] = &a.col_idx;
+    let vals = SliceRef::new(a.values.as_mut_slice());
+    let arena = acc.shared();
+    let mut deltas = deltas;
+    let slots = deltas.as_mut().map(|d| d.shared());
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        let (base, end) = (row_ptr[r.start], row_ptr[r.end]);
+        // SAFETY: the nnz ranges of distinct blocks are disjoint (row_ptr
+        // is monotone and the partition tiles the rows); accumulator/slot
+        // `b` belongs to part `b` alone.
+        let block = unsafe { vals.range_mut(base, end) };
+        let local = unsafe { arena.row_mut(b) };
+        local.fill(0.0);
+        let bd = fused_csr_rows(block, base, row_ptr, col_idx, r, rpd, fcol_ref, inv, fi, local);
+        if let Some(slots) = slots {
+            // SAFETY: slot `b` belongs to part `b` alone.
+            unsafe { slots.set(b, bd) };
+        }
+    });
+    reduce_acc_pool(colsum, acc, part.blocks(), pool);
+    deltas.map(|d| d.fold_max(part.blocks())).unwrap_or(0.0)
+}
+
+/// Partitioned **serial reference** of the sparse iteration: the exact
+/// per-block fused passes and block-ascending colsum reduction the two
+/// threaded engines run, executed sequentially on the calling thread.
+/// This is the bit-exactness oracle `prop_sparse.rs` holds both engines
+/// to, for any fixed partition.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_mapuot_iterate_partitioned_tracked(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    acc: &mut AccArena,
+    part: &NnzPartition,
+) -> f32 {
+    debug_assert_eq!(part.rows(), a.m, "partition must tile the matrix rows");
+    debug_assert!(part.blocks() <= acc.rows());
+    factors_into(fcol, cpd, colsum, fi);
+    recip_into(inv_fcol, fcol);
+    let fcol_ref: &[f32] = fcol;
+    let inv_ref: &[f32] = inv_fcol;
+    let mut delta = 0f32;
+    for b in 0..part.blocks() {
+        let r = part.range(b);
+        let (base, end) = (a.row_ptr[r.start], a.row_ptr[r.end]);
+        let local = acc.row_mut(b);
+        local.fill(0.0);
+        let (row_ptr, col_idx) = (&a.row_ptr, &a.col_idx);
+        let block = &mut a.values[base..end];
+        delta = delta.max(fused_csr_rows(
+            block,
+            base,
+            row_ptr,
+            col_idx,
+            r,
+            rpd,
+            fcol_ref,
+            Some(inv_ref),
+            fi,
+            local,
+        ));
+    }
+    reduce_acc(colsum, acc, part.blocks());
+    delta
 }
 
 // ---------------------------------------------------------------------------
@@ -1118,6 +1360,60 @@ mod tests {
         }
         assert_eq!(a.as_slice(), b.as_slice());
         assert_eq!(cs_a, cs_b);
+    }
+
+    #[test]
+    fn sparse_engines_bitmatch_partitioned_reference() {
+        use crate::algo::sparse::{self, SparseProblem};
+        let p = Problem::random(23, 17, 0.7, 13);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        for t in [1usize, 2, 3, 8] {
+            let part = NnzPartition::new(&sp.plan.row_ptr, t, t);
+            let pool = ThreadPool::new(t);
+            let mut scope_a = sp.plan.clone();
+            let mut pool_b = sp.plan.clone();
+            let mut ser_c = sp.plan.clone();
+            let mut cs_a = scope_a.col_sums();
+            let mut cs_b = pool_b.col_sums();
+            let mut cs_c = ser_c.col_sums();
+            let mut fcol = vec![0f32; 17];
+            let mut inv = vec![0f32; 17];
+            let mut acc_a = AccArena::padded(t, 17);
+            let mut acc_b = AccArena::padded(t, 17);
+            let mut acc_c = AccArena::padded(t, 17);
+            let mut deltas = PaddedSlots::new(t);
+            for _ in 0..4 {
+                let da = sparse_mapuot_iterate_tracked(
+                    &mut scope_a, &mut cs_a, &sp.rpd, &sp.cpd, sp.fi, &mut fcol, &mut inv,
+                    &mut acc_a, &part,
+                );
+                let db = sparse_mapuot_iterate_pool_tracked(
+                    &mut pool_b, &mut cs_b, &sp.rpd, &sp.cpd, sp.fi, &pool, &mut fcol, &mut inv,
+                    &mut acc_b, &mut deltas, &part,
+                );
+                let dc = sparse_mapuot_iterate_partitioned_tracked(
+                    &mut ser_c, &mut cs_c, &sp.rpd, &sp.cpd, sp.fi, &mut fcol, &mut inv,
+                    &mut acc_c, &part,
+                );
+                assert_eq!(da.to_bits(), dc.to_bits(), "scope vs serial ref, t={t}");
+                assert_eq!(db.to_bits(), dc.to_bits(), "pool vs serial ref, t={t}");
+            }
+            assert_eq!(scope_a.values, ser_c.values, "t={t}");
+            assert_eq!(pool_b.values, ser_c.values, "t={t}");
+            assert_eq!(cs_a, cs_c, "t={t}");
+            assert_eq!(cs_b, cs_c, "t={t}");
+        }
+        // And the dense solver agrees on the same support (tolerance, not
+        // bits — the colsum grouping differs).
+        let mut dense = sp.plan.to_dense();
+        let mut cs_d = dense.col_sums();
+        let mut sp_serial = sp.plan.clone();
+        let mut cs_s = sp_serial.col_sums();
+        for _ in 0..4 {
+            mapuot::iterate(&mut dense, &mut cs_d, &sp.rpd, &sp.cpd, sp.fi);
+            sparse::iterate(&mut sp_serial, &mut cs_s, &sp.rpd, &sp.cpd, sp.fi);
+        }
+        assert!(sp_serial.to_dense().max_rel_diff(&dense, 1e-6) < 1e-3);
     }
 
     #[test]

@@ -96,6 +96,25 @@
 //! are property-tested in `rust/tests/prop_kernels.rs`; POT and COFFEE
 //! keep their fixed comparator loops, so cross-solver speedup figures are
 //! like-for-like only under `--kernel unrolled` (see EXPERIMENTS.md).
+//!
+//! # Sparse problems
+//!
+//! The same session drives the fused **CSR** sweep (paper §6 future work)
+//! through [`SolverSession::solve_sparse`]: a [`SparseProblem`] (CSR plan
+//! + marginals) solved with the session's stop rule, check cadence,
+//! observer and execution engine — serial, scope, or the *same* persistent
+//! pool the dense path uses. Build with [`SessionBuilder::build_sparse`]
+//! when the workload is sparse-first (the dense buffers stay at a 1×1
+//! placeholder), or call `solve_sparse` on any MAP-UOT session. Row blocks
+//! are **nnz-balanced** ([`crate::algo::sparse::NnzPartition`] — CSR row
+//! lengths are skewed, so an even-rows split would leave stragglers), the
+//! per-thread `NextSum_col` partials reuse the padded [`AccArena`], and
+//! scope/pool engines are bit-identical for any fixed partition
+//! (`rust/tests/prop_sparse.rs`). The allocation contract carries over:
+//! after the first solve on a structure, same-structure solves are
+//! allocation-free end to end (`rust/tests/alloc_free.rs`). The sparse
+//! path runs the unrolled CSR kernel primitives — the dense
+//! kernel/tiling policy does not apply to it.
 
 use std::sync::Arc;
 
@@ -103,6 +122,7 @@ use crate::algo::convergence::{self, StopRule};
 use crate::algo::kernels::{KernelKind, KernelPolicy, TileSpec};
 use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
+use crate::algo::sparse::{CsrMatrix, SparseProblem, SparseWorkspace};
 use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
 use crate::error::{Error, Result};
 use crate::util::{Matrix, Timer};
@@ -755,7 +775,28 @@ impl SessionBuilder {
     /// allocation (including the one-time pool spawn); subsequent
     /// same-shape solves are allocation-free.
     pub fn build(self, problem: &Problem) -> SolverSession {
-        let (m, n) = (problem.rows(), problem.cols());
+        self.build_for_shape(problem.rows(), problem.cols())
+    }
+
+    /// Build a session for a **sparse** problem: the dense buffers are
+    /// provisioned at a minimal 1×1 placeholder (they resize on the first
+    /// dense [`SolverSession::solve`], if any), the persistent pool (when
+    /// threaded) spawns here, and the CSR state — plan clone plus
+    /// [`SparseWorkspace`] — is warmed up so the first
+    /// [`SolverSession::solve_sparse`] on this structure is already
+    /// allocation-free. Sparse solves require `SolverKind::MapUot`
+    /// (enforced at solve time, with a typed error).
+    pub fn build_sparse(self, problem: &SparseProblem) -> SolverSession {
+        // The sparse sweep ignores the dense kernel policy; a `tune` tile
+        // (explicit or via MAP_UOT_TILE) degrades to the topology width at
+        // the 1×1 placeholder shape instead of measuring timer noise — see
+        // the degenerate-shape guard in `KernelPolicy::for_shape`.
+        let mut session = self.build_for_shape(1, 1);
+        session.ensure_sparse(problem);
+        session
+    }
+
+    fn build_for_shape(self, m: usize, n: usize) -> SolverSession {
         // Resolved exactly once per build (a `tune` tile measures here).
         let policy = KernelPolicy::for_shape(self.kernel, self.tile, m, n);
         let ws = match self.pool {
@@ -777,6 +818,7 @@ impl SessionBuilder {
             ws,
             plan: Matrix::zeros(m, n),
             colsum: vec![0f32; n],
+            sparse: None,
         }
     }
 }
@@ -792,6 +834,16 @@ pub struct SolverSession {
     ws: Workspace,
     plan: Matrix,
     colsum: Vec<f32>,
+    /// CSR state, populated by the first sparse solve (or `build_sparse`)
+    /// and reused across same-structure sparse solves.
+    sparse: Option<SparseState>,
+}
+
+/// The sparse twin of the session's `(plan, colsum, ws)` triple.
+struct SparseState {
+    plan: CsrMatrix,
+    colsum: Vec<f32>,
+    ws: SparseWorkspace,
 }
 
 impl SolverSession {
@@ -854,44 +906,101 @@ impl SolverSession {
         self.plan.col_sums_into(&mut self.colsum);
         let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
 
-        let mut iters = 0;
-        let (mut err, mut delta);
-        loop {
-            // Sum of per-iteration max element changes ≥ the cross-interval
-            // snapshot diff the old API computed (triangle inequality), so
-            // the delta_tol stop is conservative w.r.t. the old criterion.
-            let steps = self.check_every;
-            delta = 0.0;
+        let solver = self.solver;
+        let (plan, colsum, ws) = (&mut self.plan, &mut self.colsum, &mut self.ws);
+        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+            let mut delta = 0f32;
             for _ in 0..steps {
-                delta += self.solver.iterate_tracked(
-                    &mut self.plan,
-                    &mut self.colsum,
-                    rpd,
-                    cpd,
-                    fi,
-                    &mut self.ws,
-                );
+                delta += solver.iterate_tracked(plan, colsum, rpd, cpd, fi, ws);
             }
-            iters += steps;
-            err = self.ws.marginal_error(&self.plan, rpd, cpd);
-            if let Some(observer) = self.observer.as_mut() {
-                if observer.on_check(CheckEvent { iters, err, delta }) == ObserverAction::Cancel {
-                    return Err(Error::Canceled { iters });
-                }
-            }
-            if self.stop.is_done(err, delta, iters) {
-                break;
-            }
-        }
-
-        let converged = err <= self.stop.tol || delta <= self.stop.delta_tol;
-        Ok(SolveReport {
-            iters,
-            err,
-            delta,
-            converged,
-            seconds: timer.elapsed().as_secs_f64(),
+            let err = ws.marginal_error(plan, rpd, cpd);
+            (delta, err)
         })
+    }
+
+    /// Solve a **sparse** (CSR) problem — the sparse twin of
+    /// [`SolverSession::solve`], sharing the session's stop rule, check
+    /// cadence, observer and execution engine (serial / scope / the same
+    /// persistent pool). The result plan stays in CSR form; read it with
+    /// [`SolverSession::sparse_plan`].
+    ///
+    /// The fused CSR sweep *is* the MAP-UOT algorithm, so the session must
+    /// be built for [`SolverKind::MapUot`]; any other kind returns
+    /// [`Error::InvalidProblem`] (never panics — malformed CSR cannot even
+    /// be constructed, see [`CsrMatrix::new`]).
+    ///
+    /// Allocation contract: the first call on a new structure (different
+    /// shape or nnz) clones the plan and sizes the [`SparseWorkspace`];
+    /// after that, same-structure solves are allocation-free end to end —
+    /// values are refreshed in place and the nnz-balanced partition is
+    /// rebuilt into retained capacity (asserted in
+    /// `rust/tests/alloc_free.rs`). Returns [`Error::Canceled`] if the
+    /// observer cancels at a check boundary.
+    pub fn solve_sparse(&mut self, problem: &SparseProblem) -> Result<SolveReport> {
+        if self.solver.kind() != SolverKind::MapUot {
+            return Err(Error::InvalidProblem(format!(
+                "sparse solves run the fused MAP-UOT CSR kernel; this session is {} — \
+                 build it with SolverKind::MapUot",
+                self.solver.kind().name()
+            )));
+        }
+        let timer = Timer::start();
+        self.ensure_sparse(problem);
+        let st = self.sparse.as_mut().expect("ensure_sparse populated the state");
+        let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
+
+        let SparseState { plan, colsum, ws } = st;
+        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+            let mut delta = 0f32;
+            for _ in 0..steps {
+                delta += ws.iterate_tracked(plan, colsum, rpd, cpd, fi);
+            }
+            let err = ws.marginal_error(plan, rpd, cpd);
+            (delta, err)
+        })
+    }
+
+    /// The CSR plan produced by the most recent
+    /// [`SolverSession::solve_sparse`] (`None` before the first sparse
+    /// solve). Densify with [`CsrMatrix::to_dense`] if a dense result is
+    /// needed.
+    pub fn sparse_plan(&self) -> Option<&CsrMatrix> {
+        self.sparse.as_ref().map(|st| &st.plan)
+    }
+
+    /// Size (or reuse) the CSR state for `problem` and seed the carried
+    /// column sums. Same-structure problems (matching shape and nnz) reuse
+    /// every buffer — structure and values are copied in place; anything
+    /// else re-clones (the documented warmup allocation). The sparse
+    /// workspace shares the session's engine: same thread count, same
+    /// backend, same pool `Arc`.
+    fn ensure_sparse(&mut self, problem: &SparseProblem) {
+        let p = &problem.plan;
+        let reusable = self.sparse.as_ref().is_some_and(|st| {
+            st.plan.m == p.m && st.plan.n == p.n && st.plan.nnz() == p.nnz()
+        });
+        if reusable {
+            let st = self.sparse.as_mut().expect("checked above");
+            st.plan.row_ptr.copy_from_slice(&p.row_ptr);
+            st.plan.col_idx.copy_from_slice(&p.col_idx);
+            st.plan.values.copy_from_slice(&p.values);
+        } else {
+            let ws = SparseWorkspace::with_engine(
+                p.m,
+                p.n,
+                self.ws.threads(),
+                self.ws.backend(),
+                self.ws.pool().cloned(),
+            );
+            self.sparse = Some(SparseState {
+                plan: p.clone(),
+                colsum: vec![0f32; p.n],
+                ws,
+            });
+        }
+        let st = self.sparse.as_mut().expect("just ensured");
+        st.ws.prepare(&st.plan);
+        st.plan.col_sums_into(&mut st.colsum);
     }
 
     /// [`SolverSession::solve`] plus a clone of the result plan (the clone
@@ -910,6 +1019,49 @@ impl SolverSession {
     }
 }
 
+/// Shared convergence driver of [`SolverSession::solve`] and
+/// [`SolverSession::solve_sparse`]: run `check_every`-iteration bursts
+/// through `advance` — which returns the burst's summed tracked delta and
+/// the marginal error at its boundary — firing the observer at every
+/// boundary, until the stop rule fires or the observer cancels. `timer`
+/// is started by the caller so the report's `seconds` includes per-solve
+/// setup (plan copy / CSR refresh).
+///
+/// The tracked `delta` (sum of per-iteration max element changes over the
+/// interval) upper-bounds the old cross-interval snapshot diff by the
+/// triangle inequality, so a `delta_tol` stop can only fire later than
+/// the old criterion, never earlier.
+fn drive_loop(
+    timer: Timer,
+    stop: StopRule,
+    check_every: usize,
+    observer: &mut Option<Box<dyn ConvergenceObserver>>,
+    mut advance: impl FnMut(usize) -> (f32, f32),
+) -> Result<SolveReport> {
+    let mut iters = 0;
+    let (mut err, mut delta);
+    loop {
+        (delta, err) = advance(check_every);
+        iters += check_every;
+        if let Some(observer) = observer.as_mut() {
+            if observer.on_check(CheckEvent { iters, err, delta }) == ObserverAction::Cancel {
+                return Err(Error::Canceled { iters });
+            }
+        }
+        if stop.is_done(err, delta, iters) {
+            break;
+        }
+    }
+    let converged = err <= stop.tol || delta <= stop.delta_tol;
+    Ok(SolveReport {
+        iters,
+        err,
+        delta,
+        converged,
+        seconds: timer.elapsed().as_secs_f64(),
+    })
+}
+
 impl std::fmt::Debug for SolverSession {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SolverSession")
@@ -917,6 +1069,7 @@ impl std::fmt::Debug for SolverSession {
             .field("threads", &self.ws.threads())
             .field("shape", &self.ws.shape())
             .field("observer", &self.observer.is_some())
+            .field("sparse", &self.sparse.is_some())
             .finish()
     }
 }
@@ -1108,6 +1261,103 @@ mod tests {
             .observer(|_: CheckEvent| ObserverAction::Cancel)
             .build(&p);
         match session.solve(&p) {
+            Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
+            other => panic!("expected Canceled, got {other:?}"),
+        }
+    }
+
+    /// A serial sparse session solve is bit-identical to replaying the
+    /// same number of serial CSR reference iterations from scratch.
+    #[test]
+    fn sparse_session_bitmatches_serial_reference() {
+        let p = Problem::random(24, 18, 0.8, 42);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .build_sparse(&sp);
+        let report = session.solve_sparse(&sp).unwrap();
+        assert!(report.iters > 0);
+
+        let mut reference = sp.plan.clone();
+        let mut colsum = reference.col_sums();
+        let mut fcol = vec![0f32; sp.cols()];
+        let mut inv = vec![0f32; sp.cols()];
+        for _ in 0..report.iters {
+            crate::algo::sparse::iterate_tracked_into(
+                &mut reference, &mut colsum, &sp.rpd, &sp.cpd, sp.fi, &mut fcol, &mut inv,
+            );
+        }
+        let got = session.sparse_plan().expect("sparse solve ran");
+        assert_eq!(got.values, reference.values);
+        assert_eq!(got.col_idx, reference.col_idx);
+    }
+
+    #[test]
+    fn sparse_session_rejects_non_mapuot_kinds() {
+        let p = Problem::random(12, 12, 0.7, 3);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        for kind in [SolverKind::Pot, SolverKind::Coffee] {
+            let mut session = SolverSession::builder(kind).build_sparse(&sp);
+            match session.solve_sparse(&sp) {
+                Err(Error::InvalidProblem(_)) => {}
+                other => panic!("{}: expected InvalidProblem, got {other:?}", kind.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_session_adapts_to_structure_change() {
+        let small = Problem::random(8, 6, 0.7, 1);
+        let big = Problem::random(20, 30, 0.7, 2);
+        let sp_small = SparseProblem::from_problem(&small, 1.0).unwrap();
+        let sp_big = SparseProblem::from_problem(&big, 1.0).unwrap();
+        let mut session = SolverSession::builder(SolverKind::MapUot).build_sparse(&sp_small);
+        session.solve_sparse(&sp_small).unwrap();
+        session.solve_sparse(&sp_big).unwrap();
+        let plan = session.sparse_plan().unwrap();
+        assert_eq!((plan.m, plan.n), (20, 30));
+        // And back: the small structure is re-cloned, results match a
+        // fresh session bit-for-bit.
+        let r1 = session.solve_sparse(&sp_small).unwrap();
+        let mut fresh = SolverSession::builder(SolverKind::MapUot).build_sparse(&sp_small);
+        let r2 = fresh.solve_sparse(&sp_small).unwrap();
+        assert_eq!(r1.iters, r2.iters);
+        assert_eq!(
+            session.sparse_plan().unwrap().values,
+            fresh.sparse_plan().unwrap().values
+        );
+    }
+
+    #[test]
+    fn sparse_session_shares_the_dense_pool() {
+        let p = Problem::random(24, 18, 0.8, 7);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(3)
+            .build_sparse(&sp);
+        // One pool serves both paths: the sparse workspace holds the same
+        // Arc the dense workspace spawned.
+        let dense_pool = session.ws.pool().map(Arc::as_ptr);
+        let sparse_pool = session
+            .sparse
+            .as_ref()
+            .and_then(|st| st.ws.pool().map(Arc::as_ptr));
+        assert!(dense_pool.is_some());
+        assert_eq!(dense_pool, sparse_pool);
+        let report = session.solve_sparse(&sp).unwrap();
+        assert!(report.iters > 0);
+        assert!(session.sparse_plan().unwrap().values.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sparse_observer_cancellation_is_typed() {
+        let p = Problem::random(16, 16, 0.7, 9);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .observer(|_: CheckEvent| ObserverAction::Cancel)
+            .build_sparse(&sp);
+        match session.solve_sparse(&sp) {
             Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
             other => panic!("expected Canceled, got {other:?}"),
         }

@@ -1,5 +1,5 @@
 //! Sparse MAP-UOT (paper §6 future work: "explore how to apply our
-//! approach to sparse matrices").
+//! approach to sparse matrices") — a first-class CSR backend.
 //!
 //! CSR storage, one fused pass per iteration exactly as Algorithm 1: for
 //! each row, scale its nonzeros by `Factor_col[col]` while accumulating
@@ -12,27 +12,72 @@
 //!
 //! Zero structure is preserved exactly (rescaling never creates nonzeros),
 //! so the sparse solve matches the dense solvers on the same support —
-//! asserted in the tests.
+//! asserted in the tests and in `rust/tests/prop_sparse.rs`.
+//!
+//! The module owns four layers:
+//!
+//! * [`CsrMatrix`] — validated CSR storage. Both constructors enforce one
+//!   contract (finite, nonnegative values; monotone `row_ptr` starting at
+//!   0 and ending at nnz; in-range, strictly ascending column indices per
+//!   row), returning [`Error::InvalidProblem`] instead of panicking later
+//!   in `row_sums`/the sweep — the hardening this PR's bugfixes demanded.
+//! * [`SparseProblem`] — a CSR plan plus marginals, the sparse twin of
+//!   [`crate::algo::Problem`].
+//! * [`NnzPartition`] — contiguous row blocks balanced by **nonzero
+//!   count**, not row count: CSR row lengths are skewed, so an even-rows
+//!   split (the dense [`Partition`](crate::algo::pool::Partition)) would
+//!   hand one thread most of the work.
+//! * [`SparseWorkspace`] — every scratch buffer a sparse solve needs
+//!   (`Factor_col`, its reciprocals, the marginal-error column scratch,
+//!   the per-thread `NextSum_col` [`AccArena`], tracked-delta slots, the
+//!   nnz partition) plus the execution engine (serial, `thread::scope`,
+//!   or a shared persistent [`ThreadPool`]). Same allocation contract as
+//!   the dense [`Workspace`](crate::algo::Workspace): zero heap
+//!   allocations on the hot path after warmup (asserted in
+//!   `rust/tests/alloc_free.rs`).
+//!
+//! The service-facing entry point is
+//! [`SolverSession::solve_sparse`](crate::algo::SolverSession::solve_sparse);
+//! the free functions here ([`iterate_into`], [`iterate_tracked_into`])
+//! are the serial CSR reference the parallel engines
+//! (`crate::algo::parallel::sparse_mapuot_*`) are tested against.
 
-use crate::algo::scaling::{factor, factors_into};
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::algo::kernels;
+use crate::algo::parallel;
+use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
+use crate::algo::problem::Problem;
+use crate::algo::scaling::{factor, factors_into, recip_into};
 use crate::error::{Error, Result};
 use crate::util::Matrix;
 
 /// CSR matrix of nonnegative f32.
+///
+/// Invariants (enforced by both constructors, relied on by every sweep):
+/// `row_ptr` has length `m + 1`, starts at 0, is non-decreasing and ends
+/// at `values.len()`; `col_idx` has one in-range entry per value, strictly
+/// ascending within each row; all values are finite and nonnegative.
 #[derive(Debug, Clone)]
 pub struct CsrMatrix {
     pub m: usize,
     pub n: usize,
     /// Row start offsets, length m+1.
     pub row_ptr: Vec<usize>,
-    /// Column indices, length nnz, ascending within a row.
+    /// Column indices, length nnz, strictly ascending within a row.
     pub col_idx: Vec<u32>,
     pub values: Vec<f32>,
 }
 
 impl CsrMatrix {
     /// Build from a dense matrix, dropping entries `<= threshold`.
-    pub fn from_dense(dense: &Matrix, threshold: f32) -> Self {
+    ///
+    /// Enforces the same finite-nonnegative contract as [`CsrMatrix::new`]:
+    /// a NaN entry is rejected (not silently dropped — `NaN > threshold`
+    /// is false), and a negative threshold cannot smuggle negative values
+    /// past validation.
+    pub fn from_dense(dense: &Matrix, threshold: f32) -> Result<Self> {
         let (m, n) = (dense.rows(), dense.cols());
         let mut row_ptr = Vec::with_capacity(m + 1);
         let mut col_idx = Vec::new();
@@ -40,6 +85,14 @@ impl CsrMatrix {
         row_ptr.push(0);
         for i in 0..m {
             for (j, &v) in dense.row(i).iter().enumerate() {
+                // Validate inside the single conversion pass (a separate
+                // prescan would stream the whole M·N matrix twice on the
+                // per-request service path).
+                if !v.is_finite() || v < 0.0 {
+                    return Err(Error::InvalidProblem(
+                        "dense source of a CSR matrix has negative/non-finite entries".into(),
+                    ));
+                }
                 if v > threshold {
                     col_idx.push(j as u32);
                     values.push(v);
@@ -47,10 +100,15 @@ impl CsrMatrix {
             }
             row_ptr.push(col_idx.len());
         }
-        Self { m, n, row_ptr, col_idx, values }
+        Ok(Self { m, n, row_ptr, col_idx, values })
     }
 
     /// Validated constructor from raw CSR parts.
+    ///
+    /// Returns [`Error::InvalidProblem`] for every malformed input —
+    /// including a `row_ptr` that is non-monotonic or does not start at 0,
+    /// which previously passed construction and panicked on slice
+    /// indexing inside `row_sums`/the fused sweep.
     pub fn new(
         m: usize,
         n: usize,
@@ -58,17 +116,46 @@ impl CsrMatrix {
         col_idx: Vec<u32>,
         values: Vec<f32>,
     ) -> Result<Self> {
-        if row_ptr.len() != m + 1 || *row_ptr.last().unwrap_or(&1) != values.len() {
-            return Err(Error::InvalidProblem("bad CSR row_ptr".into()));
+        if row_ptr.len() != m + 1 {
+            return Err(Error::InvalidProblem(format!(
+                "CSR row_ptr length {} != m + 1 = {}",
+                row_ptr.len(),
+                m + 1
+            )));
+        }
+        if row_ptr[0] != 0 {
+            return Err(Error::InvalidProblem("CSR row_ptr must start at 0".into()));
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err(Error::InvalidProblem("CSR row_ptr must be non-decreasing".into()));
+        }
+        if *row_ptr.last().expect("length checked") != values.len() {
+            return Err(Error::InvalidProblem(format!(
+                "CSR row_ptr ends at {} but there are {} values",
+                row_ptr.last().expect("length checked"),
+                values.len()
+            )));
         }
         if col_idx.len() != values.len() {
             return Err(Error::InvalidProblem("CSR col/val length mismatch".into()));
         }
-        if col_idx.iter().any(|&j| j as usize >= n) {
-            return Err(Error::InvalidProblem("CSR column index out of range".into()));
+        // Per-row checks are safe now: every row_ptr window is a valid,
+        // ordered range into col_idx.
+        for w in row_ptr.windows(2) {
+            let row = &col_idx[w[0]..w[1]];
+            if row.iter().any(|&j| j as usize >= n) {
+                return Err(Error::InvalidProblem("CSR column index out of range".into()));
+            }
+            if row.windows(2).any(|c| c[0] >= c[1]) {
+                return Err(Error::InvalidProblem(
+                    "CSR col_idx must be strictly ascending within a row".into(),
+                ));
+            }
         }
         if values.iter().any(|v| !v.is_finite() || *v < 0.0) {
-            return Err(Error::InvalidProblem("CSR values must be nonnegative".into()));
+            return Err(Error::InvalidProblem(
+                "CSR values must be finite and nonnegative".into(),
+            ));
         }
         Ok(Self { m, n, row_ptr, col_idx, values })
     }
@@ -77,12 +164,29 @@ impl CsrMatrix {
         self.values.len()
     }
 
-    /// Column sums (one pass over nnz).
-    pub fn col_sums(&self) -> Vec<f32> {
-        let mut out = vec![0f32; self.n];
+    /// nnz / (m·n), the figure the density sweep reports.
+    pub fn density(&self) -> f64 {
+        if self.m == 0 || self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.m as f64 * self.n as f64)
+        }
+    }
+
+    /// Column sums into caller scratch (one pass over nnz, no allocation —
+    /// the session seeds its carried `colsum` through this).
+    pub fn col_sums_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.n);
+        out.fill(0.0);
         for (&j, &v) in self.col_idx.iter().zip(&self.values) {
             out[j as usize] += v;
         }
+    }
+
+    /// Column sums (one pass over nnz).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        self.col_sums_into(&mut out);
         out
     }
 
@@ -93,7 +197,8 @@ impl CsrMatrix {
             .collect()
     }
 
-    /// Densify (tests / small outputs).
+    /// Densify (tests / small outputs / the coordinator's response path).
+    /// Requires positive dims (guaranteed for any [`SparseProblem`] plan).
     pub fn to_dense(&self) -> Matrix {
         let mut out = Matrix::zeros(self.m, self.n);
         for i in 0..self.m {
@@ -105,40 +210,275 @@ impl CsrMatrix {
     }
 }
 
-/// One fused sparse MAP-UOT iteration (CSR Algorithm 1).
-pub fn iterate(
+/// A sparse UOT instance: CSR plan plus marginals — the sparse twin of
+/// [`Problem`], with the same validation contract.
+#[derive(Debug, Clone)]
+pub struct SparseProblem {
+    /// Transport plan on its sparse support (structure is preserved by
+    /// every iteration — rescaling never creates nonzeros).
+    pub plan: CsrMatrix,
+    /// Row probability distribution (target row marginals), length M.
+    pub rpd: Vec<f32>,
+    /// Column probability distribution (target column marginals), length N.
+    pub cpd: Vec<f32>,
+    /// Relaxation exponent in `(0, 1]`.
+    pub fi: f32,
+}
+
+impl SparseProblem {
+    /// Validated constructor (the plan is already CSR-validated by its own
+    /// constructors).
+    pub fn new(plan: CsrMatrix, rpd: Vec<f32>, cpd: Vec<f32>, fi: f32) -> Result<Self> {
+        if plan.m == 0 || plan.n == 0 {
+            return Err(Error::InvalidProblem("sparse problem dims must be positive".into()));
+        }
+        if rpd.len() != plan.m {
+            return Err(Error::InvalidProblem(format!(
+                "rpd length {} != rows {}",
+                rpd.len(),
+                plan.m
+            )));
+        }
+        if cpd.len() != plan.n {
+            return Err(Error::InvalidProblem(format!(
+                "cpd length {} != cols {}",
+                cpd.len(),
+                plan.n
+            )));
+        }
+        if !(fi > 0.0 && fi <= 1.0) {
+            return Err(Error::InvalidProblem(format!("fi={fi} outside (0, 1]")));
+        }
+        if rpd.iter().chain(cpd.iter()).any(|v| !v.is_finite() || *v <= 0.0) {
+            return Err(Error::InvalidProblem("marginals must be positive and finite".into()));
+        }
+        Ok(Self { plan, rpd, cpd, fi })
+    }
+
+    /// Sparsify a dense problem: keep plan entries `> threshold` (CSR),
+    /// share the marginals. This is the CLI `solve --sparse <threshold>` /
+    /// `[solver] sparse` adapter.
+    pub fn from_problem(p: &Problem, threshold: f32) -> Result<Self> {
+        if !threshold.is_finite() || threshold < 0.0 {
+            return Err(Error::InvalidProblem(format!(
+                "sparse threshold {threshold} must be finite and >= 0"
+            )));
+        }
+        let plan = CsrMatrix::from_dense(&p.plan, threshold)?;
+        Self::new(plan, p.rpd.clone(), p.cpd.clone(), p.fi)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.plan.m
+    }
+
+    pub fn cols(&self) -> usize {
+        self.plan.n
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.plan.nnz()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// nnz-balanced row partition
+// ---------------------------------------------------------------------------
+
+/// Contiguous row blocks balanced by **nonzero count**.
+///
+/// The dense solvers split rows evenly because every dense row costs the
+/// same; CSR row lengths are skewed, so block `b` here ends at the largest
+/// row whose cumulative nnz stays below the `b`-th even share (while
+/// always keeping at least one row for every remaining block). Both
+/// parallel engines consume the *same* partition instance, which is what
+/// makes them bit-identical (see `crate::algo::parallel`).
+#[derive(Debug, Clone)]
+pub struct NnzPartition {
+    /// Row boundaries, length blocks + 1 (`bounds[0] = 0`,
+    /// `bounds[blocks] = m`).
+    bounds: Vec<usize>,
+}
+
+impl NnzPartition {
+    /// Partition the rows of `row_ptr` (length m+1) over at most `threads`
+    /// blocks, further capped by `cap` (the number of available
+    /// accumulators).
+    pub fn new(row_ptr: &[usize], threads: usize, cap: usize) -> Self {
+        let mut p = Self::empty(threads);
+        p.rebuild(row_ptr, threads, cap);
+        p
+    }
+
+    /// Placeholder partition over zero rows, with capacity for `threads`
+    /// blocks; [`NnzPartition::rebuild`] before use.
+    pub fn empty(threads: usize) -> Self {
+        let mut bounds = Vec::with_capacity(threads.max(1) + 1);
+        bounds.push(0);
+        bounds.push(0);
+        Self { bounds }
+    }
+
+    /// Recompute in place for a (possibly new) structure. Allocation-free
+    /// whenever `threads` has not grown past the construction-time
+    /// capacity — the workspace calls this once per solve.
+    pub fn rebuild(&mut self, row_ptr: &[usize], threads: usize, cap: usize) {
+        let m = row_ptr.len().saturating_sub(1);
+        let nnz = row_ptr.last().copied().unwrap_or(0);
+        let blocks = threads.max(1).min(m.max(1)).min(cap.max(1));
+        self.bounds.clear();
+        self.bounds.push(0);
+        let mut r = 0usize;
+        for b in 1..blocks {
+            // Largest end whose nnz prefix stays below the b-th even
+            // share, while leaving >= 1 row for every remaining block.
+            let max_end = m - (blocks - b);
+            let target = (nnz as u128 * b as u128 / blocks as u128) as usize;
+            let mut end = r + 1;
+            while end < max_end && row_ptr[end] < target {
+                end += 1;
+            }
+            self.bounds.push(end);
+            r = end;
+        }
+        self.bounds.push(m);
+    }
+
+    /// Number of blocks (== parts to dispatch).
+    pub fn blocks(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    /// Total rows partitioned.
+    pub fn rows(&self) -> usize {
+        *self.bounds.last().expect("bounds never empty")
+    }
+
+    /// Row range of block `b`.
+    pub fn range(&self, b: usize) -> Range<usize> {
+        self.bounds[b]..self.bounds[b + 1]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fused sweep (shared block body + serial entry points)
+// ---------------------------------------------------------------------------
+
+/// Fused sparse MAP-UOT pass over the rows `rows` of a CSR matrix
+/// (Computations I–IV per row over its nonzeros), accumulating
+/// `NextSum_col` into `local`. `vals` is the values sub-slice covering
+/// exactly those rows and `base` its offset into the full values array;
+/// tracked (returns the block's max element change) when `inv` is given.
+///
+/// Every execution mode funnels through this body — the serial reference
+/// calls it once over all rows, each thread of the parallel engines over
+/// its partition block — so per-row numerics are identical everywhere.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_csr_rows(
+    vals: &mut [f32],
+    base: usize,
+    row_ptr: &[usize],
+    col_idx: &[u32],
+    rows: Range<usize>,
+    rpd: &[f32],
+    fcol: &[f32],
+    inv: Option<&[f32]>,
+    fi: f32,
+    local: &mut [f32],
+) -> f32 {
+    let mut delta = 0f32;
+    for i in rows {
+        let (lo, hi) = (row_ptr[i] - base, row_ptr[i + 1] - base);
+        let cols = &col_idx[row_ptr[i]..row_ptr[i + 1]];
+        let row = &mut vals[lo..hi];
+        // Computations I + II over the row's nonzeros.
+        let sum_row = kernels::csr_scale_by_cols_and_sum(row, cols, fcol);
+        // Computations III + IV.
+        let fr = factor(rpd[i], sum_row, fi);
+        match inv {
+            Some(iv) => {
+                delta = delta
+                    .max(kernels::csr_scale_and_accumulate_tracked(row, cols, fr, iv, local));
+            }
+            None => kernels::csr_scale_and_accumulate(row, cols, fr, local),
+        }
+    }
+    delta
+}
+
+/// One fused sparse MAP-UOT iteration (CSR Algorithm 1), allocation-free:
+/// `fcol` (length N) is caller scratch — the hot-path form the PR 1
+/// allocation contract requires (the old `iterate` allocated a fresh
+/// `fcol` every iteration).
+pub fn iterate_into(
     a: &mut CsrMatrix,
     colsum: &mut [f32],
     rpd: &[f32],
     cpd: &[f32],
     fi: f32,
+    fcol: &mut [f32],
 ) {
     debug_assert_eq!(colsum.len(), a.n);
-    let mut fcol = vec![0f32; a.n];
-    factors_into(&mut fcol, cpd, colsum, fi);
-    colsum.fill(0.0);
+    debug_assert_eq!(fcol.len(), a.n);
+    factors_into(fcol, cpd, colsum, fi);
+    colsum.fill(0.0); // becomes NextSum_col
+    fused_csr_rows(
+        &mut a.values,
+        0,
+        &a.row_ptr,
+        &a.col_idx,
+        0..a.m,
+        rpd,
+        fcol,
+        None,
+        fi,
+        colsum,
+    );
+}
 
-    for i in 0..a.m {
-        let (lo, hi) = (a.row_ptr[i], a.row_ptr[i + 1]);
-        // Computations I + II over the row's nonzeros.
-        let mut sum_row = 0f32;
-        for k in lo..hi {
-            let v = a.values[k] * fcol[a.col_idx[k] as usize];
-            a.values[k] = v;
-            sum_row += v;
-        }
-        // Computations III + IV.
-        let fr = factor(rpd[i], sum_row, fi);
-        for k in lo..hi {
-            let v = a.values[k] * fr;
-            a.values[k] = v;
-            colsum[a.col_idx[k] as usize] += v;
-        }
-    }
+/// [`iterate_into`] with in-sweep delta tracking; returns the iteration's
+/// max element change (same reciprocal-factor recovery as the dense
+/// kernels — no snapshot, no extra pass). `fcol` and `inv_fcol` are
+/// caller scratch of length N.
+pub fn iterate_tracked_into(
+    a: &mut CsrMatrix,
+    colsum: &mut [f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    fi: f32,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(colsum.len(), a.n);
+    debug_assert_eq!(fcol.len(), a.n);
+    debug_assert_eq!(inv_fcol.len(), a.n);
+    factors_into(fcol, cpd, colsum, fi);
+    recip_into(inv_fcol, fcol);
+    colsum.fill(0.0); // becomes NextSum_col
+    fused_csr_rows(
+        &mut a.values,
+        0,
+        &a.row_ptr,
+        &a.col_idx,
+        0..a.m,
+        rpd,
+        &*fcol,
+        Some(&*inv_fcol),
+        fi,
+        colsum,
+    )
+}
+
+/// One fused sparse MAP-UOT iteration; allocates its own column-factor
+/// scratch — prefer [`iterate_into`] on hot paths.
+pub fn iterate(a: &mut CsrMatrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
+    let mut fcol = vec![0f32; a.n];
+    iterate_into(a, colsum, rpd, cpd, fi, &mut fcol);
 }
 
 /// Unfused 4-pass sparse baseline (POT sweep structure on CSR) — the
-/// comparator for the sparse ablation bench.
+/// comparator for the sparse ablation bench. Allocates per call by
+/// design: it models the unfused execution, not a production path.
 pub fn iterate_baseline(
     a: &mut CsrMatrix,
     colsum: &mut [f32],
@@ -170,10 +510,265 @@ pub fn iterate_baseline(
 /// Solve to a fixed iteration budget; returns final column sums.
 pub fn solve(a: &mut CsrMatrix, rpd: &[f32], cpd: &[f32], fi: f32, iters: usize) -> Vec<f32> {
     let mut colsum = a.col_sums();
+    let mut fcol = vec![0f32; a.n];
     for _ in 0..iters {
-        iterate(a, &mut colsum, rpd, cpd, fi);
+        iterate_into(a, &mut colsum, rpd, cpd, fi, &mut fcol);
     }
     colsum
+}
+
+// ---------------------------------------------------------------------------
+// SparseWorkspace
+// ---------------------------------------------------------------------------
+
+/// Scratch and engine for sparse solves, reused across iterations and
+/// solves — the sparse twin of [`crate::algo::Workspace`].
+///
+/// # Allocation contract
+///
+/// Construction and [`SparseWorkspace::ensure_shape`] growth may allocate;
+/// [`SparseWorkspace::prepare`], [`SparseWorkspace::iterate`],
+/// [`SparseWorkspace::iterate_tracked`] and
+/// [`SparseWorkspace::marginal_error`] must not (the nnz partition is
+/// rebuilt into retained capacity). Asserted by `rust/tests/alloc_free.rs`
+/// through the session path.
+#[derive(Debug)]
+pub struct SparseWorkspace {
+    shape: (usize, usize),
+    threads: usize,
+    backend: ParallelBackend,
+    /// Column rescaling factors (`Factor_col`), length N.
+    fcol: Vec<f32>,
+    /// Reciprocals of `fcol` (zero-guarded) for in-sweep delta tracking.
+    inv_fcol: Vec<f32>,
+    /// Column-sum scratch for the marginal-error check.
+    err_cols: Vec<f32>,
+    /// Per-thread `NextSum_col` partials, cache-line-padded.
+    acc: AccArena,
+    /// Per-thread tracked-delta maxima, one cache line each.
+    delta_slots: PaddedSlots,
+    /// nnz-balanced row blocks, rebuilt per solve by `prepare`.
+    part: NnzPartition,
+    /// The persistent execution engine (pool backend, `threads > 1`).
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl SparseWorkspace {
+    /// Workspace for `m × n` sparse problems with `threads` workers on the
+    /// default pool backend (workers spawned here, once).
+    pub fn new(m: usize, n: usize, threads: usize) -> Self {
+        Self::with_backend(m, n, threads, ParallelBackend::Pool, AffinityHint::None)
+    }
+
+    /// Workspace with an explicit parallel backend and affinity hint.
+    pub fn with_backend(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        affinity: AffinityHint,
+    ) -> Self {
+        let threads = threads.max(1);
+        let pool = (threads > 1 && backend == ParallelBackend::Pool)
+            .then(|| Arc::new(ThreadPool::with_affinity(threads, affinity)));
+        Self::with_engine(m, n, threads, backend, pool)
+    }
+
+    /// Workspace sharing an existing pool (its thread count wins) — the
+    /// form [`crate::algo::SolverSession`] uses so one session's dense and
+    /// sparse paths drive the same workers.
+    pub fn with_pool(m: usize, n: usize, pool: Arc<ThreadPool>) -> Self {
+        let threads = pool.threads();
+        Self::with_engine(m, n, threads, ParallelBackend::Pool, Some(pool))
+    }
+
+    /// Fully explicit assembly (an existing pool may be shared, or absent
+    /// for the serial / scope engines).
+    pub fn with_engine(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Self {
+        let threads = match &pool {
+            Some(p) => p.threads(),
+            None => threads.max(1),
+        };
+        Self {
+            shape: (m, n),
+            threads,
+            backend,
+            fcol: vec![0f32; n],
+            inv_fcol: vec![0f32; n],
+            err_cols: vec![0f32; n],
+            acc: AccArena::padded(threads, n),
+            delta_slots: PaddedSlots::new(threads),
+            part: NnzPartition::empty(threads),
+            pool,
+        }
+    }
+
+    /// Current `(rows, cols)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+
+    /// Worker threads this workspace is provisioned for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Which parallel execution engine drives `threads > 1` iterations.
+    pub fn backend(&self) -> ParallelBackend {
+        self.backend
+    }
+
+    /// The persistent pool, when the pool backend is active.
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The current nnz-balanced row partition (valid after
+    /// [`SparseWorkspace::prepare`]).
+    pub fn partition(&self) -> &NnzPartition {
+        &self.part
+    }
+
+    /// Resize for a new shape. No-op (and allocation-free) when unchanged;
+    /// growing past any previously seen size reallocates.
+    pub fn ensure_shape(&mut self, m: usize, n: usize) {
+        if self.shape == (m, n) {
+            return;
+        }
+        self.shape = (m, n);
+        self.fcol.resize(n, 0.0);
+        self.inv_fcol.resize(n, 0.0);
+        self.err_cols.resize(n, 0.0);
+        self.acc.ensure_cols(n);
+    }
+
+    /// Size scratch for `plan` and rebuild the nnz partition from its
+    /// structure. Allocation-free for a same-shape plan; call once per
+    /// solve (or after any structure change) before iterating.
+    pub fn prepare(&mut self, plan: &CsrMatrix) {
+        self.ensure_shape(plan.m, plan.n);
+        self.part.rebuild(&plan.row_ptr, self.threads, self.acc.rows());
+    }
+
+    /// One fused sparse iteration on this workspace's engine (serial,
+    /// scope, or pool).
+    pub fn iterate(
+        &mut self,
+        plan: &mut CsrMatrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+    ) {
+        if self.threads <= 1 {
+            iterate_into(plan, colsum, rpd, cpd, fi, &mut self.fcol);
+        } else if let Some(pool) = &self.pool {
+            parallel::sparse_mapuot_iterate_pool(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut self.fcol,
+                &mut self.acc,
+                &self.part,
+            );
+        } else {
+            parallel::sparse_mapuot_iterate_into(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut self.fcol,
+                &mut self.acc,
+                &self.part,
+            );
+        }
+    }
+
+    /// [`SparseWorkspace::iterate`] with in-sweep delta tracking; returns
+    /// the iteration's max element change.
+    pub fn iterate_tracked(
+        &mut self,
+        plan: &mut CsrMatrix,
+        colsum: &mut [f32],
+        rpd: &[f32],
+        cpd: &[f32],
+        fi: f32,
+    ) -> f32 {
+        if self.threads <= 1 {
+            iterate_tracked_into(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+            )
+        } else if let Some(pool) = &self.pool {
+            parallel::sparse_mapuot_iterate_pool_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                pool,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+                &mut self.acc,
+                &mut self.delta_slots,
+                &self.part,
+            )
+        } else {
+            parallel::sparse_mapuot_iterate_tracked(
+                plan,
+                colsum,
+                rpd,
+                cpd,
+                fi,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+                &mut self.acc,
+                &self.part,
+            )
+        }
+    }
+
+    /// Marginal L-inf error of `plan` against `(rpd, cpd)` in one pass
+    /// over nnz, using workspace scratch (no allocation). Empty rows and
+    /// columns contribute their full target mass, matching the dense
+    /// definition on the same support.
+    pub fn marginal_error(&mut self, plan: &CsrMatrix, rpd: &[f32], cpd: &[f32]) -> f32 {
+        debug_assert_eq!(rpd.len(), plan.m);
+        debug_assert_eq!(cpd.len(), plan.n);
+        let cs = &mut self.err_cols[..plan.n];
+        cs.fill(0.0);
+        let mut row_err = 0f32;
+        for i in 0..plan.m {
+            let mut rs = 0f32;
+            for k in plan.row_ptr[i]..plan.row_ptr[i + 1] {
+                let v = plan.values[k];
+                rs += v;
+                cs[plan.col_idx[k] as usize] += v;
+            }
+            row_err = row_err.max((rs - rpd[i]).abs());
+        }
+        let col_err = cs
+            .iter()
+            .zip(cpd)
+            .map(|(s, &t)| (s - t).abs())
+            .fold(0f32, f32::max);
+        row_err.max(col_err)
+    }
 }
 
 #[cfg(test)]
@@ -187,7 +782,7 @@ mod tests {
         let dense = Matrix::from_fn(m, n, |_, _| {
             if rng.next_f32() < density { rng.uniform(0.1, 2.0) } else { 0.0 }
         });
-        let a = CsrMatrix::from_dense(&dense, 0.0);
+        let a = CsrMatrix::from_dense(&dense, 0.0).expect("finite nonnegative source");
         let rpd = rng.uniform_vec(m, 0.3, 1.7);
         let cpd = rng.uniform_vec(n, 0.3, 1.7);
         (a, rpd, cpd)
@@ -197,7 +792,7 @@ mod tests {
     fn csr_roundtrip() {
         let (a, _, _) = sparse_problem(9, 13, 0.3, 1);
         let d = a.to_dense();
-        let b = CsrMatrix::from_dense(&d, 0.0);
+        let b = CsrMatrix::from_dense(&d, 0.0).unwrap();
         assert_eq!(a.values, b.values);
         assert_eq!(a.col_idx, b.col_idx);
     }
@@ -232,6 +827,26 @@ mod tests {
     }
 
     #[test]
+    fn tracked_iteration_is_bit_identical_to_untracked() {
+        let (a0, rpd, cpd) = sparse_problem(19, 23, 0.3, 7);
+        let mut a = a0.clone();
+        let mut b = a0.clone();
+        let mut cs_a = a.col_sums();
+        let mut cs_b = b.col_sums();
+        let n = a.n;
+        let mut fcol_a = vec![0f32; n];
+        let mut fcol_b = vec![0f32; n];
+        let mut inv_b = vec![0f32; n];
+        for _ in 0..5 {
+            iterate_into(&mut a, &mut cs_a, &rpd, &cpd, 0.7, &mut fcol_a);
+            let _ =
+                iterate_tracked_into(&mut b, &mut cs_b, &rpd, &cpd, 0.7, &mut fcol_b, &mut inv_b);
+        }
+        assert_eq!(a.values, b.values);
+        assert_eq!(cs_a, cs_b);
+    }
+
+    #[test]
     fn zero_structure_preserved() {
         let (mut a, rpd, cpd) = sparse_problem(12, 12, 0.2, 4);
         let nnz0 = a.nnz();
@@ -248,7 +863,7 @@ mod tests {
         let dense = Matrix::from_fn(4, 4, |i, j| {
             if i == 1 || j == 2 { 0.0 } else { 1.0 }
         });
-        let mut a = CsrMatrix::from_dense(&dense, 0.0);
+        let mut a = CsrMatrix::from_dense(&dense, 0.0).unwrap();
         let rpd = vec![1.0; 4];
         let cpd = vec![1.0; 4];
         solve(&mut a, &rpd, &cpd, 0.5, 5);
@@ -260,5 +875,106 @@ mod tests {
         assert!(CsrMatrix::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr len
         assert!(CsrMatrix::new(2, 2, vec![0, 1, 1], vec![5], vec![1.0]).is_err()); // col range
         assert!(CsrMatrix::new(2, 2, vec![0, 1, 1], vec![0], vec![-1.0]).is_err()); // negative
+        // The former panics: non-monotonic row_ptr and row_ptr[0] != 0 now
+        // fail validation instead of exploding in row_sums/iterate.
+        assert!(CsrMatrix::new(2, 2, vec![0, 2, 1], vec![0], vec![1.0]).is_err()); // non-monotonic
+        assert!(CsrMatrix::new(2, 2, vec![1, 1, 1], vec![0], vec![1.0]).is_err()); // start != 0
+        assert!(CsrMatrix::new(2, 2, vec![0, 1, 2], vec![0], vec![1.0]).is_err()); // end != nnz
+        assert!(CsrMatrix::new(1, 2, vec![0, 2], vec![1, 0], vec![1.0, 1.0]).is_err()); // not ascending
+        assert!(CsrMatrix::new(1, 2, vec![0, 2], vec![0, 0], vec![1.0, 1.0]).is_err()); // duplicate col
+        assert!(CsrMatrix::new(1, 1, vec![0, 1], vec![0], vec![f32::NAN]).is_err()); // NaN value
+    }
+
+    #[test]
+    fn from_dense_enforces_the_finite_nonnegative_contract() {
+        let nan = Matrix::from_fn(2, 2, |i, j| if i == 0 && j == 1 { f32::NAN } else { 1.0 });
+        assert!(CsrMatrix::from_dense(&nan, 0.0).is_err(), "NaN must be rejected, not dropped");
+        let neg = Matrix::from_fn(2, 2, |i, _| if i == 0 { -1.0 } else { 1.0 });
+        assert!(
+            CsrMatrix::from_dense(&neg, -2.0).is_err(),
+            "a negative threshold must not admit negative values"
+        );
+    }
+
+    #[test]
+    fn sparse_problem_validation() {
+        let (a, rpd, cpd) = sparse_problem(5, 4, 0.5, 9);
+        assert!(SparseProblem::new(a.clone(), rpd.clone(), cpd.clone(), 0.7).is_ok());
+        assert!(SparseProblem::new(a.clone(), vec![1.0; 3], cpd.clone(), 0.7).is_err());
+        assert!(SparseProblem::new(a.clone(), rpd.clone(), cpd.clone(), 0.0).is_err());
+        assert!(SparseProblem::new(a, vec![-1.0, 1.0, 1.0, 1.0, 1.0], cpd, 0.7).is_err());
+        let p = Problem::random(6, 6, 0.7, 3);
+        assert!(SparseProblem::from_problem(&p, f32::NAN).is_err());
+        assert!(SparseProblem::from_problem(&p, -0.5).is_err());
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        assert!(sp.nnz() > 0 && sp.nnz() < 36);
+    }
+
+    #[test]
+    fn nnz_partition_tiles_and_balances() {
+        // Skewed structure: row 0 carries half the nonzeros.
+        let mut rng = XorShift::new(11);
+        let dense = Matrix::from_fn(16, 64, |i, _| {
+            let p = if i == 0 { 1.0 } else { 0.05 };
+            if rng.next_f32() < p { 1.0 } else { 0.0 }
+        });
+        let a = CsrMatrix::from_dense(&dense, 0.0).unwrap();
+        for threads in [1usize, 2, 3, 8, 16, 64] {
+            let part = NnzPartition::new(&a.row_ptr, threads, threads);
+            assert!(part.blocks() <= threads.max(1));
+            assert!(part.blocks() <= a.m);
+            assert_eq!(part.rows(), a.m, "threads={threads}");
+            // Ranges tile [0, m) with no empty block.
+            let mut next = 0;
+            for b in 0..part.blocks() {
+                let r = part.range(b);
+                assert_eq!(r.start, next, "threads={threads}");
+                assert!(r.end > r.start, "threads={threads} block {b} empty");
+                next = r.end;
+            }
+            assert_eq!(next, a.m);
+            // nnz balance: no block exceeds the even share by more than
+            // the largest single row (rows are atomic).
+            let max_row = (0..a.m).map(|i| a.row_ptr[i + 1] - a.row_ptr[i]).max().unwrap();
+            for b in 0..part.blocks() {
+                let r = part.range(b);
+                let block_nnz = a.row_ptr[r.end] - a.row_ptr[r.start];
+                assert!(
+                    block_nnz <= a.nnz() / part.blocks() + max_row,
+                    "threads={threads} block {b}: {block_nnz} nnz of {}",
+                    a.nnz()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_serial_matches_free_functions() {
+        let (a0, rpd, cpd) = sparse_problem(14, 10, 0.4, 21);
+        let mut ws = SparseWorkspace::new(14, 10, 1);
+        ws.prepare(&a0);
+        let mut a = a0.clone();
+        let mut cs_a = a.col_sums();
+        let mut b = a0.clone();
+        let mut cs_b = b.col_sums();
+        let mut fcol = vec![0f32; 10];
+        let mut inv = vec![0f32; 10];
+        for _ in 0..4 {
+            let da = ws.iterate_tracked(&mut a, &mut cs_a, &rpd, &cpd, 0.7);
+            let db = iterate_tracked_into(&mut b, &mut cs_b, &rpd, &cpd, 0.7, &mut fcol, &mut inv);
+            assert_eq!(da.to_bits(), db.to_bits());
+        }
+        assert_eq!(a.values, b.values);
+        assert_eq!(cs_a, cs_b);
+    }
+
+    #[test]
+    fn workspace_marginal_error_matches_dense_definition() {
+        let (a, rpd, cpd) = sparse_problem(9, 7, 0.5, 5);
+        let mut ws = SparseWorkspace::new(9, 7, 1);
+        ws.prepare(&a);
+        let sparse_err = ws.marginal_error(&a, &rpd, &cpd);
+        let dense_err = crate::algo::convergence::marginal_error(&a.to_dense(), &rpd, &cpd);
+        assert!((sparse_err - dense_err).abs() <= 1e-5 * dense_err.max(1.0));
     }
 }

@@ -44,6 +44,11 @@ pub struct ServiceConfig {
     /// Column-tiling policy for the fused sweep (config key
     /// `[solver] tile = auto|off|tune|<cols>`).
     pub tile: TileSpec,
+    /// Sparse-solve threshold (config key `[solver] sparse = <threshold>`,
+    /// or `off`). When set, native workers convert each request's plan to
+    /// CSR (dropping entries `<= threshold`) and solve through the fused
+    /// CSR backend; requires `kind = mapuot` (validated at service start).
+    pub sparse: Option<f32>,
     /// Stopping criteria.
     pub stop: StopRule,
     /// Artifact directory for the PJRT backend.
@@ -64,6 +69,7 @@ impl Default for ServiceConfig {
             affinity: AffinityHint::None,
             kernel: KernelKind::Auto,
             tile: TileSpec::Auto,
+            sparse: None,
             stop: StopRule::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -108,6 +114,23 @@ impl ServiceConfig {
             Some(s) => TileSpec::parse(s)
                 .ok_or_else(|| crate::error::Error::Config(format!("unknown tile policy {s:?}")))?,
         };
+        let sparse = match c.get("solver", "sparse") {
+            None => d.sparse,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "off" | "none" => None,
+                raw => {
+                    let t = raw.parse::<f32>().map_err(|_| {
+                        crate::error::Error::Config(format!("invalid sparse threshold {s:?}"))
+                    })?;
+                    if !t.is_finite() || t < 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "sparse threshold {s:?} must be finite and >= 0"
+                        )));
+                    }
+                    Some(t)
+                }
+            },
+        };
         Ok(Self {
             workers: c.get_or("coordinator", "workers", d.workers)?,
             batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
@@ -120,6 +143,7 @@ impl ServiceConfig {
             affinity,
             kernel,
             tile,
+            sparse,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -175,6 +199,21 @@ mod tests {
         let c = ServiceConfig::from_raw(&raw).unwrap();
         assert_eq!(c.kernel, KernelKind::Avx2);
         assert_eq!(c.tile, TileSpec::Off);
+    }
+
+    #[test]
+    fn sparse_threshold_parses_and_rejects() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.sparse, None, "sparse path is opt-in");
+        let raw = parser::RawConfig::parse("[solver]\nsparse=0.25\n").unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.sparse, Some(0.25));
+        let raw = parser::RawConfig::parse("[solver]\nsparse=off\n").unwrap();
+        assert_eq!(ServiceConfig::from_raw(&raw).unwrap().sparse, None);
+        for bad in ["wide", "-0.5", "nan", "inf"] {
+            let raw = parser::RawConfig::parse(&format!("[solver]\nsparse={bad}\n")).unwrap();
+            assert!(ServiceConfig::from_raw(&raw).is_err(), "sparse={bad} must be rejected");
+        }
     }
 
     #[test]

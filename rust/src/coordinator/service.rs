@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::algo::{Problem, SolverSession};
+use crate::algo::{Problem, SolverKind, SolverSession, SparseProblem};
 use crate::config::{Backend, ServiceConfig};
 use crate::coordinator::batcher::{Batcher, FullPolicy};
 use crate::coordinator::metrics::Metrics;
@@ -28,6 +28,26 @@ pub struct Service {
 impl Service {
     /// Start workers (and the PJRT executor when configured).
     pub fn start(cfg: ServiceConfig) -> Result<Self> {
+        // A sparse service is misconfigured loudly, not per-request: the
+        // fused CSR sweep is the MAP-UOT algorithm, and the threshold must
+        // be a usable number.
+        if let Some(threshold) = cfg.sparse {
+            if !threshold.is_finite() || threshold < 0.0 {
+                return Err(Error::Config(format!(
+                    "sparse threshold {threshold} must be finite and >= 0"
+                )));
+            }
+            if cfg.solver != SolverKind::MapUot {
+                return Err(Error::Config(
+                    "[solver] sparse requires kind = mapuot (the fused CSR kernel)".into(),
+                ));
+            }
+            if cfg.backend == Backend::Pjrt {
+                return Err(Error::Config(
+                    "[solver] sparse runs on the native backend only".into(),
+                ));
+            }
+        }
         let batcher = Arc::new(Batcher::new(
             cfg.queue_cap,
             cfg.batch_max,
@@ -157,7 +177,7 @@ fn execute(
             (plan, report, Backend::Pjrt)
         }
         None => {
-            let sess = session.get_or_insert_with(|| {
+            let builder = || {
                 SolverSession::builder(cfg.solver)
                     .threads(cfg.solver_threads)
                     .backend(cfg.parallel)
@@ -165,10 +185,41 @@ fn execute(
                     .kernel(cfg.kernel)
                     .tile(cfg.tile)
                     .stop(cfg.stop)
-                    .build(&req.problem)
-            });
-            let (plan, report) = sess.solve_cloned(&req.problem)?;
-            (plan, report, Backend::Native)
+            };
+            match cfg.sparse {
+                // Sparse service: convert the request's plan to CSR and
+                // run the fused CSR backend; the worker's session (and its
+                // pool) is reused across requests, so after the first
+                // solve of each structure the hot loop is allocation-free.
+                // The response is densified — the request/response types
+                // stay dense at the service boundary.
+                Some(threshold) => {
+                    let sp = SparseProblem::from_problem(&req.problem, threshold)?;
+                    // A threshold that wipes the whole plan would "solve"
+                    // to an all-zero response flagged converged (nothing
+                    // can move, so the delta rule fires immediately) —
+                    // surface the misconfiguration as a typed per-request
+                    // error instead of silently returning garbage.
+                    if sp.nnz() == 0 {
+                        return Err(Error::InvalidProblem(format!(
+                            "sparse threshold {threshold} dropped every plan entry \
+                             (all values <= threshold)"
+                        )));
+                    }
+                    let sess = session.get_or_insert_with(|| builder().build_sparse(&sp));
+                    let report = sess.solve_sparse(&sp)?;
+                    let plan = sess
+                        .sparse_plan()
+                        .expect("solve_sparse populates the CSR plan")
+                        .to_dense();
+                    (plan, report, Backend::Native)
+                }
+                None => {
+                    let sess = session.get_or_insert_with(|| builder().build(&req.problem));
+                    let (plan, report) = sess.solve_cloned(&req.problem)?;
+                    (plan, report, Backend::Native)
+                }
+            }
         }
     };
     Ok(Solved {
@@ -183,7 +234,6 @@ fn execute(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::SolverKind;
 
     fn native_cfg(workers: usize) -> ServiceConfig {
         ServiceConfig {
@@ -241,6 +291,61 @@ mod tests {
         }
         assert_eq!(svc.metrics().completed, 16);
         Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn sparse_service_roundtrip_matches_direct_sparse_solve() {
+        let mut cfg = native_cfg(2);
+        cfg.sparse = Some(1.0);
+        cfg.solver_threads = 2;
+        let svc = Service::start(cfg).unwrap();
+        let p = Problem::random(24, 24, 0.8, 5);
+        let solved = svc.solve_blocking(p.clone()).unwrap();
+        assert_eq!(solved.backend, Backend::Native);
+        assert_eq!((solved.plan.rows(), solved.plan.cols()), (24, 24));
+        // The served result is the densified CSR solve, bit-for-bit.
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut direct = SolverSession::builder(SolverKind::MapUot)
+            .threads(2)
+            .stop(svc.config().stop)
+            .build_sparse(&sp);
+        let direct_report = direct.solve_sparse(&sp).unwrap();
+        assert_eq!(solved.report.iters, direct_report.iters);
+        assert_eq!(
+            solved.plan.as_slice(),
+            direct.sparse_plan().unwrap().to_dense().as_slice()
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sparse_service_rejects_threshold_that_wipes_the_plan() {
+        // Plan entries are in [0.05, 2.0); a 2.5 threshold drops them all.
+        let mut cfg = native_cfg(1);
+        cfg.sparse = Some(2.5);
+        let svc = Service::start(cfg).unwrap();
+        match svc.solve_blocking(Problem::random(16, 16, 0.7, 3)) {
+            Err(Error::InvalidProblem(msg)) => {
+                assert!(msg.contains("dropped every plan entry"), "{msg}")
+            }
+            other => panic!("expected InvalidProblem, got {other:?}"),
+        }
+        assert_eq!(svc.metrics().failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sparse_service_rejects_bad_config_at_start() {
+        let mut cfg = native_cfg(1);
+        cfg.sparse = Some(1.0);
+        cfg.solver = SolverKind::Pot;
+        assert!(Service::start(cfg).is_err(), "sparse + POT must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.sparse = Some(f32::NAN);
+        assert!(Service::start(cfg).is_err(), "NaN threshold must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.sparse = Some(-1.0);
+        assert!(Service::start(cfg).is_err(), "negative threshold must fail fast");
     }
 
     #[test]

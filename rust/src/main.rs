@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use map_uot::algo::{
     AffinityHint, CheckEvent, KernelKind, ObserverAction, ParallelBackend, Problem, SolverKind,
-    SolverSession, StopRule, TileSpec,
+    SolverSession, SparseProblem, StopRule, TileSpec,
 };
 use map_uot::apps;
 use map_uot::bench::figures;
@@ -96,6 +96,8 @@ fn print_help() {
          \x20        --kernel auto|scalar|unrolled|avx2 (SIMD backend; auto = runtime\n\
          \x20        CPUID dispatch) --tile auto|off|tune|<cols> (cache-aware column\n\
          \x20        tiling of the fused sweep)\n\
+         \x20        --sparse <threshold> (drop plan entries <= threshold and solve on\n\
+         \x20        the fused CSR backend; MAP-UOT only)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -170,12 +172,13 @@ fn cmd_solve(a: &Args) -> i32 {
         }
     };
     let affinity = if a.get("pin", false) { AffinityHint::Pinned } else { AffinityHint::None };
+
+    // One builder serves both the dense and the sparse path — the flags
+    // they share (threads/par/pin/stop/progress) are wired exactly once.
     let mut builder = SolverSession::builder(solver)
         .threads(a.get("threads", 1usize))
         .backend(par)
         .affinity(affinity)
-        .kernel(kernel)
-        .tile(tile)
         .stop(stop);
     if a.get("progress", false) {
         builder = builder.observer(|ev: CheckEvent| {
@@ -183,7 +186,65 @@ fn cmd_solve(a: &Args) -> i32 {
             ObserverAction::Continue
         });
     }
-    let mut session = builder.build(&problem);
+
+    // Sparse path: --sparse <threshold> converts the plan to CSR (dropping
+    // entries <= threshold) and solves on the fused CSR backend. Same
+    // loud-failure contract as --par/--kernel: a typo or an unsupported
+    // solver must not silently fall back to the dense path.
+    if let Some(raw) = a.flags.get("sparse") {
+        let threshold = match raw.parse::<f32>() {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("error: --sparse expects a numeric threshold, got {raw:?}");
+                return 1;
+            }
+        };
+        if solver != SolverKind::MapUot {
+            eprintln!("error: --sparse runs the fused MAP-UOT CSR kernel (use --solver mapuot)");
+            return 1;
+        }
+        // The CSR sweep runs its own unrolled primitives — the dense
+        // kernel/tile knobs do not apply, so accepting them here would
+        // silently measure nothing (the exact failure mode the loud
+        // contract above exists to prevent).
+        if a.flags.contains_key("kernel") || a.flags.contains_key("tile") {
+            eprintln!(
+                "error: --kernel/--tile select the dense SIMD backend and do not apply to \
+                 --sparse (the CSR sweep runs the unrolled CSR primitives)"
+            );
+            return 1;
+        }
+        let sp = match SparseProblem::from_problem(&problem, threshold) {
+            Ok(sp) => sp,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let mut session = builder.build_sparse(&sp);
+        let report = match session.solve_sparse(&sp) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "MAP-UOT sparse solve {m}x{n} fi={fi} [threshold={threshold} nnz={} density={:.4}]: \
+             iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
+            sp.nnz(),
+            sp.plan.density(),
+            report.iters,
+            report.err,
+            report.delta,
+            report.converged,
+            report.seconds * 1e3,
+            report.seconds * 1e3 / report.iters.max(1) as f64,
+        );
+        return 0;
+    }
+
+    let mut session = builder.kernel(kernel).tile(tile).build(&problem);
     let policy = session.policy();
     let report = match session.solve(&problem) {
         Ok(r) => r,

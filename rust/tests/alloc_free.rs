@@ -15,7 +15,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
+use map_uot::algo::{Problem, SolverKind, SolverSession, SparseProblem, StopRule};
 
 struct CountingAllocator;
 
@@ -88,5 +88,45 @@ fn hot_loop_allocates_nothing_after_warmup() {
                 kind.name()
             );
         }
+    }
+
+    // Sparse path, same contract: after the first solve on a structure,
+    // same-structure `solve_sparse` calls refresh the CSR plan in place,
+    // rebuild the nnz partition into retained capacity, and iterate out of
+    // the SparseWorkspace scratch — zero heap allocations, serial and
+    // pooled. The variant problems share the support but carry different
+    // values, so every solve does real work.
+    let base = Problem::random(48, 40, 0.7, 11);
+    let sp0 = SparseProblem::from_problem(&base, 1.0).expect("valid sparse problem");
+    assert!(sp0.nnz() > 0, "threshold left an empty support");
+    let variants: Vec<SparseProblem> = (0..3)
+        .map(|k| {
+            let mut v = sp0.clone();
+            for x in v.plan.values.iter_mut() {
+                *x *= 1.0 + 0.1 * (k as f32 + 1.0);
+            }
+            v
+        })
+        .collect();
+    for threads in [1usize, 4] {
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(threads)
+            .stop(stop)
+            .check_every(8)
+            .build_sparse(&sp0);
+        session.solve_sparse(&sp0).expect("sparse warmup solve");
+
+        ALLOCATIONS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        for p in &variants {
+            session.solve_sparse(p).expect("steady-state sparse solve");
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+
+        let count = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            count, 0,
+            "sparse (threads={threads}): {count} heap allocations in the post-warmup hot loop"
+        );
     }
 }

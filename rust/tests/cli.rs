@@ -94,6 +94,55 @@ fn solve_kernel_and_tile_combinations_converge() {
 }
 
 #[test]
+fn solve_sparse_reports_density_and_convergence() {
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "48", "--n", "40", "--sparse", "1.0", "--max-iter", "400",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("MAP-UOT sparse solve 48x40"), "{stdout}");
+    assert!(stdout.contains("nnz="), "{stdout}");
+    assert!(stdout.contains("density="), "{stdout}");
+}
+
+#[test]
+fn solve_sparse_threaded_on_both_parallel_backends() {
+    for par in ["pool", "spawn"] {
+        let (stdout, _, ok) = run(&[
+            "solve", "--m", "48", "--n", "32", "--sparse", "1.0", "--threads", "3", "--par", par,
+            "--max-iter", "400",
+        ]);
+        assert!(ok, "par={par}: {stdout}");
+        assert!(stdout.contains("sparse solve"), "par={par}: {stdout}");
+    }
+}
+
+#[test]
+fn solve_sparse_rejects_bad_threshold_and_solver() {
+    // A bare or typoed --sparse must fail loudly, not fall back to dense.
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--sparse", "wide"]);
+    assert!(!ok, "typoed --sparse must not silently fall back");
+    assert!(stderr.contains("--sparse"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--sparse"]);
+    assert!(!ok, "bare --sparse must not silently fall back");
+    assert!(stderr.contains("--sparse"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--sparse", "0.5", "--solver", "pot",
+    ]);
+    assert!(!ok, "sparse + POT must be rejected");
+    assert!(stderr.contains("mapuot"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--sparse", "-0.5"]);
+    assert!(!ok, "negative threshold must be rejected");
+    assert!(stderr.contains("threshold"), "{stderr}");
+    // The dense kernel/tile knobs do not apply to the CSR sweep — pairing
+    // them with --sparse must fail loudly, not silently measure nothing.
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--sparse", "0.5", "--kernel", "avx2",
+    ]);
+    assert!(!ok, "--kernel with --sparse must be rejected");
+    assert!(stderr.contains("do not apply"), "{stderr}");
+}
+
+#[test]
 fn fig_roofline_prints_eq1() {
     let (stdout, _, ok) = run(&["fig", "3"]);
     assert!(ok);
