@@ -21,8 +21,8 @@
 //!     cargo run --release --example quickstart
 
 use map_uot::algo::{
-    AffinityHint, CheckEvent, KernelKind, ObserverAction, Problem, SolverKind, SolverSession,
-    SparseProblem, StopRule, TileSpec,
+    AffinityHint, CheckEvent, CostKind, GeomProblem, KernelKind, ObserverAction, Problem,
+    SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
 };
 
 fn main() {
@@ -160,4 +160,39 @@ fn main() {
         report.seconds * 1e3
     );
     let _csr_plan = csr.sparse_plan().expect("solve ran"); // still CSR — no densify
+
+    // Materialization-free problems: when the kernel is *geometric*
+    // (point clouds + an entropic cost), the plan never needs to exist.
+    // Every MAP-UOT iterate is diag(u)·A·diag(v), so the session carries
+    // only the scaling vectors u, v — O(m+n) state — and regenerates
+    // kernel entries exp(-cost/eps) on the fly with a SIMD fast-exp, on
+    // the same engines (same pool), same stop rule/observer/cancel, and
+    // the same kernel/tile policy (it selects the exp backend and the
+    // generation panel width). Marginal errors come from the carried
+    // sums, so convergence checks are O(m+n) too. This is the backend for
+    // shapes where the dense plan cannot even be allocated: a 10^5×10^5
+    // plan is 40 GB; its matfree state is under 2 MB. CLI:
+    // `solve --matfree <eps> --dim 3 --cost sqeuclid`; service:
+    // `[solver] matfree = on` + `Service::submit_geom`.
+    let geom = GeomProblem::random(2048, 2048, 3, CostKind::SqEuclidean, 0.25, 0.7, 42);
+    let mut matfree = SolverSession::builder(SolverKind::MapUot)
+        .threads(threads)
+        .stop(stop)
+        .build_matfree(&geom);
+    let report = matfree.solve_matfree(&geom).expect("no observer to cancel");
+    let (u, v) = matfree.matfree_scaling().expect("solve ran");
+    println!(
+        "\nmatfree 2048x2048 (plan never materialized — {} floats of scaling state vs {} plan \
+         cells): iters={:4}  err={:.3e}  {:6.1} ms",
+        u.len() + v.len(),
+        2048usize * 2048,
+        report.iters,
+        report.err,
+        report.seconds * 1e3
+    );
+    // On-demand output: regenerate any plan row (or materialize the full
+    // plan — the one deliberate O(m·n) allocation, only if you ask).
+    let mut row = vec![0f32; 2048];
+    matfree.matfree_plan_row(&geom, 0, &mut row).expect("row 0 exists");
+    println!("matfree plan row 0 mass: {:.4}", row.iter().sum::<f32>());
 }

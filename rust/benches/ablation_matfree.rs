@@ -1,0 +1,127 @@
+//! Ablation: materialization-free scaling-form MAP-UOT vs the dense fused
+//! kernel — time per iteration AND resident solver state, across shapes.
+//!
+//! The regenerate-vs-reload argument: a dense iteration re-streams the
+//! stored plan (8 B/cell/iter at DRAM speed); matfree stores nothing and
+//! spends one SIMD exp per cell instead. At overlapping shapes the sweep
+//! measures where the exp ALU cost crosses the DRAM roofline; past the
+//! shapes where the dense plan cannot be allocated at all (16384² is
+//! already 1 GiB), matfree is the only row — which is the point: the
+//! interesting column there is `resident_bytes`, not the speedup.
+//!
+//! Emits `BENCH_matfree.json` (committed at the repo root) regardless of
+//! the invocation cwd — own env var `MAP_UOT_MATFREE_JSON`, so running
+//! alongside the other benches clobbers nothing. Set MAP_UOT_BENCH_FAST=1
+//! for a quick pass (CI runs that mode so the series is produced end to
+//! end on every push).
+
+use map_uot::algo::matfree::{CostKind, GeomProblem, MatfreeWorkspace};
+use map_uot::algo::mapuot;
+use map_uot::bench::{fast_mode, measure, Policy, Table};
+
+fn main() {
+    // (m = n, dense measured too?) — the tail rows are dense-impossible
+    // (or at least dense-irresponsible) shapes where only matfree runs.
+    let shapes: &[(usize, bool)] = if fast_mode() {
+        &[(192, true), (384, true), (1024, false)]
+    } else {
+        &[(1024, true), (2048, true), (4096, true), (8192, false), (16384, false)]
+    };
+    let eps = 0.25f32;
+    let fi = 0.7f32;
+    let d = 3usize;
+    let policy = Policy { warmup: 1, reps: if fast_mode() { 3 } else { 5 } };
+    let mut t = Table::new(
+        "Ablation: matfree vs dense MAP-UOT (ms/iter, resident KiB)".into(),
+        &["n", "variant", "ms/iter", "resident KiB", "vs dense"],
+    );
+    let mut json_rows = String::new();
+    let mut push_row = |n: usize, variant: &str, ms: f64, bytes: usize| {
+        if !json_rows.is_empty() {
+            json_rows.push(',');
+        }
+        json_rows.push_str(&format!(
+            "\n    {{\"n\": {n}, \"d\": {d}, \"variant\": \"{variant}\", \
+             \"ms_per_iter\": {ms:.4}, \"resident_bytes\": {bytes}}}"
+        ));
+    };
+
+    for &(n, run_dense) in shapes {
+        let gp = GeomProblem::random(n, n, d, CostKind::SqEuclidean, eps, fi, 7);
+
+        // Matfree: O(m + n) state — the scaling vectors + carried sums +
+        // workspace scratch (exact bytes from the workspace itself).
+        let mut ws = MatfreeWorkspace::new(n, n, 1);
+        ws.prepare(n, n);
+        let mut u = vec![1f32; n];
+        let mut v = vec![1f32; n];
+        let mut colsum = vec![0f32; n];
+        let mut rowsum = vec![0f32; n];
+        ws.seed_col_sums(&gp, &v, &mut colsum);
+        let mf_ms =
+            measure(policy, || ws.iterate(&gp, &mut u, &mut v, &mut colsum, &mut rowsum)) * 1e3;
+        let mf_bytes = ws.resident_bytes() + 4 * (u.len() + v.len() + colsum.len() + rowsum.len());
+
+        let dense_cell = if run_dense {
+            // Dense fused kernel on the materialized problem.
+            let p = gp.dense_problem();
+            let mut plan = p.plan.clone();
+            let mut cs = plan.col_sums();
+            let mut fcol = vec![0f32; n];
+            let dense_ms = measure(policy, || {
+                mapuot::iterate_into(&mut plan, &mut cs, &p.rpd, &p.cpd, p.fi, &mut fcol)
+            }) * 1e3;
+            let dense_bytes = n * n * 4;
+            push_row(n, "dense-fused", dense_ms, dense_bytes);
+            t.row(&[
+                format!("{n}"),
+                "dense-fused".into(),
+                format!("{dense_ms:.3}"),
+                format!("{:.0}", dense_bytes as f64 / 1024.0),
+                "1.00x".into(),
+            ]);
+            Some(dense_ms)
+        } else {
+            t.row(&[
+                format!("{n}"),
+                "dense-fused".into(),
+                "—".into(),
+                format!("{:.0} (unallocatable here)", (n * n * 4) as f64 / 1024.0),
+                "—".into(),
+            ]);
+            None
+        };
+
+        push_row(n, "matfree", mf_ms, mf_bytes);
+        t.row(&[
+            format!("{n}"),
+            "matfree".into(),
+            format!("{mf_ms:.3}"),
+            format!("{:.0}", mf_bytes as f64 / 1024.0),
+            match dense_cell {
+                Some(dm) => format!("{:.2}x", dm / mf_ms),
+                None => "matfree-only".into(),
+            },
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(read-off: resident bytes are O(n) for matfree vs O(n^2) dense; time/iter trades the\n\
+         dense path's 8 B/cell DRAM re-stream for one SIMD exp per cell — crossover sits near\n\
+         the host's DRAM roofline, and past dense-allocatable shapes matfree is the only row)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"ablation_matfree\",\n  \"unit\": \"ms_per_iter\",\n  \"d\": {d},\n  \
+         \"epsilon\": {eps},\n  \
+         \"schema\": {{\"rows\": \"[{{n, d, variant, ms_per_iter, resident_bytes}}]\", \
+         \"variant\": \"matfree | dense-fused\"}},\n  \"rows\": [{json_rows}\n  ]\n}}\n"
+    );
+    let path = std::env::var("MAP_UOT_MATFREE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_matfree.json").to_string()
+    });
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[ablation_matfree] wrote {path}"),
+        Err(e) => eprintln!("[ablation_matfree] could not write {path}: {e}"),
+    }
+}

@@ -11,17 +11,23 @@
 
 use crate::util::XorShift;
 
-/// One fused MAP-UOT iteration over a row-major f64 matrix.
-pub fn mapuot_iterate(
+/// One fused MAP-UOT iteration over a row-major f64 matrix,
+/// allocation-free: `fcol` (length N) is caller-provided scratch — the
+/// hot-path form the PR 1 allocation contract requires, mirroring the f32
+/// path's `mapuot::iterate_into`. (The previous `mapuot_iterate` body
+/// allocated a fresh `fcol` every iteration, so the f64 ablation was
+/// timing the allocator alongside the sweep.)
+pub fn mapuot_iterate_into(
     plan: &mut [f64],
     n: usize,
     colsum: &mut [f64],
     rpd: &[f64],
     cpd: &[f64],
     fi: f64,
+    fcol: &mut [f64],
 ) {
     debug_assert_eq!(plan.len(), rpd.len() * n);
-    let mut fcol = vec![0f64; n];
+    debug_assert_eq!(fcol.len(), n);
     for ((f, &t), &s) in fcol.iter_mut().zip(cpd).zip(colsum.iter()) {
         *f = if s > 0.0 { (t / s).powf(fi) } else { 0.0 };
     }
@@ -51,6 +57,21 @@ pub fn mapuot_iterate(
             *cs += *v;
         }
     }
+}
+
+/// [`mapuot_iterate_into`] with its own column-factor scratch — prefer
+/// the `_into` form on hot paths (kept as the convenient test entry
+/// point, like the f32 `mapuot::iterate`).
+pub fn mapuot_iterate(
+    plan: &mut [f64],
+    n: usize,
+    colsum: &mut [f64],
+    rpd: &[f64],
+    cpd: &[f64],
+    fi: f64,
+) {
+    let mut fcol = vec![0f64; n];
+    mapuot_iterate_into(plan, n, colsum, rpd, cpd, fi, &mut fcol);
 }
 
 /// One POT (4-sweep) iteration over f64 — comparator for the ablation.
@@ -120,6 +141,22 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn into_variant_is_bit_identical_to_wrapper() {
+        let (plan0, rpd, cpd) = random_problem(13, 9, 7);
+        let mut a = plan0.clone();
+        let mut b = plan0;
+        let mut cs_a = colsums(&a, 9);
+        let mut cs_b = colsums(&b, 9);
+        let mut fcol = vec![0f64; 9];
+        for _ in 0..6 {
+            mapuot_iterate(&mut a, 9, &mut cs_a, &rpd, &cpd, 0.7);
+            mapuot_iterate_into(&mut b, 9, &mut cs_b, &rpd, &cpd, 0.7, &mut fcol);
+        }
+        assert_eq!(a, b);
+        assert_eq!(cs_a, cs_b);
     }
 
     #[test]

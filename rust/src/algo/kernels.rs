@@ -164,7 +164,8 @@ impl TileSpec {
 // The Kernel trait and its three implementations
 // ---------------------------------------------------------------------------
 
-/// Object-safe interface over the two fused row primitives.
+/// Object-safe interface over the two fused row primitives (plus the
+/// matfree generation primitive).
 ///
 /// `stream` requests non-temporal plan stores in Computations III/IV; only
 /// the AVX2 backend honors it (scalar/unrolled stores always go through the
@@ -175,6 +176,18 @@ pub trait Kernel: Sync {
 
     /// Computations I+II: `row *= fcol` element-wise, returns the row sum.
     fn scale_by_vec_and_sum(&self, row: &mut [f32], fcol: &[f32]) -> f32;
+
+    /// Matfree generation (the scaling-form Computations I+II): `buf`
+    /// enters holding a panel of kernel costs `c(x_i, y_j)` and leaves
+    /// holding the scaled kernel entries
+    /// `exp(-c · inv_eps) · scale · v[j]`; returns the panel sum.
+    ///
+    /// The scalar backend evaluates `f32::exp` (the libm reference); the
+    /// unrolled and AVX2 backends run the shared `util::simd::fast_exp`
+    /// scheme, which agrees with libm within 1e-6 relative across the
+    /// whole magnitude range including gradual underflow
+    /// (`rust/tests/prop_kernels.rs::fast_exp_matches_libm_reference`).
+    fn exp_scale_and_sum(&self, buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32;
 
     /// Computations III+IV: `row *= fr`, accumulating into `next_colsum`.
     fn scale_by_scalar_and_accumulate(
@@ -222,6 +235,17 @@ impl Kernel for ScalarKernel {
         for (v, &f) in row.iter_mut().zip(fcol) {
             *v *= f;
             s += *v;
+        }
+        s
+    }
+
+    fn exp_scale_and_sum(&self, buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+        debug_assert_eq!(buf.len(), v.len());
+        let mut s = 0f32;
+        for (b, &vj) in buf.iter_mut().zip(v) {
+            let w = (-*b * inv_eps).exp() * (scale * vj);
+            *b = w;
+            s += w;
         }
         s
     }
@@ -275,6 +299,31 @@ impl Kernel for UnrolledKernel {
         crate::algo::mapuot::scale_by_vec_and_sum(row, fcol)
     }
 
+    fn exp_scale_and_sum(&self, buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+        debug_assert_eq!(buf.len(), v.len());
+        // 16 fast_exp lanes: pure ALU/bit math, so LLVM vectorizes the
+        // chunk body the same way it does the other unrolled primitives.
+        const W: usize = simd::LANES;
+        let mut acc = [0f32; W];
+        let chunks = buf.len() / W;
+        let (bh, bt) = buf.split_at_mut(chunks * W);
+        let (vh, vt) = v.split_at(chunks * W);
+        for (bw, vw) in bh.chunks_exact_mut(W).zip(vh.chunks_exact(W)) {
+            for k in 0..W {
+                let w = simd::fast_exp(-bw[k] * inv_eps) * (scale * vw[k]);
+                bw[k] = w;
+                acc[k] += w;
+            }
+        }
+        let mut s = simd::fold(&acc);
+        for (b, &vj) in bt.iter_mut().zip(vt) {
+            let w = simd::fast_exp(-*b * inv_eps) * (scale * vj);
+            *b = w;
+            s += w;
+        }
+        s
+    }
+
     fn scale_by_scalar_and_accumulate(
         &self,
         row: &mut [f32],
@@ -321,6 +370,12 @@ impl Kernel for Avx2FmaKernel {
         // SAFETY: kernel_for only hands out this backend when AVX2+FMA are
         // runtime-detected.
         unsafe { avx2::scale_by_vec_and_sum(row, fcol) }
+    }
+
+    fn exp_scale_and_sum(&self, buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+        debug_assert_eq!(buf.len(), v.len());
+        // SAFETY: feature-gated construction, see above.
+        unsafe { avx2::exp_scale_and_sum(buf, inv_eps, scale, v) }
     }
 
     fn scale_by_scalar_and_accumulate(
@@ -390,6 +445,99 @@ mod avx2 {
         let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
         let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 1));
         _mm_cvtss_f32(s)
+    }
+
+    /// 8-lane `e^x`: the same Cody–Waite reduction + degree-5 minimax +
+    /// two-factor exponent reconstruction as `util::simd::fast_exp` (the
+    /// constants are shared), with FMA contractions — ~2 ulp, overflow to
+    /// +inf, gradual underflow to 0.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA at runtime (callers are gated).
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        use crate::util::simd::{EXP_HI_CLAMP, EXP_LN2_HI, EXP_LN2_LO, EXP_LO_CLAMP, EXP_POLY};
+        let x = _mm256_max_ps(
+            _mm256_min_ps(x, _mm256_set1_ps(EXP_HI_CLAMP)),
+            _mm256_set1_ps(EXP_LO_CLAMP),
+        );
+        let n = _mm256_round_ps(
+            _mm256_mul_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E)),
+            _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC,
+        );
+        let r = _mm256_fnmadd_ps(
+            n,
+            _mm256_set1_ps(EXP_LN2_LO),
+            _mm256_fnmadd_ps(n, _mm256_set1_ps(EXP_LN2_HI), x),
+        );
+        let mut p = _mm256_set1_ps(EXP_POLY[0]);
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY[1]));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY[2]));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY[3]));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY[4]));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(EXP_POLY[5]));
+        let e = _mm256_add_ps(
+            _mm256_fmadd_ps(_mm256_mul_ps(p, r), r, r),
+            _mm256_set1_ps(1.0),
+        );
+        // 2^n via two factors (see fast_exp): keeps every biased exponent
+        // a valid normal bit pattern and lets underflow round gradually.
+        let ni = _mm256_cvtps_epi32(n);
+        let half = _mm256_srai_epi32(ni, 1);
+        let bias = _mm256_set1_epi32(127);
+        let a = _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_add_epi32(half, bias), 23));
+        let b = _mm256_castsi256_ps(_mm256_slli_epi32(
+            _mm256_add_epi32(_mm256_sub_epi32(ni, half), bias),
+            23,
+        ));
+        _mm256_mul_ps(a, _mm256_mul_ps(b, e))
+    }
+
+    /// Matfree generation: `buf[j] = exp(-buf[j] · inv_eps) · scale · v[j]`
+    /// (buf enters holding the cost panel), returning the panel sum. Two
+    /// independent 8-lane accumulators — exp's ALU chain dominates, so two
+    /// suffice to hide the add latency.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (runtime-checked by
+    /// [`super::avx2_available`] before this backend is handed out).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn exp_scale_and_sum(buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+        let n = buf.len();
+        let b = buf.as_mut_ptr();
+        let vp = v.as_ptr();
+        let neg_inv = _mm256_set1_ps(-inv_eps);
+        let vs = _mm256_set1_ps(scale);
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 16 <= n {
+            let e0 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
+            let e1 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j + 8)), neg_inv));
+            let w0 = _mm256_mul_ps(e0, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
+            let w1 = _mm256_mul_ps(e1, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j + 8))));
+            _mm256_storeu_ps(b.add(j), w0);
+            _mm256_storeu_ps(b.add(j + 8), w1);
+            acc0 = _mm256_add_ps(acc0, w0);
+            acc1 = _mm256_add_ps(acc1, w1);
+            j += 16;
+        }
+        while j + 8 <= n {
+            let e = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
+            let w = _mm256_mul_ps(e, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
+            _mm256_storeu_ps(b.add(j), w);
+            acc0 = _mm256_add_ps(acc0, w);
+            j += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while j < n {
+            let w = crate::util::simd::fast_exp(-*b.add(j) * inv_eps) * (scale * *vp.add(j));
+            *b.add(j) = w;
+            s += w;
+            j += 1;
+        }
+        s
     }
 
     /// Computations I+II: four independent 8-lane FMA accumulators (32

@@ -1,0 +1,959 @@
+//! Materialization-free MAP-UOT: O(m+n) scaling-form solves over
+//! on-the-fly Gibbs kernels.
+//!
+//! The paper's whole argument is that UOT iteration is bound by plan
+//! traffic; the limit of that argument is to stop materializing the m×n
+//! plan at all. Every MAP-UOT iterate is a cumulative diagonal rescaling
+//! of the initial kernel, `plan_t = diag(u_t) · A · diag(v_t)`, so when
+//! the kernel is *geometric* — `A_ij = exp(-c(x_i, y_j) / ε)` over point
+//! clouds `x: m×d`, `y: n×d` — a solver can carry only the scaling
+//! vectors `u, v` and regenerate kernel entries on demand (the rapid
+//! kernel-evaluation line of work, arXiv:2306.13618). Resident state is
+//! O(m + n): the scaling vectors, the carried marginal sums, and one
+//! row-length generation buffer per thread. This opens shapes where the
+//! dense and CSR backends cannot even allocate (a 10⁵×10⁵ plan is 40 GB;
+//! its matfree state is under 2 MB).
+//!
+//! # The sweep
+//!
+//! One iteration is the same fused Algorithm 1 double-loop, expressed on
+//! the scaling vectors. With `colsum` carried from the previous iteration:
+//!
+//! 1. `Factor_col[j] = (cpd[j] / colsum[j])^fi`; `v[j] *= Factor_col[j]`.
+//! 2. Per row `i`: generate the scaled kernel row into the thread's panel
+//!    buffer — `buf[j] = u[i] · exp(-c(x_i, y_j)/ε) · v[j]` — summing it
+//!    on the fly (Computations I+II; costs are filled per
+//!    [`KernelPolicy`]-sized column panel so the freshly written panel is
+//!    still L1-resident when the exp pass reads it back).
+//! 3. `Factor_row = (rpd[i] / Sum_row)^fi`; `u[i] *= Factor_row`; then the
+//!    ordinary dense Computations III+IV primitive rescales the buffer by
+//!    `Factor_row` while accumulating `NextSum_col` (and, tracked, the
+//!    row's max element change via the same reciprocal-factor recovery as
+//!    the dense kernels — the buffer value plays exactly the role of the
+//!    post-column-rescale plan value).
+//!
+//! The buffer also leaves step 3 holding the *actual* new plan row, which
+//! is what [`generate_plan_row`] / `SolverSession::matfree_materialize`
+//! exploit for on-demand output. Marginal errors come for free: the
+//! carried `NextSum_col` is the exact column-sum vector of the current
+//! plan, and `rowsum[i] = Factor_row · Sum_row` its row sums (to one
+//! rounding), so the convergence check costs O(m + n) — no extra
+//! generation pass (the dense path pays a full M·N sweep per check).
+//!
+//! Per-row numerics are shared by every execution mode (the serial
+//! reference, `thread::scope`, and the persistent pool run the same
+//! per-block body over the same [`Partition`] with the same
+//! block-ascending colsum reduction), so for any fixed partition all
+//! three are **bit-identical** — the same contract as every other backend
+//! (`rust/tests/prop_matfree.rs`).
+//!
+//! The exp evaluations run on the session's kernel backend
+//! ([`crate::algo::kernels::Kernel::exp_scale_and_sum`]): libm `f32::exp`
+//! on the scalar reference, the shared `util::simd::fast_exp` scheme on
+//! the unrolled and AVX2 backends (within 1e-6 relative of libm across
+//! the whole range, including gradual underflow). Non-temporal stores
+//! never apply here — there is no O(m·n) buffer to stream.
+//!
+//! Trade-off: matfree swaps plan *bandwidth* for exp *compute*
+//! (regenerate-vs-reload). A dense iteration moves 8 bytes per cell per
+//! iteration at DRAM speed; matfree moves none but evaluates one exp per
+//! cell. On hosts where a vectorized exp sustains a few elements/cycle,
+//! break-even sits near the DRAM roofline — and past the shapes where the
+//! dense plan exceeds memory, matfree is the only option
+//! (`benches/ablation_matfree.rs` measures both regimes).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::algo::kernels::{Kernel, KernelKind, KernelPolicy, TileSpec};
+use crate::algo::parallel;
+use crate::algo::pool::{
+    AccArena, AffinityHint, PaddedSlots, ParallelBackend, Partition, ThreadPool,
+};
+use crate::algo::scaling::factor;
+use crate::error::{Error, Result};
+use crate::util::matrix::CACHE_LINE;
+use crate::util::XorShift;
+
+/// Ground cost between points (the kernel is `exp(-cost / ε)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CostKind {
+    /// Squared Euclidean distance `‖x − y‖²` (the Gibbs kernel the
+    /// applications use — no square root in the hot loop).
+    SqEuclidean,
+    /// Euclidean distance `‖x − y‖`.
+    Euclidean,
+}
+
+impl CostKind {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sqeuclid" | "sqeuclidean" | "sq" | "l22" => Some(CostKind::SqEuclidean),
+            "euclid" | "euclidean" | "l2" => Some(CostKind::Euclidean),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CostKind::SqEuclidean => "sqeuclid",
+            CostKind::Euclidean => "euclid",
+        }
+    }
+}
+
+/// A geometric UOT instance: two point clouds, a cost kind and kernel
+/// bandwidth `ε` defining `A_ij = exp(-c(x_i, y_j)/ε)` implicitly, plus
+/// the marginals — the matfree twin of [`crate::algo::Problem`], holding
+/// O((m + n)·d) state where the dense twin holds O(m·n).
+#[derive(Clone)]
+pub struct GeomProblem {
+    /// Row point cloud, row-major `m × d`.
+    pub x: Vec<f32>,
+    /// Column point cloud, row-major `n × d`.
+    pub y: Vec<f32>,
+    /// Point dimensionality.
+    pub d: usize,
+    /// Ground cost (the kernel is `exp(-cost/epsilon)`).
+    pub cost: CostKind,
+    /// Kernel bandwidth ε (entropic regularization strength).
+    pub epsilon: f32,
+    /// Row probability distribution (target row marginals), length M.
+    pub rpd: Vec<f32>,
+    /// Column probability distribution (target column marginals), length N.
+    pub cpd: Vec<f32>,
+    /// Relaxation exponent in `(0, 1]`.
+    pub fi: f32,
+}
+
+impl GeomProblem {
+    /// Validated constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        x: Vec<f32>,
+        y: Vec<f32>,
+        d: usize,
+        cost: CostKind,
+        epsilon: f32,
+        rpd: Vec<f32>,
+        cpd: Vec<f32>,
+        fi: f32,
+    ) -> Result<Self> {
+        if d == 0 {
+            return Err(Error::InvalidProblem("point dimension d must be positive".into()));
+        }
+        if rpd.is_empty() || cpd.is_empty() {
+            return Err(Error::InvalidProblem("geom problem dims must be positive".into()));
+        }
+        if x.len() != rpd.len() * d {
+            return Err(Error::InvalidProblem(format!(
+                "x has {} floats, expected m*d = {}*{}",
+                x.len(),
+                rpd.len(),
+                d
+            )));
+        }
+        if y.len() != cpd.len() * d {
+            return Err(Error::InvalidProblem(format!(
+                "y has {} floats, expected n*d = {}*{}",
+                y.len(),
+                cpd.len(),
+                d
+            )));
+        }
+        if x.iter().chain(y.iter()).any(|v| !v.is_finite()) {
+            return Err(Error::InvalidProblem("point coordinates must be finite".into()));
+        }
+        if !(epsilon.is_finite() && epsilon > 0.0) {
+            return Err(Error::InvalidProblem(format!(
+                "epsilon {epsilon} must be finite and > 0"
+            )));
+        }
+        if !(fi > 0.0 && fi <= 1.0) {
+            return Err(Error::InvalidProblem(format!("fi={fi} outside (0, 1]")));
+        }
+        if rpd.iter().chain(cpd.iter()).any(|v| !v.is_finite() || *v <= 0.0) {
+            return Err(Error::InvalidProblem("marginals must be positive and finite".into()));
+        }
+        Ok(Self { x, y, d, cost, epsilon, rpd, cpd, fi })
+    }
+
+    /// Synthetic instance: points uniform in the unit cube `[0, 1)^d`,
+    /// marginals uniform in `[0.3, 1.7)` (the same ranges as
+    /// [`crate::algo::Problem::random`], so behavior transfers). This is
+    /// the generator the CLI `solve --matfree` and the matfree ablation
+    /// bench use.
+    pub fn random(
+        m: usize,
+        n: usize,
+        d: usize,
+        cost: CostKind,
+        epsilon: f32,
+        fi: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = XorShift::new(seed);
+        let x = (0..m * d).map(|_| rng.next_f32()).collect();
+        let y = (0..n * d).map(|_| rng.next_f32()).collect();
+        let rpd = rng.uniform_vec(m, 0.3, 1.7);
+        let cpd = rng.uniform_vec(n, 0.3, 1.7);
+        Self { x, y, d, cost, epsilon, rpd, cpd, fi }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rpd.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cpd.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Ground cost between row point `i` and column point `j` (scalar
+    /// reference; the sweeps use the panel-filled form).
+    pub fn cost_entry(&self, i: usize, j: usize) -> f32 {
+        let xi = &self.x[i * self.d..(i + 1) * self.d];
+        let yj = &self.y[j * self.d..(j + 1) * self.d];
+        let mut s = 0f32;
+        for k in 0..self.d {
+            let t = xi[k] - yj[k];
+            s += t * t;
+        }
+        match self.cost {
+            CostKind::SqEuclidean => s,
+            CostKind::Euclidean => s.sqrt(),
+        }
+    }
+
+    /// One implicit kernel entry `A_ij = exp(-c(x_i, y_j)/ε)` (libm
+    /// scalar reference — tests compare the fast-exp sweeps against it).
+    pub fn kernel_entry(&self, i: usize, j: usize) -> f32 {
+        (-self.cost_entry(i, j) / self.epsilon).exp()
+    }
+
+    /// Materialize the equivalent dense [`crate::algo::Problem`]
+    /// (allocates the full M·N plan — tests and the ablation bench only;
+    /// the entire point of this module is not doing this on solve paths).
+    pub fn dense_problem(&self) -> crate::algo::Problem {
+        crate::algo::Problem {
+            plan: crate::util::Matrix::from_fn(self.rows(), self.cols(), |i, j| {
+                self.kernel_entry(i, j)
+            }),
+            rpd: self.rpd.clone(),
+            cpd: self.cpd.clone(),
+            fi: self.fi,
+        }
+    }
+}
+
+impl std::fmt::Debug for GeomProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GeomProblem")
+            .field("m", &self.rows())
+            .field("n", &self.cols())
+            .field("d", &self.d)
+            .field("cost", &self.cost.name())
+            .field("epsilon", &self.epsilon)
+            .field("fi", &self.fi)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row generation
+// ---------------------------------------------------------------------------
+
+/// Fill `buf` with the costs `c(x_i, y_j)` for the column panel whose
+/// points are `ys` (row-major, `buf.len() × d`). The d = 2/3 bodies are
+/// unrolled by hand (the generic inner loop defeats vectorization at tiny
+/// trip counts) with the same left-to-right summation order, so they are
+/// bit-identical to the generic form.
+#[inline]
+pub(crate) fn fill_cost_row(buf: &mut [f32], xi: &[f32], ys: &[f32], d: usize, cost: CostKind) {
+    debug_assert_eq!(buf.len() * d, ys.len());
+    debug_assert_eq!(xi.len(), d);
+    match d {
+        2 => {
+            let (x0, x1) = (xi[0], xi[1]);
+            for (b, yj) in buf.iter_mut().zip(ys.chunks_exact(2)) {
+                let t0 = x0 - yj[0];
+                let t1 = x1 - yj[1];
+                *b = t0 * t0 + t1 * t1;
+            }
+        }
+        3 => {
+            let (x0, x1, x2) = (xi[0], xi[1], xi[2]);
+            for (b, yj) in buf.iter_mut().zip(ys.chunks_exact(3)) {
+                let t0 = x0 - yj[0];
+                let t1 = x1 - yj[1];
+                let t2 = x2 - yj[2];
+                *b = (t0 * t0 + t1 * t1) + t2 * t2;
+            }
+        }
+        _ => {
+            for (b, yj) in buf.iter_mut().zip(ys.chunks_exact(d)) {
+                let mut s = 0f32;
+                for k in 0..d {
+                    let t = xi[k] - yj[k];
+                    s += t * t;
+                }
+                *b = s;
+            }
+        }
+    }
+    if cost == CostKind::Euclidean {
+        for b in buf {
+            *b = b.sqrt();
+        }
+    }
+}
+
+/// Generate one scaled kernel row `buf[j] = scale · A_ij · v[j]` through
+/// `kernel`, panel by panel (`tile` columns at a time; 0 = whole row so
+/// the cost fill stays L1-resident for the exp pass), returning the row
+/// sum.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn generate_row<K: Kernel>(
+    k: &K,
+    p: &GeomProblem,
+    i: usize,
+    scale: f32,
+    v: &[f32],
+    buf: &mut [f32],
+    inv_eps: f32,
+    tile: usize,
+) -> f32 {
+    let n = v.len();
+    let d = p.d;
+    let xi = &p.x[i * d..(i + 1) * d];
+    let step = if tile == 0 { n } else { tile };
+    let mut s = 0f32;
+    let mut j0 = 0usize;
+    while j0 < n {
+        let j1 = (j0 + step).min(n);
+        fill_cost_row(&mut buf[j0..j1], xi, &p.y[j0 * d..j1 * d], d, p.cost);
+        s += k.exp_scale_and_sum(&mut buf[j0..j1], inv_eps, scale, &v[j0..j1]);
+        j0 = j1;
+    }
+    s
+}
+
+/// Regenerate one *plan* row of the current iterate, `out[j] = u_i · A_ij
+/// · v[j]`, under `policy` — the on-demand output path
+/// (`SolverSession::matfree_plan_row` / `matfree_materialize`).
+pub fn generate_plan_row(
+    p: &GeomProblem,
+    i: usize,
+    u_i: f32,
+    v: &[f32],
+    out: &mut [f32],
+    policy: &KernelPolicy,
+) {
+    use crate::algo::kernels::{ScalarKernel, UnrolledKernel};
+    let inv_eps = 1.0 / p.epsilon;
+    let tile = policy.tile_for(v.len()).unwrap_or(0);
+    match policy.kind() {
+        KernelKind::Scalar => {
+            generate_row(&ScalarKernel, p, i, u_i, v, out, inv_eps, tile);
+        }
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelKind::Avx2 => {
+            generate_row(&crate::algo::kernels::AVX2_FMA_KERNEL, p, i, u_i, v, out, inv_eps, tile);
+        }
+        _ => {
+            generate_row(&UnrolledKernel, p, i, u_i, v, out, inv_eps, tile);
+        }
+    }
+}
+
+/// The per-block body every matfree execution mode shares (the serial
+/// reference calls it once per partition block sequentially; each thread
+/// of the parallel engines over its own block): for each row of `rows`,
+/// generate `buf[j] = u[i] · A_ij · v[j]` summing on the fly, fold the row
+/// factor into `u` and the carried `rowsum`, then run the ordinary dense
+/// Computations III+IV primitive over the buffer, accumulating
+/// `NextSum_col` into `local`. Tracked (returns the block's max plan
+/// element change) when `inv_fcol` is given — the buffer value stands in
+/// for the post-column-rescale plan value, so the reciprocal-factor
+/// recovery is exactly the dense kernels' trick.
+///
+/// Dispatches the kernel backend once per call and runs monomorphized,
+/// mirroring `mapuot::fused_rows_opt`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matfree_rows_opt(
+    p: &GeomProblem,
+    rows: Range<usize>,
+    u_block: &mut [f32],
+    rowsum_block: &mut [f32],
+    v: &[f32],
+    inv_fcol: Option<&[f32]>,
+    buf: &mut [f32],
+    local: &mut [f32],
+    policy: &KernelPolicy,
+) -> f32 {
+    use crate::algo::kernels::{ScalarKernel, UnrolledKernel};
+    match policy.kind() {
+        KernelKind::Scalar => matfree_rows_generic(
+            &ScalarKernel, p, rows, u_block, rowsum_block, v, inv_fcol, buf, local, policy,
+        ),
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        KernelKind::Avx2 => matfree_rows_generic(
+            &crate::algo::kernels::AVX2_FMA_KERNEL,
+            p,
+            rows,
+            u_block,
+            rowsum_block,
+            v,
+            inv_fcol,
+            buf,
+            local,
+            policy,
+        ),
+        _ => matfree_rows_generic(
+            &UnrolledKernel, p, rows, u_block, rowsum_block, v, inv_fcol, buf, local, policy,
+        ),
+    }
+}
+
+/// Monomorphized body of [`matfree_rows_opt`] — see its docs.
+#[allow(clippy::too_many_arguments)]
+fn matfree_rows_generic<K: Kernel>(
+    k: &K,
+    p: &GeomProblem,
+    rows: Range<usize>,
+    u_block: &mut [f32],
+    rowsum_block: &mut [f32],
+    v: &[f32],
+    inv_fcol: Option<&[f32]>,
+    buf: &mut [f32],
+    local: &mut [f32],
+    policy: &KernelPolicy,
+) -> f32 {
+    let n = v.len();
+    debug_assert_eq!(u_block.len(), rows.len());
+    debug_assert_eq!(rowsum_block.len(), rows.len());
+    debug_assert!(buf.len() >= n && local.len() >= n);
+    let buf = &mut buf[..n];
+    let local = &mut local[..n];
+    let inv_eps = 1.0 / p.epsilon;
+    let tile = policy.tile_for(n).unwrap_or(0);
+    let mut delta = 0f32;
+    for (il, i) in rows.enumerate() {
+        let ui = u_block[il];
+        // Computations I+II over the regenerated row (u folded in at
+        // generation, so `buf` plays the dense sweep's post-column-rescale
+        // row and `s` is the true Sum_row of the current iterate).
+        let s = generate_row(k, p, i, ui, v, buf, inv_eps, tile);
+        // Computations III+IV: plain dense primitives over the buffer.
+        // A zero row sum (u died, or every kernel entry underflowed at
+        // this ε) guards to factor 0 exactly like the dense path.
+        let fr = factor(p.rpd[i], s, p.fi);
+        u_block[il] = ui * fr;
+        rowsum_block[il] = fr * s;
+        match inv_fcol {
+            Some(iv) => {
+                delta = delta.max(k.scale_by_scalar_and_accumulate_tracked(
+                    buf, fr, iv, local, false,
+                ));
+            }
+            // Never stream: the buffer is thread-local scratch re-read
+            // next row — there is no O(m·n) store target in this backend.
+            None => k.scale_by_scalar_and_accumulate(buf, fr, local, false),
+        }
+    }
+    delta
+}
+
+/// Carried-marginal L-inf error: the sweep's `NextSum_col` is the exact
+/// column-sum vector of the current plan and `rowsum` its row sums (one
+/// rounding each), so the matfree convergence check is O(m + n) — no
+/// generation pass. The float drift of the carried sums versus fresh sums
+/// is bounded by the same per-sweep rounding the dense carried `colsum`
+/// already accepts.
+pub fn carried_marginal_error(rowsum: &[f32], colsum: &[f32], rpd: &[f32], cpd: &[f32]) -> f32 {
+    debug_assert_eq!(rowsum.len(), rpd.len());
+    debug_assert_eq!(colsum.len(), cpd.len());
+    let row_err = rowsum
+        .iter()
+        .zip(rpd)
+        .map(|(s, &t)| (s - t).abs())
+        .fold(0f32, f32::max);
+    let col_err = colsum
+        .iter()
+        .zip(cpd)
+        .map(|(s, &t)| (s - t).abs())
+        .fold(0f32, f32::max);
+    row_err.max(col_err)
+}
+
+// ---------------------------------------------------------------------------
+// MatfreeWorkspace
+// ---------------------------------------------------------------------------
+
+/// Scratch and engine for matfree solves — the materialization-free twin
+/// of [`crate::algo::Workspace`]. Resident state is O(m + n) per thread:
+/// column factors, their reciprocals, the per-thread `NextSum_col`
+/// [`AccArena`], and one row-length generation panel per thread (a second
+/// padded arena). Nothing here is ever O(m·n).
+///
+/// # Allocation contract
+///
+/// Construction and [`MatfreeWorkspace::ensure_shape`] growth may
+/// allocate; [`MatfreeWorkspace::prepare`],
+/// [`MatfreeWorkspace::seed_col_sums`], [`MatfreeWorkspace::iterate`] and
+/// [`MatfreeWorkspace::iterate_tracked`] must not (the row partition is
+/// rebuilt by value). Asserted by `rust/tests/alloc_free.rs` through the
+/// session path, which also proves the headline claim: an
+/// m = n = 16384 solve never performs an O(m·n)-sized allocation.
+#[derive(Debug)]
+pub struct MatfreeWorkspace {
+    shape: (usize, usize),
+    threads: usize,
+    backend: ParallelBackend,
+    /// Column rescaling factors (`Factor_col`), length N.
+    fcol: Vec<f32>,
+    /// Reciprocals of `fcol` (zero-guarded) for in-sweep delta tracking.
+    inv_fcol: Vec<f32>,
+    /// Per-thread row generation buffers (length N each, cache-line
+    /// padded so adjacent workers never share a line).
+    panels: AccArena,
+    /// Per-thread `NextSum_col` partials, cache-line-padded.
+    acc: AccArena,
+    /// Per-thread tracked-delta maxima, one cache line each.
+    delta_slots: PaddedSlots,
+    /// Balanced row partition (dense-style even split — every matfree row
+    /// costs the same n kernel evaluations), rebuilt per solve.
+    part: Partition,
+    /// The persistent execution engine (pool backend, `threads > 1`).
+    pool: Option<Arc<ThreadPool>>,
+    /// Kernel backend + generation panel width.
+    policy: KernelPolicy,
+}
+
+impl MatfreeWorkspace {
+    /// Workspace for `m × n` geometric problems with `threads` workers on
+    /// the default pool backend (workers spawned here, once).
+    pub fn new(m: usize, n: usize, threads: usize) -> Self {
+        Self::with_backend(m, n, threads, ParallelBackend::Pool, AffinityHint::None)
+    }
+
+    /// Workspace with an explicit parallel backend and affinity hint.
+    pub fn with_backend(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        affinity: AffinityHint,
+    ) -> Self {
+        let threads = threads.max(1);
+        let pool = (threads > 1 && backend == ParallelBackend::Pool)
+            .then(|| Arc::new(ThreadPool::with_affinity(threads, affinity)));
+        let policy = KernelPolicy::for_shape(KernelKind::Auto, TileSpec::Auto, m, n);
+        Self::with_engine(m, n, threads, backend, pool, policy)
+    }
+
+    /// Fully explicit assembly — the form
+    /// [`crate::algo::SolverSession`] uses so one session's dense, sparse
+    /// and matfree paths drive the same workers under the same resolved
+    /// kernel policy.
+    pub fn with_engine(
+        m: usize,
+        n: usize,
+        threads: usize,
+        backend: ParallelBackend,
+        pool: Option<Arc<ThreadPool>>,
+        policy: KernelPolicy,
+    ) -> Self {
+        let threads = match &pool {
+            Some(p) => p.threads(),
+            None => threads.max(1),
+        };
+        Self {
+            shape: (m, n),
+            threads,
+            backend,
+            fcol: vec![0f32; n],
+            inv_fcol: vec![0f32; n],
+            panels: AccArena::padded(threads, n),
+            acc: AccArena::padded(threads, n),
+            delta_slots: PaddedSlots::new(threads),
+            part: Partition::new(m.max(1), threads, threads),
+            pool,
+            policy,
+        }
+    }
+
+    /// Current `(rows, cols)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+
+    /// Worker threads this workspace is provisioned for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Which parallel execution engine drives `threads > 1` iterations.
+    pub fn backend(&self) -> ParallelBackend {
+        self.backend
+    }
+
+    /// The persistent pool, when the pool backend is active.
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The kernel backend + panel policy driving generation.
+    pub fn policy(&self) -> KernelPolicy {
+        self.policy
+    }
+
+    /// The current row partition (valid after [`MatfreeWorkspace::prepare`]).
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    /// Resize for a new shape. No-op (and allocation-free) when unchanged;
+    /// growing past any previously seen size reallocates.
+    pub fn ensure_shape(&mut self, m: usize, n: usize) {
+        if self.shape == (m, n) {
+            return;
+        }
+        self.shape = (m, n);
+        self.fcol.resize(n, 0.0);
+        self.inv_fcol.resize(n, 0.0);
+        self.panels.ensure_cols(n);
+        self.acc.ensure_cols(n);
+    }
+
+    /// Size scratch for an `m × n` problem and rebuild the row partition.
+    /// Allocation-free for a same-shape problem; call once per solve.
+    pub fn prepare(&mut self, m: usize, n: usize) {
+        self.ensure_shape(m, n);
+        let cap = self.acc.rows().min(self.panels.rows());
+        self.part = Partition::new(m, self.threads, cap);
+    }
+
+    /// Seed the carried column sums of the *initial* plan (`u = v = 1`):
+    /// one serial generation pass accumulating `Σ_i A_ij` out of panel 0
+    /// — the matfree analogue of `Matrix::col_sums_into`, run once per
+    /// solve, allocation-free. `v` must be the freshly reset all-ones
+    /// vector.
+    pub fn seed_col_sums(&mut self, p: &GeomProblem, v: &[f32], out: &mut [f32]) {
+        let (m, n) = (p.rows(), p.cols());
+        debug_assert_eq!(self.shape, (m, n));
+        debug_assert_eq!(out.len(), n);
+        out.fill(0.0);
+        let policy = self.policy;
+        let buf = self.panels.row_mut(0);
+        for i in 0..m {
+            generate_plan_row(p, i, 1.0, v, &mut buf[..n], &policy);
+            for (o, &w) in out.iter_mut().zip(buf.iter()) {
+                *o += w;
+            }
+        }
+    }
+
+    /// One matfree iteration on this workspace's engine (serial partitioned
+    /// reference, scope, or pool — all bit-identical for the same
+    /// partition). `u`/`v`/`colsum`/`rowsum` are the carried solver state.
+    pub fn iterate(
+        &mut self,
+        p: &GeomProblem,
+        u: &mut [f32],
+        v: &mut [f32],
+        colsum: &mut [f32],
+        rowsum: &mut [f32],
+    ) {
+        if self.threads <= 1 {
+            parallel::matfree_iterate_partitioned(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                &mut self.fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
+        } else if let Some(pool) = &self.pool {
+            parallel::matfree_iterate_pool(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                pool,
+                &mut self.fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
+        } else {
+            parallel::matfree_iterate_into(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                &mut self.fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
+        }
+    }
+
+    /// [`MatfreeWorkspace::iterate`] with in-sweep delta tracking; returns
+    /// the iteration's max plan element change.
+    pub fn iterate_tracked(
+        &mut self,
+        p: &GeomProblem,
+        u: &mut [f32],
+        v: &mut [f32],
+        colsum: &mut [f32],
+        rowsum: &mut [f32],
+    ) -> f32 {
+        if self.threads <= 1 {
+            parallel::matfree_iterate_partitioned_tracked(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            )
+        } else if let Some(pool) = &self.pool {
+            parallel::matfree_iterate_pool_tracked(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                pool,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &mut self.delta_slots,
+                &self.part,
+                &self.policy,
+            )
+        } else {
+            parallel::matfree_iterate_tracked(
+                p,
+                u,
+                v,
+                colsum,
+                rowsum,
+                &mut self.fcol,
+                &mut self.inv_fcol,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            )
+        }
+    }
+
+    /// Bytes of resident workspace scratch (panel arenas included) — the
+    /// figure the matfree ablation reports against the dense plan's
+    /// `4·m·n`. Exact for the padded arenas.
+    pub fn resident_bytes(&self) -> usize {
+        let line_f32 = CACHE_LINE / 4;
+        let arena = |rows: usize, cols: usize| rows * cols.div_ceil(line_f32) * CACHE_LINE;
+        self.fcol.len() * 4
+            + self.inv_fcol.len() * 4
+            + arena(self.panels.rows(), self.panels.cols())
+            + arena(self.acc.rows(), self.acc.cols())
+            + self.delta_slots.slots() * CACHE_LINE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::mapuot;
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let ok = GeomProblem::new(
+            vec![0.0; 6],
+            vec![0.0; 9],
+            3,
+            CostKind::SqEuclidean,
+            0.5,
+            vec![1.0; 2],
+            vec![1.0; 3],
+            0.7,
+        );
+        assert!(ok.is_ok());
+        let bad = |x: Vec<f32>, y: Vec<f32>, d, eps, rpd: Vec<f32>, cpd: Vec<f32>, fi| {
+            GeomProblem::new(x, y, d, CostKind::SqEuclidean, eps, rpd, cpd, fi).is_err()
+        };
+        assert!(bad(vec![0.0; 5], vec![0.0; 9], 3, 0.5, vec![1.0; 2], vec![1.0; 3], 0.7)); // x len
+        assert!(bad(vec![0.0; 6], vec![0.0; 8], 3, 0.5, vec![1.0; 2], vec![1.0; 3], 0.7)); // y len
+        assert!(bad(vec![0.0; 6], vec![0.0; 9], 0, 0.5, vec![1.0; 2], vec![1.0; 3], 0.7)); // d = 0
+        assert!(bad(vec![0.0; 6], vec![0.0; 9], 3, 0.0, vec![1.0; 2], vec![1.0; 3], 0.7)); // eps
+        assert!(bad(vec![0.0; 6], vec![0.0; 9], 3, f32::NAN, vec![1.0; 2], vec![1.0; 3], 0.7));
+        assert!(bad(vec![0.0; 6], vec![0.0; 9], 3, 0.5, vec![1.0; 2], vec![1.0; 3], 0.0)); // fi
+        assert!(bad(vec![0.0; 6], vec![0.0; 9], 3, 0.5, vec![1.0, -1.0], vec![1.0; 3], 0.7));
+        assert!(bad(vec![f32::NAN; 6], vec![0.0; 9], 3, 0.5, vec![1.0; 2], vec![1.0; 3], 0.7));
+        assert!(bad(vec![], vec![0.0; 9], 3, 0.5, vec![], vec![1.0; 3], 0.7)); // m = 0
+    }
+
+    #[test]
+    fn cost_parsing_and_entries() {
+        assert_eq!(CostKind::parse("sqeuclid"), Some(CostKind::SqEuclidean));
+        assert_eq!(CostKind::parse("L2"), Some(CostKind::Euclidean));
+        assert_eq!(CostKind::parse("manhattan"), None);
+        let p = GeomProblem::new(
+            vec![0.0, 0.0, 3.0, 4.0],
+            vec![0.0, 0.0],
+            2,
+            CostKind::SqEuclidean,
+            1.0,
+            vec![1.0; 2],
+            vec![1.0],
+            1.0,
+        )
+        .unwrap();
+        assert_eq!(p.cost_entry(0, 0), 0.0);
+        assert_eq!(p.cost_entry(1, 0), 25.0);
+        let mut e = p.clone();
+        e.cost = CostKind::Euclidean;
+        assert_eq!(e.cost_entry(1, 0), 5.0);
+        assert_eq!(p.kernel_entry(0, 0), 1.0);
+        assert!((p.kernel_entry(1, 0) - (-25f32).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let a = GeomProblem::random(8, 6, 3, CostKind::SqEuclidean, 0.5, 0.7, 7);
+        let b = GeomProblem::random(8, 6, 3, CostKind::SqEuclidean, 0.5, 0.7, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.cpd, b.cpd);
+        assert!(a.x.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(GeomProblem::new(a.x, a.y, 3, a.cost, a.epsilon, a.rpd, a.cpd, a.fi).is_ok());
+    }
+
+    #[test]
+    fn fill_cost_row_specializations_match_generic() {
+        let mut rng = XorShift::new(5);
+        for d in [1usize, 2, 3, 4, 7] {
+            let n = 13;
+            let xi: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+            let ys: Vec<f32> = (0..n * d).map(|_| rng.next_f32()).collect();
+            for cost in [CostKind::SqEuclidean, CostKind::Euclidean] {
+                let mut buf = vec![0f32; n];
+                fill_cost_row(&mut buf, &xi, &ys, d, cost);
+                for (j, &got) in buf.iter().enumerate() {
+                    let mut s = 0f32;
+                    for k in 0..d {
+                        let t = xi[k] - ys[j * d + k];
+                        s += t * t;
+                    }
+                    let want = if cost == CostKind::Euclidean { s.sqrt() } else { s };
+                    assert_eq!(got.to_bits(), want.to_bits(), "d={d} j={j} {cost:?}");
+                }
+            }
+        }
+    }
+
+    /// The serial matfree sweep matches the dense MAP-UOT kernel on the
+    /// materialized problem, iteration by iteration (tolerance — the
+    /// dense path rounds its stored plan where matfree re-derives entries
+    /// from the scaling vectors).
+    #[test]
+    fn serial_iterations_track_the_dense_kernel() {
+        for (m, n, d) in [(9usize, 7usize, 2usize), (16, 12, 3), (5, 40, 1)] {
+            let p = GeomProblem::random(m, n, d, CostKind::SqEuclidean, 0.25, 0.7, (m + n) as u64);
+            let dense = p.dense_problem();
+            let mut plan = dense.plan.clone();
+            let mut cs_dense = plan.col_sums();
+
+            let mut ws = MatfreeWorkspace::new(m, n, 1);
+            ws.prepare(m, n);
+            let mut u = vec![1f32; m];
+            let mut v = vec![1f32; n];
+            let mut colsum = vec![0f32; n];
+            let mut rowsum = vec![0f32; m];
+            ws.seed_col_sums(&p, &v, &mut colsum);
+            for (a, b) in colsum.iter().zip(&cs_dense) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "seed colsum {a} vs {b}");
+            }
+            for it in 0..8 {
+                mapuot::iterate(&mut plan, &mut cs_dense, &p.rpd, &p.cpd, p.fi);
+                ws.iterate(&mut u, &mut v, &mut colsum, &mut rowsum);
+                for (j, (a, b)) in colsum.iter().zip(&cs_dense).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-4 * b.abs().max(1e-3),
+                        "{m}x{n} it={it} col {j}: {a} vs {b}"
+                    );
+                }
+            }
+            // Materialized entries match the dense plan.
+            let mut row = vec![0f32; n];
+            for i in 0..m {
+                generate_plan_row(&p, i, u[i], &v, &mut row, &ws.policy());
+                for (j, &got) in row.iter().enumerate() {
+                    let want = plan.get(i, j);
+                    assert!(
+                        (got - want).abs() <= 1e-4 * want.abs().max(1e-5),
+                        "{m}x{n} plan[{i}][{j}]: {got} vs {want}"
+                    );
+                }
+            }
+            // Carried marginals match the materialized definition.
+            let err = carried_marginal_error(&rowsum, &colsum, &p.rpd, &p.cpd);
+            let dense_err = crate::algo::convergence::marginal_error(&plan, &p.rpd, &p.cpd);
+            assert!((err - dense_err).abs() <= 1e-3 * dense_err.max(1e-2), "{err} vs {dense_err}");
+        }
+    }
+
+    #[test]
+    fn tracked_iteration_is_bit_identical_to_untracked() {
+        let p = GeomProblem::random(14, 11, 3, CostKind::Euclidean, 0.5, 0.8, 9);
+        let (m, n) = (14, 11);
+        let mut ws_a = MatfreeWorkspace::new(m, n, 1);
+        let mut ws_b = MatfreeWorkspace::new(m, n, 1);
+        ws_a.prepare(m, n);
+        ws_b.prepare(m, n);
+        let (mut ua, mut va) = (vec![1f32; m], vec![1f32; n]);
+        let (mut ub, mut vb) = (vec![1f32; m], vec![1f32; n]);
+        let (mut ca, mut ra) = (vec![0f32; n], vec![0f32; m]);
+        let (mut cb, mut rb) = (vec![0f32; n], vec![0f32; m]);
+        ws_a.seed_col_sums(&p, &va, &mut ca);
+        ws_b.seed_col_sums(&p, &vb, &mut cb);
+        for _ in 0..5 {
+            ws_a.iterate(&mut ua, &mut va, &mut ca, &mut ra);
+            let _ = ws_b.iterate_tracked(&mut ub, &mut vb, &mut cb, &mut rb);
+        }
+        assert_eq!(ua, ub);
+        assert_eq!(va, vb);
+        assert_eq!(ca, cb);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn resident_state_is_o_m_plus_n() {
+        let ws = MatfreeWorkspace::new(4096, 4096, 2);
+        // Workspace scratch stays a tiny multiple of (m + n), nowhere near
+        // the 64 MiB dense plan.
+        assert!(ws.resident_bytes() < 4096 * 64, "{}", ws.resident_bytes());
+    }
+}

@@ -40,6 +40,16 @@
 //! through [`SolverSession::solve_sparse`] / [`SessionBuilder::build_sparse`],
 //! the CLI `solve --sparse <threshold>`, or the `[solver] sparse` config
 //! key.
+//!
+//! Geometric point-cloud workloads run **materialization-free**
+//! ([`matfree`]): the plan is never stored — only the scaling vectors
+//! `u, v` of `plan = diag(u)·A·diag(v)`, with kernel entries
+//! `A_ij = exp(-c(x_i, y_j)/ε)` regenerated on the fly by a SIMD fast-exp
+//! primitive ([`kernels`]). O(m + n) resident state instead of O(m·n) —
+//! shapes the dense and CSR backends cannot even allocate. Entered through
+//! [`SolverSession::solve_matfree`] / [`SessionBuilder::build_matfree`],
+//! the CLI `solve --matfree <epsilon>`, or the `[solver] matfree` config
+//! key (service `submit_geom`).
 
 pub mod balancing;
 pub mod coffee;
@@ -48,6 +58,7 @@ pub mod fp64;
 pub mod kernels;
 pub mod lazy;
 pub mod mapuot;
+pub mod matfree;
 pub mod parallel;
 pub mod pool;
 pub mod pot;
@@ -58,6 +69,7 @@ pub mod sparse;
 
 pub use convergence::StopRule;
 pub use kernels::{kernel_for, Kernel, KernelKind, KernelPolicy, TileSpec};
+pub use matfree::{CostKind, GeomProblem, MatfreeWorkspace};
 pub use pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 pub use problem::Problem;
 pub use session::{

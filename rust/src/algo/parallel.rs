@@ -41,6 +41,7 @@
 use std::thread;
 
 use crate::algo::kernels::KernelPolicy;
+use crate::algo::matfree::{matfree_rows_opt, GeomProblem};
 use crate::algo::mapuot::{
     fused_rows_opt, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
 };
@@ -711,6 +712,326 @@ pub fn sparse_mapuot_iterate_partitioned_tracked(
             Some(inv_ref),
             fi,
             local,
+        ));
+    }
+    reduce_acc(colsum, acc, part.blocks());
+    delta
+}
+
+// ---------------------------------------------------------------------------
+// Matfree MAP-UOT (scaling form over on-the-fly kernels)
+// ---------------------------------------------------------------------------
+//
+// The materialization-free sweep parallelizes exactly like the dense one —
+// contiguous row blocks (every matfree row costs the same n kernel
+// evaluations, so the dense even `Partition` is the right split), private
+// `NextSum_col` partials in the padded `AccArena`, block-ascending
+// reduction — plus one padded row-generation panel per block (a second
+// arena). The carried state the engines advance is the scaling vectors
+// `u`/`v` and the marginal sums, never a plan. All three drivers (the
+// partitioned serial reference, scope, pool) run the same per-block body
+// (`matfree::matfree_rows_opt`) over the same partition and reduce in the
+// same order, so for identical inputs they are **bit-identical**
+// (`rust/tests/prop_matfree.rs`).
+
+/// One matfree MAP-UOT iteration on the `thread::scope` engine out of
+/// caller-provided scratch: `fcol` (length N), the generation-panel arena
+/// `panels`, the `NextSum_col` arena `acc`, and a [`Partition`] tiling the
+/// rows with at most `min(acc.rows(), panels.rows())` blocks. Advances
+/// `u`/`v` in place and refreshes the carried `colsum`/`rowsum`.
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_into(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    matfree_scope(p, u, v, colsum, rowsum, fcol, None, panels, acc, part, policy);
+}
+
+/// [`matfree_iterate_into`] with in-sweep delta tracking; returns the
+/// iteration's max plan element change across all row blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_tracked(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    matfree_scope(p, u, v, colsum, rowsum, fcol, Some(inv_fcol), panels, acc, part, policy)
+}
+
+/// Shared body of the scope-engine matfree iteration.
+#[allow(clippy::too_many_arguments)]
+fn matfree_scope(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert_eq!(v.len(), p.cols());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    factors_into(fcol, &p.cpd, colsum, p.fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+    // Fold the column factors into v on the dispatching thread — identical
+    // on every engine, so the carried v bits never depend on the engine.
+    for (vj, &f) in v.iter_mut().zip(fcol.iter()) {
+        *vj *= f;
+    }
+    let v_ref: &[f32] = v;
+    let policy = *policy;
+    let mut delta = 0f32;
+    thread::scope(|s| {
+        let mut u_rest: &mut [f32] = u;
+        let mut rs_rest: &mut [f32] = rowsum;
+        let handles: Vec<_> = panels
+            .rows_mut()
+            .zip(acc.rows_mut())
+            .take(part.blocks())
+            .enumerate()
+            .map(|(b, (buf, local))| {
+                let r = part.range(b);
+                let (u_block, u_tail) = std::mem::take(&mut u_rest).split_at_mut(r.len());
+                u_rest = u_tail;
+                let (rs_block, rs_tail) = std::mem::take(&mut rs_rest).split_at_mut(r.len());
+                rs_rest = rs_tail;
+                s.spawn(move || {
+                    local.fill(0.0);
+                    matfree_rows_opt(p, r, u_block, rs_block, v_ref, inv, buf, local, &policy)
+                })
+            })
+            .collect();
+        for h in handles {
+            delta = delta.max(h.join().expect("worker panicked"));
+        }
+    });
+    reduce_acc(colsum, acc, part.blocks());
+    delta
+}
+
+/// One matfree iteration on the persistent pool: zero spawns, zero
+/// allocations, one epoch for the generation sweep + one for the
+/// reduction. `part.blocks()` must not exceed `pool.threads()` (a
+/// workspace built for the pool guarantees this).
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_pool(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    matfree_pool(p, u, v, colsum, rowsum, pool, fcol, None, panels, acc, None, part, policy);
+}
+
+/// [`matfree_iterate_pool`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_pool_tracked(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    deltas: &mut PaddedSlots,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    matfree_pool(
+        p,
+        u,
+        v,
+        colsum,
+        rowsum,
+        pool,
+        fcol,
+        Some(inv_fcol),
+        panels,
+        acc,
+        Some(deltas),
+        part,
+        policy,
+    )
+}
+
+/// Shared body of the pool-engine matfree iteration.
+#[allow(clippy::too_many_arguments)]
+fn matfree_pool(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    pool: &ThreadPool,
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    deltas: Option<&mut PaddedSlots>,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    factors_into(fcol, &p.cpd, colsum, p.fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+    for (vj, &f) in v.iter_mut().zip(fcol.iter()) {
+        *vj *= f;
+    }
+    let v_ref: &[f32] = v;
+    let u_ref = SliceRef::new(u);
+    let rs_ref = SliceRef::new(rowsum);
+    let panel_arena = panels.shared();
+    let arena = acc.shared();
+    let mut deltas = deltas;
+    let slots = deltas.as_mut().map(|d| d.shared());
+    let policy = *policy;
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        // SAFETY: row blocks (u/rowsum segments) are disjoint; panel,
+        // accumulator and slot `b` belong to part `b` alone.
+        let u_block = unsafe { u_ref.range_mut(r.start, r.end) };
+        let rs_block = unsafe { rs_ref.range_mut(r.start, r.end) };
+        let buf = unsafe { panel_arena.row_mut(b) };
+        let local = unsafe { arena.row_mut(b) };
+        local.fill(0.0);
+        let bd = matfree_rows_opt(p, r, u_block, rs_block, v_ref, inv, buf, local, &policy);
+        if let Some(slots) = slots {
+            // SAFETY: slot `b` belongs to part `b` alone.
+            unsafe { slots.set(b, bd) };
+        }
+    });
+    reduce_acc_pool(colsum, acc, part.blocks(), pool);
+    deltas.map(|d| d.fold_max(part.blocks())).unwrap_or(0.0)
+}
+
+/// Partitioned **serial reference** of the matfree iteration: the exact
+/// per-block generation passes and block-ascending colsum reduction the
+/// two threaded engines run, executed sequentially on the calling thread
+/// — the bit-exactness oracle `prop_matfree.rs` holds both engines to,
+/// for any fixed partition. Also the session's `threads == 1` path.
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_partitioned(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    matfree_partitioned(p, u, v, colsum, rowsum, fcol, None, panels, acc, part, policy);
+}
+
+/// [`matfree_iterate_partitioned`] with in-sweep delta tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_iterate_partitioned_tracked(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    inv_fcol: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    matfree_partitioned(p, u, v, colsum, rowsum, fcol, Some(inv_fcol), panels, acc, part, policy)
+}
+
+/// Shared body of the partitioned serial matfree iteration.
+#[allow(clippy::too_many_arguments)]
+fn matfree_partitioned(
+    p: &GeomProblem,
+    u: &mut [f32],
+    v: &mut [f32],
+    colsum: &mut [f32],
+    rowsum: &mut [f32],
+    fcol: &mut [f32],
+    inv_fcol: Option<&mut [f32]>,
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) -> f32 {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    factors_into(fcol, &p.cpd, colsum, p.fi);
+    let inv: Option<&[f32]> = match inv_fcol {
+        Some(iv) => {
+            recip_into(iv, fcol);
+            Some(iv)
+        }
+        None => None,
+    };
+    for (vj, &f) in v.iter_mut().zip(fcol.iter()) {
+        *vj *= f;
+    }
+    let v_ref: &[f32] = v;
+    let mut delta = 0f32;
+    for b in 0..part.blocks() {
+        let r = part.range(b);
+        let local = acc.row_mut(b);
+        local.fill(0.0);
+        let buf = panels.row_mut(b);
+        delta = delta.max(matfree_rows_opt(
+            p,
+            r.clone(),
+            &mut u[r.clone()],
+            &mut rowsum[r],
+            v_ref,
+            inv,
+            buf,
+            local,
+            policy,
         ));
     }
     reduce_acc(colsum, acc, part.blocks());

@@ -115,11 +115,47 @@
 //! allocation-free end to end (`rust/tests/alloc_free.rs`). The sparse
 //! path runs the unrolled CSR kernel primitives — the dense
 //! kernel/tiling policy does not apply to it.
+//!
+//! # Materialization-free (matfree) problems
+//!
+//! Geometric point-cloud problems ([`GeomProblem`]: clouds `x: m×d`,
+//! `y: n×d`, cost kind, bandwidth ε) solve without ever storing the plan
+//! ([`SolverSession::solve_matfree`] / [`SessionBuilder::build_matfree`]):
+//! the session carries only the scaling vectors `u, v` of
+//! `plan = diag(u)·A·diag(v)` plus O(m + n) scratch, regenerating kernel
+//! entries `A_ij = exp(-c(x_i, y_j)/ε)` on the fly inside the fused sweep
+//! (see [`crate::algo::matfree`] for the sweep derivation). Backend
+//! selection guidance:
+//!
+//! * **dense** — the plan fits comfortably in memory and is re-used
+//!   across iterations from DRAM at streaming speed;
+//! * **sparse** — the plan is mostly zero (nnz ≪ M·N);
+//! * **matfree** — the problem *is geometric* (points + an entropic
+//!   kernel), and either the plan cannot be allocated at all or kernel
+//!   regeneration (one SIMD exp per cell) is cheaper than re-streaming
+//!   8 bytes per cell from DRAM. Marginal errors come from the carried
+//!   `u, v` sums, so convergence checks are O(m + n).
+//!
+//! The matfree path shares the session's stop rule, check cadence,
+//! observer, cancellation and execution engine (serial / scope / the same
+//! persistent pool), and the **kernel policy does apply**: the generation
+//! primitive ([`crate::algo::kernels::Kernel::exp_scale_and_sum`]) runs
+//! scalar (libm), unrolled (`util::simd::fast_exp`) or AVX2, and the tile
+//! width panels the cost fill. Results: [`SolverSession::matfree_scaling`]
+//! (the O(m + n) answer), [`SolverSession::matfree_plan_row`] /
+//! [`SolverSession::matfree_materialize`] for on-demand dense output.
+//! Same allocation contract: after the first solve on a shape,
+//! same-shape matfree solves are allocation-free end to end — and no
+//! O(m·n) allocation ever happens on the solve path, proven at
+//! m = n = 16384 in `rust/tests/alloc_free.rs`. Serial/scope/pool matfree
+//! iterations are bit-identical for any fixed partition
+//! (`rust/tests/prop_matfree.rs`).
 
 use std::sync::Arc;
 
 use crate::algo::convergence::{self, StopRule};
 use crate::algo::kernels::{KernelKind, KernelPolicy, TileSpec};
+use crate::algo::matfree::{self, GeomProblem, MatfreeWorkspace};
 use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
 use crate::algo::sparse::{CsrMatrix, SparseProblem, SparseWorkspace};
@@ -796,6 +832,26 @@ impl SessionBuilder {
         session
     }
 
+    /// Build a session for a **materialization-free** geometric problem:
+    /// the dense buffers stay at a 1×1 placeholder, the persistent pool
+    /// (when threaded) spawns here, and the matfree state — scaling
+    /// vectors, carried marginal sums, [`MatfreeWorkspace`] — is sized so
+    /// the first [`SolverSession::solve_matfree`] on this shape is already
+    /// allocation-free. Nothing O(m·n) is ever allocated. Matfree solves
+    /// require `SolverKind::MapUot` (enforced at solve time, with a typed
+    /// error). A `tune` tile degrades to the topology width (the
+    /// degenerate-shape guard in `KernelPolicy::for_shape`); every other
+    /// kernel/tile choice applies to the generation sweep as-is.
+    pub fn build_matfree(self, problem: &GeomProblem) -> SolverSession {
+        let mut session = self.build_for_shape(1, 1);
+        // Size the O(m + n) state only: solve_matfree re-derives the
+        // scaling vectors and carried sums from the problem on every call
+        // anyway, so seeding here would be a full (serial) m×n kernel
+        // generation pass thrown away by the first solve.
+        session.size_matfree(problem);
+        session
+    }
+
     fn build_for_shape(self, m: usize, n: usize) -> SolverSession {
         // Resolved exactly once per build (a `tune` tile measures here).
         let policy = KernelPolicy::for_shape(self.kernel, self.tile, m, n);
@@ -819,6 +875,7 @@ impl SessionBuilder {
             plan: Matrix::zeros(m, n),
             colsum: vec![0f32; n],
             sparse: None,
+            matfree: None,
         }
     }
 }
@@ -837,6 +894,9 @@ pub struct SolverSession {
     /// CSR state, populated by the first sparse solve (or `build_sparse`)
     /// and reused across same-structure sparse solves.
     sparse: Option<SparseState>,
+    /// Matfree state, populated by the first matfree solve (or
+    /// `build_matfree`) and reused across same-shape matfree solves.
+    matfree: Option<MatfreeState>,
 }
 
 /// The sparse twin of the session's `(plan, colsum, ws)` triple.
@@ -844,6 +904,17 @@ struct SparseState {
     plan: CsrMatrix,
     colsum: Vec<f32>,
     ws: SparseWorkspace,
+}
+
+/// The matfree twin: the whole carried solver state is O(m + n) — the
+/// scaling vectors of `plan = diag(u)·A·diag(v)` plus the carried
+/// marginal sums (which double as the convergence metrics).
+struct MatfreeState {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    colsum: Vec<f32>,
+    rowsum: Vec<f32>,
+    ws: MatfreeWorkspace,
 }
 
 impl SolverSession {
@@ -1003,6 +1074,149 @@ impl SolverSession {
         st.plan.col_sums_into(&mut st.colsum);
     }
 
+    /// Solve a **materialization-free** geometric problem — the matfree
+    /// twin of [`SolverSession::solve`], sharing the session's stop rule,
+    /// check cadence, observer and execution engine (serial / scope / the
+    /// same persistent pool). The plan is never stored: the session
+    /// carries only the scaling vectors `u, v` (read them with
+    /// [`SolverSession::matfree_scaling`]; regenerate plan entries with
+    /// [`SolverSession::matfree_plan_row`] /
+    /// [`SolverSession::matfree_materialize`]).
+    ///
+    /// The scaling-form sweep *is* the MAP-UOT algorithm, so the session
+    /// must be built for [`SolverKind::MapUot`]; any other kind returns
+    /// [`Error::InvalidProblem`].
+    ///
+    /// The report's `err` is the carried-marginal L-inf error — computed
+    /// in O(m + n) from the sweep's own row/column sums, no extra
+    /// generation pass (the carried sums drift from fresh sums by at most
+    /// per-sweep f32 rounding, the same tolerance the dense carried
+    /// `colsum` accepts).
+    ///
+    /// Allocation contract: the first call on a new shape sizes the
+    /// O(m + n) state; after that, same-shape solves are allocation-free
+    /// end to end, and **no O(m·n) allocation ever occurs** — proven at
+    /// m = n = 16384 by the counting-allocator test in
+    /// `rust/tests/alloc_free.rs`. Returns [`Error::Canceled`] if the
+    /// observer cancels at a check boundary.
+    pub fn solve_matfree(&mut self, problem: &GeomProblem) -> Result<SolveReport> {
+        if self.solver.kind() != SolverKind::MapUot {
+            return Err(Error::InvalidProblem(format!(
+                "matfree solves run the scaling-form MAP-UOT sweep; this session is {} — \
+                 build it with SolverKind::MapUot",
+                self.solver.kind().name()
+            )));
+        }
+        let timer = Timer::start();
+        self.ensure_matfree(problem);
+        let st = self.matfree.as_mut().expect("ensure_matfree populated the state");
+        let MatfreeState { u, v, colsum, rowsum, ws } = st;
+        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+            let mut delta = 0f32;
+            for _ in 0..steps {
+                delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
+            }
+            let err = matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
+            (delta, err)
+        })
+    }
+
+    /// The scaling vectors `(u, v)` of the most recent
+    /// [`SolverSession::solve_matfree`] (`None` before the first matfree
+    /// solve). The current plan is `plan_ij = u[i] · A_ij · v[j]` — these
+    /// O(m + n) vectors *are* the full answer for a geometric problem.
+    pub fn matfree_scaling(&self) -> Option<(&[f32], &[f32])> {
+        self.matfree.as_ref().map(|st| (st.u.as_slice(), st.v.as_slice()))
+    }
+
+    /// Regenerate row `i` of the solved plan into `out` (length N):
+    /// `out[j] = u[i] · A_ij · v[j]`, generated through the session's
+    /// kernel policy. `problem` must be the instance the last
+    /// [`SolverSession::solve_matfree`] ran (shape-checked; the scaling
+    /// vectors are meaningless for any other geometry).
+    pub fn matfree_plan_row(&self, problem: &GeomProblem, i: usize, out: &mut [f32]) -> Result<()> {
+        let st = self.matfree.as_ref().ok_or_else(|| {
+            Error::InvalidProblem("no matfree solve has run on this session".into())
+        })?;
+        let (m, n) = st.ws.shape();
+        if problem.rows() != m || problem.cols() != n {
+            return Err(Error::InvalidProblem(format!(
+                "problem shape {}x{} does not match the solved matfree state {m}x{n}",
+                problem.rows(),
+                problem.cols()
+            )));
+        }
+        if i >= m {
+            return Err(Error::InvalidProblem(format!("row {i} out of range for {m} rows")));
+        }
+        if out.len() != n {
+            return Err(Error::InvalidProblem(format!(
+                "output buffer length {} != cols {n}",
+                out.len()
+            )));
+        }
+        matfree::generate_plan_row(problem, i, st.u[i], &st.v, out, &st.ws.policy());
+        Ok(())
+    }
+
+    /// Materialize the full solved plan — the **one** deliberate O(m·n)
+    /// allocation in the matfree path, for callers that genuinely need a
+    /// dense result (the coordinator's densified responses, equivalence
+    /// tests). Everything on the solve path stays O(m + n).
+    pub fn matfree_materialize(&self, problem: &GeomProblem) -> Result<Matrix> {
+        let st = self.matfree.as_ref().ok_or_else(|| {
+            Error::InvalidProblem("no matfree solve has run on this session".into())
+        })?;
+        let (m, n) = st.ws.shape();
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            self.matfree_plan_row(problem, i, out.row_mut(i))?;
+        }
+        Ok(out)
+    }
+
+    /// Size (or reuse) the matfree state for `problem`'s shape — the
+    /// warmup allocation, without touching the problem data. Same-shape
+    /// problems reuse every buffer. The matfree workspace shares the
+    /// session's engine and kernel policy: same thread count, same
+    /// backend, same pool `Arc`.
+    fn size_matfree(&mut self, problem: &GeomProblem) {
+        let (m, n) = (problem.rows(), problem.cols());
+        let reusable = self.matfree.as_ref().is_some_and(|st| st.ws.shape() == (m, n));
+        if !reusable {
+            let ws = MatfreeWorkspace::with_engine(
+                m,
+                n,
+                self.ws.threads(),
+                self.ws.backend(),
+                self.ws.pool().cloned(),
+                self.ws.policy(),
+            );
+            self.matfree = Some(MatfreeState {
+                u: vec![1f32; m],
+                v: vec![1f32; n],
+                colsum: vec![0f32; n],
+                rowsum: vec![0f32; m],
+                ws,
+            });
+        }
+    }
+
+    /// [`SolverSession::size_matfree`] plus per-solve state derivation:
+    /// reset the scaling vectors to 1 and seed the carried column sums
+    /// (`u = v = 1` ⇒ one serial generation pass — the matfree analogue
+    /// of the dense path's `col_sums_into`). Runs once per solve, so
+    /// reuse across different same-shape problems is always sound.
+    fn ensure_matfree(&mut self, problem: &GeomProblem) {
+        self.size_matfree(problem);
+        let st = self.matfree.as_mut().expect("just sized");
+        st.u.fill(1.0);
+        st.v.fill(1.0);
+        st.rowsum.fill(0.0);
+        st.ws.prepare(problem.rows(), problem.cols());
+        st.ws.seed_col_sums(problem, &st.v, &mut st.colsum);
+    }
+
     /// [`SolverSession::solve`] plus a clone of the result plan (the clone
     /// is the one permitted allocation — the hot loop stays allocation-free).
     pub fn solve_cloned(&mut self, problem: &Problem) -> Result<(Matrix, SolveReport)> {
@@ -1070,6 +1284,7 @@ impl std::fmt::Debug for SolverSession {
             .field("shape", &self.ws.shape())
             .field("observer", &self.observer.is_some())
             .field("sparse", &self.sparse.is_some())
+            .field("matfree", &self.matfree.is_some())
             .finish()
     }
 }
@@ -1358,6 +1573,95 @@ mod tests {
             .observer(|_: CheckEvent| ObserverAction::Cancel)
             .build_sparse(&sp);
         match session.solve_sparse(&sp) {
+            Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
+            other => panic!("expected Canceled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn matfree_session_solves_and_exposes_scaling() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = GeomProblem::random(24, 18, 3, CostKind::SqEuclidean, 0.25, 0.8, 42);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .build_matfree(&p);
+        let report = session.solve_matfree(&p).unwrap();
+        assert!(report.iters > 0);
+        let (u, v) = session.matfree_scaling().expect("solve ran");
+        assert_eq!(u.len(), 24);
+        assert_eq!(v.len(), 18);
+        assert!(u.iter().chain(v.iter()).all(|x| x.is_finite() && *x >= 0.0));
+        // plan_row and materialize agree with the scaling definition.
+        let plan = session.matfree_materialize(&p).unwrap();
+        let mut row = vec![0f32; 18];
+        session.matfree_plan_row(&p, 7, &mut row).unwrap();
+        assert_eq!(plan.row(7), &row[..]);
+        for j in 0..18 {
+            let want = u[7] * p.kernel_entry(7, j) * v[j];
+            assert!((row[j] - want).abs() <= 1e-5 * want.abs().max(1e-6), "{} vs {want}", row[j]);
+        }
+    }
+
+    #[test]
+    fn matfree_session_rejects_non_mapuot_and_mismatches() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = GeomProblem::random(12, 10, 2, CostKind::Euclidean, 0.5, 0.7, 3);
+        for kind in [SolverKind::Pot, SolverKind::Coffee] {
+            let mut session = SolverSession::builder(kind).build_matfree(&p);
+            match session.solve_matfree(&p) {
+                Err(Error::InvalidProblem(_)) => {}
+                other => panic!("{}: expected InvalidProblem, got {other:?}", kind.name()),
+            }
+        }
+        // plan_row guards: no solve yet, wrong shape, bad row, bad buffer.
+        let fresh = SolverSession::builder(SolverKind::MapUot).build(&Problem::random(4, 4, 0.7, 1));
+        let mut out = vec![0f32; 10];
+        assert!(fresh.matfree_plan_row(&p, 0, &mut out).is_err());
+        let mut solved = SolverSession::builder(SolverKind::MapUot).build_matfree(&p);
+        solved.solve_matfree(&p).unwrap();
+        let other = GeomProblem::random(5, 10, 2, CostKind::Euclidean, 0.5, 0.7, 4);
+        assert!(solved.matfree_plan_row(&other, 0, &mut out).is_err());
+        assert!(solved.matfree_plan_row(&p, 99, &mut out).is_err());
+        let mut short = [0f32; 3];
+        assert!(solved.matfree_plan_row(&p, 0, &mut short[..]).is_err());
+    }
+
+    #[test]
+    fn matfree_session_shares_the_dense_pool_and_adapts_shape() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let small = GeomProblem::random(8, 6, 2, CostKind::SqEuclidean, 0.5, 0.7, 1);
+        let big = GeomProblem::random(20, 30, 2, CostKind::SqEuclidean, 0.5, 0.7, 2);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(3)
+            .build_matfree(&small);
+        let dense_pool = session.ws.pool().map(Arc::as_ptr);
+        let mf_pool = session.matfree.as_ref().and_then(|st| st.ws.pool().map(Arc::as_ptr));
+        assert!(dense_pool.is_some());
+        assert_eq!(dense_pool, mf_pool, "matfree must drive the session's own workers");
+        session.solve_matfree(&small).unwrap();
+        session.solve_matfree(&big).unwrap();
+        assert_eq!(session.matfree_scaling().unwrap().0.len(), 20);
+        // Re-solving the small shape re-derives state and matches a fresh
+        // session bit-for-bit.
+        let r1 = session.solve_matfree(&small).unwrap();
+        let mut fresh = SolverSession::builder(SolverKind::MapUot)
+            .threads(3)
+            .build_matfree(&small);
+        let r2 = fresh.solve_matfree(&small).unwrap();
+        assert_eq!(r1.iters, r2.iters);
+        assert_eq!(session.matfree_scaling().unwrap().0, fresh.matfree_scaling().unwrap().0);
+        assert_eq!(session.matfree_scaling().unwrap().1, fresh.matfree_scaling().unwrap().1);
+    }
+
+    #[test]
+    fn matfree_observer_cancellation_is_typed() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = GeomProblem::random(16, 16, 3, CostKind::SqEuclidean, 0.4, 0.7, 9);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .observer(|_: CheckEvent| ObserverAction::Cancel)
+            .build_matfree(&p);
+        match session.solve_matfree(&p) {
             Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
             other => panic!("expected Canceled, got {other:?}"),
         }

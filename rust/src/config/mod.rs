@@ -49,6 +49,13 @@ pub struct ServiceConfig {
     /// CSR (dropping entries `<= threshold`) and solve through the fused
     /// CSR backend; requires `kind = mapuot` (validated at service start).
     pub sparse: Option<f32>,
+    /// Materialization-free backend (config key `[solver] matfree =
+    /// on|off`). When on, the service accepts geometric point-cloud
+    /// requests (`Service::submit_geom`) and solves them on the
+    /// scaling-form backend — O(m+n) solver state, densified responses at
+    /// the boundary. Requires `kind = mapuot`, the native backend, and no
+    /// `sparse` threshold (validated at `Service::start`).
+    pub matfree: bool,
     /// Stopping criteria.
     pub stop: StopRule,
     /// Artifact directory for the PJRT backend.
@@ -70,6 +77,7 @@ impl Default for ServiceConfig {
             kernel: KernelKind::Auto,
             tile: TileSpec::Auto,
             sparse: None,
+            matfree: false,
             stop: StopRule::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -114,6 +122,18 @@ impl ServiceConfig {
             Some(s) => TileSpec::parse(s)
                 .ok_or_else(|| crate::error::Error::Config(format!("unknown tile policy {s:?}")))?,
         };
+        let matfree = match c.get("solver", "matfree") {
+            None => d.matfree,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" | "none" => false,
+                _ => {
+                    return Err(crate::error::Error::Config(format!(
+                        "invalid matfree setting {s:?} (expected on|off)"
+                    )))
+                }
+            },
+        };
         let sparse = match c.get("solver", "sparse") {
             None => d.sparse,
             Some(s) => match s.to_ascii_lowercase().as_str() {
@@ -144,6 +164,7 @@ impl ServiceConfig {
             kernel,
             tile,
             sparse,
+            matfree,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -214,6 +235,22 @@ mod tests {
             let raw = parser::RawConfig::parse(&format!("[solver]\nsparse={bad}\n")).unwrap();
             assert!(ServiceConfig::from_raw(&raw).is_err(), "sparse={bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn matfree_parses_and_rejects() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert!(!c.matfree, "matfree is opt-in");
+        for on in ["on", "true", "1"] {
+            let raw = parser::RawConfig::parse(&format!("[solver]\nmatfree={on}\n")).unwrap();
+            assert!(ServiceConfig::from_raw(&raw).unwrap().matfree, "matfree={on}");
+        }
+        for off in ["off", "false", "0", "none"] {
+            let raw = parser::RawConfig::parse(&format!("[solver]\nmatfree={off}\n")).unwrap();
+            assert!(!ServiceConfig::from_raw(&raw).unwrap().matfree, "matfree={off}");
+        }
+        let raw = parser::RawConfig::parse("[solver]\nmatfree=0.5\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err(), "matfree takes on|off, not a number");
     }
 
     #[test]

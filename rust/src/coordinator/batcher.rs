@@ -154,7 +154,7 @@ mod tests {
         std::mem::forget(_rx);
         SolveRequest {
             id,
-            problem: Problem::random(m, n, 0.5, id),
+            payload: crate::coordinator::request::Payload::Dense(Problem::random(m, n, 0.5, id)),
             reply: tx,
             submitted_at: std::time::Instant::now(),
         }

@@ -15,6 +15,6 @@ pub mod service;
 
 pub use batcher::{Batcher, FullPolicy};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{RequestId, SolveRequest, SolveResponse, Solved};
+pub use request::{Payload, RequestId, SolveRequest, SolveResponse, Solved};
 pub use router::Route;
 pub use service::Service;

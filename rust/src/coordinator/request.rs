@@ -2,7 +2,7 @@
 
 use std::sync::mpsc::Sender;
 
-use crate::algo::{Problem, SolveReport, SolverKind};
+use crate::algo::{GeomProblem, Problem, SolveReport, SolverKind};
 use crate::config::Backend;
 use crate::error::Error;
 use crate::util::Matrix;
@@ -10,11 +10,35 @@ use crate::util::Matrix;
 /// Monotonic request id assigned at submission.
 pub type RequestId = u64;
 
+/// What a request asks the service to solve.
+#[derive(Debug)]
+pub enum Payload {
+    /// Dense UOT instance — the original protocol.
+    Dense(Problem),
+    /// Geometric point-cloud instance for the materialization-free
+    /// backend (requires `ServiceConfig.matfree`; accepted through
+    /// `Service::submit_geom`). O((m+n)·d) on the wire where a dense
+    /// request carries O(m·n); the response plan is densified at the
+    /// boundary — a scaling-vector response protocol is a ROADMAP
+    /// follow-on.
+    Geom(GeomProblem),
+}
+
+impl Payload {
+    /// Shape key used for batching and artifact bucketing.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Payload::Dense(p) => (p.rows(), p.cols()),
+            Payload::Geom(g) => (g.rows(), g.cols()),
+        }
+    }
+}
+
 /// A solve request travelling through the coordinator.
 #[derive(Debug)]
 pub struct SolveRequest {
     pub id: RequestId,
-    pub problem: Problem,
+    pub payload: Payload,
     /// Reply channel back to the submitter.
     pub reply: Sender<SolveResponse>,
     /// Submission timestamp for latency accounting.
@@ -24,7 +48,7 @@ pub struct SolveRequest {
 impl SolveRequest {
     /// Shape key used for batching and artifact bucketing.
     pub fn shape(&self) -> (usize, usize) {
-        (self.problem.rows(), self.problem.cols())
+        self.payload.shape()
     }
 }
 
@@ -60,10 +84,23 @@ mod tests {
         let (tx, _rx) = channel();
         let r = SolveRequest {
             id: 1,
-            problem: Problem::random(8, 6, 0.5, 1),
+            payload: Payload::Dense(Problem::random(8, 6, 0.5, 1)),
             reply: tx,
             submitted_at: std::time::Instant::now(),
         };
         assert_eq!(r.shape(), (8, 6));
+    }
+
+    #[test]
+    fn geom_shape_key() {
+        use crate::algo::CostKind;
+        let (tx, _rx) = channel();
+        let r = SolveRequest {
+            id: 2,
+            payload: Payload::Geom(GeomProblem::random(9, 4, 3, CostKind::SqEuclidean, 0.5, 0.7, 1)),
+            reply: tx,
+            submitted_at: std::time::Instant::now(),
+        };
+        assert_eq!(r.shape(), (9, 4));
     }
 }

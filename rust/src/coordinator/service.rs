@@ -7,12 +7,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::algo::{Problem, SolverKind, SolverSession, SparseProblem};
+use crate::algo::{GeomProblem, Problem, SolverKind, SolverSession, SparseProblem};
 use crate::config::{Backend, ServiceConfig};
 use crate::coordinator::batcher::{Batcher, FullPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pjrt_exec::{self, PjrtHandle};
-use crate::coordinator::request::{SolveRequest, SolveResponse, Solved};
+use crate::coordinator::request::{Payload, SolveRequest, SolveResponse, Solved};
 use crate::error::{Error, Result};
 
 /// A running solver service.
@@ -48,6 +48,27 @@ impl Service {
                 ));
             }
         }
+        // A matfree service is likewise misconfigured loudly at start: the
+        // scaling-form sweep is the MAP-UOT algorithm, PJRT executes dense
+        // artifacts, and one worker session cannot default two conversion
+        // backends at once.
+        if cfg.matfree {
+            if cfg.solver != SolverKind::MapUot {
+                return Err(Error::Config(
+                    "[solver] matfree requires kind = mapuot (the scaling-form sweep)".into(),
+                ));
+            }
+            if cfg.backend == Backend::Pjrt {
+                return Err(Error::Config(
+                    "[solver] matfree runs on the native backend only".into(),
+                ));
+            }
+            if cfg.sparse.is_some() {
+                return Err(Error::Config(
+                    "[solver] matfree and [solver] sparse are mutually exclusive".into(),
+                ));
+            }
+        }
         let batcher = Arc::new(Batcher::new(
             cfg.queue_cap,
             cfg.batch_max,
@@ -77,13 +98,33 @@ impl Service {
         Ok(Self { cfg, batcher, metrics, workers, pjrt, next_id: AtomicU64::new(1) })
     }
 
-    /// Submit a problem; returns the reply channel. `Err` on queue-full
-    /// (load shedding) or after shutdown.
+    /// Submit a dense problem; returns the reply channel. `Err` on
+    /// queue-full (load shedding) or after shutdown.
     pub fn submit(&self, problem: Problem) -> Result<Receiver<SolveResponse>> {
+        self.submit_payload(Payload::Dense(problem))
+    }
+
+    /// Submit a geometric point-cloud problem for the
+    /// materialization-free backend. Rejected up front (typed
+    /// [`Error::Config`]) unless the service was started with
+    /// `ServiceConfig.matfree` — a geom request must fail at the boundary,
+    /// not inside a worker. O((m+n)·d) on the wire; the response plan is
+    /// densified (the scaling-vector response protocol is a ROADMAP
+    /// follow-on).
+    pub fn submit_geom(&self, problem: GeomProblem) -> Result<Receiver<SolveResponse>> {
+        if !self.cfg.matfree {
+            return Err(Error::Config(
+                "geometric requests need [solver] matfree = on (ServiceConfig.matfree)".into(),
+            ));
+        }
+        self.submit_payload(Payload::Geom(problem))
+    }
+
+    fn submit_payload(&self, payload: Payload) -> Result<Receiver<SolveResponse>> {
         let (tx, rx) = channel();
         let req = SolveRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            problem,
+            payload,
             reply: tx,
             submitted_at: std::time::Instant::now(),
         };
@@ -99,7 +140,15 @@ impl Service {
 
     /// Convenience: submit and wait.
     pub fn solve_blocking(&self, problem: Problem) -> Result<Solved> {
-        let rx = self.submit(problem)?;
+        Self::await_response(self.submit(problem)?)
+    }
+
+    /// Convenience: submit a geometric problem and wait.
+    pub fn solve_geom_blocking(&self, problem: GeomProblem) -> Result<Solved> {
+        Self::await_response(self.submit_geom(problem)?)
+    }
+
+    fn await_response(rx: Receiver<SolveResponse>) -> Result<Solved> {
         let resp = rx
             .recv()
             .map_err(|_| Error::Service("service dropped request".into()))?;
@@ -171,21 +220,38 @@ fn execute(
     session: &mut Option<SolverSession>,
     req: &SolveRequest,
 ) -> Result<Solved> {
-    let (plan, report, backend) = match pjrt {
-        Some(handle) => {
-            let (plan, report) = handle.solve(req.problem.clone(), cfg.stop)?;
+    let builder = || {
+        SolverSession::builder(cfg.solver)
+            .threads(cfg.solver_threads)
+            .backend(cfg.parallel)
+            .affinity(cfg.affinity)
+            .kernel(cfg.kernel)
+            .tile(cfg.tile)
+            .stop(cfg.stop)
+    };
+    let (plan, report, backend) = match (&req.payload, pjrt) {
+        // Geometric requests run the materialization-free backend on this
+        // worker's reusable session (defensive re-checks of the start-time
+        // validation: submit_geom already gates on cfg.matfree, and a
+        // matfree service can never have a PJRT executor).
+        (Payload::Geom(g), _) => {
+            if !cfg.matfree || pjrt.is_some() {
+                return Err(Error::Config(
+                    "geometric request on a service without [solver] matfree".into(),
+                ));
+            }
+            let sess = session.get_or_insert_with(|| builder().build_matfree(g));
+            let report = sess.solve_matfree(g)?;
+            // Densified response — the one deliberate O(m·n) allocation,
+            // at the protocol boundary (same contract as the sparse path).
+            let plan = sess.matfree_materialize(g)?;
+            (plan, report, Backend::Native)
+        }
+        (Payload::Dense(problem), Some(handle)) => {
+            let (plan, report) = handle.solve(problem.clone(), cfg.stop)?;
             (plan, report, Backend::Pjrt)
         }
-        None => {
-            let builder = || {
-                SolverSession::builder(cfg.solver)
-                    .threads(cfg.solver_threads)
-                    .backend(cfg.parallel)
-                    .affinity(cfg.affinity)
-                    .kernel(cfg.kernel)
-                    .tile(cfg.tile)
-                    .stop(cfg.stop)
-            };
+        (Payload::Dense(problem), None) => {
             match cfg.sparse {
                 // Sparse service: convert the request's plan to CSR and
                 // run the fused CSR backend; the worker's session (and its
@@ -194,7 +260,7 @@ fn execute(
                 // The response is densified — the request/response types
                 // stay dense at the service boundary.
                 Some(threshold) => {
-                    let sp = SparseProblem::from_problem(&req.problem, threshold)?;
+                    let sp = SparseProblem::from_problem(problem, threshold)?;
                     // A threshold that wipes the whole plan would "solve"
                     // to an all-zero response flagged converged (nothing
                     // can move, so the delta rule fires immediately) —
@@ -215,8 +281,8 @@ fn execute(
                     (plan, report, Backend::Native)
                 }
                 None => {
-                    let sess = session.get_or_insert_with(|| builder().build(&req.problem));
-                    let (plan, report) = sess.solve_cloned(&req.problem)?;
+                    let sess = session.get_or_insert_with(|| builder().build(problem));
+                    let (plan, report) = sess.solve_cloned(problem)?;
                     (plan, report, Backend::Native)
                 }
             }
@@ -346,6 +412,62 @@ mod tests {
         let mut cfg = native_cfg(1);
         cfg.sparse = Some(-1.0);
         assert!(Service::start(cfg).is_err(), "negative threshold must fail fast");
+    }
+
+    #[test]
+    fn matfree_service_roundtrip_matches_direct_matfree_solve() {
+        use crate::algo::{CostKind, GeomProblem};
+        let mut cfg = native_cfg(2);
+        cfg.matfree = true;
+        cfg.solver_threads = 2;
+        let svc = Service::start(cfg).unwrap();
+        let g = GeomProblem::random(24, 18, 3, CostKind::SqEuclidean, 0.25, 0.8, 5);
+        let solved = svc.solve_geom_blocking(g.clone()).unwrap();
+        assert_eq!(solved.backend, Backend::Native);
+        assert_eq!((solved.plan.rows(), solved.plan.cols()), (24, 18));
+        // The served result is the densified matfree solve, bit-for-bit.
+        let mut direct = SolverSession::builder(SolverKind::MapUot)
+            .threads(2)
+            .stop(svc.config().stop)
+            .build_matfree(&g);
+        let direct_report = direct.solve_matfree(&g).unwrap();
+        assert_eq!(solved.report.iters, direct_report.iters);
+        assert_eq!(
+            solved.plan.as_slice(),
+            direct.matfree_materialize(&g).unwrap().as_slice()
+        );
+        // Dense requests still work on the same matfree-enabled service.
+        let dense = svc.solve_blocking(Problem::random(16, 16, 0.7, 1)).unwrap();
+        assert!(dense.report.iters > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn geom_requests_rejected_without_matfree_config() {
+        use crate::algo::{CostKind, GeomProblem};
+        let svc = Service::start(native_cfg(1)).unwrap();
+        let g = GeomProblem::random(8, 8, 2, CostKind::Euclidean, 0.5, 0.7, 1);
+        match svc.submit_geom(g) {
+            Err(Error::Config(msg)) => assert!(msg.contains("matfree"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn matfree_service_rejects_bad_config_at_start() {
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.solver = SolverKind::Coffee;
+        assert!(Service::start(cfg).is_err(), "matfree + COFFEE must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.backend = Backend::Pjrt;
+        assert!(Service::start(cfg).is_err(), "matfree + PJRT must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.sparse = Some(0.5);
+        assert!(Service::start(cfg).is_err(), "matfree + sparse must fail fast");
     }
 
     #[test]

@@ -65,9 +65,9 @@ pub mod util;
 pub mod xla_stub;
 
 pub use algo::{
-    solver_for, AffinityHint, CheckEvent, ConvergenceObserver, CsrMatrix, ObserverAction,
-    ParallelBackend, Problem, SolveOptions, Solver, SolverKind, SolverSession, SparseProblem,
-    ThreadPool, Workspace,
+    solver_for, AffinityHint, CheckEvent, ConvergenceObserver, CostKind, CsrMatrix, GeomProblem,
+    ObserverAction, ParallelBackend, Problem, SolveOptions, Solver, SolverKind, SolverSession,
+    SparseProblem, ThreadPool, Workspace,
 };
 pub use error::{Error, Result};
 

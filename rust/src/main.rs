@@ -11,8 +11,8 @@
 use std::collections::HashMap;
 
 use map_uot::algo::{
-    AffinityHint, CheckEvent, KernelKind, ObserverAction, ParallelBackend, Problem, SolverKind,
-    SolverSession, SparseProblem, StopRule, TileSpec,
+    AffinityHint, CheckEvent, CostKind, GeomProblem, KernelKind, ObserverAction, ParallelBackend,
+    Problem, SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
 };
 use map_uot::apps;
 use map_uot::bench::figures;
@@ -98,6 +98,10 @@ fn print_help() {
          \x20        tiling of the fused sweep)\n\
          \x20        --sparse <threshold> (drop plan entries <= threshold and solve on\n\
          \x20        the fused CSR backend; MAP-UOT only)\n\
+         \x20        --matfree <epsilon> (solve a synthetic geometric problem on the\n\
+         \x20        materialization-free scaling-form backend — O(m+n) state, the plan\n\
+         \x20        is never stored; MAP-UOT only) --dim <d> (point dimension, default 3)\n\
+         \x20        --cost sqeuclid|euclid (ground cost; the kernel is exp(-cost/eps))\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -111,12 +115,29 @@ fn cmd_solve(a: &Args) -> i32 {
     let n = a.get("n", 1024usize);
     let fi = a.get("fi", 0.7f32);
     let solver = SolverKind::parse(&a.str("solver", "mapuot")).unwrap_or(SolverKind::MapUot);
-    let problem = Problem::random(m, n, fi, a.get("seed", 42u64));
+    // The dense problem is built lazily per branch: a --matfree run at a
+    // dense-impossible shape must never allocate the M·N plan at all.
+    let seed = a.get("seed", 42u64);
     let stop = StopRule {
         tol: a.get("tol", 1e-4f32),
         delta_tol: a.get("delta-tol", 1e-6f32),
         max_iter: a.get("max-iter", 1000usize),
     };
+
+    // The matfree-only flags are rejected loudly when they cannot apply —
+    // same contract as --par/--kernel: nothing silently measures the
+    // wrong backend.
+    if !a.flags.contains_key("matfree") && (a.flags.contains_key("dim") || a.flags.contains_key("cost")) {
+        eprintln!(
+            "error: --dim/--cost describe the point clouds of a matfree solve and require \
+             --matfree <epsilon>"
+        );
+        return 1;
+    }
+    if a.flags.contains_key("matfree") && a.str("backend", "native") == "pjrt" {
+        eprintln!("error: --matfree runs on the native backend only (PJRT executes dense artifacts)");
+        return 1;
+    }
 
     if a.str("backend", "native") == "pjrt" {
         return run_or_die(|| {
@@ -127,7 +148,7 @@ fn cmd_solve(a: &Args) -> i32 {
                 ..ServiceConfig::default()
             };
             let svc = Service::start(cfg)?;
-            let solved = svc.solve_blocking(problem.clone())?;
+            let solved = svc.solve_blocking(Problem::random(m, n, fi, seed))?;
             println!(
                 "pjrt solve {m}x{n}: iters={} err={:.3e} converged={} latency={:.1}ms",
                 solved.report.iters,
@@ -187,6 +208,75 @@ fn cmd_solve(a: &Args) -> i32 {
         });
     }
 
+    // Matfree path: --matfree <epsilon> solves a synthetic geometric
+    // problem (points uniform in the unit cube) on the scaling-form
+    // backend — the plan is never materialized. Same loud-failure
+    // contract as every other backend selector.
+    if let Some(raw) = a.flags.get("matfree") {
+        if a.flags.contains_key("sparse") {
+            eprintln!("error: --matfree and --sparse select different backends; pick one");
+            return 1;
+        }
+        let epsilon = match raw.parse::<f32>() {
+            Ok(e) if e.is_finite() && e > 0.0 => e,
+            _ => {
+                eprintln!("error: --matfree expects a finite epsilon > 0, got {raw:?}");
+                return 1;
+            }
+        };
+        if solver != SolverKind::MapUot {
+            eprintln!(
+                "error: --matfree runs the scaling-form MAP-UOT sweep (use --solver mapuot)"
+            );
+            return 1;
+        }
+        let d = a.get("dim", 3usize);
+        if d == 0 {
+            eprintln!("error: --dim must be >= 1");
+            return 1;
+        }
+        let cost = match CostKind::parse(&a.str("cost", "sqeuclid")) {
+            Some(c) => c,
+            None => {
+                eprintln!(
+                    "error: unknown --cost kind {:?} (expected sqeuclid|euclid)",
+                    a.str("cost", "")
+                );
+                return 1;
+            }
+        };
+        let gp = GeomProblem::random(m, n, d, cost, epsilon, fi, seed);
+        // The kernel/tile knobs *do* apply here: they select the exp
+        // backend and the generation panel width.
+        let mut session = builder.kernel(kernel).tile(tile).build_matfree(&gp);
+        let policy = session.policy();
+        let report = match session.solve_matfree(&gp) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        };
+        let threads = a.get("threads", 1usize).max(1);
+        let state_kb = ((2 * m + 4 * n + 2 * threads * n) * 4) as f64 / 1024.0;
+        let dense_mb = (m * n * 4) as f64 / (1024.0 * 1024.0);
+        println!(
+            "MAP-UOT matfree solve {m}x{n} d={d} cost={} eps={epsilon} [kernel={} tile={}]: \
+             iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter) | \
+             resident ~{state_kb:.0} KB vs dense plan {dense_mb:.0} MB",
+            cost.name(),
+            policy.kind().name(),
+            if policy.tile_cols() == 0 { "off".to_string() } else { policy.tile_cols().to_string() },
+            report.iters,
+            report.err,
+            report.delta,
+            report.converged,
+            report.seconds * 1e3,
+            report.seconds * 1e3 / report.iters.max(1) as f64,
+        );
+        return 0;
+    }
+
     // Sparse path: --sparse <threshold> converts the plan to CSR (dropping
     // entries <= threshold) and solves on the fused CSR backend. Same
     // loud-failure contract as --par/--kernel: a typo or an unsupported
@@ -214,6 +304,7 @@ fn cmd_solve(a: &Args) -> i32 {
             );
             return 1;
         }
+        let problem = Problem::random(m, n, fi, seed);
         let sp = match SparseProblem::from_problem(&problem, threshold) {
             Ok(sp) => sp,
             Err(e) => {
@@ -244,6 +335,7 @@ fn cmd_solve(a: &Args) -> i32 {
         return 0;
     }
 
+    let problem = Problem::random(m, n, fi, seed);
     let mut session = builder.kernel(kernel).tile(tile).build(&problem);
     let policy = session.policy();
     let report = match session.solve(&problem) {

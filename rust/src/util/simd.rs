@@ -15,6 +15,79 @@
 /// Accumulator lanes used by the unrolled kernel loops.
 pub const LANES: usize = 16;
 
+// ---------------------------------------------------------------------------
+// Fast exponential (the matfree generation primitive's core)
+// ---------------------------------------------------------------------------
+//
+// `f32::exp` is a libm call, which LLVM cannot vectorize — and the
+// materialization-free backend evaluates exp once per plan cell per
+// iteration, so a scalar call chain would make kernel *generation* the
+// bottleneck instead of memory traffic. `fast_exp` is the classic
+// branch-free range-reduction scheme (Cody–Waite split of ln 2, a
+// degree-5 minimax polynomial for `exp(r)` on `[-ln2/2, ln2/2]`, exponent
+// reconstruction through the f32 bit layout), accurate to ~2 ulp — well
+// inside the 1e-6 relative agreement contract the kernel property tests
+// pin (`rust/tests/prop_kernels.rs::fast_exp_matches_libm_reference`).
+//
+// The same constants drive three implementations: this scalar form (the
+// `Unrolled` kernel backend calls it in 16-lane chunks, which LLVM
+// auto-vectorizes — every operation is plain ALU/bit math), the
+// hand-written AVX2 `exp_ps` in `algo::kernels`, and nothing else — the
+// `Scalar` kernel backend keeps `f32::exp` as the libm reference the
+// others are tested against.
+
+/// High bits of ln 2 (Cody–Waite split: exactly representable, so
+/// `x - n·LN2_HI` is exact for the `n` range in use).
+pub(crate) const EXP_LN2_HI: f32 = 0.693_359_375;
+/// Low bits of ln 2 (`LN2_HI + LN2_LO = ln 2` to f64 accuracy).
+pub(crate) const EXP_LN2_LO: f32 = -2.121_944_4e-4;
+/// Degree-5 minimax coefficients for `exp(r) - 1 - r` on the reduced
+/// range, highest power first (Cephes `expf`; the trailing 1/2 term is
+/// exactly representable, so it is written as such).
+pub(crate) const EXP_POLY: [f32; 6] = [
+    1.987_569_2e-4,
+    1.398_2e-3,
+    8.333_452e-3,
+    4.166_579_6e-2,
+    1.666_666_5e-1,
+    0.5,
+];
+/// Inputs below this produce 0 even after gradual underflow
+/// (`exp(-104) < ` half the smallest positive subnormal).
+pub(crate) const EXP_LO_CLAMP: f32 = -104.0;
+/// Inputs above this overflow to infinity (`ln(f32::MAX) ≈ 88.72`).
+pub(crate) const EXP_HI_CLAMP: f32 = 89.0;
+
+/// Branch-free `e^x` for f32, ~2 ulp, with IEEE-consistent edges:
+/// overflow saturates to `+inf`, underflow passes through gradual
+/// (subnormal) rounding to 0, and NaN stays NaN. Auto-vectorizable (no
+/// calls, no data-dependent branches).
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    // The clamps keep the exponent arithmetic in range; both saturations
+    // land on the mathematically correct result (0 / +inf) through the
+    // reconstruction below, so no separate special-case branch exists.
+    let x = x.clamp(EXP_LO_CLAMP, EXP_HI_CLAMP);
+    let n = (x * std::f32::consts::LOG2_E).round();
+    let r = (x - n * EXP_LN2_HI) - n * EXP_LN2_LO;
+    let mut p = EXP_POLY[0];
+    p = p * r + EXP_POLY[1];
+    p = p * r + EXP_POLY[2];
+    p = p * r + EXP_POLY[3];
+    p = p * r + EXP_POLY[4];
+    p = p * r + EXP_POLY[5];
+    let e = (p * r * r + r) + 1.0;
+    // 2^n in two factors so the subnormal range rounds gradually (a single
+    // `(n + 127) << 23` would need n >= -126) and n = 128 still overflows
+    // cleanly to +inf. n in [-151, 129] ⇒ both halves in [-76, 65], whose
+    // biased exponents are valid normal-f32 bit patterns.
+    let n = n as i32; // NaN input ⇒ n = 0 ⇒ e (NaN) passes through
+    let half = n >> 1;
+    let a = f32::from_bits(((half + 127) as u32) << 23);
+    let b = f32::from_bits(((n - half + 127) as u32) << 23);
+    a * (b * e)
+}
+
 /// Fold the lane accumulators into one scalar (sequential order — part of
 /// the bit-exactness contract, see module docs).
 #[inline]
@@ -59,5 +132,55 @@ mod tests {
             *a = k as f32;
         }
         assert_eq!(fold(&acc), (0..LANES).sum::<usize>() as f32);
+    }
+
+    /// Agreement with libm across the magnitude ladder, including the
+    /// subnormal-result range: relative tolerance 1e-6, with the
+    /// denominator clamped at the smallest normal so the gradual-underflow
+    /// tail is held to an equivalent absolute bound (deep subnormals have
+    /// no 1e-6-relative neighbors — their ulp spacing is percent-scale).
+    #[test]
+    fn fast_exp_tracks_libm() {
+        let mut rng = crate::util::XorShift::new(3);
+        let mut xs: Vec<f32> = vec![0.0, -0.0, 1.0, -1.0];
+        // Magnitude sweep: 1e-6 .. ~1e2, both signs (positive capped under
+        // the overflow cutoff), plus the underflow/subnormal band.
+        for decade in -6..=2 {
+            for _ in 0..64 {
+                let mag = 10f32.powi(decade) * rng.uniform(1.0, 10.0);
+                xs.push(-mag);
+                if mag < 80.0 {
+                    xs.push(mag);
+                }
+            }
+        }
+        for sub in [-87.0, -88.0, -95.0, -100.0, -103.0, -103.9] {
+            xs.push(sub);
+        }
+        for x in xs {
+            let got = fast_exp(x);
+            let want = x.exp();
+            assert!(
+                (got - want).abs() <= 1e-6 * want.abs().max(f32::MIN_POSITIVE),
+                "fast_exp({x}) = {got:e}, libm {want:e}"
+            );
+        }
+    }
+
+    /// IEEE-consistent edges: overflow saturates to +inf, deep underflow
+    /// reaches exactly 0 (no negative-zero, no garbage exponent), and NaN
+    /// propagates.
+    #[test]
+    fn fast_exp_edges() {
+        assert_eq!(fast_exp(0.0), 1.0);
+        assert_eq!(fast_exp(f32::NEG_INFINITY), 0.0);
+        assert_eq!(fast_exp(-120.0), 0.0);
+        assert_eq!(fast_exp(f32::INFINITY), f32::INFINITY);
+        assert_eq!(fast_exp(100.0), f32::INFINITY);
+        assert!(fast_exp(f32::NAN).is_nan());
+        // The subnormal band is gradual, not flushed: somewhere below the
+        // smallest normal the result is still positive.
+        let sub = fast_exp(-90.0);
+        assert!(sub > 0.0 && sub < f32::MIN_POSITIVE, "{sub:e}");
     }
 }

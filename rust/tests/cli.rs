@@ -143,6 +143,98 @@ fn solve_sparse_rejects_bad_threshold_and_solver() {
 }
 
 #[test]
+fn solve_matfree_reports_state_and_convergence() {
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "48", "--n", "40", "--matfree", "0.25", "--max-iter", "400",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("MAP-UOT matfree solve 48x40"), "{stdout}");
+    assert!(stdout.contains("d=3"), "{stdout}");
+    assert!(stdout.contains("cost=sqeuclid"), "{stdout}");
+    assert!(stdout.contains("resident ~"), "{stdout}");
+    // Explicit dim/cost flags flow through to the report line.
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "32", "--n", "32", "--matfree", "0.5", "--dim", "2", "--cost", "euclid",
+        "--max-iter", "400",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("d=2"), "{stdout}");
+    assert!(stdout.contains("cost=euclid"), "{stdout}");
+}
+
+#[test]
+fn solve_matfree_threaded_on_both_parallel_backends() {
+    for par in ["pool", "spawn"] {
+        let (stdout, _, ok) = run(&[
+            "solve", "--m", "48", "--n", "32", "--matfree", "0.25", "--threads", "3", "--par", par,
+            "--max-iter", "400",
+        ]);
+        assert!(ok, "par={par}: {stdout}");
+        assert!(stdout.contains("matfree solve"), "par={par}: {stdout}");
+    }
+}
+
+#[test]
+fn solve_matfree_rejects_inapplicable_flags() {
+    // A bare or typoed --matfree must fail loudly, not fall back to dense.
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--matfree", "wide"]);
+    assert!(!ok, "typoed --matfree must not silently fall back");
+    assert!(stderr.contains("--matfree"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--matfree"]);
+    assert!(!ok, "bare --matfree must not silently fall back");
+    assert!(stderr.contains("--matfree"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--matfree", "-0.5"]);
+    assert!(!ok, "nonpositive epsilon must be rejected");
+    assert!(stderr.contains("epsilon"), "{stderr}");
+    // Wrong solver, conflicting backends, and pjrt are all loud errors.
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--matfree", "0.5", "--solver", "coffee",
+    ]);
+    assert!(!ok, "matfree + COFFEE must be rejected");
+    assert!(stderr.contains("mapuot"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--matfree", "0.5", "--sparse", "0.5",
+    ]);
+    assert!(!ok, "matfree + sparse must be rejected");
+    assert!(stderr.contains("pick one"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--matfree", "0.5", "--backend", "pjrt",
+    ]);
+    assert!(!ok, "matfree + pjrt must be rejected");
+    assert!(stderr.contains("native"), "{stderr}");
+    // The geometry flags are inapplicable without --matfree, and a typoed
+    // cost kind is rejected.
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--dim", "2"]);
+    assert!(!ok, "--dim without --matfree must be rejected");
+    assert!(stderr.contains("--matfree"), "{stderr}");
+    let (_, stderr, ok) = run(&["solve", "--m", "16", "--n", "16", "--cost", "euclid"]);
+    assert!(!ok, "--cost without --matfree must be rejected");
+    assert!(stderr.contains("--matfree"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--matfree", "0.5", "--cost", "manhattan",
+    ]);
+    assert!(!ok, "unknown cost kind must be rejected");
+    assert!(stderr.contains("--cost"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "solve", "--m", "16", "--n", "16", "--matfree", "0.5", "--dim", "0",
+    ]);
+    assert!(!ok, "--dim 0 must be rejected");
+    assert!(stderr.contains("--dim"), "{stderr}");
+}
+
+#[test]
+fn solve_matfree_accepts_kernel_and_tile() {
+    // Unlike --sparse, the kernel/tile knobs apply to matfree generation.
+    let (stdout, _, ok) = run(&[
+        "solve", "--m", "32", "--n", "300", "--matfree", "0.25", "--kernel", "scalar", "--tile",
+        "64", "--max-iter", "300",
+    ]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("kernel=scalar"), "{stdout}");
+    assert!(stdout.contains("tile=64"), "{stdout}");
+}
+
+#[test]
 fn fig_roofline_prints_eq1() {
     let (stdout, _, ok) = run(&["fig", "3"]);
     assert!(ok);

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use map_uot::algo::{solver_for, Problem, SolverKind, Workspace};
 use map_uot::coordinator::batcher::{Batcher, FullPolicy};
-use map_uot::coordinator::request::SolveRequest;
+use map_uot::coordinator::request::{Payload, SolveRequest};
 use map_uot::coordinator::router;
 use map_uot::runtime::Manifest;
 use map_uot::testing::{check, int_range, Gen};
@@ -20,7 +20,7 @@ fn mk_req(id: u64, m: usize, n: usize) -> SolveRequest {
     std::mem::forget(rx);
     SolveRequest {
         id,
-        problem: Problem::random(m, n, 0.5, id + 1),
+        payload: Payload::Dense(Problem::random(m, n, 0.5, id + 1)),
         reply: tx,
         submitted_at: std::time::Instant::now(),
     }

@@ -210,3 +210,93 @@ fn auto_and_tuned_tiles_solve_correctly() {
         assert!(diff < 1e-3, "{tile:?}: {diff}");
     }
 }
+
+/// The fast-exp satellite: every kernel backend's generation primitive
+/// (`Kernel::exp_scale_and_sum`) agrees with scalar libm `f32::exp`
+/// within 1e-6 relative across magnitude sweeps — including the
+/// subnormal/underflow band, where the denominator clamps at the smallest
+/// normal (deep subnormals have percent-scale ulp spacing, so a pure
+/// relative bound is unsatisfiable by *any* rounding scheme; the clamp
+/// holds the tail to an equivalent absolute bound instead).
+#[test]
+fn fast_exp_matches_libm_reference() {
+    use map_uot::algo::{kernel_for, Kernel};
+    let mut rng = map_uot::util::XorShift::new(17);
+    // Cost magnitudes spanning ~1e-6 .. ~1e2 per decade, plus exact zero
+    // and the deep-underflow band (with inv_eps = 2 these reach exponents
+    // of -240, far past where exp flushes to zero).
+    let mut costs: Vec<f32> = vec![0.0];
+    for decade in -6..=2 {
+        for _ in 0..48 {
+            costs.push(10f32.powi(decade) * rng.uniform(1.0, 10.0));
+        }
+    }
+    for band in [43.5, 44.0, 47.5, 50.0, 51.9, 60.0, 120.0] {
+        costs.push(band); // x = -2·band crosses normal → subnormal → zero
+    }
+    let inv_eps = 2.0f32;
+    let scale = 0.75f32;
+    let v: Vec<f32> = (0..costs.len()).map(|_| rng.uniform(0.5, 1.5)).collect();
+
+    // Reference: elementwise libm.
+    let want: Vec<f32> = costs
+        .iter()
+        .zip(&v)
+        .map(|(&c, &vj)| (-c * inv_eps).exp() * (scale * vj))
+        .collect();
+
+    for kind in KernelKind::available() {
+        let k = kernel_for(kind);
+        let mut buf = costs.clone();
+        let s = k.exp_scale_and_sum(&mut buf, inv_eps, scale, &v);
+        let mut want_sum = 0f64;
+        for (j, (&got, &w)) in buf.iter().zip(&want).enumerate() {
+            assert!(
+                (got - w).abs() <= 1e-6 * w.abs().max(f32::MIN_POSITIVE),
+                "{} elem {j} (cost {}): {got:e} vs libm {w:e}",
+                kind.name(),
+                costs[j]
+            );
+            want_sum += w as f64;
+        }
+        assert!(
+            (s as f64 - want_sum).abs() <= 1e-4 * want_sum.abs().max(1.0),
+            "{}: sum {s} vs {want_sum}",
+            kind.name()
+        );
+    }
+}
+
+/// Awkward lengths for the generation primitive: every backend handles
+/// head/tail splits (8/16-lane bodies + scalar tails) identically to the
+/// scalar reference within tolerance, and the scalar backend is exactly
+/// elementwise libm.
+#[test]
+fn exp_scale_and_sum_handles_awkward_lengths() {
+    use map_uot::algo::kernels::ScalarKernel;
+    use map_uot::algo::{kernel_for, Kernel};
+    let mut rng = map_uot::util::XorShift::new(23);
+    for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 257] {
+        let costs: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 8.0)).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.uniform(0.1, 2.0)).collect();
+        let mut buf_ref = costs.clone();
+        let s_ref = ScalarKernel.exp_scale_and_sum(&mut buf_ref, 1.5, 0.8, &v);
+        for kind in KernelKind::available() {
+            let k = kernel_for(kind);
+            let mut buf = costs.clone();
+            let s = k.exp_scale_and_sum(&mut buf, 1.5, 0.8, &v);
+            assert!(
+                (s - s_ref).abs() <= 1e-5 * s_ref.abs().max(1.0),
+                "{} n={n}: sum {s} vs {s_ref}",
+                kind.name()
+            );
+            for (j, (a, b)) in buf.iter().zip(&buf_ref).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-6 * b.abs().max(1e-9),
+                    "{} n={n} elem {j}: {a} vs {b}",
+                    kind.name()
+                );
+            }
+        }
+    }
+}

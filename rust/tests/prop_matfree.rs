@@ -1,0 +1,350 @@
+//! Property tests for the materialization-free backend:
+//!
+//! * **Equivalence** — a matfree solve tracks the dense MAP-UOT session on
+//!   the materialized Gibbs problem: same iteration counts under the same
+//!   stop rule, and the materialized matfree plan within tolerance of the
+//!   dense plan on small golden-seeded shapes.
+//! * **Bit-exactness** — for any fixed row partition, the scope and pool
+//!   engines are bit-identical to the partitioned serial reference
+//!   (`parallel::matfree_iterate_partitioned_tracked`): same scaling
+//!   vectors, same carried sums, same tracked deltas. A full
+//!   `SolverSession::solve_matfree` on the pool engine bit-matches the
+//!   spawn engine for every thread count.
+//! * **Hardening** — malformed geometry is a typed error, never a panic;
+//!   a bandwidth small enough to underflow every kernel entry terminates
+//!   cleanly with dead rows, exactly like the dense zero-row guard.
+//!
+//! CI runs this file under the same thread-oversubscription matrix as
+//! `prop_pool.rs`/`prop_sparse.rs`: set `MAP_UOT_POOL_THREADS=t` to
+//! restrict the sweep.
+
+use map_uot::algo::matfree::{CostKind, GeomProblem, MatfreeWorkspace};
+use map_uot::algo::pool::{
+    AccArena, AffinityHint, PaddedSlots, ParallelBackend, Partition, ThreadPool,
+};
+use map_uot::algo::{parallel, KernelKind, KernelPolicy, SolverKind, SolverSession, StopRule};
+use map_uot::error::Error;
+
+/// Thread counts to sweep: the full ladder by default, or the single value
+/// from `MAP_UOT_POOL_THREADS` (the CI oversubscription matrix).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("MAP_UOT_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("MAP_UOT_POOL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 3, 4, 8, 16],
+    }
+}
+
+/// Shapes crossing the interesting edges: single row/col, more threads
+/// than rows, wide rows (panel tiling), odd dims.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (2, 3, 2),
+    (9, 8, 3),
+    (23, 17, 3),
+    (7, 300, 2),
+    (64, 48, 4),
+];
+
+fn problem(m: usize, n: usize, d: usize, cost: CostKind, seed: u64) -> GeomProblem {
+    GeomProblem::random(m, n, d, cost, 0.25, 0.7, seed)
+}
+
+/// Full session solves on matfree and dense agree: same iteration counts
+/// under the same stop rule, materialized plans within tolerance (both
+/// paths round differently — dense mutates a stored plan, matfree
+/// re-derives entries from the scaling vectors — so the comparison is
+/// relative, not bitwise).
+#[test]
+fn matfree_solve_matches_dense_session() {
+    // A fixed iteration budget (negative tolerances never fire) keeps the
+    // comparison deterministic: both sessions run exactly max_iter sweeps,
+    // so a threshold crossing inside one path's rounding can never skew
+    // the iteration counts.
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 48 };
+    for (seed, &(m, n, d)) in SHAPES.iter().enumerate() {
+        for cost in [CostKind::SqEuclidean, CostKind::Euclidean] {
+            let gp = problem(m, n, d, cost, 41 + seed as u64);
+            let dense = gp.dense_problem();
+
+            let mut mf = SolverSession::builder(SolverKind::MapUot)
+                .stop(stop)
+                .check_every(4)
+                .build_matfree(&gp);
+            let mf_report = mf.solve_matfree(&gp).unwrap();
+
+            let mut ds = SolverSession::builder(SolverKind::MapUot)
+                .stop(stop)
+                .check_every(4)
+                .build(&dense);
+            let ds_report = ds.solve(&dense).unwrap();
+
+            assert_eq!(mf_report.iters, ds_report.iters, "{m}x{n} d={d} {cost:?}");
+            let materialized = mf.matfree_materialize(&gp).unwrap();
+            let rel = materialized.max_rel_diff(ds.plan(), 1e-4);
+            assert!(
+                rel < 1e-3,
+                "{m}x{n} d={d} {:?}: materialized matfree plan off by {rel}",
+                cost
+            );
+        }
+    }
+}
+
+/// The golden-seeded equivalence pin (the satellite's headline case): a
+/// small forced-scalar shape where both backends evaluate libm exp over a
+/// fixed iteration budget, so the only differences are rounding order —
+/// within 1e-5 relative.
+#[test]
+fn matfree_matches_dense_golden_seeded_scalar() {
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 64 };
+    let gp = GeomProblem::random(16, 12, 3, CostKind::SqEuclidean, 0.25, 0.7, 1234);
+    let dense = gp.dense_problem();
+    let mut mf = SolverSession::builder(SolverKind::MapUot)
+        .kernel(KernelKind::Scalar)
+        .stop(stop)
+        .check_every(4)
+        .build_matfree(&gp);
+    let mut ds = SolverSession::builder(SolverKind::MapUot)
+        .kernel(KernelKind::Scalar)
+        .stop(stop)
+        .check_every(4)
+        .build(&dense);
+    let rm = mf.solve_matfree(&gp).unwrap();
+    let rd = ds.solve(&dense).unwrap();
+    assert_eq!(rm.iters, rd.iters);
+    let materialized = mf.matfree_materialize(&gp).unwrap();
+    let rel = materialized.max_rel_diff(ds.plan(), 1e-3);
+    assert!(rel < 1e-5, "golden shape off by {rel}");
+    assert!((rm.err - rd.err).abs() <= 1e-3 * rd.err.max(1e-2), "{} vs {}", rm.err, rd.err);
+}
+
+/// For any fixed partition, both threaded engines are bit-identical to the
+/// partitioned serial reference — scaling vectors, carried sums, tracked
+/// deltas.
+#[test]
+fn engines_bitmatch_partitioned_serial_reference() {
+    for &(m, n, d) in SHAPES {
+        for &t in &thread_counts() {
+            let gp = problem(m, n, d, CostKind::SqEuclidean, (m * 7 + n * 3 + d) as u64);
+            let policy = KernelPolicy::for_shape(
+                KernelKind::Auto,
+                map_uot::algo::TileSpec::Auto,
+                m,
+                n,
+            );
+            let part = Partition::new(m, t, t);
+            let pool = ThreadPool::new(t);
+            let mut fcol = vec![0f32; n];
+            let mut inv = vec![0f32; n];
+            let mut deltas = PaddedSlots::new(t);
+            // Three engines, three state sets, one partition. Seed every
+            // engine's colsum identically (serial pass).
+            let mut seed_ws = MatfreeWorkspace::new(m, n, 1);
+            seed_ws.prepare(m, n);
+            let ones = vec![1f32; n];
+            let mut seeded = vec![0f32; n];
+            seed_ws.seed_col_sums(&gp, &ones, &mut seeded);
+            let fresh = || (vec![1f32; m], vec![1f32; n], seeded.clone(), vec![0f32; m]);
+            let (mut u_a, mut v_a, mut c_a, mut r_a) = fresh(); // scope
+            let (mut u_b, mut v_b, mut c_b, mut r_b) = fresh(); // pool
+            let (mut u_c, mut v_c, mut c_c, mut r_c) = fresh(); // serial reference
+            let (mut pan_a, mut acc_a) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            let (mut pan_b, mut acc_b) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            let (mut pan_c, mut acc_c) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            for it in 0..4 {
+                let da = parallel::matfree_iterate_tracked(
+                    &gp, &mut u_a, &mut v_a, &mut c_a, &mut r_a, &mut fcol, &mut inv, &mut pan_a,
+                    &mut acc_a, &part, &policy,
+                );
+                let db = parallel::matfree_iterate_pool_tracked(
+                    &gp, &mut u_b, &mut v_b, &mut c_b, &mut r_b, &pool, &mut fcol, &mut inv,
+                    &mut pan_b, &mut acc_b, &mut deltas, &part, &policy,
+                );
+                let dc = parallel::matfree_iterate_partitioned_tracked(
+                    &gp, &mut u_c, &mut v_c, &mut c_c, &mut r_c, &mut fcol, &mut inv, &mut pan_c,
+                    &mut acc_c, &part, &policy,
+                );
+                assert_eq!(da.to_bits(), dc.to_bits(), "{m}x{n} t={t} it={it}: scope delta");
+                assert_eq!(db.to_bits(), dc.to_bits(), "{m}x{n} t={t} it={it}: pool delta");
+            }
+            assert_eq!(u_a, u_c, "{m}x{n} t={t}: scope u");
+            assert_eq!(u_b, u_c, "{m}x{n} t={t}: pool u");
+            assert_eq!(v_a, v_c, "{m}x{n} t={t}: scope v");
+            assert_eq!(v_b, v_c, "{m}x{n} t={t}: pool v");
+            assert_eq!(c_a, c_c, "{m}x{n} t={t}: scope colsum");
+            assert_eq!(c_b, c_c, "{m}x{n} t={t}: pool colsum");
+            assert_eq!(r_a, r_c, "{m}x{n} t={t}: scope rowsum");
+            assert_eq!(r_b, r_c, "{m}x{n} t={t}: pool rowsum");
+        }
+    }
+}
+
+/// Full matfree session solves agree across backends: bit-identical
+/// scaling vectors, same iteration counts — pool vs spawn for every
+/// thread count, and any thread count vs the serial session (the session
+/// partition at `t` blocks is fixed per engine, so serial-vs-threaded is
+/// compared through the *same* session thread count on both engines).
+#[test]
+fn full_matfree_solve_agrees_across_backends() {
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 };
+    for &t in &thread_counts() {
+        let gp = problem(32, 24, 3, CostKind::SqEuclidean, 21);
+        let mut spawn = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .backend(ParallelBackend::SpawnPerIter)
+            .stop(stop)
+            .build_matfree(&gp);
+        let mut pool = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .backend(ParallelBackend::Pool)
+            .stop(stop)
+            .build_matfree(&gp);
+        let rs = spawn.solve_matfree(&gp).unwrap();
+        let rp = pool.solve_matfree(&gp).unwrap();
+        assert_eq!(rs.iters, rp.iters, "t={t}");
+        assert_eq!(spawn.matfree_scaling().unwrap().0, pool.matfree_scaling().unwrap().0, "t={t} u");
+        assert_eq!(spawn.matfree_scaling().unwrap().1, pool.matfree_scaling().unwrap().1, "t={t} v");
+    }
+}
+
+/// Threaded solves match the serial solve within tolerance (different
+/// partitions regroup the colsum reduction, so this is a tolerance check,
+/// not bitwise — the bitwise contract is per-partition, above).
+#[test]
+fn threaded_solves_track_serial_within_tolerance() {
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 };
+    let gp = problem(32, 24, 3, CostKind::Euclidean, 33);
+    let mut serial = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .build_matfree(&gp);
+    serial.solve_matfree(&gp).unwrap();
+    let (su, sv) = serial.matfree_scaling().unwrap();
+    for &t in &thread_counts() {
+        let mut threaded = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(stop)
+            .build_matfree(&gp);
+        threaded.solve_matfree(&gp).unwrap();
+        let (tu, tv) = threaded.matfree_scaling().unwrap();
+        for (a, b) in tu.iter().zip(su).chain(tv.iter().zip(sv)) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1e-4), "t={t}: {a} vs {b}");
+        }
+    }
+}
+
+/// Workspace engine dispatch (serial / scope / pool through
+/// `MatfreeWorkspace`) matches the dense kernel on the same problem for
+/// every thread count.
+#[test]
+fn workspace_engines_track_dense_for_all_thread_counts() {
+    use map_uot::algo::mapuot;
+    for &t in &thread_counts() {
+        let (m, n) = (23, 17);
+        let gp = problem(m, n, 3, CostKind::SqEuclidean, 5);
+        let dense = gp.dense_problem();
+        let mut plan = dense.plan.clone();
+        let mut cs_dense = plan.col_sums();
+
+        let mut engines = [
+            MatfreeWorkspace::with_backend(m, n, t, ParallelBackend::Pool, AffinityHint::None),
+            MatfreeWorkspace::with_backend(m, n, t, ParallelBackend::SpawnPerIter, AffinityHint::None),
+            MatfreeWorkspace::new(m, n, 1),
+        ];
+        let mut states: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> = (0..engines.len())
+            .map(|_| (vec![1f32; m], vec![1f32; n], vec![0f32; n], vec![0f32; m]))
+            .collect();
+        for (ws, st) in engines.iter_mut().zip(states.iter_mut()) {
+            ws.prepare(m, n);
+            let ones = vec![1f32; n];
+            ws.seed_col_sums(&gp, &ones, &mut st.2);
+        }
+        for _ in 0..6 {
+            mapuot::iterate(&mut plan, &mut cs_dense, &gp.rpd, &gp.cpd, gp.fi);
+            for (ws, st) in engines.iter_mut().zip(states.iter_mut()) {
+                let (u, v, c, r) = st;
+                ws.iterate(&gp, u, v, c, r);
+            }
+        }
+        for (which, st) in states.iter().enumerate() {
+            for (j, (a, b)) in st.2.iter().zip(&cs_dense).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-3 * b.abs().max(1e-3),
+                    "t={t} engine {which} col {j}: {a} vs {b}"
+                );
+            }
+        }
+        // Pool and scope engines bit-match (same partition, same order).
+        assert_eq!(states[0].0, states[1].0, "t={t} u");
+        assert_eq!(states[0].2, states[1].2, "t={t} colsum");
+    }
+}
+
+/// Malformed geometry is a typed error, never a panic.
+#[test]
+fn malformed_geometry_is_rejected_with_typed_errors() {
+    let sq = CostKind::SqEuclidean;
+    let ones = || vec![1.0f32; 3];
+    let cases: Vec<(&str, map_uot::error::Result<GeomProblem>)> = vec![
+        (
+            "x length mismatch",
+            GeomProblem::new(vec![0.0; 5], vec![0.0; 6], 2, sq, 0.5, ones(), ones(), 0.7),
+        ),
+        (
+            "y length mismatch",
+            GeomProblem::new(vec![0.0; 6], vec![0.0; 5], 2, sq, 0.5, ones(), ones(), 0.7),
+        ),
+        (
+            "zero dimension",
+            GeomProblem::new(vec![], vec![], 0, sq, 0.5, ones(), ones(), 0.7),
+        ),
+        (
+            "NaN coordinate",
+            GeomProblem::new(vec![f32::NAN; 6], vec![0.0; 6], 2, sq, 0.5, ones(), ones(), 0.7),
+        ),
+        (
+            "zero epsilon",
+            GeomProblem::new(vec![0.0; 6], vec![0.0; 6], 2, sq, 0.0, ones(), ones(), 0.7),
+        ),
+        (
+            "infinite epsilon",
+            GeomProblem::new(vec![0.0; 6], vec![0.0; 6], 2, sq, f32::INFINITY, ones(), ones(), 0.7),
+        ),
+        (
+            "nonpositive marginal",
+            GeomProblem::new(vec![0.0; 6], vec![0.0; 6], 2, sq, 0.5, vec![1.0, 0.0, 1.0], ones(), 0.7),
+        ),
+        (
+            "fi out of range",
+            GeomProblem::new(vec![0.0; 6], vec![0.0; 6], 2, sq, 0.5, ones(), ones(), 1.5),
+        ),
+    ];
+    for (what, outcome) in cases {
+        match outcome {
+            Err(Error::InvalidProblem(_)) => {}
+            other => panic!("{what}: expected InvalidProblem, got {other:?}"),
+        }
+    }
+}
+
+/// A bandwidth so small every kernel entry underflows produces dead rows
+/// (factor-0 guard), terminates cleanly, and stays finite — the matfree
+/// analogue of the dense zero-column test.
+#[test]
+fn underflowing_bandwidth_terminates_cleanly() {
+    // Distant clouds + tiny epsilon: exp(-d²/ε) underflows to 0 for every
+    // pair, so u dies on the first iteration and the delta rule fires.
+    let x = vec![0.0; 8 * 2];
+    let y = vec![100.0; 6 * 2];
+    let gp = GeomProblem::new(x, y, 2, CostKind::SqEuclidean, 1e-3, vec![1.0; 8], vec![1.0; 6], 0.7)
+        .unwrap();
+    for &t in &thread_counts() {
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 32 })
+            .build_matfree(&gp);
+        let report = session.solve_matfree(&gp).unwrap();
+        assert!(report.iters <= 32);
+        let (u, v) = session.matfree_scaling().unwrap();
+        assert!(u.iter().chain(v.iter()).all(|x| x.is_finite()), "t={t}");
+    }
+}
