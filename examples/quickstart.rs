@@ -19,6 +19,13 @@
 //! the legacy scope-per-iteration dispatch for comparison benches.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Correctness tooling: the unsafe/allocation/concurrency contracts the
+//! pool engine relies on are machine-checked — `cargo run -p uotlint`
+//! lints `rust/src` for them in seconds (it is a required CI gate), and
+//! nightly Miri/TSan/ASan legs re-run the edge-case and property suites
+//! under interpretation and sanitizers. Commands and what each gate
+//! guarantees: `EXPERIMENTS.md` §Correctness tooling.
 
 use map_uot::algo::{
     AffinityHint, CheckEvent, CostKind, GeomProblem, KernelKind, ObserverAction, Problem,

@@ -348,8 +348,9 @@ impl Kernel for UnrolledKernel {
 
 /// Hand-written AVX2+FMA backend. Not publicly constructible: the only
 /// instances are crate-internal and handed out behind [`avx2_available`]
-/// (see [`kernel_for`]), which is what makes the `unsafe` intrinsic calls
-/// inside the safe trait methods sound.
+/// (see [`kernel_for`]), which is what discharges the trait methods'
+/// obligation when they call the `#[target_feature]` bodies in [`avx2`]
+/// from a context that does not itself enable the features.
 #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
 pub struct Avx2FmaKernel {
     _detection_gated: (),
@@ -415,6 +416,14 @@ mod avx2 {
     //! head up to alignment and a scalar tail, and fence (`sfence`) before
     //! returning — MOVNT stores are weakly ordered, and the pool barrier's
     //! release/acquire pair does not order them on its own.
+    //!
+    //! Every function here is a **safe** `#[target_feature]` fn: the
+    //! register-only intrinsics are safe inside a matching-feature context,
+    //! so `unsafe` shrinks to exactly the pointer loads/stores, each with a
+    //! bounds argument on it. Callers *without* an AVX2+FMA context (the
+    //! `Avx2FmaKernel` trait methods) still need an `unsafe` block — their
+    //! obligation is runtime feature detection, discharged by
+    //! [`super::avx2_available`]-gated construction.
 
     #[cfg(target_arch = "x86")]
     use std::arch::x86::*;
@@ -422,12 +431,9 @@ mod avx2 {
     use std::arch::x86_64::*;
 
     /// Horizontal sum of one 8-lane register.
-    ///
-    /// # Safety
-    /// Requires AVX at runtime (callers are `avx2`-gated, which implies it).
     #[inline]
     #[target_feature(enable = "avx")]
-    unsafe fn hsum(v: __m256) -> f32 {
+    fn hsum(v: __m256) -> f32 {
         let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
         let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
         let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
@@ -435,12 +441,9 @@ mod avx2 {
     }
 
     /// Horizontal max of one 8-lane register (non-negative inputs).
-    ///
-    /// # Safety
-    /// Requires AVX at runtime (callers are `avx2`-gated, which implies it).
     #[inline]
     #[target_feature(enable = "avx")]
-    unsafe fn hmax(v: __m256) -> f32 {
+    fn hmax(v: __m256) -> f32 {
         let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
         let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
         let s = _mm_max_ss(s, _mm_shuffle_ps(s, s, 1));
@@ -451,12 +454,9 @@ mod avx2 {
     /// two-factor exponent reconstruction as `util::simd::fast_exp` (the
     /// constants are shared), with FMA contractions — ~2 ulp, overflow to
     /// +inf, gradual underflow to 0.
-    ///
-    /// # Safety
-    /// Requires AVX2 + FMA at runtime (callers are gated).
     #[inline]
     #[target_feature(enable = "avx2", enable = "fma")]
-    unsafe fn exp_ps(x: __m256) -> __m256 {
+    fn exp_ps(x: __m256) -> __m256 {
         use crate::util::simd::{EXP_HI_CLAMP, EXP_LN2_HI, EXP_LN2_LO, EXP_LO_CLAMP, EXP_POLY};
         let x = _mm256_max_ps(
             _mm256_min_ps(x, _mm256_set1_ps(EXP_HI_CLAMP)),
@@ -498,12 +498,9 @@ mod avx2 {
     /// (buf enters holding the cost panel), returning the panel sum. Two
     /// independent 8-lane accumulators — exp's ALU chain dominates, so two
     /// suffice to hide the add latency.
-    ///
-    /// # Safety
-    /// The CPU must support AVX2 and FMA (runtime-checked by
-    /// [`super::avx2_available`] before this backend is handed out).
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn exp_scale_and_sum(buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+    pub fn exp_scale_and_sum(buf: &mut [f32], inv_eps: f32, scale: f32, v: &[f32]) -> f32 {
+        assert_eq!(buf.len(), v.len(), "panel/v length mismatch");
         let n = buf.len();
         let b = buf.as_mut_ptr();
         let vp = v.as_ptr();
@@ -513,28 +510,39 @@ mod avx2 {
         let mut acc1 = _mm256_setzero_ps();
         let mut j = 0usize;
         while j + 16 <= n {
-            let e0 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
-            let e1 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j + 8)), neg_inv));
-            let w0 = _mm256_mul_ps(e0, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
-            let w1 = _mm256_mul_ps(e1, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j + 8))));
-            _mm256_storeu_ps(b.add(j), w0);
-            _mm256_storeu_ps(b.add(j + 8), w1);
-            acc0 = _mm256_add_ps(acc0, w0);
-            acc1 = _mm256_add_ps(acc1, w1);
+            // SAFETY: the loop guard keeps j..j+16 inside both slices
+            // (equal lengths asserted above), so every lane of each
+            // load/store is in bounds.
+            unsafe {
+                let e0 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
+                let e1 = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j + 8)), neg_inv));
+                let w0 = _mm256_mul_ps(e0, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
+                let w1 = _mm256_mul_ps(e1, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j + 8))));
+                _mm256_storeu_ps(b.add(j), w0);
+                _mm256_storeu_ps(b.add(j + 8), w1);
+                acc0 = _mm256_add_ps(acc0, w0);
+                acc1 = _mm256_add_ps(acc1, w1);
+            }
             j += 16;
         }
         while j + 8 <= n {
-            let e = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
-            let w = _mm256_mul_ps(e, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
-            _mm256_storeu_ps(b.add(j), w);
-            acc0 = _mm256_add_ps(acc0, w);
+            // SAFETY: the loop guard keeps j..j+8 inside both slices.
+            unsafe {
+                let e = exp_ps(_mm256_mul_ps(_mm256_loadu_ps(b.add(j)), neg_inv));
+                let w = _mm256_mul_ps(e, _mm256_mul_ps(vs, _mm256_loadu_ps(vp.add(j))));
+                _mm256_storeu_ps(b.add(j), w);
+                acc0 = _mm256_add_ps(acc0, w);
+            }
             j += 8;
         }
         let mut s = hsum(_mm256_add_ps(acc0, acc1));
         while j < n {
-            let w = crate::util::simd::fast_exp(-*b.add(j) * inv_eps) * (scale * *vp.add(j));
-            *b.add(j) = w;
-            s += w;
+            // SAFETY: j < n — one in-bounds element of each slice.
+            unsafe {
+                let w = crate::util::simd::fast_exp(-*b.add(j) * inv_eps) * (scale * *vp.add(j));
+                *b.add(j) = w;
+                s += w;
+            }
             j += 1;
         }
         s
@@ -543,12 +551,9 @@ mod avx2 {
     /// Computations I+II: four independent 8-lane FMA accumulators (32
     /// floats per step) break the add-latency chain exactly like the
     /// portable kernel's 16 scalar lanes.
-    ///
-    /// # Safety
-    /// The CPU must support AVX2 and FMA (runtime-checked by
-    /// [`super::avx2_available`] before this backend is handed out).
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
+    pub fn scale_by_vec_and_sum(row: &mut [f32], fcol: &[f32]) -> f32 {
+        assert_eq!(row.len(), fcol.len(), "row/fcol length mismatch");
         let n = row.len();
         let r = row.as_mut_ptr();
         let f = fcol.as_ptr();
@@ -558,39 +563,50 @@ mod avx2 {
         let mut acc3 = _mm256_setzero_ps();
         let mut j = 0usize;
         while j + 32 <= n {
-            let v0 = _mm256_loadu_ps(r.add(j));
-            let v1 = _mm256_loadu_ps(r.add(j + 8));
-            let v2 = _mm256_loadu_ps(r.add(j + 16));
-            let v3 = _mm256_loadu_ps(r.add(j + 24));
-            let f0 = _mm256_loadu_ps(f.add(j));
-            let f1 = _mm256_loadu_ps(f.add(j + 8));
-            let f2 = _mm256_loadu_ps(f.add(j + 16));
-            let f3 = _mm256_loadu_ps(f.add(j + 24));
-            _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v0, f0));
-            _mm256_storeu_ps(r.add(j + 8), _mm256_mul_ps(v1, f1));
-            _mm256_storeu_ps(r.add(j + 16), _mm256_mul_ps(v2, f2));
-            _mm256_storeu_ps(r.add(j + 24), _mm256_mul_ps(v3, f3));
-            // FMA accumulation: the sum sees the unrounded products (≤ 1
-            // ulp/element from the stored values — inside every agreement
-            // tolerance, and one add cheaper per vector).
-            acc0 = _mm256_fmadd_ps(v0, f0, acc0);
-            acc1 = _mm256_fmadd_ps(v1, f1, acc1);
-            acc2 = _mm256_fmadd_ps(v2, f2, acc2);
-            acc3 = _mm256_fmadd_ps(v3, f3, acc3);
+            // SAFETY: the loop guard keeps j..j+32 inside both slices
+            // (equal lengths asserted above), so every lane of each
+            // load/store is in bounds.
+            unsafe {
+                let v0 = _mm256_loadu_ps(r.add(j));
+                let v1 = _mm256_loadu_ps(r.add(j + 8));
+                let v2 = _mm256_loadu_ps(r.add(j + 16));
+                let v3 = _mm256_loadu_ps(r.add(j + 24));
+                let f0 = _mm256_loadu_ps(f.add(j));
+                let f1 = _mm256_loadu_ps(f.add(j + 8));
+                let f2 = _mm256_loadu_ps(f.add(j + 16));
+                let f3 = _mm256_loadu_ps(f.add(j + 24));
+                _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v0, f0));
+                _mm256_storeu_ps(r.add(j + 8), _mm256_mul_ps(v1, f1));
+                _mm256_storeu_ps(r.add(j + 16), _mm256_mul_ps(v2, f2));
+                _mm256_storeu_ps(r.add(j + 24), _mm256_mul_ps(v3, f3));
+                // FMA accumulation: the sum sees the unrounded products (≤ 1
+                // ulp/element from the stored values — inside every agreement
+                // tolerance, and one add cheaper per vector).
+                acc0 = _mm256_fmadd_ps(v0, f0, acc0);
+                acc1 = _mm256_fmadd_ps(v1, f1, acc1);
+                acc2 = _mm256_fmadd_ps(v2, f2, acc2);
+                acc3 = _mm256_fmadd_ps(v3, f3, acc3);
+            }
             j += 32;
         }
         while j + 8 <= n {
-            let v = _mm256_loadu_ps(r.add(j));
-            let fv = _mm256_loadu_ps(f.add(j));
-            _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v, fv));
-            acc0 = _mm256_fmadd_ps(v, fv, acc0);
+            // SAFETY: the loop guard keeps j..j+8 inside both slices.
+            unsafe {
+                let v = _mm256_loadu_ps(r.add(j));
+                let fv = _mm256_loadu_ps(f.add(j));
+                _mm256_storeu_ps(r.add(j), _mm256_mul_ps(v, fv));
+                acc0 = _mm256_fmadd_ps(v, fv, acc0);
+            }
             j += 8;
         }
         let mut s = hsum(_mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3)));
         while j < n {
-            let v = *r.add(j) * *f.add(j);
-            *r.add(j) = v;
-            s += v;
+            // SAFETY: j < n — one in-bounds element of each slice.
+            unsafe {
+                let v = *r.add(j) * *f.add(j);
+                *r.add(j) = v;
+                s += v;
+            }
             j += 1;
         }
         s
@@ -599,50 +615,70 @@ mod avx2 {
     /// Computations III+IV. `stream = true` writes the plan with
     /// `_mm256_stream_ps` (no RFO); `next_colsum` always goes through the
     /// cache — it is re-read every row.
-    ///
-    /// # Safety
-    /// The CPU must support AVX2 and FMA (runtime-checked by
-    /// [`super::avx2_available`] before this backend is handed out).
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn scale_by_scalar_and_accumulate(
+    pub fn scale_by_scalar_and_accumulate(
         row: &mut [f32],
         fr: f32,
         next_colsum: &mut [f32],
         stream: bool,
     ) {
+        assert_eq!(row.len(), next_colsum.len(), "row/colsum length mismatch");
         let n = row.len();
         let r = row.as_mut_ptr();
         let c = next_colsum.as_mut_ptr();
         let vf = _mm256_set1_ps(fr);
         let mut j = 0usize;
         if stream {
-            while j < n && (r.add(j) as usize) % 32 != 0 {
-                let v = *r.add(j) * fr;
-                *r.add(j) = v;
-                *c.add(j) += v;
+            while j < n && (r as usize + j * 4) % 32 != 0 {
+                // SAFETY: j < n — one in-bounds element of each slice.
+                unsafe {
+                    let v = *r.add(j) * fr;
+                    *r.add(j) = v;
+                    *c.add(j) += v;
+                }
                 j += 1;
             }
+            // An f32 pointer is 4-byte aligned, so stepping one element at
+            // a time must reach a 32-byte boundary within 8 steps (or run
+            // out of row) — the requirement MOVNT stores add below.
+            debug_assert!(
+                j == n || (r as usize + j * 4) % 32 == 0,
+                "streaming head peel failed to reach 32-byte alignment"
+            );
             while j + 8 <= n {
-                let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
-                _mm256_stream_ps(r.add(j), p);
-                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                // SAFETY: the loop guard keeps j..j+8 inside both slices,
+                // and the head peel left `r.add(j)` 32-byte aligned as
+                // `_mm256_stream_ps` requires.
+                unsafe {
+                    let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
+                    _mm256_stream_ps(r.add(j), p);
+                    _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                }
                 j += 8;
             }
         } else {
             while j + 8 <= n {
-                let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
-                _mm256_storeu_ps(r.add(j), p);
-                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                // SAFETY: the loop guard keeps j..j+8 inside both slices.
+                unsafe {
+                    let p = _mm256_mul_ps(_mm256_loadu_ps(r.add(j)), vf);
+                    _mm256_storeu_ps(r.add(j), p);
+                    _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                }
                 j += 8;
             }
         }
         while j < n {
-            let v = *r.add(j) * fr;
-            *r.add(j) = v;
-            *c.add(j) += v;
+            // SAFETY: j < n — one in-bounds element of each slice.
+            unsafe {
+                let v = *r.add(j) * fr;
+                *r.add(j) = v;
+                *c.add(j) += v;
+            }
             j += 1;
         }
         if stream {
+            // Drain the weakly-ordered MOVNT write-combining buffers before
+            // the pool barrier's release store publishes this part.
             _mm_sfence();
         }
     }
@@ -650,18 +686,16 @@ mod avx2 {
     /// Tracked Computations III+IV: per-lane |new − old| maxima folded at
     /// the end (max is order-independent, so this matches the scalar fold
     /// bit-for-bit).
-    ///
-    /// # Safety
-    /// The CPU must support AVX2 and FMA (runtime-checked by
-    /// [`super::avx2_available`] before this backend is handed out).
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn scale_by_scalar_and_accumulate_tracked(
+    pub fn scale_by_scalar_and_accumulate_tracked(
         row: &mut [f32],
         fr: f32,
         inv_fcol: &[f32],
         next_colsum: &mut [f32],
         stream: bool,
     ) -> f32 {
+        assert_eq!(row.len(), next_colsum.len(), "row/colsum length mismatch");
+        assert_eq!(row.len(), inv_fcol.len(), "row/inv_fcol length mismatch");
         let n = row.len();
         let r = row.as_mut_ptr();
         let c = next_colsum.as_mut_ptr();
@@ -672,45 +706,68 @@ mod avx2 {
         let mut d = 0f32;
         let mut j = 0usize;
         if stream {
-            while j < n && (r.add(j) as usize) % 32 != 0 {
+            while j < n && (r as usize + j * 4) % 32 != 0 {
+                // SAFETY: j < n — one in-bounds element of each slice.
+                unsafe {
+                    let v = *r.add(j);
+                    let old = v * *iv.add(j);
+                    let p = v * fr;
+                    *r.add(j) = p;
+                    *c.add(j) += p;
+                    d = d.max((p - old).abs());
+                }
+                j += 1;
+            }
+            // See the untracked form: 4-byte element steps must reach a
+            // 32-byte boundary before the MOVNT loop needs one.
+            debug_assert!(
+                j == n || (r as usize + j * 4) % 32 == 0,
+                "streaming head peel failed to reach 32-byte alignment"
+            );
+            while j + 8 <= n {
+                // SAFETY: the loop guard keeps j..j+8 inside all three
+                // equal-length slices, and the head peel left `r.add(j)`
+                // 32-byte aligned as `_mm256_stream_ps` requires.
+                unsafe {
+                    let v = _mm256_loadu_ps(r.add(j));
+                    let p = _mm256_mul_ps(v, vf);
+                    let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
+                    _mm256_stream_ps(r.add(j), p);
+                    _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                    dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
+                }
+                j += 8;
+            }
+        } else {
+            while j + 8 <= n {
+                // SAFETY: the loop guard keeps j..j+8 inside all three
+                // equal-length slices.
+                unsafe {
+                    let v = _mm256_loadu_ps(r.add(j));
+                    let p = _mm256_mul_ps(v, vf);
+                    let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
+                    _mm256_storeu_ps(r.add(j), p);
+                    _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
+                    dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
+                }
+                j += 8;
+            }
+        }
+        while j < n {
+            // SAFETY: j < n — one in-bounds element of each slice.
+            unsafe {
                 let v = *r.add(j);
                 let old = v * *iv.add(j);
                 let p = v * fr;
                 *r.add(j) = p;
                 *c.add(j) += p;
                 d = d.max((p - old).abs());
-                j += 1;
             }
-            while j + 8 <= n {
-                let v = _mm256_loadu_ps(r.add(j));
-                let p = _mm256_mul_ps(v, vf);
-                let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
-                _mm256_stream_ps(r.add(j), p);
-                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
-                dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
-                j += 8;
-            }
-        } else {
-            while j + 8 <= n {
-                let v = _mm256_loadu_ps(r.add(j));
-                let p = _mm256_mul_ps(v, vf);
-                let old = _mm256_mul_ps(v, _mm256_loadu_ps(iv.add(j)));
-                _mm256_storeu_ps(r.add(j), p);
-                _mm256_storeu_ps(c.add(j), _mm256_add_ps(_mm256_loadu_ps(c.add(j)), p));
-                dmax = _mm256_max_ps(dmax, _mm256_andnot_ps(abs_mask, _mm256_sub_ps(p, old)));
-                j += 8;
-            }
-        }
-        while j < n {
-            let v = *r.add(j);
-            let old = v * *iv.add(j);
-            let p = v * fr;
-            *r.add(j) = p;
-            *c.add(j) += p;
-            d = d.max((p - old).abs());
             j += 1;
         }
         if stream {
+            // Drain the weakly-ordered MOVNT write-combining buffers before
+            // the pool barrier's release store publishes this part.
             _mm_sfence();
         }
         d.max(hmax(dmax))

@@ -444,6 +444,7 @@ pub fn iterate_tracked_policy(
 
 /// One full MAP-UOT iteration (Algorithm 1, serial); allocates its own
 /// column-factor scratch — prefer [`iterate_into`] on hot paths.
+// uotlint: allow(alloc) — documented legacy wrapper, not a hot path.
 pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
     let mut fcol = vec![0f32; plan.cols()];
     iterate_into(plan, colsum, rpd, cpd, fi, &mut fcol);

@@ -418,6 +418,11 @@ fn mapuot_pool(
 ) -> f32 {
     let (m, n) = (plan.rows(), plan.cols());
     let part = Partition::new(m, pool.threads(), acc.rows());
+    // Preconditions the disjoint-split SAFETY arguments below lean on.
+    debug_assert_eq!(rpd.len(), m, "rpd length != plan rows");
+    debug_assert!(rowsum.len() >= m, "rowsum shorter than plan rows");
+    debug_assert_eq!(acc.cols(), n, "accumulator width != plan cols");
+    debug_assert!(part.blocks() <= acc.rows(), "partition exceeds arena rows");
     factors_into(fcol, cpd, colsum, fi);
     let inv: Option<&[f32]> = match inv_fcol {
         Some(iv) => {
@@ -437,13 +442,16 @@ fn mapuot_pool(
     let slots = deltas.as_mut().map(|d| d.shared());
     pool.run(part.blocks(), |b| {
         let r = part.range(b);
-        // SAFETY: row blocks (and their rowsum segments) are disjoint;
-        // accumulator/slot `b` belongs to part `b` alone.
+        // SAFETY: the partition's row blocks are disjoint, so the plan
+        // ranges `r.start*n..r.end*n` of distinct parts never overlap.
         let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+        // SAFETY: accumulator row `b` belongs to part `b` alone.
         let local = unsafe { arena.row_mut(b) };
         let rs_block = if tiled {
+            // SAFETY: rowsum segments mirror the disjoint row blocks.
             unsafe { rows_ref.range_mut(r.start, r.end) }
         } else {
+            // SAFETY: the empty range aliases nothing.
             unsafe { rows_ref.range_mut(0, 0) }
         };
         local.fill(0.0);
@@ -655,9 +663,9 @@ fn sparse_pool(
         let r = part.range(b);
         let (base, end) = (row_ptr[r.start], row_ptr[r.end]);
         // SAFETY: the nnz ranges of distinct blocks are disjoint (row_ptr
-        // is monotone and the partition tiles the rows); accumulator/slot
-        // `b` belongs to part `b` alone.
+        // is monotone and the partition tiles the rows).
         let block = unsafe { vals.range_mut(base, end) };
+        // SAFETY: accumulator row `b` belongs to part `b` alone.
         let local = unsafe { arena.row_mut(b) };
         local.fill(0.0);
         let bd = fused_csr_rows(block, base, row_ptr, col_idx, r, rpd, fcol_ref, inv, fi, local);
@@ -931,11 +939,14 @@ fn matfree_pool(
     let policy = *policy;
     pool.run(part.blocks(), |b| {
         let r = part.range(b);
-        // SAFETY: row blocks (u/rowsum segments) are disjoint; panel,
-        // accumulator and slot `b` belong to part `b` alone.
+        // SAFETY: the partition's row blocks are disjoint, so the `u`
+        // segments of distinct parts never overlap.
         let u_block = unsafe { u_ref.range_mut(r.start, r.end) };
+        // SAFETY: rowsum segments mirror the same disjoint row blocks.
         let rs_block = unsafe { rs_ref.range_mut(r.start, r.end) };
+        // SAFETY: panel row `b` belongs to part `b` alone.
         let buf = unsafe { panel_arena.row_mut(b) };
+        // SAFETY: accumulator row `b` belongs to part `b` alone.
         let local = unsafe { arena.row_mut(b) };
         local.fill(0.0);
         let bd = matfree_rows_opt(p, r, u_block, rs_block, v_ref, inv, buf, local, &policy);
@@ -1243,8 +1254,10 @@ fn coffee_pool(
         let rows_ref = SliceRef::new(rowsum);
         pool.run(part.blocks(), |b| {
             let r = part.range(b);
-            // SAFETY: row blocks (and their rowsum segments) are disjoint.
+            // SAFETY: the partition's row blocks are disjoint, so the plan
+            // ranges `r.start*n..r.end*n` of distinct parts never overlap.
             let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+            // SAFETY: rowsum segments mirror the same disjoint row blocks.
             let rs_block = unsafe { rows_ref.range_mut(r.start, r.end) };
             for (row, rs) in block.chunks_exact_mut(n).zip(rs_block.iter_mut()) {
                 *rs = scale_by_vec_and_sum(row, fcol_ref);
@@ -1260,8 +1273,10 @@ fn coffee_pool(
     let slots = deltas.as_mut().map(|d| d.shared());
     pool.run(part.blocks(), |b| {
         let r = part.range(b);
-        // SAFETY: disjoint row blocks; accumulator/slot `b` is part-owned.
+        // SAFETY: the partition's row blocks are disjoint, so the plan
+        // ranges `r.start*n..r.end*n` of distinct parts never overlap.
         let block = unsafe { plan_ref.range_mut(r.start * n, r.end * n) };
+        // SAFETY: accumulator row `b` belongs to part `b` alone.
         let local = unsafe { arena.row_mut(b) };
         local.fill(0.0);
         let bd = coffee_phase_b_block(block, n, r.start, rpd, rowsum_ref, fi, inv, local);

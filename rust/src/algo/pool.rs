@@ -119,7 +119,7 @@ fn pin_to_core(core: usize) {
     let bit = core % (WORDS * 64);
     mask[bit / 64] |= 1u64 << (bit % 64);
     // SAFETY: pid 0 targets the calling thread; the mask buffer outlives
-    // the call. Failure (e.g. a restricted cpuset) is a ignorable hint.
+    // the call. Failure (e.g. a restricted cpuset) is an ignorable hint.
     let _ = unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) };
 }
 
@@ -172,11 +172,15 @@ impl Shared {
     }
 }
 
-// SAFETY: the `job` slot is written only by the dispatcher while it holds
-// the dispatch lock and before the epoch's release bump; workers read it
-// only after the matching acquire load. The raw task pointer is
-// dereferenced only while `run_dyn` keeps the underlying borrow alive.
+// SAFETY: moving `Shared` between threads is sound because every field is
+// an atomic or an `UnsafeCell` whose `job` slot is written only by the
+// dispatcher while it holds the dispatch lock; no thread-local state.
 unsafe impl Send for Shared {}
+// SAFETY: concurrent `&Shared` access is serialized by the protocol: the
+// `job` slot is written only by the lock-holding dispatcher before the
+// epoch's release bump; workers read it only after the matching acquire
+// load, and the raw task pointer is dereferenced only while `run_dyn`
+// keeps the underlying borrow alive. All other fields are atomics.
 unsafe impl Sync for Shared {}
 
 /// A persistent worker pool. See the module docs for the protocol.
@@ -436,17 +440,23 @@ impl Partition {
 
     /// Rows in block `b` (the first `rows % blocks` blocks get one extra).
     pub fn len(&self, b: usize) -> usize {
+        debug_assert!(b < self.blocks, "block {b} out of range ({} blocks)", self.blocks);
         self.base + usize::from(b < self.extra)
     }
 
     /// First row of block `b`.
     pub fn start(&self, b: usize) -> usize {
+        debug_assert!(b <= self.blocks, "block {b} out of range ({} blocks)", self.blocks);
         b * self.base + b.min(self.extra)
     }
 
-    /// Row range of block `b`.
+    /// Row range of block `b`. Ranges of distinct blocks are disjoint and
+    /// tile `0..rows` in order (`range(b).end == range(b + 1).start`) — the
+    /// property every `SliceRef::range_mut` split in the pool kernels
+    /// leans on.
     pub fn range(&self, b: usize) -> Range<usize> {
         let start = self.start(b);
+        debug_assert_eq!(start + self.len(b), self.start(b + 1), "partition blocks must tile");
         start..start + self.len(b)
     }
 }
@@ -545,9 +555,13 @@ pub struct ArenaRef {
     rows: usize,
 }
 
-// SAFETY: every part of a pool job accesses a distinct row index (the
-// caller's discipline, documented on `row_mut`), so no two threads alias.
+// SAFETY: the view is a plain pointer + geometry; sending it to a pool
+// worker is sound because the arena it points into outlives the dispatch
+// (caller discipline, documented on `row_mut`).
 unsafe impl Send for ArenaRef {}
+// SAFETY: shared `&ArenaRef` use never aliases: every part of a pool job
+// accesses a distinct row index `b`, and rows are `stride`-separated, so
+// no two threads touch the same element (caller discipline on `row_mut`).
 unsafe impl Sync for ArenaRef {}
 
 impl ArenaRef {
@@ -559,8 +573,12 @@ impl ArenaRef {
     /// where part `b` is the only user of row `b`).
     #[allow(clippy::mut_from_ref)] // disjoint-row discipline, see above
     pub unsafe fn row_mut(&self, b: usize) -> &mut [f32] {
-        debug_assert!(b < self.rows);
-        std::slice::from_raw_parts_mut(self.ptr.add(b * self.stride), self.cols)
+        debug_assert!(b < self.rows, "arena row {b} out of bounds ({} rows)", self.rows);
+        debug_assert!(self.cols <= self.stride, "arena row overruns its stride");
+        // SAFETY: `b < rows` keeps the offset inside the arena allocation,
+        // `cols <= stride` keeps the row inside its padded lane, and the
+        // caller guarantees exclusive use of row `b` (see `# Safety`).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(b * self.stride), self.cols) }
     }
 }
 
@@ -598,8 +616,12 @@ pub struct SlotsRef {
     rows: usize,
 }
 
-// SAFETY: each pool part writes a distinct slot index (caller discipline).
+// SAFETY: the view is a plain pointer + row count; sending it to a pool
+// worker is sound because the slots outlive the dispatch (caller
+// discipline, documented on `set`).
 unsafe impl Send for SlotsRef {}
+// SAFETY: shared `&SlotsRef` use never aliases: each pool part writes a
+// distinct slot index, one cache line apart (caller discipline on `set`).
 unsafe impl Sync for SlotsRef {}
 
 impl SlotsRef {
@@ -610,8 +632,11 @@ impl SlotsRef {
     /// outlive the call (both hold within one `ThreadPool::run` where part
     /// `i` is the only writer of slot `i`).
     pub unsafe fn set(&self, i: usize, v: f32) {
-        debug_assert!(i < self.rows);
-        *self.ptr.add(i * LINE_F32) = v;
+        debug_assert!(i < self.rows, "slot {i} out of bounds ({} slots)", self.rows);
+        // SAFETY: `i < rows` keeps the cache-line-strided offset inside the
+        // backing matrix, and the caller guarantees slot `i` has no other
+        // concurrent writer (see `# Safety`).
+        unsafe { *self.ptr.add(i * LINE_F32) = v };
     }
 }
 
@@ -625,8 +650,13 @@ pub struct SliceRef {
     len: usize,
 }
 
-// SAFETY: parts access disjoint ranges (caller discipline, see range_mut).
+// SAFETY: the view is a plain pointer + length; sending it to a pool
+// worker is sound because the borrowed slice outlives the dispatch
+// (caller discipline, documented on `range_mut`).
 unsafe impl Send for SliceRef {}
+// SAFETY: shared `&SliceRef` use never aliases: concurrent parts carve
+// pairwise-disjoint ranges out of the slice (caller discipline on
+// `range_mut`), so no element has two writers.
 unsafe impl Sync for SliceRef {}
 
 impl SliceRef {
@@ -642,8 +672,15 @@ impl SliceRef {
     /// `ThreadPool::run` whose parts split the slice by block).
     #[allow(clippy::mut_from_ref)] // disjoint-range discipline, see above
     pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [f32] {
-        debug_assert!(start <= end && end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+        debug_assert!(
+            start <= end && end <= self.len,
+            "range {start}..{end} out of bounds (len {})",
+            self.len
+        );
+        // SAFETY: `start <= end <= len` keeps the sub-slice inside the
+        // borrowed slice, and the caller guarantees concurrent ranges are
+        // pairwise disjoint (see `# Safety`).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
     }
 }
 

@@ -108,6 +108,7 @@ pub fn iterate_tracked(
 
 /// One POT iteration; allocates its own scratch — prefer [`iterate_into`]
 /// on hot paths.
+// uotlint: allow(alloc) — documented legacy wrapper, not a hot path.
 pub fn iterate(plan: &mut Matrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
     let mut fcol = vec![0f32; plan.cols()];
     let mut rowsum = vec![0f32; plan.rows()];

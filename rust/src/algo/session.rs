@@ -150,6 +150,16 @@
 //! m = n = 16384 in `rust/tests/alloc_free.rs`. Serial/scope/pool matfree
 //! iterations are bit-identical for any fixed partition
 //! (`rust/tests/prop_matfree.rs`).
+//!
+//! # Correctness tooling
+//!
+//! The allocation contract above and the pool's unsafe disjoint-split
+//! arguments are enforced *statically* by the repo's own lint
+//! (`cargo run -p uotlint`: SAFETY-comment coverage, hot-path allocation
+//! bans, spawn/intrinsic encapsulation) and *dynamically* by the Miri /
+//! ThreadSanitizer / AddressSanitizer CI legs over
+//! `rust/tests/miri_edges.rs` and the property suites. See
+//! `EXPERIMENTS.md` §Correctness tooling for how to run each locally.
 
 use std::sync::Arc;
 

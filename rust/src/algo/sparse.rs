@@ -471,6 +471,7 @@ pub fn iterate_tracked_into(
 
 /// One fused sparse MAP-UOT iteration; allocates its own column-factor
 /// scratch — prefer [`iterate_into`] on hot paths.
+// uotlint: allow(alloc) — documented legacy wrapper, not a hot path.
 pub fn iterate(a: &mut CsrMatrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], fi: f32) {
     let mut fcol = vec![0f32; a.n];
     iterate_into(a, colsum, rpd, cpd, fi, &mut fcol);
@@ -479,6 +480,7 @@ pub fn iterate(a: &mut CsrMatrix, colsum: &mut [f32], rpd: &[f32], cpd: &[f32], 
 /// Unfused 4-pass sparse baseline (POT sweep structure on CSR) — the
 /// comparator for the sparse ablation bench. Allocates per call by
 /// design: it models the unfused execution, not a production path.
+// uotlint: allow(alloc) — unfused ablation baseline, allocates by design.
 pub fn iterate_baseline(
     a: &mut CsrMatrix,
     colsum: &mut [f32],

@@ -51,6 +51,19 @@
 //! }
 //! # Ok::<(), map_uot::Error>(())
 //! ```
+//!
+//! ## Correctness tooling
+//!
+//! The `unsafe` surface (SIMD kernels, the pool's disjoint-access views)
+//! is machine-checked: `cargo run -p uotlint` enforces the SAFETY-comment,
+//! hot-path-allocation, and thread/intrinsic-encapsulation contracts
+//! statically, and CI runs Miri, ThreadSanitizer, and AddressSanitizer
+//! legs over the pool/kernel test subsets. See `EXPERIMENTS.md`
+//! §Correctness tooling for how to run each gate locally.
+
+// Unsafe blocks inside unsafe fns must be explicit (and carry their own
+// SAFETY comments — enforced by tools/uotlint).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod algo;
 pub mod apps;

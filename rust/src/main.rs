@@ -8,6 +8,8 @@
 //!   fig      regenerate one paper figure (2..17) or `all`
 //!   info     platform + artifact inventory
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::collections::HashMap;
 
 use map_uot::algo::{

@@ -17,26 +17,38 @@ struct AlignedBuf {
     len: usize,
 }
 
-// SAFETY: AlignedBuf owns its allocation exclusively; f32 is Send + Sync.
+// SAFETY: AlignedBuf is the sole owner of its allocation (no shared
+// pointers escape), so moving it to another thread moves exclusive access
+// with it; f32 has no thread affinity.
 unsafe impl Send for AlignedBuf {}
+// SAFETY: shared access only hands out `&[f32]` (mutation requires
+// `&mut self`), and f32 is Sync.
 unsafe impl Sync for AlignedBuf {}
 
 impl AlignedBuf {
+    /// Allocation layout for `len` f32s; panics (rather than wrapping) if
+    /// the byte size overflows `usize`.
+    fn layout(len: usize) -> Layout {
+        let bytes = len.checked_mul(4).expect("buffer byte size overflows usize");
+        Layout::from_size_align(bytes, CACHE_LINE).expect("layout")
+    }
+
     fn new_zeroed(len: usize) -> Self {
         assert!(len > 0, "empty buffer");
-        let layout = Layout::from_size_align(len * 4, CACHE_LINE).expect("layout");
+        let layout = Self::layout(len);
         // SAFETY: layout has non-zero size (len > 0).
         let ptr = unsafe { alloc_zeroed(layout) } as *mut f32;
         if ptr.is_null() {
             handle_alloc_error(layout);
         }
+        debug_assert_eq!(ptr as usize % CACHE_LINE, 0, "allocator broke the alignment request");
         Self { ptr, len }
     }
 }
 
 impl Drop for AlignedBuf {
     fn drop(&mut self) {
-        let layout = Layout::from_size_align(self.len * 4, CACHE_LINE).expect("layout");
+        let layout = Self::layout(self.len);
         // SAFETY: ptr was allocated with exactly this layout.
         unsafe { dealloc(self.ptr as *mut u8, layout) };
     }
@@ -68,7 +80,8 @@ impl Matrix {
     /// Zero-filled `m × n` matrix.
     pub fn zeros(m: usize, n: usize) -> Self {
         assert!(m > 0 && n > 0, "matrix dims must be positive ({m}x{n})");
-        Self { buf: AlignedBuf::new_zeroed(m * n), m, n }
+        let len = m.checked_mul(n).unwrap_or_else(|| panic!("matrix size overflows ({m}x{n})"));
+        Self { buf: AlignedBuf::new_zeroed(len), m, n }
     }
 
     /// Matrix from a row-major slice.
@@ -234,6 +247,16 @@ mod tests {
     #[should_panic(expected = "dims must be positive")]
     fn zero_dims_panic() {
         let _ = Matrix::zeros(0, 4);
+    }
+
+    /// Regression: `m * n` (and the byte size below it) used to be computed
+    /// with wrapping arithmetic, so adversarial dims could wrap to a tiny
+    /// allocation before `Layout` ever saw the size. Both products are now
+    /// checked and must panic, not wrap.
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn oversized_dims_panic_not_wrap() {
+        let _ = Matrix::zeros(usize::MAX / 2, 3);
     }
 
     #[test]

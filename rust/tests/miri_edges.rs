@@ -1,0 +1,213 @@
+//! Miri-sized edge-case coverage for the partition/pool/tiling machinery.
+//!
+//! The `prop_*` suites sweep shapes and thread ladders far too large for
+//! Miri's interpreter; this file re-exercises exactly the *edges* whose
+//! unsafe disjoint-split arguments are easiest to get wrong — more
+//! threads than rows, empty CSR rows, tile panels wider than the matrix —
+//! on shapes tiny enough that Miri finishes in minutes. CI runs it as
+//!
+//! ```text
+//! MIRIFLAGS="-Zmiri-disable-isolation" \
+//! MAP_UOT_KERNEL=scalar MAP_UOT_TILE=off cargo miri test --test miri_edges
+//! ```
+//!
+//! (isolation off because the cache-topology probe reads sysfs; kernel
+//! forced scalar because Miri has no AVX2 shims — every test below also
+//! pins its policy explicitly, so the env is belt-and-braces). The file
+//! is an ordinary test under `cargo test` too, so the native suite keeps
+//! the same edges covered with the SIMD paths live.
+
+use map_uot::algo::pool::{AffinityHint, Partition};
+use map_uot::algo::{
+    solver_for, KernelKind, KernelPolicy, NnzPartition, ParallelBackend, Problem, SolverKind,
+    SolverSession, SparseProblem, StopRule, Workspace,
+};
+use map_uot::util::Matrix;
+
+/// Scalar, untiled, no streaming stores: the one policy every interpreter
+/// and sanitizer can execute.
+fn scalar_policy() -> KernelPolicy {
+    KernelPolicy::explicit(KernelKind::Scalar, 0, None)
+}
+
+/// `Partition` must tile `0..rows` with disjoint, in-order, non-empty
+/// blocks for every degenerate (rows, threads, cap) combination —
+/// including zero rows, one row, and threads ≫ rows. The pool kernels'
+/// `SliceRef`/`ArenaRef` SAFETY arguments are all phrased in terms of
+/// this property.
+#[test]
+fn partition_tiles_all_degenerate_shapes() {
+    for rows in [0usize, 1, 2, 3, 5, 9] {
+        for threads in [1usize, 2, 3, 4, 8, 16] {
+            for cap in [1usize, 2, 8] {
+                let part = Partition::new(rows, threads, cap);
+                assert!(part.blocks() >= 1, "rows={rows} t={threads} cap={cap}");
+                assert!(
+                    part.blocks() <= threads.max(1) && part.blocks() <= rows.max(1),
+                    "rows={rows} t={threads} cap={cap}: {} blocks",
+                    part.blocks()
+                );
+                let mut next = 0usize;
+                for b in 0..part.blocks() {
+                    let r = part.range(b);
+                    assert_eq!(r.start, next, "rows={rows} t={threads} cap={cap} b={b}");
+                    assert!(rows == 0 || !r.is_empty(), "empty block {b} for rows={rows}");
+                    next = r.end;
+                }
+                assert_eq!(next, rows, "rows={rows} t={threads} cap={cap}: blocks must tile");
+            }
+        }
+    }
+}
+
+/// Same tiling contract for the nnz-balanced CSR partition, on skewed
+/// structures with empty rows — including m < threads, an all-empty
+/// matrix, and a single dense row holding every nonzero.
+#[test]
+fn nnz_partition_tiles_skewed_and_empty_structures() {
+    let cases: &[&[usize]] = &[
+        &[0, 0, 3, 3, 5, 5],  // empty rows interleaved
+        &[0, 0, 0, 0],        // all rows empty
+        &[0, 7],              // one row owns every nonzero
+        &[0],                 // zero rows
+        &[0, 1, 2, 3, 4, 5],  // uniform
+    ];
+    for row_ptr in cases {
+        let m = row_ptr.len() - 1;
+        for threads in [1usize, 2, 4, 16] {
+            let part = NnzPartition::new(row_ptr, threads, threads);
+            assert_eq!(part.rows(), m, "{row_ptr:?} t={threads}");
+            assert!(part.blocks() >= 1);
+            let mut next = 0usize;
+            for b in 0..part.blocks() {
+                let r = part.range(b);
+                assert_eq!(r.start, next, "{row_ptr:?} t={threads} b={b}");
+                assert!(m == 0 || r.end > r.start, "{row_ptr:?} t={threads}: empty block {b}");
+                next = r.end;
+            }
+            assert_eq!(next, m, "{row_ptr:?} t={threads}: blocks must tile");
+        }
+    }
+}
+
+/// Pool engine vs. spawn engine on shapes where threads outnumber rows,
+/// forced scalar so the comparison runs under Miri. Two iterations of
+/// every solver cover the one-phase (MAP-UOT/POT) and two-phase (COFFEE)
+/// pool dispatch paths plus the parked-worker handshake.
+#[test]
+fn pool_bitmatches_spawn_on_tiny_oversubscribed_shapes() {
+    for kind in SolverKind::ALL {
+        for &(m, n) in &[(1usize, 1usize), (2, 3), (3, 5)] {
+            let t = 3; // > m for the first two shapes
+            let p = Problem::random(m, n, 0.7, (m * 13 + n) as u64);
+            let solver = solver_for(kind);
+            let mut ws_spawn = Workspace::with_backend_policy(
+                m,
+                n,
+                t,
+                ParallelBackend::SpawnPerIter,
+                AffinityHint::None,
+                scalar_policy(),
+            );
+            let mut ws_pool = Workspace::with_backend_policy(
+                m,
+                n,
+                t,
+                ParallelBackend::Pool,
+                AffinityHint::None,
+                scalar_policy(),
+            );
+            let mut a = p.plan.clone();
+            let mut cs_a = a.col_sums();
+            let mut b = p.plan.clone();
+            let mut cs_b = b.col_sums();
+            for it in 0..2 {
+                let da = solver.iterate_tracked(&mut a, &mut cs_a, &p.rpd, &p.cpd, p.fi, &mut ws_spawn);
+                let db = solver.iterate_tracked(&mut b, &mut cs_b, &p.rpd, &p.cpd, p.fi, &mut ws_pool);
+                assert_eq!(a.as_slice(), b.as_slice(), "{kind:?} {m}x{n} iter={it}");
+                assert_eq!(da.to_bits(), db.to_bits(), "{kind:?} {m}x{n} iter={it}: deltas");
+            }
+            assert_eq!(cs_a, cs_b, "{kind:?} {m}x{n}: colsums");
+        }
+    }
+}
+
+/// Sparse pool solve with empty rows *and* columns in the support, with
+/// more threads than rows: the nnz-partitioned arena/slice splits must
+/// stay in bounds and bit-match the spawn engine.
+#[test]
+fn sparse_pool_handles_empty_rows_when_oversubscribed() {
+    // Row 1 and column 2 are structurally empty.
+    let plan = Matrix::from_fn(3, 4, |i, j| {
+        if i == 1 || j == 2 { 0.0 } else { (1 + i * 4 + j) as f32 * 0.25 }
+    });
+    let dense = Problem {
+        plan,
+        rpd: vec![0.9, 0.4, 1.3],
+        cpd: vec![0.6, 1.1, 0.8, 1.0],
+        fi: 0.7,
+    };
+    let sp = SparseProblem::from_problem(&dense, 0.0).unwrap();
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 3 };
+    let mut sessions = [ParallelBackend::SpawnPerIter, ParallelBackend::Pool].map(|backend| {
+        SolverSession::builder(SolverKind::MapUot)
+            .threads(5) // > m = 3
+            .backend(backend)
+            .kernel(KernelKind::Scalar)
+            .stop(stop)
+            .build_sparse(&sp)
+    });
+    let reports = sessions.each_mut().map(|s| s.solve_sparse(&sp).unwrap());
+    assert_eq!(reports[0].iters, reports[1].iters);
+    let [spawn, pool] = &sessions;
+    let (a, b) = (spawn.sparse_plan().unwrap(), pool.sparse_plan().unwrap());
+    assert_eq!(a.values, b.values, "sparse pool diverged from spawn");
+    assert!(a.values.iter().all(|v| v.is_finite()));
+}
+
+/// A tile panel wider than the matrix must degrade to the untiled sweep
+/// **bit-for-bit** (`tile_for(n)` rejects the panel, so no out-of-bounds
+/// access is even reachable), while a narrow panel that does not divide
+/// `n` clamps its last panel and agrees within the usual tiled tolerance
+/// (the two-phase tiled sweep reorders the colsum math, so bit equality
+/// is not expected there — see `prop_kernels.rs`).
+#[test]
+fn tile_wider_than_matrix_matches_untiled() {
+    let (m, n) = (4usize, 5usize);
+    let p = Problem::random(m, n, 0.6, 99);
+    let solver = solver_for(SolverKind::MapUot);
+    // tile_cols: untiled reference, wider-than-n, non-dividing narrow.
+    let mut results = Vec::new();
+    for tile_cols in [0usize, 64, 2] {
+        let policy = KernelPolicy::explicit(KernelKind::Scalar, tile_cols, None);
+        let mut ws = Workspace::with_backend_policy(
+            m,
+            n,
+            1,
+            ParallelBackend::SpawnPerIter,
+            AffinityHint::None,
+            policy,
+        );
+        let mut a = p.plan.clone();
+        let mut cs = a.col_sums();
+        for _ in 0..3 {
+            solver.iterate(&mut a, &mut cs, &p.rpd, &p.cpd, p.fi, &mut ws);
+        }
+        results.push((tile_cols, a, cs));
+    }
+    let (_, ref_plan, ref_cs) = &results[0];
+    let (_, wide_plan, wide_cs) = &results[1];
+    assert_eq!(
+        wide_plan.as_slice(),
+        ref_plan.as_slice(),
+        "tile wider than n must take the untiled path bit-for-bit"
+    );
+    assert_eq!(wide_cs, ref_cs, "tile wider than n: colsums diverged");
+    let (_, narrow_plan, narrow_cs) = &results[2];
+    let diff = narrow_plan.max_rel_diff(ref_plan, 1e-6);
+    assert!(diff < 1e-5, "clamped last panel: plan rel diff {diff}");
+    for (a, b) in narrow_cs.iter().zip(ref_cs) {
+        let denom = b.abs().max(1e-6);
+        assert!(((a - b).abs() / denom) < 1e-5, "clamped last panel: colsum {a} vs {b}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Line-oriented lexical pass: split each source line into its *code* part
+//! (string/char literal contents blanked, comments removed) and its
+//! *comment* part (line comments and block-comment interiors).
+//!
+//! The rules only need token-level facts — "does `unsafe` appear as code
+//! on this line", "does the comment above say `SAFETY:`" — so a full
+//! parse is unnecessary; what *is* necessary is never mistaking a comment
+//! or a string literal for code (a doc example mentioning `_mm256_add_ps`
+//! must not trip the intrinsics rule). Block comments carry state across
+//! lines; everything else is line-local.
+
+/// One source line after lexing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked (string
+    /// literals become `""`, char literals become `' '`).
+    pub code: String,
+    /// Comment text on this line (line comment or block-comment interior).
+    pub comment: String,
+}
+
+/// Lex a whole file into per-line code/comment splits.
+pub fn lex(source: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    // Nesting depth of /* */ (Rust block comments nest).
+    let mut block_depth = 0usize;
+    for raw in source.lines() {
+        out.push(lex_line(raw, &mut block_depth));
+    }
+    out
+}
+
+fn lex_line(raw: &str, block_depth: &mut usize) -> Line {
+    let bytes = raw.as_bytes();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if *block_depth > 0 {
+            if bytes[i..].starts_with(b"*/") {
+                *block_depth -= 1;
+                i += 2;
+            } else if bytes[i..].starts_with(b"/*") {
+                *block_depth += 1;
+                i += 2;
+            } else {
+                comment.push(bytes[i] as char);
+                i += 1;
+            }
+            continue;
+        }
+        if bytes[i..].starts_with(b"//") {
+            comment.push_str(&raw[i..]);
+            break;
+        }
+        if bytes[i..].starts_with(b"/*") {
+            *block_depth += 1;
+            i += 2;
+            continue;
+        }
+        match bytes[i] {
+            b'"' => i = skip_string(bytes, i, &mut code),
+            // Raw strings: r"..." / r#"..."# (one guard level is all the
+            // tree uses; deeper nesting would need a counter).
+            b'r' if bytes[i..].starts_with(b"r\"") || bytes[i..].starts_with(b"r#\"") => {
+                i = skip_raw_string(bytes, i, &mut code)
+            }
+            b'\'' => i = skip_char_or_lifetime(bytes, i, &mut code),
+            b => {
+                code.push(b as char);
+                i += 1;
+            }
+        }
+    }
+    Line { code, comment }
+}
+
+/// Skip a `"..."` literal (escapes honored); pushes `""` onto `code`.
+fn skip_string(bytes: &[u8], start: usize, code: &mut String) -> usize {
+    code.push_str("\"\"");
+    let mut i = start + 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    // Unterminated on this line (multi-line string): treat the rest as
+    // literal content. Multi-line strings do not occur in rust/src; if one
+    // appears the next line is misread as code, which is conservative for
+    // every rule (it can only over-report, never hide a violation).
+    i
+}
+
+/// Skip `r"..."` / `r#"..."#`; pushes `""` onto `code`.
+fn skip_raw_string(bytes: &[u8], start: usize, code: &mut String) -> usize {
+    code.push_str("\"\"");
+    let hashed = bytes[start + 1] == b'#';
+    let close: &[u8] = if hashed { b"\"#" } else { b"\"" };
+    let mut i = start + if hashed { 3 } else { 2 };
+    while i < bytes.len() {
+        if bytes[i..].starts_with(close) {
+            return i + close.len();
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Distinguish a char literal (`'x'`, `'\n'`) from a lifetime (`'a`,
+/// `'static`): a char literal closes with `'` within one (possibly
+/// escaped) character; a lifetime never closes. Pushes `' '` for char
+/// literals, the bare quote for lifetimes.
+fn skip_char_or_lifetime(bytes: &[u8], start: usize, code: &mut String) -> usize {
+    let rest = &bytes[start + 1..];
+    let lit_len = match rest {
+        [b'\\', _, b'\'', ..] => Some(4),             // '\n'
+        [c, b'\'', ..] if *c != b'\'' => Some(3),     // 'x'
+        _ => None,
+    };
+    match lit_len {
+        Some(len) => {
+            code.push_str("' '");
+            start + len
+        }
+        None => {
+            code.push('\'');
+            start + 1
+        }
+    }
+}
+
+/// True if `needle` occurs in `hay` as a whole word (not a substring of a
+/// longer identifier).
+pub fn contains_word(hay: &str, needle: &str) -> bool {
+    find_words(hay, needle).next().is_some()
+}
+
+/// Byte offsets of whole-word occurrences of `needle` in `hay`. A word
+/// boundary is only required on the sides where the needle itself starts
+/// or ends with an identifier character (so `".collect()"` matches after
+/// an identifier, but `"collect"` does not match inside `recollect`).
+pub fn find_words<'a>(hay: &'a str, needle: &'a str) -> impl Iterator<Item = usize> + 'a {
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let needs_before = needle.as_bytes().first().copied().is_some_and(is_ident);
+    let needs_after = needle.as_bytes().last().copied().is_some_and(is_ident);
+    hay.match_indices(needle).filter_map(move |(i, _)| {
+        let before_ok = !needs_before || i == 0 || !is_ident(hay.as_bytes()[i - 1]);
+        let end = i + needle.len();
+        let after_ok = !needs_after || end >= hay.len() || !is_ident(hay.as_bytes()[end]);
+        (before_ok && after_ok).then_some(i)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_split_out() {
+        let l = &lex("let x = 1; // SAFETY: fine")[0];
+        assert_eq!(l.code, "let x = 1; ");
+        assert_eq!(l.comment, "// SAFETY: fine");
+    }
+
+    #[test]
+    fn block_comments_span_lines_and_nest() {
+        let src = "a /* one\n /* two */ still\n done */ b";
+        let c = codes(src);
+        assert_eq!(c[0], "a ");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], " b");
+        let l = &lex(src)[1];
+        assert!(l.comment.contains("still"));
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        assert_eq!(codes(r#"call("unsafe // not code")"#)[0], r#"call("")"#);
+        assert_eq!(codes(r#"x = r"vec! inside raw";"#)[0], "x = \"\";");
+        assert_eq!(codes("m = r#\"quoted \" mark\"#;")[0], "m = \"\";");
+        assert_eq!(codes(r#"s = "esc \" quote unsafe";"#)[0], "s = \"\";");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        assert_eq!(codes(r"let c = '\n'; let q = '{';")[0], "let c = ' '; let q = ' ';");
+        assert_eq!(codes("fn f<'a>(x: &'a str) {}")[0], "fn f<'a>(x: &'a str) {}");
+        // A brace inside a char literal must not change brace depth.
+        assert!(!codes("let open = '{';")[0].contains('{'));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(!contains_word("unsafe_op_in_unsafe_fn", "unsafe"));
+        assert!(contains_word("x.collect()", ".collect()"));
+        assert!(!contains_word("recollect()", "collect"));
+    }
+}

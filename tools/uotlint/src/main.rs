@@ -1,0 +1,101 @@
+//! uotlint — repo-local static analysis for the MAP-UOT core.
+//!
+//! Enforces the contracts the solver's soundness and performance rest on
+//! (see [`rules`] for the rule set). Run from anywhere in the workspace:
+//!
+//! ```text
+//! cargo run -p uotlint            # lint rust/src (CI gate; exit 1 on violations)
+//! cargo run -p uotlint -- <path>  # lint another file/tree (rule self-tests, demos)
+//! ```
+//!
+//! Output is `path:line: [rule] message`, one line per violation, plus a
+//! summary with the unsafe-site and exemption counts so audit drift is
+//! visible even when the tree is clean.
+
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let (root, display_prefix) = match std::env::args().nth(1) {
+        Some(arg) => (PathBuf::from(arg), String::new()),
+        // Resolve relative to this crate so `cargo run -p uotlint` works
+        // from any CWD in the workspace.
+        None => (
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src"),
+            "rust/src/".to_string(),
+        ),
+    };
+    if !root.exists() {
+        eprintln!("uotlint: no such path: {}", root.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+
+    let mut violations = 0usize;
+    let mut unsafe_sites = 0usize;
+    let mut alloc_allows = 0usize;
+    for path in &files {
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let rel = if rel.is_empty() {
+            // `root` was a single file: rules key off the path suffix, so
+            // use the file name itself.
+            path.file_name().unwrap_or_default().to_string_lossy().into_owned()
+        } else {
+            rel
+        };
+        let source = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("uotlint: cannot read {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let report = rules::check_file(&rel, &source);
+        unsafe_sites += report.unsafe_sites;
+        alloc_allows += report.alloc_allows;
+        violations += report.violations.len();
+        for v in &report.violations {
+            println!("{display_prefix}{rel}:{}: [{}] {}", v.line, v.rule, v.msg);
+        }
+    }
+
+    println!(
+        "uotlint: {} files, {} unsafe sites, {} allow(alloc) exemptions, {} violation{}",
+        files.len(),
+        unsafe_sites,
+        alloc_allows,
+        violations,
+        if violations == 1 { "" } else { "s" },
+    );
+    if violations == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively gather `.rs` files under `path` (or `path` itself).
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) {
+    if path.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return;
+    }
+    let Ok(entries) = std::fs::read_dir(path) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        collect_rs_files(&entry.path(), out);
+    }
+}

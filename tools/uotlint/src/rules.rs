@@ -1,0 +1,548 @@
+//! The four contract rules.
+//!
+//! * **safety** — every `unsafe` block / fn / impl is immediately preceded
+//!   by a `// SAFETY:` comment (attributes and further comment lines may
+//!   sit between), every `pub unsafe fn` carries a `# Safety` doc section,
+//!   and at most one unsafe block sits on a line (1:1 site-to-comment by
+//!   construction).
+//! * **sendsync** — every `unsafe impl Send`/`Sync` names its
+//!   disjointness/ownership argument in the SAFETY comment.
+//! * **alloc** — the PR 1 allocation contract: no allocating calls inside
+//!   `iterate*` / `fused_*` / `*_pool*` bodies in the hot solver files.
+//!   A documented `// uotlint: allow(alloc)` marker above the fn (or on
+//!   the offending line) grants an exemption; exemptions are counted and
+//!   reported.
+//! * **encapsulation** — thread spawns only in the pool / engine /
+//!   service-lifecycle files; `core::arch` intrinsics only in the kernel
+//!   modules.
+//!
+//! `#[cfg(test)]` at brace depth 0 cuts the rest of the file from the
+//! alloc and spawn rules (tests may allocate and spawn freely); the
+//! safety rules apply everywhere, tests included.
+
+use crate::lexer::{contains_word, find_words, lex, Line};
+
+/// Hot solver files under the allocation contract.
+const HOT_FILES: [&str; 7] = [
+    "algo/mapuot.rs",
+    "algo/pot.rs",
+    "algo/coffee.rs",
+    "algo/sparse.rs",
+    "algo/matfree.rs",
+    "algo/parallel.rs",
+    "algo/kernels.rs",
+];
+
+/// Allocating constructs forbidden in hot-path fn bodies.
+const ALLOC_PATTERNS: [&str; 9] = [
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    ".to_vec()",
+    ".collect()",
+    "Box::new",
+    "String::new",
+    ".to_string()",
+    "format!",
+];
+
+/// Files allowed to touch `std::thread` spawn/scope/Builder, with the
+/// reason each is on the list.
+const SPAWN_ALLOWED: [(&str, &str); 5] = [
+    ("algo/pool.rs", "the persistent worker pool itself"),
+    ("algo/parallel.rs", "the legacy thread::scope dispatch engine"),
+    ("coordinator/service.rs", "coordinator worker lifecycle (spawn-once, not per-solve)"),
+    ("coordinator/pjrt_exec.rs", "the single-threaded PJRT executor thread"),
+    ("bench/figures.rs", "bench harness parallel figure generation (not solver code)"),
+];
+
+/// Files allowed to use raw SIMD intrinsics / `core::arch`.
+const INTRIN_ALLOWED: [&str; 2] = ["algo/kernels.rs", "util/simd.rs"];
+
+/// Vocabulary an `unsafe impl Send`/`Sync` SAFETY comment must draw from
+/// to count as naming its disjointness/ownership argument.
+const SENDSYNC_KEYWORDS: [&str; 13] = [
+    "disjoint",
+    "distinct",
+    "exclusive",
+    "owns",
+    "owner",
+    "sole",
+    "lock",
+    "serialized",
+    "immutable",
+    "atomic",
+    "aliasing",
+    "outlive",
+    "&mut",
+];
+
+/// The escape marker for the alloc rule.
+const ALLOW_ALLOC: &str = "uotlint: allow(alloc)";
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Per-file result.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    /// `unsafe` sites (blocks, fns, impls) seen.
+    pub unsafe_sites: usize,
+    /// Granted `allow(alloc)` exemption markers.
+    pub alloc_allows: usize,
+}
+
+/// Run every rule over one file. `rel` is the path relative to the lint
+/// root (`rust/src`), with `/` separators.
+pub fn check_file(rel: &str, source: &str) -> FileReport {
+    let lines = lex(source);
+    let mut report = FileReport::default();
+    let spawn_allowed = SPAWN_ALLOWED.iter().any(|(f, _)| *f == rel);
+    let intrin_allowed = INTRIN_ALLOWED.contains(&rel);
+    let hot_file = HOT_FILES.contains(&rel);
+
+    let mut depth = 0usize;
+    let mut in_test = false;
+    // Stack of (fn name, brace depth at entry, exempt) for hot fns whose
+    // body the alloc rule scans.
+    let mut hot_fns: Vec<(String, usize, bool)> = Vec::new();
+    // A hot fn header seen but its `{` not yet (multi-line signatures).
+    let mut pending_fn: Option<(String, bool)> = None;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let trimmed = code.trim();
+
+        if !in_test && depth == 0 && trimmed.starts_with("#[cfg(test)]") {
+            in_test = true;
+        }
+        if line.comment.contains(ALLOW_ALLOC) {
+            report.alloc_allows += 1;
+        }
+
+        check_unsafe_sites(&lines, idx, code, &mut report);
+
+        // --- encapsulation: spawns --------------------------------------
+        if !in_test && !spawn_allowed {
+            for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+                if code.contains(pat) {
+                    report.violations.push(Violation {
+                        line: lineno,
+                        rule: "encapsulation",
+                        msg: format!(
+                            "`{pat}` outside the threading allowlist (pool, scope engine, \
+                             service lifecycle) — route compute through `algo::pool`"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // --- encapsulation: intrinsics ----------------------------------
+        if !intrin_allowed && has_intrinsic(code) {
+            report.violations.push(Violation {
+                line: lineno,
+                rule: "encapsulation",
+                msg: "raw SIMD intrinsics outside algo/kernels.rs / util/simd.rs".into(),
+            });
+        }
+
+        // --- allocation contract ----------------------------------------
+        if hot_file && !in_test {
+            track_hot_fn(&lines, idx, code, depth, &mut hot_fns, &mut pending_fn);
+            if let Some((name, _, exempt)) = hot_fns.last() {
+                if !*exempt {
+                    for pat in ALLOC_PATTERNS {
+                        if contains_word(code, pat) && !line.comment.contains(ALLOW_ALLOC) {
+                            report.violations.push(Violation {
+                                line: lineno,
+                                rule: "alloc",
+                                msg: format!(
+                                    "`{pat}` inside hot-path fn `{name}` — use workspace \
+                                     scratch (or justify with `// {ALLOW_ALLOC} — reason`)"
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- brace depth / fn frame upkeep ------------------------------
+        for ch in code.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if let Some((_, entry, _)) = hot_fns.last() {
+                        if depth == *entry {
+                            hot_fns.pop();
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    report
+}
+
+/// The safety + sendsync rules for one line.
+fn check_unsafe_sites(lines: &[Line], idx: usize, code: &str, report: &mut FileReport) {
+    let lineno = idx + 1;
+    let mut blocks_on_line = 0usize;
+    for off in find_words(code, "unsafe") {
+        report.unsafe_sites += 1;
+        let rest = code[off + "unsafe".len()..].trim_start();
+        let above = comment_run_above(lines, idx);
+        if rest.starts_with("impl") {
+            if !above.contains("SAFETY:") {
+                report.violations.push(Violation {
+                    line: lineno,
+                    rule: "safety",
+                    msg: "unsafe impl without an immediately-preceding // SAFETY: comment".into(),
+                });
+            } else if let Some(auto_trait) = send_or_sync(rest) {
+                let lower = above.to_lowercase();
+                if !SENDSYNC_KEYWORDS.iter().any(|k| lower.contains(k)) {
+                    report.violations.push(Violation {
+                        line: lineno,
+                        rule: "sendsync",
+                        msg: format!(
+                            "unsafe impl {auto_trait}: the SAFETY comment must name the \
+                             disjointness/ownership argument (e.g. which accesses are \
+                             disjoint, what is exclusively owned, or what serializes them)"
+                        ),
+                    });
+                }
+            }
+        } else if rest.starts_with("fn") || rest.starts_with("extern") {
+            // `unsafe fn` declaration: a `# Safety` doc section (or a
+            // SAFETY comment, for private helpers) must sit above.
+            if !above.contains("# Safety") && !above.contains("SAFETY:") {
+                report.violations.push(Violation {
+                    line: lineno,
+                    rule: "safety",
+                    msg: "unsafe fn without a `# Safety` doc section".into(),
+                });
+            }
+            // Public unsafe fns specifically need the doc section (the
+            // rendered contract), not just an internal comment.
+            let head = &code[..off];
+            if (head.trim_end().ends_with("pub") || head.contains("pub("))
+                && !above.contains("# Safety")
+            {
+                report.violations.push(Violation {
+                    line: lineno,
+                    rule: "safety",
+                    msg: "pub unsafe fn without a `# Safety` doc section".into(),
+                });
+            }
+        } else {
+            blocks_on_line += 1;
+            if !above.contains("SAFETY:") {
+                report.violations.push(Violation {
+                    line: lineno,
+                    rule: "safety",
+                    msg: "unsafe block without an immediately-preceding // SAFETY: comment"
+                        .into(),
+                });
+            }
+        }
+    }
+    if blocks_on_line > 1 {
+        report.violations.push(Violation {
+            line: lineno,
+            rule: "safety",
+            msg: format!(
+                "{blocks_on_line} unsafe blocks on one line — split them so each carries \
+                 its own SAFETY comment (1:1)"
+            ),
+        });
+    }
+}
+
+/// True if the line's code uses a raw SIMD intrinsic or the arch modules:
+/// an `_mm…_` identifier prefix at an identifier boundary, or a
+/// `core::arch` / `std::arch` path.
+fn has_intrinsic(code: &str) -> bool {
+    if code.contains("core::arch") || code.contains("std::arch") {
+        return true;
+    }
+    let bytes = code.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    code.match_indices("_mm").any(|(i, _)| {
+        let before_ok = i == 0 || !is_ident(bytes[i - 1]);
+        // `_mm_sfence`, `_mm256_add_ps`, `_mm512_…` — next byte is an
+        // underscore or a width digit. Plain `__m256` type names don't
+        // match (and shouldn't: types travel with the intrinsics anyway).
+        before_ok && matches!(bytes.get(i + 3), Some(b'_') | Some(b'0'..=b'9'))
+    })
+}
+
+/// Which auto trait an `impl ...` header implements, if Send/Sync.
+fn send_or_sync(rest: &str) -> Option<&'static str> {
+    let after_impl = rest.strip_prefix("impl")?.trim_start();
+    ["Send", "Sync"].into_iter().find(|t| after_impl.starts_with(t))
+}
+
+/// Comment text of the run of comment-only / attribute-only lines
+/// immediately above `idx` (no blank lines allowed in between).
+fn comment_run_above(lines: &[Line], idx: usize) -> String {
+    let mut texts: Vec<&str> = Vec::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() && !l.comment.trim().is_empty() {
+            texts.push(&l.comment);
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            continue;
+        } else {
+            break;
+        }
+    }
+    texts.join("\n")
+}
+
+/// Track entry into hot-named fns for the alloc rule. Handles multi-line
+/// signatures: the header line names the fn, a later line opens the body
+/// (or a `;` ends a trait declaration without one).
+fn track_hot_fn(
+    lines: &[Line],
+    idx: usize,
+    code: &str,
+    depth: usize,
+    hot_fns: &mut Vec<(String, usize, bool)>,
+    pending_fn: &mut Option<(String, bool)>,
+) {
+    if let Some(off) = find_words(code, "fn").next() {
+        let rest = code[off + 2..].trim_start();
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            let exempt = comment_run_above(lines, idx).contains(ALLOW_ALLOC);
+            let after = &code[off..];
+            if after.contains('{') {
+                if is_hot_name(&name) {
+                    hot_fns.push((name, depth, exempt));
+                }
+                *pending_fn = None;
+            } else if after.contains(';') {
+                *pending_fn = None; // trait declaration, no body
+            } else {
+                *pending_fn = Some((name, exempt));
+            }
+            return;
+        }
+    }
+    if pending_fn.is_some() {
+        if code.contains('{') {
+            if let Some((name, exempt)) = pending_fn.take() {
+                if is_hot_name(&name) {
+                    hot_fns.push((name, depth, exempt));
+                }
+            }
+        } else if code.contains(';') {
+            *pending_fn = None;
+        }
+    }
+}
+
+/// The hot-path name globs: `iterate*`, `fused_*`, `*_pool*`, `pool_*`.
+fn is_hot_name(name: &str) -> bool {
+    name.starts_with("iterate")
+        || name.starts_with("fused_")
+        || name.contains("_pool")
+        || name.starts_with("pool_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violations(rel: &str, src: &str) -> Vec<Violation> {
+        check_file(rel, src).violations
+    }
+
+    fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
+        violations(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    // --- safety: unsafe blocks ------------------------------------------
+
+    #[test]
+    fn unsafe_block_without_comment_is_flagged() {
+        let src = "fn f(p: *mut f32) {\n    let v = unsafe { *p };\n}\n";
+        let v = violations("algo/session.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_block_with_comment_passes() {
+        let src = "fn f(p: *mut f32) {\n    // SAFETY: p is valid.\n    let v = unsafe { *p };\n}\n";
+        assert!(violations("algo/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn attributes_between_comment_and_site_are_ok() {
+        let src = "// SAFETY: sound because reasons.\n#[allow(clippy::mut_from_ref)]\nunsafe impl Send for X {}\n";
+        // Send impl also needs a keyword — "sound because reasons" has none.
+        assert_eq!(rules_of("algo/pool.rs", src), vec!["sendsync"]);
+        let src = "// SAFETY: rows are disjoint.\n#[allow(dead_code)]\nunsafe impl Send for X {}\n";
+        assert!(violations("algo/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_the_comment_run() {
+        let src = "// SAFETY: p is valid.\n\nfn f(p: *mut f32) { let v = unsafe { *p }; }\n";
+        assert_eq!(rules_of("algo/session.rs", src), vec!["safety"]);
+    }
+
+    #[test]
+    fn two_unsafe_blocks_on_one_line_are_flagged() {
+        let src = "// SAFETY: both fine.\nlet (a, b) = (unsafe { *p }, unsafe { *q });\n";
+        let v = violations("algo/session.rs", src);
+        assert!(v.iter().any(|v| v.msg.contains("2 unsafe blocks")), "{v:?}");
+    }
+
+    #[test]
+    fn unsafe_in_comments_and_strings_is_ignored() {
+        let src = "// this mentions unsafe code\nlet s = \"unsafe { }\";\n";
+        assert!(violations("algo/session.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_may_span_lines() {
+        let src = "// SAFETY: the partition is disjoint\n// across every part.\nlet v = unsafe { x.get(0) };\n";
+        assert!(violations("algo/pool.rs", src).is_empty());
+    }
+
+    // --- safety: unsafe fns ---------------------------------------------
+
+    #[test]
+    fn pub_unsafe_fn_needs_safety_doc() {
+        let src = "/// Does things.\npub unsafe fn f() {}\n";
+        let v = violations("algo/pool.rs", src);
+        assert!(v.iter().any(|v| v.msg.contains("# Safety")), "{v:?}");
+        let ok = "/// Does things.\n///\n/// # Safety\n/// Caller must hold the lock.\npub unsafe fn f() {}\n";
+        assert!(violations("algo/pool.rs", ok).is_empty());
+    }
+
+    // --- sendsync -------------------------------------------------------
+
+    #[test]
+    fn send_sync_impls_need_their_own_argument() {
+        // One comment above a *pair* of impls only covers the first; the
+        // second hits the code line above it and fails the safety rule.
+        let src = "// SAFETY: rows are disjoint.\nunsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        let v = violations("algo/pool.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+        assert_eq!(v[0].rule, "safety");
+    }
+
+    #[test]
+    fn sendsync_comment_must_use_the_vocabulary() {
+        let src = "// SAFETY: this is probably fine.\nunsafe impl Sync for X {}\n";
+        assert_eq!(rules_of("algo/pool.rs", src), vec!["sendsync"]);
+        let ok = "// SAFETY: each worker writes a distinct slot.\nunsafe impl Sync for X {}\n";
+        assert!(violations("algo/pool.rs", ok).is_empty());
+    }
+
+    // --- alloc ----------------------------------------------------------
+
+    #[test]
+    fn alloc_in_hot_fn_is_flagged() {
+        let src = "fn iterate_into(n: usize) {\n    let v = vec![0f32; n];\n}\n";
+        let v = violations("algo/mapuot.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "alloc");
+        assert!(v[0].msg.contains("vec!"));
+    }
+
+    #[test]
+    fn alloc_outside_hot_fns_or_hot_files_passes() {
+        // Non-hot fn name in a hot file: allowed (setup/constructor code).
+        let src = "fn with_engine(n: usize) {\n    let v = vec![0f32; n];\n}\n";
+        assert!(violations("algo/mapuot.rs", src).is_empty());
+        // Hot name in a non-hot file: allowed (the contract is scoped).
+        let src = "fn iterate(n: usize) {\n    let v = vec![0f32; n];\n}\n";
+        assert!(violations("apps/color.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multiline_signature_is_tracked() {
+        let src = "fn fused_rows(\n    n: usize,\n) -> f32 {\n    let v: Vec<f32> = (0..n).map(|x| x as f32).collect();\n    v[0]\n}\n";
+        let v = violations("algo/kernels.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].msg.contains(".collect()"));
+    }
+
+    #[test]
+    fn trait_declaration_does_not_open_a_frame() {
+        let src = "trait K {\n    fn fused_rows(\n        &self,\n        n: usize,\n    ) -> f32;\n}\nfn setup(n: usize) {\n    let v = vec![0f32; n];\n}\n";
+        assert!(violations("algo/kernels.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_exempts_and_is_counted() {
+        let src = "// uotlint: allow(alloc) — legacy wrapper.\nfn iterate(n: usize) {\n    let v = vec![0f32; n];\n}\n";
+        let r = check_file("algo/mapuot.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.alloc_allows, 1);
+        let src = "fn iterate(n: usize) {\n    let v = vec![0f32; n]; // uotlint: allow(alloc): bootstrap\n}\n";
+        let r = check_file("algo/mapuot.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.alloc_allows, 1);
+    }
+
+    #[test]
+    fn test_module_is_exempt_from_alloc_and_spawn() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn iterate() { let v = vec![1]; }\n    fn t() { std::thread::spawn(|| {}); }\n}\n";
+        assert!(violations("algo/mapuot.rs", src).is_empty());
+    }
+
+    // --- encapsulation --------------------------------------------------
+
+    #[test]
+    fn spawn_outside_allowlist_is_flagged() {
+        let src = "fn go() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_of("algo/session.rs", src), vec!["encapsulation"]);
+        assert!(violations("algo/pool.rs", src).is_empty());
+        assert!(violations("coordinator/service.rs", src).is_empty());
+    }
+
+    #[test]
+    fn intrinsics_outside_kernels_are_flagged() {
+        let src = "fn go(a: __m256) { let b = _mm256_add_ps(a, a); }\n";
+        assert_eq!(rules_of("algo/session.rs", src), vec!["encapsulation"]);
+        assert!(violations("algo/kernels.rs", src).is_empty());
+        assert!(violations("util/simd.rs", src).is_empty());
+        let sfence = "fn go() { _mm_sfence(); }\n";
+        assert_eq!(rules_of("algo/session.rs", sfence), vec!["encapsulation"]);
+        // Doc comments mentioning intrinsics are not code.
+        let doc = "/// uses _mm256_stream_ps under the hood\nfn f() {}\n";
+        assert!(violations("algo/session.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn unsafe_sites_are_counted() {
+        let src = "// SAFETY: fine, p outlives the call.\nlet v = unsafe { *p };\n";
+        let r = check_file("algo/session.rs", src);
+        assert_eq!(r.unsafe_sites, 1);
+        assert!(r.violations.is_empty());
+    }
+}
