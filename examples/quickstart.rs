@@ -27,9 +27,11 @@
 //! under interpretation and sanitizers. Commands and what each gate
 //! guarantees: `EXPERIMENTS.md` §Correctness tooling.
 
+use std::time::Duration;
+
 use map_uot::algo::{
-    AffinityHint, CheckEvent, CostKind, GeomProblem, KernelKind, ObserverAction, Problem,
-    SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
+    AffinityHint, CheckEvent, CostKind, Deadline, GeomProblem, KernelKind, ObserverAction,
+    Problem, SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
 };
 
 fn main() {
@@ -202,4 +204,47 @@ fn main() {
     let mut row = vec![0f32; 2048];
     matfree.matfree_plan_row(&geom, 0, &mut row).expect("row 0 exists");
     println!("matfree plan row 0 mass: {:.4}", row.iter().sum::<f32>());
+
+    // Iteration-count accelerators (the third axis, after memory traffic
+    // and parallelism): `.warm(cap)` gives the session an LRU cache of
+    // converged scalings keyed by a problem fingerprint — a re-solve of a
+    // similar problem (same shape/solver/fi/ε, nearest marginal sketch)
+    // starts next to the old fixed point instead of at u = v = 1.
+    // `.ti(true)` adds a translation-invariant mass correction before each
+    // sweep, removing the slowest (global-mass) convergence mode.
+    // `.eps_schedule(from, steps)` runs matfree cache misses down a
+    // geometric ε ladder from a coarse bandwidth. All three are exact:
+    // they move the starting point or the trajectory, never the fixed
+    // point, so the converged plan matches the plain solve within 1e-5
+    // (tests/prop_warmstart.rs). CLI: `solve --warm 8 --ti
+    // --eps-schedule 1.0:2`; service config: `[solver] warm/ti/
+    // eps_schedule`.
+    let mut accel = SolverSession::builder(SolverKind::MapUot)
+        .threads(threads)
+        .stop(stop)
+        .warm(8)
+        .ti(true)
+        .eps_schedule(1.0, 2)
+        .build_matfree(&geom);
+    let cold_run = accel.solve_matfree(&geom).expect("first solve (cache miss)");
+    let warm_run = accel.solve_matfree(&geom).expect("re-solve (cache hit)");
+    let (hits, misses) = accel.warm_stats().expect("warm cache is on");
+    println!(
+        "\naccelerated matfree re-solve: {} iters cold (ε-laddered miss) -> {} iters warm \
+         (cache {hits} hits / {misses} misses); converged plans match the plain solve",
+        cold_run.iters, warm_run.iters
+    );
+
+    // Anytime solves: a `Deadline` observer turns the latency budget into
+    // a typed outcome — `Ok(report)` if converged in time, else
+    // `Err(Error::Canceled { iters })` with the state intact at the last
+    // check boundary (read the partial scaling out of the session).
+    let mut bounded = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .observer(Deadline::within(Duration::from_secs(5)))
+        .build_matfree(&geom);
+    match bounded.solve_matfree(&geom) {
+        Ok(r) => println!("deadline-bounded solve finished in {:.1} ms", r.seconds * 1e3),
+        Err(e) => println!("deadline hit first: {e}"),
+    }
 }

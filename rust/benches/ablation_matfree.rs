@@ -57,7 +57,7 @@ fn main() {
         let mut v = vec![1f32; n];
         let mut colsum = vec![0f32; n];
         let mut rowsum = vec![0f32; n];
-        ws.seed_col_sums(&gp, &v, &mut colsum);
+        ws.seed_col_sums(&gp, &u, &v, &mut colsum);
         let mf_ms =
             measure(policy, || ws.iterate(&gp, &mut u, &mut v, &mut colsum, &mut rowsum)) * 1e3;
         let mf_bytes = ws.resident_bytes() + 4 * (u.len() + v.len() + colsum.len() + rowsum.len());

@@ -1,0 +1,151 @@
+//! Ablation: iteration-count accelerators under a drifting request stream.
+//!
+//! The fused sweep already runs at the Roofline minimum of 2 accesses per
+//! element, so the remaining lever is the *number* of sweeps. This bench
+//! replays the service scenario those accelerators target: a stream of
+//! geometric requests whose marginals drift slowly (tracking filters,
+//! frame-to-frame color transfer, minibatched domain adaptation), served
+//! by a matfree-enabled `Service` in four configurations —
+//!
+//!   cold           every request solved from u = v = 1
+//!   warm           per-worker warm-start cache seeds from the previous
+//!                  converged scaling (`[solver] warm`)
+//!   warm+ti        plus translation-invariant sweeps (`[solver] ti`)
+//!   warm+ti+sched  plus the ε ladder for cache misses
+//!                  (`[solver] eps_schedule`)
+//!
+//! Reported per variant: mean iterations-to-tolerance (from the
+//! coordinator's per-request iteration histogram) and p99 latency. Emits
+//! `BENCH_warmstart.json` at the repo root regardless of cwd — env
+//! override `MAP_UOT_WARMSTART_JSON`; set MAP_UOT_BENCH_FAST=1 for the
+//! quick CI pass.
+
+use map_uot::algo::{CostKind, GeomProblem, SolverKind};
+use map_uot::bench::{fast_mode, Table};
+use map_uot::config::ServiceConfig;
+use map_uot::coordinator::Service;
+
+/// The drifting stream: one base geometry, marginals modulated smoothly
+/// per request (total mass drifts too — the mode TI corrects).
+fn stream(n: usize, requests: usize) -> Vec<GeomProblem> {
+    let base = GeomProblem::random(n, n, 3, CostKind::SqEuclidean, 0.25, 0.5, 7);
+    (0..requests)
+        .map(|k| {
+            let mut p = base.clone();
+            let phase = k as f32 / requests as f32 * std::f32::consts::TAU;
+            let row_scale = 1.0 + 0.20 * phase.sin();
+            let col_scale = 1.0 + 0.15 * (phase * 1.7).cos();
+            for r in p.rpd.iter_mut() {
+                *r *= row_scale;
+            }
+            for c in p.cpd.iter_mut() {
+                *c *= col_scale;
+            }
+            p
+        })
+        .collect()
+}
+
+struct VariantResult {
+    name: &'static str,
+    mean_iters: f64,
+    total_iters: u64,
+    p99_ms: f64,
+}
+
+fn run_variant(
+    name: &'static str,
+    warm: usize,
+    ti: bool,
+    eps_schedule: Option<(f32, usize)>,
+    problems: &[GeomProblem],
+) -> VariantResult {
+    // One worker so one session (and its warm cache) serves the whole
+    // stream — the steady state of a pinned shard.
+    let cfg = ServiceConfig {
+        workers: 1,
+        solver: SolverKind::MapUot,
+        matfree: true,
+        warm,
+        ti,
+        eps_schedule,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).expect("bench service config is valid");
+    for p in problems {
+        // Sequential blocking submits: iteration counts must reflect the
+        // drift order, not batching luck.
+        let solved = svc.solve_geom_blocking(p.clone()).expect("bench problems solve");
+        assert!(solved.report.converged, "{name}: stream request failed to converge");
+    }
+    let m = svc.metrics();
+    let out = VariantResult {
+        name,
+        mean_iters: m.mean_iters(),
+        total_iters: m.iterations,
+        p99_ms: m.latency_percentile_ms(99.0),
+    };
+    svc.shutdown();
+    out
+}
+
+fn main() {
+    let (n, requests) = if fast_mode() { (48, 12) } else { (256, 64) };
+    let problems = stream(n, requests);
+    // The ladder starts 4x above the target bandwidth; two rungs.
+    let sched = Some((1.0f32, 2usize));
+
+    let variants = [
+        run_variant("cold", 0, false, None, &problems),
+        run_variant("warm", 8, false, None, &problems),
+        run_variant("warm+ti", 8, true, None, &problems),
+        run_variant("warm+ti+sched", 8, true, sched, &problems),
+    ];
+
+    let cold_mean = variants[0].mean_iters;
+    let mut t = Table::new(
+        format!("Ablation: warm-start / TI / ε-schedule ({n}x{n}, {requests} drifting requests)"),
+        &["variant", "mean iters", "total iters", "p99 ms", "iters vs cold"],
+    );
+    let mut json_rows = String::new();
+    for v in &variants {
+        let speedup = if v.mean_iters > 0.0 { cold_mean / v.mean_iters } else { 0.0 };
+        t.row(&[
+            v.name.into(),
+            format!("{:.1}", v.mean_iters),
+            format!("{}", v.total_iters),
+            format!("{:.2}", v.p99_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        if !json_rows.is_empty() {
+            json_rows.push(',');
+        }
+        json_rows.push_str(&format!(
+            "\n    {{\"variant\": \"{}\", \"mean_iters\": {:.3}, \"total_iters\": {}, \
+             \"p99_ms\": {:.4}, \"iters_speedup_vs_cold\": {:.3}}}",
+            v.name, v.mean_iters, v.total_iters, v.p99_ms, speedup
+        ));
+    }
+    t.print();
+    println!(
+        "\n(read-off: cold pays the full transient on every request; warm re-enters near the\n\
+         previous fixed point, TI removes the global-mass mode the marginal drift excites on\n\
+         top of it, and the ladder only helps the cache-miss requests — so the headline\n\
+         number is the warm+ti row's iters-vs-cold, expected >= 2x on this stream)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"ablation_warmstart\",\n  \"unit\": \"mean_iters_to_tolerance\",\n  \
+         \"n\": {n},\n  \"requests\": {requests},\n  \
+         \"schema\": {{\"rows\": \"[{{variant, mean_iters, total_iters, p99_ms, \
+         iters_speedup_vs_cold}}]\", \
+         \"variant\": \"cold | warm | warm+ti | warm+ti+sched\"}},\n  \"rows\": [{json_rows}\n  ]\n}}\n"
+    );
+    let path = std::env::var("MAP_UOT_WARMSTART_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_warmstart.json").to_string()
+    });
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("[ablation_warmstart] wrote {path}"),
+        Err(e) => eprintln!("[ablation_warmstart] could not write {path}: {e}"),
+    }
+}

@@ -491,6 +491,51 @@ pub fn carried_marginal_error(rowsum: &[f32], colsum: &[f32], rpd: &[f32], cpd: 
     row_err.max(col_err)
 }
 
+/// Seed-pass per-block body shared by the three seeding engines in
+/// [`crate::algo::parallel`] (serial partitioned reference, scope, pool):
+/// regenerate each row of `rows` as `u_i · A_ij · v_j` through the kernel
+/// policy and accumulate its contribution to `NextSum_col` into `local`.
+/// No factors are applied — this is the pure column-sum derivation that
+/// seeds the carried `colsum` at the start of a solve (cold `u = v = 1`,
+/// warm-started, or between ε-schedule rungs). Allocation-free.
+pub(crate) fn matfree_seed_rows(
+    p: &GeomProblem,
+    rows: Range<usize>,
+    u: &[f32],
+    v: &[f32],
+    buf: &mut [f32],
+    local: &mut [f32],
+    policy: &KernelPolicy,
+) {
+    let n = v.len();
+    debug_assert!(buf.len() >= n && local.len() >= n);
+    let buf = &mut buf[..n];
+    local.fill(0.0);
+    let local = &mut local[..n];
+    for i in rows {
+        generate_plan_row(p, i, u[i], v, buf, policy);
+        for (acc, &w) in local.iter_mut().zip(buf.iter()) {
+            *acc += w;
+        }
+    }
+}
+
+/// Hand scaling vectors from bandwidth `eps_old` to `eps_new` (ε-schedule
+/// rung transition): the converged potentials satisfy `u = exp(φ/ε)`, so
+/// holding the dual potential φ fixed across the bandwidth change means
+/// `u ← u^(ε_old/ε_new)` (arXiv:2002.03293's coarse-to-fine handoff in
+/// scaling form). Zero entries stay zero (a dead row/column stays dead);
+/// the exponent is a no-op when the bandwidths match. Allocation-free.
+pub fn carry_potentials(scale: &mut [f32], eps_old: f32, eps_new: f32) {
+    if eps_old == eps_new {
+        return;
+    }
+    let e = eps_old / eps_new;
+    for s in scale.iter_mut() {
+        *s = if *s > 0.0 { s.powf(e) } else { 0.0 };
+    }
+}
+
 // ---------------------------------------------------------------------------
 // MatfreeWorkspace
 // ---------------------------------------------------------------------------
@@ -639,23 +684,56 @@ impl MatfreeWorkspace {
         self.part = Partition::new(m, self.threads, cap);
     }
 
-    /// Seed the carried column sums of the *initial* plan (`u = v = 1`):
-    /// one serial generation pass accumulating `Σ_i A_ij` out of panel 0
-    /// — the matfree analogue of `Matrix::col_sums_into`, run once per
-    /// solve, allocation-free. `v` must be the freshly reset all-ones
-    /// vector.
-    pub fn seed_col_sums(&mut self, p: &GeomProblem, v: &[f32], out: &mut [f32]) {
+    /// Seed the carried column sums of the current scaling state: one
+    /// generation pass accumulating `Σ_i u_i · A_ij · v_j` — the matfree
+    /// analogue of `Matrix::col_sums_into`, run once per solve (and per
+    /// ε-schedule rung), allocation-free. Cold solves pass the all-ones
+    /// vectors; warm starts and rung handoffs pass the carried scalings.
+    ///
+    /// Runs on this workspace's engine through the row partition (valid
+    /// after [`MatfreeWorkspace::prepare`]): serial partitioned reference,
+    /// scope, or the persistent pool — all three share the per-block body
+    /// and the block-ascending reduction, so they are **bit-identical**
+    /// for a fixed partition (`rust/tests/prop_warmstart.rs`).
+    pub fn seed_col_sums(&mut self, p: &GeomProblem, u: &[f32], v: &[f32], out: &mut [f32]) {
         let (m, n) = (p.rows(), p.cols());
         debug_assert_eq!(self.shape, (m, n));
+        debug_assert_eq!(u.len(), m);
         debug_assert_eq!(out.len(), n);
-        out.fill(0.0);
-        let policy = self.policy;
-        let buf = self.panels.row_mut(0);
-        for i in 0..m {
-            generate_plan_row(p, i, 1.0, v, &mut buf[..n], &policy);
-            for (o, &w) in out.iter_mut().zip(buf.iter()) {
-                *o += w;
-            }
+        if self.threads <= 1 {
+            parallel::matfree_seed_partitioned(
+                p,
+                u,
+                v,
+                out,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
+        } else if let Some(pool) = &self.pool {
+            parallel::matfree_seed_pool(
+                p,
+                u,
+                v,
+                out,
+                pool,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
+        } else {
+            parallel::matfree_seed_scope(
+                p,
+                u,
+                v,
+                out,
+                &mut self.panels,
+                &mut self.acc,
+                &self.part,
+                &self.policy,
+            );
         }
     }
 
@@ -892,13 +970,13 @@ mod tests {
             let mut v = vec![1f32; n];
             let mut colsum = vec![0f32; n];
             let mut rowsum = vec![0f32; m];
-            ws.seed_col_sums(&p, &v, &mut colsum);
+            ws.seed_col_sums(&p, &u, &v, &mut colsum);
             for (a, b) in colsum.iter().zip(&cs_dense) {
                 assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "seed colsum {a} vs {b}");
             }
             for it in 0..8 {
                 mapuot::iterate(&mut plan, &mut cs_dense, &p.rpd, &p.cpd, p.fi);
-                ws.iterate(&mut u, &mut v, &mut colsum, &mut rowsum);
+                ws.iterate(&p, &mut u, &mut v, &mut colsum, &mut rowsum);
                 for (j, (a, b)) in colsum.iter().zip(&cs_dense).enumerate() {
                     assert!(
                         (a - b).abs() <= 1e-4 * b.abs().max(1e-3),
@@ -937,16 +1015,56 @@ mod tests {
         let (mut ub, mut vb) = (vec![1f32; m], vec![1f32; n]);
         let (mut ca, mut ra) = (vec![0f32; n], vec![0f32; m]);
         let (mut cb, mut rb) = (vec![0f32; n], vec![0f32; m]);
-        ws_a.seed_col_sums(&p, &va, &mut ca);
-        ws_b.seed_col_sums(&p, &vb, &mut cb);
+        ws_a.seed_col_sums(&p, &ua, &va, &mut ca);
+        ws_b.seed_col_sums(&p, &ub, &vb, &mut cb);
         for _ in 0..5 {
-            ws_a.iterate(&mut ua, &mut va, &mut ca, &mut ra);
-            let _ = ws_b.iterate_tracked(&mut ub, &mut vb, &mut cb, &mut rb);
+            ws_a.iterate(&p, &mut ua, &mut va, &mut ca, &mut ra);
+            let _ = ws_b.iterate_tracked(&p, &mut ub, &mut vb, &mut cb, &mut rb);
         }
         assert_eq!(ua, ub);
         assert_eq!(va, vb);
         assert_eq!(ca, cb);
         assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn carry_potentials_holds_the_dual_fixed() {
+        // u = exp(φ/ε): carrying ε 0.8 → 0.2 must four-fold the log.
+        let mut u = [1.0f32, (2.0f32).exp(), 0.0];
+        carry_potentials(&mut u, 0.8, 0.2);
+        assert_eq!(u[0], 1.0);
+        assert!((u[1] - (8.0f32).exp()).abs() <= 1e-3 * (8.0f32).exp());
+        assert_eq!(u[2], 0.0, "dead entries stay dead");
+        // Same bandwidth: bitwise no-op.
+        let mut w = [0.37f32, 1.91];
+        let before = w;
+        carry_potentials(&mut w, 0.5, 0.5);
+        assert_eq!(w, before);
+    }
+
+    #[test]
+    fn seed_col_sums_accepts_non_uniform_scalings() {
+        // Seeding with (u, v) must equal the materialized column sums of
+        // diag(u)·A·diag(v), not just the all-ones special case.
+        let p = GeomProblem::random(9, 7, 2, CostKind::SqEuclidean, 0.4, 0.7, 21);
+        let (m, n) = (9, 7);
+        let u: Vec<f32> = (0..m).map(|i| 0.5 + 0.25 * i as f32).collect();
+        let v: Vec<f32> = (0..n).map(|j| 2.0 - 0.2 * j as f32).collect();
+        let mut ws = MatfreeWorkspace::new(m, n, 1);
+        ws.prepare(m, n);
+        let mut colsum = vec![0f32; n];
+        ws.seed_col_sums(&p, &u, &v, &mut colsum);
+        let mut row = vec![0f32; n];
+        let mut want = vec![0f32; n];
+        for i in 0..m {
+            generate_plan_row(&p, i, u[i], &v, &mut row, &ws.policy());
+            for (w, &x) in want.iter_mut().zip(row.iter()) {
+                *w += x;
+            }
+        }
+        for (j, (a, b)) in colsum.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1e-6), "col {j}: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -66,6 +66,7 @@ pub mod problem;
 pub mod scaling;
 pub mod session;
 pub mod sparse;
+pub mod warmstart;
 
 pub use convergence::StopRule;
 pub use kernels::{kernel_for, Kernel, KernelKind, KernelPolicy, TileSpec};
@@ -73,10 +74,11 @@ pub use matfree::{CostKind, GeomProblem, MatfreeWorkspace};
 pub use pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 pub use problem::Problem;
 pub use session::{
-    solver_for, CheckEvent, CoffeeSolver, ConvergenceObserver, MapUotSolver, ObserverAction,
-    PotSolver, SessionBuilder, Solver, SolverSession, Workspace,
+    solver_for, CheckEvent, CoffeeSolver, ConvergenceObserver, Deadline, MapUotSolver,
+    ObserverAction, PotSolver, SessionBuilder, Solver, SolverSession, Workspace,
 };
 pub use sparse::{CsrMatrix, NnzPartition, SparseProblem, SparseWorkspace};
+pub use warmstart::{Fingerprint, FingerprintKey, PathKind, WarmCache};
 
 use crate::util::Matrix;
 

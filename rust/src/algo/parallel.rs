@@ -41,7 +41,7 @@
 use std::thread;
 
 use crate::algo::kernels::KernelPolicy;
-use crate::algo::matfree::{matfree_rows_opt, GeomProblem};
+use crate::algo::matfree::{matfree_rows_opt, matfree_seed_rows, GeomProblem};
 use crate::algo::mapuot::{
     fused_rows_opt, scale_by_scalar_and_accumulate_tracked, scale_by_vec_and_sum,
 };
@@ -1047,6 +1047,101 @@ fn matfree_partitioned(
     }
     reduce_acc(colsum, acc, part.blocks());
     delta
+}
+
+// Matfree column-sum seeding (the per-solve `Σ_i u_i · A_ij · v_j` pass
+// that derives the carried `colsum` before iterating — cold, warm-started,
+// or at an ε-schedule rung handoff). Same engine contract as the
+// iteration: all three variants run `matfree::matfree_seed_rows` over the
+// same partition and reduce block-ascending, so for identical inputs they
+// are **bit-identical** (`rust/tests/prop_warmstart.rs`).
+
+/// Partitioned **serial reference** of the matfree seeding pass — the
+/// bit-exactness oracle for the two threaded engines, and the session's
+/// `threads == 1` path.
+pub fn matfree_seed_partitioned(
+    p: &GeomProblem,
+    u: &[f32],
+    v: &[f32],
+    colsum: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    for b in 0..part.blocks() {
+        let r = part.range(b);
+        let local = acc.row_mut(b);
+        let buf = panels.row_mut(b);
+        matfree_seed_rows(p, r, u, v, buf, local, policy);
+    }
+    reduce_acc(colsum, acc, part.blocks());
+}
+
+/// The matfree seeding pass on the `thread::scope` engine.
+pub fn matfree_seed_scope(
+    p: &GeomProblem,
+    u: &[f32],
+    v: &[f32],
+    colsum: &mut [f32],
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    let policy = *policy;
+    thread::scope(|s| {
+        let handles: Vec<_> = panels
+            .rows_mut()
+            .zip(acc.rows_mut())
+            .take(part.blocks())
+            .enumerate()
+            .map(|(b, (buf, local))| {
+                let r = part.range(b);
+                s.spawn(move || matfree_seed_rows(p, r, u, v, buf, local, &policy))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    reduce_acc(colsum, acc, part.blocks());
+}
+
+/// The matfree seeding pass on the persistent pool: zero spawns, zero
+/// allocations, one epoch for the generation sweep + one for the
+/// reduction. `part.blocks()` must not exceed `pool.threads()` (a
+/// workspace built for the pool guarantees this).
+#[allow(clippy::too_many_arguments)]
+pub fn matfree_seed_pool(
+    p: &GeomProblem,
+    u: &[f32],
+    v: &[f32],
+    colsum: &mut [f32],
+    pool: &ThreadPool,
+    panels: &mut AccArena,
+    acc: &mut AccArena,
+    part: &Partition,
+    policy: &KernelPolicy,
+) {
+    debug_assert_eq!(u.len(), p.rows());
+    debug_assert!(part.blocks() <= acc.rows().min(panels.rows()));
+    let panel_arena = panels.shared();
+    let arena = acc.shared();
+    let policy = *policy;
+    pool.run(part.blocks(), |b| {
+        let r = part.range(b);
+        // SAFETY: panel row `b` belongs to part `b` alone.
+        let buf = unsafe { panel_arena.row_mut(b) };
+        // SAFETY: accumulator row `b` belongs to part `b` alone.
+        let local = unsafe { arena.row_mut(b) };
+        matfree_seed_rows(p, r, u, v, buf, local, &policy);
+    });
+    reduce_acc_pool(colsum, acc, part.blocks(), pool);
 }
 
 // ---------------------------------------------------------------------------

@@ -43,6 +43,58 @@ pub fn recip_into(out: &mut [f32], factors: &[f32]) {
     }
 }
 
+/// The total plan mass the damped alternating rescaling is stationary at.
+///
+/// One sweep moves the total mass `s` toward `Σcpd` with exponent `fi`
+/// (column stage) and then toward `Σrpd` with exponent `fi` (row stage);
+/// in log-mass the stationary point of that composition is
+/// `ln M* = ((1 − fi)·ln Σcpd + ln Σrpd) / (2 − fi)`, i.e.
+/// `M* = (Σcpd^(1−fi) · Σrpd)^(1/(2−fi))`. This is where a *plain* solve
+/// ends up, so it is the only translation target the TI correction
+/// ([`ti_rescale`]) may aim at without moving the converged plan. For
+/// `fi = 1` with equal masses it degenerates to the classic balanced
+/// total, as it must.
+pub fn ti_mass_target(rpd_total: f32, cpd_total: f32, fi: f32) -> f32 {
+    (cpd_total.powf(1.0 - fi) * rpd_total).powf(1.0 / (2.0 - fi))
+}
+
+/// Translation-invariant pre-sweep correction (after Séjourné–Vialard–
+/// Peyré, arXiv:2201.00730, adapted to the carried-colsum iteration):
+/// rescale the carried column sums by `β = (s / M*)^((1−fi)/fi)` with
+/// `s = Σ colsum` and `M*` from [`ti_mass_target`], so the next column
+/// factors gain the global term `(M*/s)^(1−fi)` and the column stage
+/// corrects the **global mass mode with effective exponent 1** instead of
+/// `fi`. Plain damped sweeps contract that mode by only `(1 − fi)²` per
+/// iteration — the slowest transient a drifting-marginal stream excites —
+/// while the TI-corrected sweep removes it in one iteration.
+///
+/// Correctness: at the plain iteration's stationary point `s = M*` exactly
+/// (see [`ti_mass_target`]), so `β = 1` and TI solves share the plain
+/// fixed point — the property suite pins TI plans to plain plans at 1e-5.
+/// The tracked `plan_delta` machinery needs no adaptation: factors
+/// computed from the rescaled sums are the factors actually applied, so
+/// in-sweep recovery via their reciprocals stays exact.
+///
+/// No-op (returns 1) for `fi ≥ 1` (undamped sweeps already correct mass
+/// with exponent 1), degenerate sums, or a non-finite β. Allocation-free.
+pub fn ti_rescale(colsum: &mut [f32], mass_target: f32, fi: f32) -> f32 {
+    if !(fi > 0.0 && fi < 1.0) || !(mass_target > 0.0) {
+        return 1.0;
+    }
+    let s: f32 = colsum.iter().sum();
+    if !(s > 0.0) {
+        return 1.0;
+    }
+    let beta = (s / mass_target).powf((1.0 - fi) / fi);
+    if !beta.is_finite() || beta <= 0.0 || beta == 1.0 {
+        return 1.0;
+    }
+    for c in colsum.iter_mut() {
+        *c *= beta;
+    }
+    beta
+}
+
 /// Per-iteration DRAM traffic in matrix-element accesses (paper §3.1),
 /// given `accesses_per_element` from
 /// [`SolverKind::accesses_per_element`](crate::algo::SolverKind::accesses_per_element):
@@ -77,5 +129,52 @@ mod tests {
         let mut out = [0f32; 3];
         factors_into(&mut out, &[1.0, 2.0, 3.0], &[1.0, 1.0, 0.0], 1.0);
         assert_eq!(out, [1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn ti_mass_target_interpolates_the_totals() {
+        // Balanced totals: the stationary mass is that total for any fi.
+        assert!((ti_mass_target(3.0, 3.0, 0.5) - 3.0).abs() < 1e-6);
+        // Unbalanced: strictly between the two totals, and equal to the
+        // closed form (t_c^(1-fi) · t_r)^(1/(2-fi)).
+        let t = ti_mass_target(8.0, 2.0, 0.5);
+        let want = (2f32.powf(0.5) * 8.0).powf(1.0 / 1.5);
+        assert!((t - want).abs() < 1e-5, "{t} vs {want}");
+        assert!(t > 2.0 && t < 8.0);
+    }
+
+    #[test]
+    fn ti_rescale_is_identity_at_the_stationary_mass() {
+        // Column sums already totalling M*: β = 1, sums untouched.
+        let mut colsum = [1.5f32, 0.5, 1.0];
+        let before = colsum;
+        let beta = ti_rescale(&mut colsum, 3.0, 0.6);
+        assert_eq!(beta, 1.0);
+        assert_eq!(colsum, before);
+    }
+
+    #[test]
+    fn ti_rescale_moves_sums_toward_the_target() {
+        // Total 6 against target 3 with fi = 0.5: β = (6/3)^1 = 2 — the
+        // *factors* computed from the doubled sums then shrink the plan by
+        // the full (3/6)^(1-fi) global term.
+        let mut colsum = [4.0f32, 2.0];
+        let beta = ti_rescale(&mut colsum, 3.0, 0.5);
+        assert!((beta - 2.0).abs() < 1e-6);
+        assert_eq!(colsum, [8.0, 4.0]);
+    }
+
+    #[test]
+    fn ti_rescale_guards_degenerate_inputs() {
+        // fi = 1 (undamped) is a documented no-op.
+        let mut colsum = [1.0f32, 2.0];
+        assert_eq!(ti_rescale(&mut colsum, 3.0, 1.0), 1.0);
+        assert_eq!(colsum, [1.0, 2.0]);
+        // Zero column mass cannot produce a correction.
+        let mut zeros = [0.0f32; 2];
+        assert_eq!(ti_rescale(&mut zeros, 3.0, 0.5), 1.0);
+        // Degenerate target leaves the sums alone.
+        assert_eq!(ti_rescale(&mut colsum, 0.0, 0.5), 1.0);
+        assert_eq!(colsum, [1.0, 2.0]);
     }
 }

@@ -151,6 +151,43 @@
 //! iterations are bit-identical for any fixed partition
 //! (`rust/tests/prop_matfree.rs`).
 //!
+//! # Iteration-count accelerators
+//!
+//! Three composable knobs attack the *number* of sweeps rather than the
+//! cost of one (every sweep already runs at the Roofline minimum, so the
+//! remaining perf lever is iterations-to-tolerance):
+//!
+//! * **Warm starting** ([`SessionBuilder::warm`]) — a per-session LRU
+//!   cache ([`crate::algo::warmstart::WarmCache`]) of converged diagonal
+//!   scalings keyed by a problem fingerprint (shape, solve path, solver,
+//!   quantized `fi`/ε, coarse marginal sketch). A solve on a problem near
+//!   a cached one starts from the cached scaling family instead of the
+//!   raw input plan — exact, because every iterate of the damped
+//!   alternating rescaling stays in `diag(u)·plan0·diag(v)` form, so
+//!   re-seeding only moves *along* the iteration's own trajectory space.
+//!   Entries store back on convergence; the steady state is
+//!   allocation-free (asserted in `rust/tests/alloc_free.rs`).
+//! * **Translation-invariant sweeps** ([`SessionBuilder::ti`], after
+//!   Séjourné–Vialard–Peyré, arXiv:2201.00730) — a pre-sweep O(n)
+//!   rescale of the carried column sums
+//!   ([`crate::algo::scaling::ti_rescale`]) that corrects the global-mass
+//!   mode with effective exponent 1 instead of letting the damped sweeps
+//!   contract it by `(1 − fi)²` per iteration. The correction targets the
+//!   plain iteration's own stationary mass, so TI solves converge to the
+//!   same plan (property-pinned at 1e-5 in
+//!   `rust/tests/prop_warmstart.rs`), just in fewer iterations. MAP-UOT
+//!   only; dispatcher-side, so serial/scope/pool stay bit-identical.
+//! * **ε-scheduling** ([`SessionBuilder::eps_schedule`], matfree only) —
+//!   a geometric coarse-to-fine bandwidth ladder (cf. ε-scaling,
+//!   arXiv:2002.03293): solve a few cheap rungs at large ε, carry the
+//!   dual potentials down via [`crate::algo::matfree::carry_potentials`],
+//!   and finish at the target ε already near the fixed point. A warm-start
+//!   hit skips the ladder (the cache seed is better than a coarse solve).
+//!
+//! [`Deadline`] turns any of these into an *anytime* solve: it is a
+//! [`ConvergenceObserver`] that cancels at a wall-clock budget, and the
+//! returned [`Error::Canceled`] carries the iterations completed.
+//!
 //! # Correctness tooling
 //!
 //! The allocation contract above and the pool's unsafe disjoint-split
@@ -162,13 +199,16 @@
 //! `EXPERIMENTS.md` §Correctness tooling for how to run each locally.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::algo::convergence::{self, StopRule};
 use crate::algo::kernels::{KernelKind, KernelPolicy, TileSpec};
 use crate::algo::matfree::{self, GeomProblem, MatfreeWorkspace};
 use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
+use crate::algo::scaling;
 use crate::algo::sparse::{CsrMatrix, SparseProblem, SparseWorkspace};
+use crate::algo::warmstart::{self, WarmCache};
 use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
 use crate::error::{Error, Result};
 use crate::util::{Matrix, Timer};
@@ -750,6 +790,9 @@ pub struct SessionBuilder {
     stop: StopRule,
     check_every: usize,
     observer: Option<Box<dyn ConvergenceObserver>>,
+    warm: usize,
+    ti: bool,
+    eps_schedule: Option<(f32, usize)>,
 }
 
 impl SessionBuilder {
@@ -814,6 +857,35 @@ impl SessionBuilder {
     /// Attach a per-check [`ConvergenceObserver`] (closure or struct).
     pub fn observer(mut self, observer: impl ConvergenceObserver + 'static) -> Self {
         self.observer = Some(Box::new(observer));
+        self
+    }
+
+    /// Warm-start cache capacity (entries). `0` (the default) disables
+    /// warm starting; `cap > 0` attaches a [`WarmCache`] holding up to
+    /// `cap` converged scalings, LRU-evicted. See the module docs
+    /// (*Iteration-count accelerators*) for the exactness argument.
+    pub fn warm(mut self, cap: usize) -> Self {
+        self.warm = cap;
+        self
+    }
+
+    /// Enable translation-invariant sweeps
+    /// ([`crate::algo::scaling::ti_rescale`]): a pre-sweep O(n) mass
+    /// correction that removes the slowest-converging global mode.
+    /// MAP-UOT only — other kinds fail at solve time with
+    /// [`Error::InvalidProblem`]. Default off.
+    pub fn ti(mut self, on: bool) -> Self {
+        self.ti = on;
+        self
+    }
+
+    /// ε-scheduling for matfree solves: a geometric ladder of `steps`
+    /// coarse rungs from bandwidth `from` down to the problem's ε, duals
+    /// carried between rungs. Matfree-only — dense/sparse solves fail with
+    /// [`Error::InvalidProblem`], as does `from ≤ ε` or `steps == 0` (the
+    /// ladder must actually descend). Default off.
+    pub fn eps_schedule(mut self, from: f32, steps: usize) -> Self {
+        self.eps_schedule = Some((from, steps));
         self
     }
 
@@ -886,6 +958,9 @@ impl SessionBuilder {
             colsum: vec![0f32; n],
             sparse: None,
             matfree: None,
+            warm: (self.warm > 0).then(|| WarmCache::new(self.warm)),
+            ti: self.ti,
+            eps_schedule: self.eps_schedule,
         }
     }
 }
@@ -907,6 +982,12 @@ pub struct SolverSession {
     /// Matfree state, populated by the first matfree solve (or
     /// `build_matfree`) and reused across same-shape matfree solves.
     matfree: Option<MatfreeState>,
+    /// Warm-start cache of converged diagonal scalings (`None` = off).
+    warm: Option<WarmCache>,
+    /// Translation-invariant pre-sweep mass correction (MAP-UOT only).
+    ti: bool,
+    /// Geometric ε ladder `(from, steps)` for matfree solves.
+    eps_schedule: Option<(f32, usize)>,
 }
 
 /// The sparse twin of the session's `(plan, colsum, ws)` triple.
@@ -941,7 +1022,17 @@ impl SolverSession {
             stop: StopRule::default(),
             check_every: 8,
             observer: None,
+            warm: 0,
+            ti: false,
+            eps_schedule: None,
         }
+    }
+
+    /// Warm-cache `(hits, misses)` counters, `None` when warm starting is
+    /// off. Lets services and benches read hit rates without holding the
+    /// cache itself.
+    pub fn warm_stats(&self) -> Option<(u64, u64)> {
+        self.warm.as_ref().map(|c| (c.hits(), c.misses()))
     }
 
     /// The resolved kernel/tiling policy of this session's workspace.
@@ -973,6 +1064,7 @@ impl SolverSession {
     /// cancels; cancellation takes effect at the next check boundary, i.e.
     /// within `check_every` iterations.
     pub fn solve(&mut self, problem: &Problem) -> Result<SolveReport> {
+        self.check_accelerators(false)?;
         let timer = Timer::start();
         let (m, n) = (problem.rows(), problem.cols());
         if self.plan.rows() != m || self.plan.cols() != n {
@@ -987,16 +1079,48 @@ impl SolverSession {
         self.plan.col_sums_into(&mut self.colsum);
         let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
 
+        // Warm start: seed from the nearest cached converged scaling. Every
+        // iterate stays in the family diag(u)·plan0·diag(v), so rescaling
+        // the input plan by a cached (u, v) only moves the start *along*
+        // the iteration's own trajectory space — same fixed point, fewer
+        // sweeps when the cached problem is nearby.
+        let fp = self
+            .warm
+            .as_ref()
+            .map(|_| warmstart::fingerprint_dense(self.solver.kind(), problem));
+        if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+            if let Some((uc, vc)) = cache.lookup(fp) {
+                warmstart::scale_dense_plan(&mut self.plan, uc, vc);
+                self.plan.col_sums_into(&mut self.colsum);
+            }
+        }
+        let ti_target = self
+            .ti
+            .then(|| scaling::ti_mass_target(rpd.iter().sum(), cpd.iter().sum(), fi));
+
         let solver = self.solver;
         let (plan, colsum, ws) = (&mut self.plan, &mut self.colsum, &mut self.ws);
-        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
-            let mut delta = 0f32;
-            for _ in 0..steps {
-                delta += solver.iterate_tracked(plan, colsum, rpd, cpd, fi, ws);
+        let report =
+            drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let mut delta = 0f32;
+                for _ in 0..steps {
+                    if let Some(t) = ti_target {
+                        scaling::ti_rescale(colsum, t, fi);
+                    }
+                    delta += solver.iterate_tracked(plan, colsum, rpd, cpd, fi, ws);
+                }
+                let err = ws.marginal_error(plan, rpd, cpd);
+                (delta, err)
+            })?;
+        if report.converged {
+            if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+                let (plan, colsum) = (&self.plan, &self.colsum);
+                cache.store_with(fp, m, n, |u, v| {
+                    warmstart::derive_dense_scaling(&problem.plan, plan, colsum, u, v);
+                });
             }
-            let err = ws.marginal_error(plan, rpd, cpd);
-            (delta, err)
-        })
+        }
+        Ok(report)
     }
 
     /// Solve a **sparse** (CSR) problem — the sparse twin of
@@ -1025,20 +1149,51 @@ impl SolverSession {
                 self.solver.kind().name()
             )));
         }
+        self.check_accelerators(false)?;
         let timer = Timer::start();
         self.ensure_sparse(problem);
-        let st = self.sparse.as_mut().expect("ensure_sparse populated the state");
         let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
+        let (m, n) = (problem.plan.m, problem.plan.n);
 
-        let SparseState { plan, colsum, ws } = st;
-        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
-            let mut delta = 0f32;
-            for _ in 0..steps {
-                delta += ws.iterate_tracked(plan, colsum, rpd, cpd, fi);
+        // Warm start on the retained sparsity pattern: the CSR sweep never
+        // fills structural zeros in or out, so rescaling the seeded values
+        // by a cached (u, v) is the exact sparse analogue of the dense
+        // diagonal-family argument.
+        let fp = self.warm.as_ref().map(|_| warmstart::fingerprint_sparse(problem));
+        if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+            if let Some((uc, vc)) = cache.lookup(fp) {
+                let st = self.sparse.as_mut().expect("ensure_sparse populated the state");
+                warmstart::scale_csr_plan(&mut st.plan, uc, vc);
+                st.plan.col_sums_into(&mut st.colsum);
             }
-            let err = ws.marginal_error(plan, rpd, cpd);
-            (delta, err)
-        })
+        }
+        let ti_target = self
+            .ti
+            .then(|| scaling::ti_mass_target(rpd.iter().sum(), cpd.iter().sum(), fi));
+
+        let st = self.sparse.as_mut().expect("ensure_sparse populated the state");
+        let SparseState { plan, colsum, ws } = st;
+        let report =
+            drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let mut delta = 0f32;
+                for _ in 0..steps {
+                    if let Some(t) = ti_target {
+                        scaling::ti_rescale(colsum, t, fi);
+                    }
+                    delta += ws.iterate_tracked(plan, colsum, rpd, cpd, fi);
+                }
+                let err = ws.marginal_error(plan, rpd, cpd);
+                (delta, err)
+            })?;
+        if report.converged {
+            if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+                let st = self.sparse.as_ref().expect("state retained across the solve");
+                cache.store_with(fp, m, n, |u, v| {
+                    warmstart::derive_csr_scaling(&problem.plan, &st.plan, &st.colsum, u, v);
+                });
+            }
+        }
+        Ok(report)
     }
 
     /// The CSR plan produced by the most recent
@@ -1117,18 +1272,136 @@ impl SolverSession {
                 self.solver.kind().name()
             )));
         }
+        self.check_accelerators(true)?;
+        if let Some((from, steps)) = self.eps_schedule {
+            if !(from.is_finite() && from > problem.epsilon) {
+                return Err(Error::InvalidProblem(format!(
+                    "eps_schedule start bandwidth {from} must be finite and above the \
+                     problem's target ε = {} (the ladder descends)",
+                    problem.epsilon
+                )));
+            }
+            if steps == 0 {
+                return Err(Error::InvalidProblem(
+                    "eps_schedule needs at least one coarse rung (steps >= 1)".into(),
+                ));
+            }
+        }
         let timer = Timer::start();
         self.ensure_matfree(problem);
+        let (m, n) = (problem.rows(), problem.cols());
+        let fi = problem.fi;
+
+        // Warm start: copy the cached scaling vectors straight in — for the
+        // matfree path (u, v) *is* the solver state, so the seed is exact by
+        // construction — and re-derive the carried column sums they imply.
+        let fp = self.warm.as_ref().map(|_| warmstart::fingerprint_matfree(problem));
+        let mut warm_hit = false;
+        if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+            if let Some((uc, vc)) = cache.lookup(fp) {
+                let st = self.matfree.as_mut().expect("ensure_matfree populated the state");
+                st.u.copy_from_slice(uc);
+                st.v.copy_from_slice(vc);
+                let MatfreeState { u, v, colsum, ws, .. } = st;
+                ws.seed_col_sums(problem, u, v, colsum);
+                warm_hit = true;
+            }
+        }
+        let ti_target = self.ti.then(|| {
+            scaling::ti_mass_target(problem.rpd.iter().sum(), problem.cpd.iter().sum(), fi)
+        });
+
         let st = self.matfree.as_mut().expect("ensure_matfree populated the state");
         let MatfreeState { u, v, colsum, rowsum, ws } = st;
-        drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
-            let mut delta = 0f32;
-            for _ in 0..steps {
-                delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
+
+        // ε ladder: a few relaxed-tolerance rungs at geometrically shrinking
+        // bandwidth, duals carried down between rungs (u ← u^(ε_old/ε_new)
+        // holds φ = ε·ln u fixed). A warm hit skips the ladder — the cached
+        // scaling is already at the target ε and better than a coarse solve.
+        let mut prior_iters = 0usize;
+        if !warm_hit {
+            if let Some((from, steps)) = self.eps_schedule {
+                let mut coarse = problem.clone();
+                let ratio = (problem.epsilon / from).powf(1.0 / steps as f32);
+                // Coarse rungs only position the duals; they neither need the
+                // final tolerance nor deserve the full iteration budget.
+                const EPS_RUNG_TOL_FACTOR: f32 = 10.0;
+                let rung_stop = StopRule {
+                    tol: self.stop.tol * EPS_RUNG_TOL_FACTOR,
+                    delta_tol: self.stop.delta_tol * EPS_RUNG_TOL_FACTOR,
+                    max_iter: (self.stop.max_iter / (steps + 1)).max(self.check_every),
+                };
+                let mut eps_prev = from;
+                for k in 0..steps {
+                    coarse.epsilon = from * ratio.powi(k as i32);
+                    if k > 0 {
+                        matfree::carry_potentials(u, eps_prev, coarse.epsilon);
+                        matfree::carry_potentials(v, eps_prev, coarse.epsilon);
+                    }
+                    ws.seed_col_sums(&coarse, u, v, colsum);
+                    eps_prev = coarse.epsilon;
+                    let cp = &coarse;
+                    let rung = drive_loop(
+                        Timer::start(),
+                        rung_stop,
+                        self.check_every,
+                        &mut self.observer,
+                        |burst| {
+                            let mut delta = 0f32;
+                            for _ in 0..burst {
+                                if let Some(t) = ti_target {
+                                    scaling::ti_rescale(colsum, t, fi);
+                                }
+                                delta += ws.iterate_tracked(cp, u, v, colsum, rowsum);
+                            }
+                            let err = matfree::carried_marginal_error(
+                                rowsum, colsum, &cp.rpd, &cp.cpd,
+                            );
+                            (delta, err)
+                        },
+                    )
+                    .map_err(|e| match e {
+                        Error::Canceled { iters } => {
+                            Error::Canceled { iters: iters + prior_iters }
+                        }
+                        other => other,
+                    })?;
+                    prior_iters += rung.iters;
+                }
+                matfree::carry_potentials(u, eps_prev, problem.epsilon);
+                matfree::carry_potentials(v, eps_prev, problem.epsilon);
+                ws.seed_col_sums(problem, u, v, colsum);
             }
-            let err = matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
-            (delta, err)
-        })
+        }
+
+        let mut report =
+            drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let mut delta = 0f32;
+                for _ in 0..steps {
+                    if let Some(t) = ti_target {
+                        scaling::ti_rescale(colsum, t, fi);
+                    }
+                    delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
+                }
+                let err =
+                    matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
+                (delta, err)
+            })
+            .map_err(|e| match e {
+                Error::Canceled { iters } => Error::Canceled { iters: iters + prior_iters },
+                other => other,
+            })?;
+        report.iters += prior_iters;
+        if report.converged {
+            if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+                let st = self.matfree.as_ref().expect("state retained across the solve");
+                cache.store_with(fp, m, n, |cu, cv| {
+                    cu.copy_from_slice(&st.u);
+                    cv.copy_from_slice(&st.v);
+                });
+            }
+        }
+        Ok(report)
     }
 
     /// The scaling vectors `(u, v)` of the most recent
@@ -1224,7 +1497,30 @@ impl SolverSession {
         st.v.fill(1.0);
         st.rowsum.fill(0.0);
         st.ws.prepare(problem.rows(), problem.cols());
-        st.ws.seed_col_sums(problem, &st.v, &mut st.colsum);
+        st.ws.seed_col_sums(problem, &st.u, &st.v, &mut st.colsum);
+    }
+
+    /// Shared guard for the accelerator knobs: TI is a MAP-UOT mass
+    /// correction (meaningless for the POT/COFFEE comparator loops), and
+    /// the ε ladder only exists where there is an ε — the matfree path.
+    /// Loud typed errors beat silently ignoring a requested accelerator.
+    fn check_accelerators(&self, matfree_path: bool) -> Result<()> {
+        if self.ti && self.solver.kind() != SolverKind::MapUot {
+            return Err(Error::InvalidProblem(format!(
+                "translation-invariant sweeps correct the MAP-UOT iteration; this session \
+                 is {} — build it with SolverKind::MapUot",
+                self.solver.kind().name()
+            )));
+        }
+        if !matfree_path {
+            if let Some((from, steps)) = self.eps_schedule {
+                return Err(Error::InvalidProblem(format!(
+                    "eps_schedule({from}, {steps}) applies to the matfree bandwidth ladder \
+                     only; dense and sparse solves have no ε to schedule"
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// [`SolverSession::solve`] plus a clone of the result plan (the clone
@@ -1240,6 +1536,91 @@ impl SolverSession {
     /// Per-item results, so one canceled/failed solve does not sink a batch.
     pub fn solve_batch(&mut self, problems: &[Problem]) -> Vec<Result<(Matrix, SolveReport)>> {
         problems.iter().map(|p| self.solve_cloned(p)).collect()
+    }
+
+    /// [`SolverSession::solve_sparse`] plus a clone of the CSR result —
+    /// the sparse comparator twin of [`SolverSession::solve_cloned`], so
+    /// equivalence tests and benches can hold results from several solves
+    /// at once. The clone is the one permitted allocation.
+    pub fn solve_sparse_cloned(
+        &mut self,
+        problem: &SparseProblem,
+    ) -> Result<(CsrMatrix, SolveReport)> {
+        let report = self.solve_sparse(problem)?;
+        let plan = self.sparse.as_ref().expect("solve_sparse populated the state").plan.clone();
+        Ok((plan, report))
+    }
+
+    /// Sparse batch through one workspace — same reuse and per-item-result
+    /// contracts as [`SolverSession::solve_batch`].
+    pub fn solve_sparse_batch(
+        &mut self,
+        problems: &[SparseProblem],
+    ) -> Vec<Result<(CsrMatrix, SolveReport)>> {
+        problems.iter().map(|p| self.solve_sparse_cloned(p)).collect()
+    }
+
+    /// [`SolverSession::solve_matfree`] plus a **materialized** dense plan —
+    /// the matfree comparator twin of [`SolverSession::solve_cloned`]. This
+    /// densification is the deliberate O(m·n) allocation of
+    /// [`SolverSession::matfree_materialize`]; the solve itself stays
+    /// O(m + n).
+    pub fn solve_matfree_cloned(
+        &mut self,
+        problem: &GeomProblem,
+    ) -> Result<(Matrix, SolveReport)> {
+        let report = self.solve_matfree(problem)?;
+        let plan = self.matfree_materialize(problem)?;
+        Ok((plan, report))
+    }
+
+    /// Matfree batch through one workspace — same reuse and per-item-result
+    /// contracts as [`SolverSession::solve_batch`]. Combined with
+    /// [`SessionBuilder::warm`], a drifting stream of near-identical
+    /// geometries re-seeds each solve from the previous answers.
+    pub fn solve_matfree_batch(
+        &mut self,
+        problems: &[GeomProblem],
+    ) -> Vec<Result<(Matrix, SolveReport)>> {
+        problems.iter().map(|p| self.solve_matfree_cloned(p)).collect()
+    }
+}
+
+/// Wall-clock budget as a [`ConvergenceObserver`]: cancels the solve at
+/// the first check boundary past the deadline, turning any solve —
+/// including a warm/TI/ε-scheduled one — into an *anytime* computation.
+/// The [`Error::Canceled`] it produces carries the iterations completed,
+/// and the session state holds the best plan so far (the matfree scaling
+/// vectors / dense plan buffer are valid at every boundary).
+///
+/// Deadline checks cost one `Instant::now()` per check boundary — they are
+/// amortized by `check_every` exactly like the stop rule, and allocate
+/// nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    deadline: Instant,
+}
+
+impl Deadline {
+    /// Cancel solves at `budget` from now.
+    pub fn within(budget: Duration) -> Self {
+        Self { deadline: Instant::now() + budget }
+    }
+
+    /// Cancel solves at an absolute instant (shared across several solves:
+    /// the whole sequence obeys one budget).
+    pub fn at(deadline: Instant) -> Self {
+        Self { deadline }
+    }
+}
+
+impl ConvergenceObserver for Deadline {
+    fn on_check(&mut self, _event: CheckEvent) -> ObserverAction {
+        if Instant::now() >= self.deadline {
+            ObserverAction::Cancel
+        } else {
+            ObserverAction::Continue
+        }
     }
 }
 
@@ -1295,6 +1676,9 @@ impl std::fmt::Debug for SolverSession {
             .field("observer", &self.observer.is_some())
             .field("sparse", &self.sparse.is_some())
             .field("matfree", &self.matfree.is_some())
+            .field("warm", &self.warm.as_ref().map(|c| c.capacity()))
+            .field("ti", &self.ti)
+            .field("eps_schedule", &self.eps_schedule)
             .finish()
     }
 }
@@ -1675,5 +2059,157 @@ mod tests {
             Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
             other => panic!("expected Canceled, got {other:?}"),
         }
+    }
+
+    /// A warm re-solve of the same problem starts *at* the cached converged
+    /// scaling, so it finishes at the first check boundary and reproduces
+    /// the cold plan (within the cache's derive/re-apply rounding).
+    #[test]
+    fn warm_resolve_hits_and_matches_the_cold_plan() {
+        let p = Problem::random(20, 16, 0.7, 11);
+        let mut cold = SolverSession::builder(SolverKind::MapUot).check_every(2).build(&p);
+        let cold_report = cold.solve(&p).unwrap();
+        assert!(cold_report.converged);
+
+        let mut warm = SolverSession::builder(SolverKind::MapUot)
+            .check_every(2)
+            .warm(4)
+            .build(&p);
+        assert_eq!(warm.warm_stats(), Some((0, 0)));
+        let first = warm.solve(&p).unwrap();
+        assert!(first.converged);
+        assert_eq!(warm.warm_stats(), Some((0, 1)), "first solve must miss");
+        let second = warm.solve(&p).unwrap();
+        assert_eq!(warm.warm_stats(), Some((1, 1)), "re-solve must hit");
+        assert!(
+            second.iters <= first.iters,
+            "warm {} vs cold {} iterations",
+            second.iters,
+            first.iters
+        );
+        assert!(warm.plan().max_rel_diff(cold.plan(), 1e-6) < 1e-5);
+    }
+
+    #[test]
+    fn warm_stats_is_none_when_warm_is_off() {
+        let p = Problem::random(8, 8, 0.7, 1);
+        let mut session = SolverSession::builder(SolverKind::MapUot).build(&p);
+        assert_eq!(session.warm_stats(), None);
+        session.solve(&p).unwrap();
+        assert_eq!(session.warm_stats(), None);
+    }
+
+    /// TI sweeps share the plain fixed point: same converged plan at 1e-5,
+    /// never more iterations on a mass-imbalanced problem.
+    #[test]
+    fn ti_solve_matches_plain_plan() {
+        let p = Problem::random(18, 14, 0.5, 23);
+        let mut plain = SolverSession::builder(SolverKind::MapUot).check_every(1).build(&p);
+        let rp = plain.solve(&p).unwrap();
+        let mut ti = SolverSession::builder(SolverKind::MapUot)
+            .check_every(1)
+            .ti(true)
+            .build(&p);
+        let rt = ti.solve(&p).unwrap();
+        assert!(rp.converged && rt.converged);
+        assert!(ti.plan().max_rel_diff(plain.plan(), 1e-6) < 1e-5);
+    }
+
+    #[test]
+    fn ti_rejects_non_mapuot_kinds() {
+        let p = Problem::random(8, 8, 0.7, 1);
+        for kind in [SolverKind::Pot, SolverKind::Coffee] {
+            let mut session = SolverSession::builder(kind).ti(true).build(&p);
+            match session.solve(&p) {
+                Err(Error::InvalidProblem(_)) => {}
+                other => panic!("{}: expected InvalidProblem, got {other:?}", kind.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn eps_schedule_is_matfree_only_and_validated() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = Problem::random(8, 8, 0.7, 1);
+        let mut dense = SolverSession::builder(SolverKind::MapUot)
+            .eps_schedule(2.0, 3)
+            .build(&p);
+        assert!(matches!(dense.solve(&p), Err(Error::InvalidProblem(_))));
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut sparse = SolverSession::builder(SolverKind::MapUot)
+            .eps_schedule(2.0, 3)
+            .build_sparse(&sp);
+        assert!(matches!(sparse.solve_sparse(&sp), Err(Error::InvalidProblem(_))));
+        // The ladder must descend toward the target ε and have ≥1 rung.
+        let gp = GeomProblem::random(10, 8, 2, CostKind::SqEuclidean, 0.5, 0.7, 2);
+        let mut flat = SolverSession::builder(SolverKind::MapUot)
+            .eps_schedule(0.5, 3)
+            .build_matfree(&gp);
+        assert!(matches!(flat.solve_matfree(&gp), Err(Error::InvalidProblem(_))));
+        let mut zero = SolverSession::builder(SolverKind::MapUot)
+            .eps_schedule(2.0, 0)
+            .build_matfree(&gp);
+        assert!(matches!(zero.solve_matfree(&gp), Err(Error::InvalidProblem(_))));
+    }
+
+    /// The ε ladder lands on the same answer as a plain matfree solve —
+    /// the coarse rungs only reposition the start.
+    #[test]
+    fn eps_schedule_converges_to_the_plain_answer() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = GeomProblem::random(18, 14, 3, CostKind::SqEuclidean, 0.3, 0.7, 5);
+        let mut plain = SolverSession::builder(SolverKind::MapUot).check_every(1).build_matfree(&p);
+        let rp = plain.solve_matfree(&p).unwrap();
+        let mut laddered = SolverSession::builder(SolverKind::MapUot)
+            .check_every(1)
+            .eps_schedule(1.2, 3)
+            .build_matfree(&p);
+        let rl = laddered.solve_matfree(&p).unwrap();
+        assert!(rp.converged && rl.converged);
+        let a = plain.matfree_materialize(&p).unwrap();
+        let b = laddered.matfree_materialize(&p).unwrap();
+        assert!(b.max_rel_diff(&a, 1e-6) < 1e-4);
+        // Reported iterations include the ladder rungs.
+        assert!(rl.iters >= 3);
+    }
+
+    #[test]
+    fn deadline_observer_cancels_with_typed_error() {
+        let p = Problem::random(16, 16, 0.7, 9);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .check_every(4)
+            .stop(StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 1_000_000 })
+            .observer(Deadline::within(Duration::from_millis(0)))
+            .build(&p);
+        match session.solve(&p) {
+            Err(Error::Canceled { iters }) => assert_eq!(iters, 4),
+            other => panic!("expected Canceled, got {other:?}"),
+        }
+    }
+
+    /// The cloned/batch comparators return exactly what the in-place
+    /// solves left in the session state.
+    #[test]
+    fn sparse_and_matfree_comparators_match_in_place_state() {
+        use crate::algo::matfree::{CostKind, GeomProblem};
+        let p = Problem::random(14, 12, 0.7, 8);
+        let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
+        let mut session = SolverSession::builder(SolverKind::MapUot).build_sparse(&sp);
+        let (plan, report) = session.solve_sparse_cloned(&sp).unwrap();
+        assert!(report.iters > 0);
+        assert_eq!(plan.values, session.sparse_plan().unwrap().values);
+        let batch = session.solve_sparse_batch(std::slice::from_ref(&sp));
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].as_ref().unwrap().0.values, plan.values);
+
+        let gp = GeomProblem::random(12, 10, 2, CostKind::SqEuclidean, 0.4, 0.7, 3);
+        let mut mf = SolverSession::builder(SolverKind::MapUot).build_matfree(&gp);
+        let (dense, mf_report) = mf.solve_matfree_cloned(&gp).unwrap();
+        assert!(mf_report.iters > 0);
+        let materialized = mf.matfree_materialize(&gp).unwrap();
+        assert_eq!(dense.as_slice(), materialized.as_slice());
+        let mf_batch = mf.solve_matfree_batch(std::slice::from_ref(&gp));
+        assert_eq!(mf_batch.len(), 1);
+        assert_eq!(mf_batch[0].as_ref().unwrap().0.as_slice(), dense.as_slice());
     }
 }

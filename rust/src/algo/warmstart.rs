@@ -1,0 +1,556 @@
+//! Warm-start scaling cache: seed solves from the nearest converged answer.
+//!
+//! Production traffic is repetitive — same shapes, drifting marginals — and
+//! every solver in this crate is a diagonal-scaling iteration: the state it
+//! converges to is `plan = diag(u) · plan₀ · diag(v)` for some positive
+//! vectors `u, v` (explicitly carried on the matfree path, implicit in the
+//! dense/CSR plan). Those vectors are therefore a complete, O(m + n) summary
+//! of a converged solve, and an excellent seed for the *next* solve of a
+//! nearby problem: seeding rescales the initial plan **within the diagonal
+//! family the iteration searches anyway**, so the fixed point is unchanged
+//! (the property suite pins warm-seeded plans to cold plans at 1e-5) while
+//! the transient the iteration would spend re-deriving the scalings is
+//! skipped.
+//!
+//! [`WarmCache`] is a fixed-capacity LRU over such `(u, v)` pairs:
+//!
+//! * **Key** ([`Fingerprint`]): an exact structural part — shape, solve
+//!   path (dense/CSR/matfree), solver kind, quantized `fi` and (matfree)
+//!   quantized `ln ε` — plus a coarse marginal sketch (total masses and
+//!   normalized first moments of `rpd`/`cpd`). Lookups match the
+//!   structural part exactly and take the **nearest** sketch, so a
+//!   drifting-marginal stream keeps hitting the entry it drifted from.
+//! * **Eviction**: least-recently-used by a monotone tick; storing a
+//!   fingerprint whose sketch is (numerically) the one already cached
+//!   overwrites that entry in place.
+//! * **Allocation contract**: `lookup` never allocates; `store_with` only
+//!   allocates while the cache is filling or when an evicted entry's
+//!   buffers must grow. A steady-state stream over warmed shapes is
+//!   allocation-free end to end (asserted in `rust/tests/alloc_free.rs`).
+//!
+//! Dense and CSR sessions do not carry `u, v` explicitly, so the session
+//! recovers them at store time from the untouched initial plan and the
+//! solved plan ([`derive_dense_scaling`] / [`derive_csr_scaling`]): the row
+//! factors come from final-vs-initial row sums, the column factors from the
+//! final column sums against the row-rescaled initial plan. The recovery is
+//! exact when the solve's net effect is a diagonal rescaling (it is, up to
+//! f32 rounding) and merely approximate otherwise — which is safe either
+//! way, because a seed only relocates the start point; the solve still runs
+//! to its own stop rule.
+
+use crate::algo::matfree::GeomProblem;
+use crate::algo::problem::Problem;
+use crate::algo::sparse::{CsrMatrix, SparseProblem};
+use crate::algo::SolverKind;
+use crate::util::Matrix;
+
+/// Which solve path a cached scaling belongs to. Paths never share entries:
+/// a dense `(u, v)` recovered at one shape is meaningless to the matfree
+/// sweep's explicit scaling vectors even at the same shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PathKind {
+    /// Dense fused sweep ([`crate::algo::session::SolverSession::solve`]).
+    Dense,
+    /// CSR sweep (`solve_sparse`).
+    Sparse,
+    /// Materialization-free scaling-form sweep (`solve_matfree`).
+    Matfree,
+}
+
+/// `fi` quantization step: 1/256 ≈ 0.004 — coarser than any fi two
+/// problems would meaningfully differ by, fine enough that distinct
+/// relaxation regimes never share seeds.
+const FI_QUANT: f32 = 256.0;
+/// `ln ε` quantization step: 1/16 — entries within ~6% bandwidth reuse
+/// each other's scalings (the ε-schedule's own rung ratio is far coarser).
+const EPS_QUANT: f32 = 16.0;
+/// Squared relative sketch distance below which a store overwrites the
+/// cached entry instead of inserting a sibling: numerically the same
+/// problem re-solved.
+const SAME_SKETCH: f32 = 1e-9;
+
+/// Exact-match structural half of a [`Fingerprint`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FingerprintKey {
+    pub rows: usize,
+    pub cols: usize,
+    pub path: PathKind,
+    pub solver: SolverKind,
+    /// `round(fi · 256)`.
+    pub fi_q: i32,
+    /// `round(ln ε · 16)` on the matfree path, 0 elsewhere.
+    pub eps_q: i32,
+}
+
+/// Problem fingerprint: exact structural key + coarse marginal sketch
+/// (`[Σ rpd, Σ cpd, first moment of rpd, first moment of cpd]`, moments
+/// normalized to `[0, 1]` by index and total mass).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fingerprint {
+    pub key: FingerprintKey,
+    pub sketch: [f32; 4],
+}
+
+fn mass_of(w: &[f32]) -> f32 {
+    w.iter().sum()
+}
+
+/// Normalized first moment of a marginal: `Σ_i ((i + ½)/len) · w_i / Σ w` —
+/// a one-number shape summary that separates "mass moved left" from "mass
+/// moved right" drifts the totals alone cannot see.
+fn moment_of(w: &[f32]) -> f32 {
+    let total = mass_of(w);
+    if !(total > 0.0) {
+        return 0.0;
+    }
+    let scale = 1.0 / w.len() as f32;
+    let mut acc = 0f32;
+    for (i, &x) in w.iter().enumerate() {
+        acc += (i as f32 + 0.5) * scale * x;
+    }
+    acc / total
+}
+
+fn sketch_of(rpd: &[f32], cpd: &[f32]) -> [f32; 4] {
+    [mass_of(rpd), mass_of(cpd), moment_of(rpd), moment_of(cpd)]
+}
+
+/// Squared relative L2 distance between sketches (component-wise relative,
+/// so a 1% mass drift and a 1% moment drift weigh the same).
+fn sketch_distance(a: &[f32; 4], b: &[f32; 4]) -> f32 {
+    let mut acc = 0f32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let denom = x.abs().max(y.abs()).max(1e-6);
+        let d = (x - y) / denom;
+        acc += d * d;
+    }
+    acc
+}
+
+fn quantize(x: f32, steps: f32) -> i32 {
+    (x * steps).round() as i32
+}
+
+/// Fingerprint of a dense problem solved by `solver`.
+pub fn fingerprint_dense(solver: SolverKind, p: &Problem) -> Fingerprint {
+    Fingerprint {
+        key: FingerprintKey {
+            rows: p.rows(),
+            cols: p.cols(),
+            path: PathKind::Dense,
+            solver,
+            fi_q: quantize(p.fi, FI_QUANT),
+            eps_q: 0,
+        },
+        sketch: sketch_of(&p.rpd, &p.cpd),
+    }
+}
+
+/// Fingerprint of a CSR problem (always the fused MAP-UOT sweep).
+pub fn fingerprint_sparse(p: &SparseProblem) -> Fingerprint {
+    Fingerprint {
+        key: FingerprintKey {
+            rows: p.rows(),
+            cols: p.cols(),
+            path: PathKind::Sparse,
+            solver: SolverKind::MapUot,
+            fi_q: quantize(p.fi, FI_QUANT),
+            eps_q: 0,
+        },
+        sketch: sketch_of(&p.rpd, &p.cpd),
+    }
+}
+
+/// Fingerprint of a geometric problem (always the scaling-form MAP-UOT
+/// sweep; the bandwidth enters the structural key because the scaling
+/// vectors of one ε are poor seeds for a very different ε).
+pub fn fingerprint_matfree(p: &GeomProblem) -> Fingerprint {
+    Fingerprint {
+        key: FingerprintKey {
+            rows: p.rows(),
+            cols: p.cols(),
+            path: PathKind::Matfree,
+            solver: SolverKind::MapUot,
+            fi_q: quantize(p.fi, FI_QUANT),
+            eps_q: quantize(p.epsilon.ln(), EPS_QUANT),
+        },
+        sketch: sketch_of(&p.rpd, &p.cpd),
+    }
+}
+
+/// One cached converged scaling. Buffers are retained across eviction and
+/// resized in place, so steady-state stores never allocate.
+#[derive(Debug)]
+struct Entry {
+    key: FingerprintKey,
+    sketch: [f32; 4],
+    u: Vec<f32>,
+    v: Vec<f32>,
+    tick: u64,
+}
+
+/// Fixed-capacity LRU cache of converged diagonal scalings, keyed by
+/// [`Fingerprint`]. See the module docs for the matching and allocation
+/// contracts.
+#[derive(Debug)]
+pub struct WarmCache {
+    cap: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    entries: Vec<Entry>,
+}
+
+impl WarmCache {
+    /// Cache holding at most `cap` scalings (`cap` is clamped to ≥ 1 — a
+    /// zero-capacity cache is "warm start off", which the session models
+    /// by not carrying a cache at all).
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), tick: 0, hits: 0, misses: 0, entries: Vec::new() }
+    }
+
+    /// Maximum number of cached scalings.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Cached scalings right now.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Lookups that returned a seed.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that found no structurally matching entry.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// The cached `(u, v)` nearest to `fp`: structural key matched
+    /// exactly, nearest sketch wins. Bumps the entry's LRU tick. Never
+    /// allocates.
+    pub fn lookup(&mut self, fp: &Fingerprint) -> Option<(&[f32], &[f32])> {
+        let mut best: Option<(usize, f32)> = None;
+        for (idx, e) in self.entries.iter().enumerate() {
+            if e.key != fp.key {
+                continue;
+            }
+            let d = sketch_distance(&e.sketch, &fp.sketch);
+            if best.is_none_or(|(_, bd)| d < bd) {
+                best = Some((idx, d));
+            }
+        }
+        match best {
+            Some((idx, _)) => {
+                self.hits += 1;
+                self.tick += 1;
+                let e = &mut self.entries[idx];
+                e.tick = self.tick;
+                Some((&e.u, &e.v))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a scaling for `fp`, writing `u` (length `m`) and `v` (length
+    /// `n`) through `fill` directly into the entry's buffers. A
+    /// numerically identical fingerprint overwrites its entry; otherwise
+    /// the LRU entry is evicted (buffers reused) once the cache is full.
+    pub fn store_with(
+        &mut self,
+        fp: &Fingerprint,
+        m: usize,
+        n: usize,
+        fill: impl FnOnce(&mut [f32], &mut [f32]),
+    ) {
+        self.tick += 1;
+        let slot = self.slot_for(fp);
+        let e = &mut self.entries[slot];
+        e.key = fp.key;
+        e.sketch = fp.sketch;
+        e.tick = self.tick;
+        e.u.resize(m, 0.0);
+        e.v.resize(n, 0.0);
+        fill(&mut e.u, &mut e.v);
+    }
+
+    /// Index to write `fp` into: its same-sketch twin, a fresh slot while
+    /// below capacity, or the LRU victim.
+    fn slot_for(&mut self, fp: &Fingerprint) -> usize {
+        if let Some(idx) = self.entries.iter().position(|e| {
+            e.key == fp.key && sketch_distance(&e.sketch, &fp.sketch) <= SAME_SKETCH
+        }) {
+            return idx;
+        }
+        if self.entries.len() < self.cap {
+            self.entries.push(Entry {
+                key: fp.key,
+                sketch: fp.sketch,
+                u: Vec::new(),
+                v: Vec::new(),
+                tick: 0,
+            });
+            return self.entries.len() - 1;
+        }
+        self.entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.tick)
+            .map(|(idx, _)| idx)
+            .expect("cap >= 1, so a full cache has at least one entry")
+    }
+}
+
+/// Clamp a recovered diagonal factor: non-finite or non-positive ratios
+/// (empty row in the initial plan, marginal of zero mass) fall back to the
+/// cold seed 1, and the magnitude is bounded so a seeded f32 plan can
+/// never overflow to inf and poison the factor computation.
+fn sanitize(x: f32) -> f32 {
+    if x.is_finite() && x > 0.0 {
+        x.clamp(1e-12, 1e12)
+    } else {
+        1.0
+    }
+}
+
+/// Seed a dense plan in place: `plan_ij ← u_i · plan_ij · v_j`.
+pub fn scale_dense_plan(plan: &mut Matrix, u: &[f32], v: &[f32]) {
+    debug_assert_eq!(plan.rows(), u.len());
+    debug_assert_eq!(plan.cols(), v.len());
+    for (i, &ui) in u.iter().enumerate() {
+        for (x, &vj) in plan.row_mut(i).iter_mut().zip(v.iter()) {
+            *x *= ui * vj;
+        }
+    }
+}
+
+/// Seed a CSR plan in place: `values_k ← u_row(k) · values_k · v_col(k)`.
+/// The sparse support is untouched — a diagonal rescale by positive
+/// factors never creates or destroys nonzeros.
+pub fn scale_csr_plan(plan: &mut CsrMatrix, u: &[f32], v: &[f32]) {
+    debug_assert_eq!(plan.m, u.len());
+    debug_assert_eq!(plan.n, v.len());
+    let CsrMatrix { row_ptr, col_idx, values, .. } = plan;
+    for (i, &ui) in u.iter().enumerate() {
+        for k in row_ptr[i]..row_ptr[i + 1] {
+            values[k] *= ui * v[col_idx[k] as usize];
+        }
+    }
+}
+
+/// Recover the net diagonal scaling `fin ≈ diag(u) · init · diag(v)` of a
+/// finished dense solve: `u` from final-vs-initial row sums, then `v` from
+/// the final (carried) column sums against the row-rescaled initial plan.
+/// Degenerate rows/columns sanitize to the cold factor 1.
+pub fn derive_dense_scaling(
+    init: &Matrix,
+    fin: &Matrix,
+    fin_colsum: &[f32],
+    u: &mut [f32],
+    v: &mut [f32],
+) {
+    debug_assert_eq!(init.rows(), fin.rows());
+    debug_assert_eq!(init.cols(), fin.cols());
+    for (i, ui) in u.iter_mut().enumerate() {
+        let s0: f32 = init.row(i).iter().sum();
+        let s1: f32 = fin.row(i).iter().sum();
+        *ui = sanitize(s1 / s0);
+    }
+    v.fill(0.0);
+    for (i, &ui) in u.iter().enumerate() {
+        for (acc, &w) in v.iter_mut().zip(init.row(i).iter()) {
+            *acc += w * ui;
+        }
+    }
+    for (vj, &cs) in v.iter_mut().zip(fin_colsum.iter()) {
+        *vj = sanitize(cs / *vj);
+    }
+}
+
+/// CSR twin of [`derive_dense_scaling`]. `init` and `fin` must share their
+/// sparsity structure (the session's CSR state is a structure-preserving
+/// copy of the submitted plan, so they always do).
+pub fn derive_csr_scaling(
+    init: &CsrMatrix,
+    fin: &CsrMatrix,
+    fin_colsum: &[f32],
+    u: &mut [f32],
+    v: &mut [f32],
+) {
+    debug_assert_eq!(init.m, fin.m);
+    debug_assert_eq!(init.n, fin.n);
+    debug_assert_eq!(init.nnz(), fin.nnz());
+    for (i, ui) in u.iter_mut().enumerate() {
+        let r = init.row_ptr[i]..init.row_ptr[i + 1];
+        let s0: f32 = init.values[r.clone()].iter().sum();
+        let s1: f32 = fin.values[r].iter().sum();
+        *ui = sanitize(s1 / s0);
+    }
+    v.fill(0.0);
+    for (i, &ui) in u.iter().enumerate() {
+        for k in init.row_ptr[i]..init.row_ptr[i + 1] {
+            v[init.col_idx[k] as usize] += init.values[k] * ui;
+        }
+    }
+    for (vj, &cs) in v.iter_mut().zip(fin_colsum.iter()) {
+        *vj = sanitize(cs / *vj);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(rows: usize, cols: usize, sketch: [f32; 4]) -> Fingerprint {
+        Fingerprint {
+            key: FingerprintKey {
+                rows,
+                cols,
+                path: PathKind::Dense,
+                solver: SolverKind::MapUot,
+                fi_q: 179, // 0.7 * 256
+                eps_q: 0,
+            },
+            sketch,
+        }
+    }
+
+    fn store_consts(cache: &mut WarmCache, f: &Fingerprint, m: usize, n: usize, cu: f32, cv: f32) {
+        cache.store_with(f, m, n, |u, v| {
+            u.fill(cu);
+            v.fill(cv);
+        });
+    }
+
+    #[test]
+    fn lookup_on_empty_cache_misses() {
+        let mut cache = WarmCache::new(4);
+        assert!(cache.lookup(&fp(8, 8, [1.0, 1.0, 0.5, 0.5])).is_none());
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn nearest_sketch_wins_within_a_structural_key() {
+        let mut cache = WarmCache::new(4);
+        store_consts(&mut cache, &fp(8, 8, [1.0, 1.0, 0.5, 0.5]), 8, 8, 2.0, 2.0);
+        store_consts(&mut cache, &fp(8, 8, [4.0, 4.0, 0.5, 0.5]), 8, 8, 3.0, 3.0);
+        assert_eq!(cache.len(), 2);
+        let (u, _) = cache.lookup(&fp(8, 8, [3.7, 3.9, 0.5, 0.5])).unwrap();
+        assert_eq!(u[0], 3.0);
+        let (u, _) = cache.lookup(&fp(8, 8, [1.1, 0.9, 0.5, 0.5])).unwrap();
+        assert_eq!(u[0], 2.0);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn structural_mismatch_never_hits() {
+        let mut cache = WarmCache::new(4);
+        store_consts(&mut cache, &fp(8, 8, [1.0, 1.0, 0.5, 0.5]), 8, 8, 2.0, 2.0);
+        // Different shape.
+        assert!(cache.lookup(&fp(8, 9, [1.0, 1.0, 0.5, 0.5])).is_none());
+        // Different path at the same shape.
+        let mut other = fp(8, 8, [1.0, 1.0, 0.5, 0.5]);
+        other.key.path = PathKind::Matfree;
+        assert!(cache.lookup(&other).is_none());
+        // Different quantized fi.
+        let mut other = fp(8, 8, [1.0, 1.0, 0.5, 0.5]);
+        other.key.fi_q = 128;
+        assert!(cache.lookup(&other).is_none());
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn same_sketch_store_overwrites_in_place() {
+        let mut cache = WarmCache::new(4);
+        let f = fp(8, 8, [1.0, 1.0, 0.5, 0.5]);
+        store_consts(&mut cache, &f, 8, 8, 2.0, 2.0);
+        store_consts(&mut cache, &f, 8, 8, 5.0, 5.0);
+        assert_eq!(cache.len(), 1);
+        let (u, v) = cache.lookup(&f).unwrap();
+        assert_eq!(u[0], 5.0);
+        assert_eq!(v[0], 5.0);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let mut cache = WarmCache::new(2);
+        let a = fp(8, 8, [1.0, 1.0, 0.5, 0.5]);
+        let b = fp(8, 8, [2.0, 2.0, 0.5, 0.5]);
+        let c = fp(8, 8, [8.0, 8.0, 0.5, 0.5]);
+        store_consts(&mut cache, &a, 8, 8, 1.0, 1.0);
+        store_consts(&mut cache, &b, 8, 8, 2.0, 2.0);
+        // Touch `a` so `b` is the LRU victim.
+        assert!(cache.lookup(&a).is_some());
+        store_consts(&mut cache, &c, 8, 8, 3.0, 3.0);
+        assert_eq!(cache.len(), 2);
+        // `a` survived, the nearest match for b's sketch is now `a`.
+        let (u, _) = cache.lookup(&b).unwrap();
+        assert_eq!(u[0], 1.0);
+        // `c` is present.
+        let (u, _) = cache.lookup(&c).unwrap();
+        assert_eq!(u[0], 3.0);
+    }
+
+    #[test]
+    fn cross_shape_entries_are_isolated() {
+        let mut cache = WarmCache::new(4);
+        store_consts(&mut cache, &fp(8, 8, [1.0, 1.0, 0.5, 0.5]), 8, 8, 2.0, 2.0);
+        store_consts(&mut cache, &fp(16, 4, [1.0, 1.0, 0.5, 0.5]), 16, 4, 7.0, 7.0);
+        let (u, v) = cache.lookup(&fp(16, 4, [1.0, 1.0, 0.5, 0.5])).unwrap();
+        assert_eq!((u.len(), v.len()), (16, 4));
+        assert_eq!(u[0], 7.0);
+        let (u, v) = cache.lookup(&fp(8, 8, [1.0, 1.0, 0.5, 0.5])).unwrap();
+        assert_eq!((u.len(), v.len()), (8, 8));
+        assert_eq!(u[0], 2.0);
+    }
+
+    #[test]
+    fn dense_scaling_roundtrip_recovers_diagonal_factors() {
+        let m = 5;
+        let n = 4;
+        let init = Matrix::from_fn(m, n, |i, j| 0.3 + (i * n + j) as f32 * 0.1);
+        let u_true = [0.5f32, 1.0, 2.0, 0.25, 4.0];
+        let v_true = [3.0f32, 1.0, 0.5, 2.0];
+        let mut fin = init.clone();
+        scale_dense_plan(&mut fin, &u_true, &v_true);
+        let colsum = fin.col_sums();
+        let mut u = vec![0f32; m];
+        let mut v = vec![0f32; n];
+        derive_dense_scaling(&init, &fin, &colsum, &mut u, &mut v);
+        // Recovery is exact up to the diagonal gauge (u·c, v/c): compare
+        // the product u_i · v_j, which is gauge-free.
+        for i in 0..m {
+            for j in 0..n {
+                let got = u[i] * v[j];
+                let want = u_true[i] * v_true[j];
+                assert!(
+                    (got - want).abs() <= 1e-4 * want,
+                    "({i},{j}): got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sanitize_guards_degenerate_factors() {
+        assert_eq!(sanitize(f32::NAN), 1.0);
+        assert_eq!(sanitize(f32::INFINITY), 1.0);
+        assert_eq!(sanitize(-3.0), 1.0);
+        assert_eq!(sanitize(0.0), 1.0);
+        assert_eq!(sanitize(1e30), 1e12);
+        assert_eq!(sanitize(1e-30), 1e-12);
+        assert_eq!(sanitize(2.5), 2.5);
+    }
+}

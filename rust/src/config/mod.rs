@@ -56,6 +56,19 @@ pub struct ServiceConfig {
     /// the boundary. Requires `kind = mapuot`, the native backend, and no
     /// `sparse` threshold (validated at `Service::start`).
     pub matfree: bool,
+    /// Warm-start cache capacity per worker session (config key
+    /// `[solver] warm = <entries>` or `off`). `0` disables warm starting;
+    /// `cap > 0` seeds each solve from the nearest cached converged
+    /// scaling (see `algo::warmstart`).
+    pub warm: usize,
+    /// Translation-invariant sweeps (config key `[solver] ti = on|off`).
+    /// Requires `kind = mapuot` (validated at `Service::start`).
+    pub ti: bool,
+    /// ε-schedule for matfree solves (config key
+    /// `[solver] eps_schedule = <from>:<steps>`, or `off`): a geometric
+    /// coarse-to-fine bandwidth ladder from `from` down to each problem's
+    /// ε. Requires `matfree = on` (validated at `Service::start`).
+    pub eps_schedule: Option<(f32, usize)>,
     /// Stopping criteria.
     pub stop: StopRule,
     /// Artifact directory for the PJRT backend.
@@ -78,6 +91,9 @@ impl Default for ServiceConfig {
             tile: TileSpec::Auto,
             sparse: None,
             matfree: false,
+            warm: 0,
+            ti: false,
+            eps_schedule: None,
             stop: StopRule::default(),
             artifacts_dir: "artifacts".into(),
         }
@@ -151,6 +167,63 @@ impl ServiceConfig {
                 }
             },
         };
+        let warm = match c.get("solver", "warm") {
+            None => d.warm,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "off" | "none" => 0,
+                raw => raw.parse::<usize>().map_err(|_| {
+                    crate::error::Error::Config(format!(
+                        "invalid warm cache capacity {s:?} (expected a count or off)"
+                    ))
+                })?,
+            },
+        };
+        let ti = match c.get("solver", "ti") {
+            None => d.ti,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" | "none" => false,
+                _ => {
+                    return Err(crate::error::Error::Config(format!(
+                        "invalid ti setting {s:?} (expected on|off)"
+                    )))
+                }
+            },
+        };
+        let eps_schedule = match c.get("solver", "eps_schedule") {
+            None => d.eps_schedule,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "off" | "none" => None,
+                raw => {
+                    let (from_s, steps_s) = raw.split_once(':').ok_or_else(|| {
+                        crate::error::Error::Config(format!(
+                            "invalid eps_schedule {s:?} (expected <from>:<steps>, e.g. 1.0:3)"
+                        ))
+                    })?;
+                    let from = from_s.parse::<f32>().map_err(|_| {
+                        crate::error::Error::Config(format!(
+                            "invalid eps_schedule start bandwidth {from_s:?}"
+                        ))
+                    })?;
+                    let steps = steps_s.parse::<usize>().map_err(|_| {
+                        crate::error::Error::Config(format!(
+                            "invalid eps_schedule rung count {steps_s:?}"
+                        ))
+                    })?;
+                    if !(from.is_finite() && from > 0.0) {
+                        return Err(crate::error::Error::Config(format!(
+                            "eps_schedule start bandwidth {from_s:?} must be finite and > 0"
+                        )));
+                    }
+                    if steps == 0 {
+                        return Err(crate::error::Error::Config(
+                            "eps_schedule needs at least one coarse rung (steps >= 1)".into(),
+                        ));
+                    }
+                    Some((from, steps))
+                }
+            },
+        };
         Ok(Self {
             workers: c.get_or("coordinator", "workers", d.workers)?,
             batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
@@ -165,6 +238,9 @@ impl ServiceConfig {
             tile,
             sparse,
             matfree,
+            warm,
+            ti,
+            eps_schedule,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -251,6 +327,33 @@ mod tests {
         }
         let raw = parser::RawConfig::parse("[solver]\nmatfree=0.5\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err(), "matfree takes on|off, not a number");
+    }
+
+    #[test]
+    fn warm_ti_and_eps_schedule_parse_and_reject() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.warm, 0, "warm starting is opt-in");
+        assert!(!c.ti, "TI is opt-in");
+        assert_eq!(c.eps_schedule, None, "eps scheduling is opt-in");
+
+        let raw =
+            parser::RawConfig::parse("[solver]\nwarm=8\nti=on\neps_schedule=1.5:3\n").unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.warm, 8);
+        assert!(c.ti);
+        assert_eq!(c.eps_schedule, Some((1.5, 3)));
+
+        let raw = parser::RawConfig::parse("[solver]\nwarm=off\neps_schedule=off\n").unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.warm, 0);
+        assert_eq!(c.eps_schedule, None);
+
+        for bad in ["warm=-3", "warm=big", "ti=0.5", "eps_schedule=1.5",
+                    "eps_schedule=x:3", "eps_schedule=1.5:x", "eps_schedule=nan:3",
+                    "eps_schedule=-1:3", "eps_schedule=1.5:0"] {
+            let raw = parser::RawConfig::parse(&format!("[solver]\n{bad}\n")).unwrap();
+            assert!(ServiceConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

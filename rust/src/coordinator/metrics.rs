@@ -5,6 +5,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Latency histogram bucket upper bounds (milliseconds).
 pub const LATENCY_BUCKETS_MS: [f64; 8] = [0.5, 1.0, 2.0, 5.0, 10.0, 50.0, 200.0, 1000.0];
 
+/// Per-request iteration-count histogram bucket upper bounds. Geometric,
+/// because warm starting / TI / ε-scheduling move iterations-to-tolerance
+/// multiplicatively — the warm-start ablation reads its speedups off this
+/// histogram's percentiles.
+pub const ITER_BUCKETS: [u64; 8] = [8, 16, 32, 64, 128, 256, 512, 1024];
+
 /// Service-wide metrics, cheap to update from any thread.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -18,6 +24,8 @@ pub struct Metrics {
     pub iterations: AtomicU64,
     latency_buckets: [AtomicU64; 9], // 8 bounded + overflow
     latency_total_us: AtomicU64,
+    iter_buckets: [AtomicU64; 9], // 8 bounded + overflow
+    iter_requests: AtomicU64,
 }
 
 impl Metrics {
@@ -35,6 +43,15 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one request's iterations-to-tolerance (also folds the count
+    /// into the [`Metrics::iterations`] running total).
+    pub fn record_iters(&self, iters: u64) {
+        let idx = ITER_BUCKETS.iter().position(|&b| iters <= b).unwrap_or(8);
+        self.iter_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.iter_requests.fetch_add(1, Ordering::Relaxed);
+        self.iterations.fetch_add(iters, Ordering::Relaxed);
     }
 
     /// Point-in-time snapshot for reporting.
@@ -59,6 +76,8 @@ impl Metrics {
                 self.latency_total_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1e3
             },
             latency_buckets: std::array::from_fn(|i| self.latency_buckets[i].load(Ordering::Relaxed)),
+            iter_buckets: std::array::from_fn(|i| self.iter_buckets[i].load(Ordering::Relaxed)),
+            iter_requests: self.iter_requests.load(Ordering::Relaxed),
         }
     }
 }
@@ -75,6 +94,9 @@ pub struct Snapshot {
     pub iterations: u64,
     pub mean_latency_ms: f64,
     pub latency_buckets: [u64; 9],
+    pub iter_buckets: [u64; 9],
+    /// Requests with a recorded iteration count (histogram mass).
+    pub iter_requests: u64,
 }
 
 impl Snapshot {
@@ -93,6 +115,34 @@ impl Snapshot {
             }
         }
         f64::INFINITY
+    }
+
+    /// Approximate per-request iteration-count percentile (bucket upper
+    /// bound; `inf` in the overflow bucket).
+    pub fn iters_percentile(&self, p: f64) -> f64 {
+        let total: u64 = self.iter_buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.iter_buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return ITER_BUCKETS.get(i).map(|&b| b as f64).unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Mean iterations-to-tolerance across recorded requests — the
+    /// warm-start ablation's headline number.
+    pub fn mean_iters(&self) -> f64 {
+        if self.iter_requests == 0 {
+            0.0
+        } else {
+            self.iterations as f64 / self.iter_requests as f64
+        }
     }
 }
 
@@ -122,5 +172,32 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.snapshot().mean_batch_size - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iteration_histogram_and_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_iters(8); // bucket 0
+        }
+        for _ in 0..10 {
+            m.record_iters(400); // bucket 512
+        }
+        let s = m.snapshot();
+        assert_eq!(s.iter_requests, 100);
+        assert_eq!(s.iterations, 90 * 8 + 10 * 400);
+        assert_eq!(s.iters_percentile(50.0), 8.0);
+        assert_eq!(s.iters_percentile(99.0), 512.0);
+        assert!((s.mean_iters() - (90.0 * 8.0 + 10.0 * 400.0) / 100.0).abs() < 1e-9);
+        // Overflow bucket maps to infinity.
+        m.record_iters(1_000_000);
+        assert!(m.snapshot().iters_percentile(100.0).is_infinite());
+    }
+
+    #[test]
+    fn empty_iteration_histogram_reads_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.iters_percentile(99.0), 0.0);
+        assert_eq!(s.mean_iters(), 0.0);
     }
 }

@@ -69,6 +69,33 @@ impl Service {
                 ));
             }
         }
+        // Accelerator knobs fail fast too: TI is a MAP-UOT correction, the
+        // ε ladder only exists on the matfree path, and a ladder that does
+        // not descend is a typo.
+        if cfg.ti && cfg.solver != SolverKind::MapUot {
+            return Err(Error::Config(
+                "[solver] ti requires kind = mapuot (TI corrects the MAP-UOT sweep)".into(),
+            ));
+        }
+        if let Some((from, steps)) = cfg.eps_schedule {
+            if !cfg.matfree {
+                return Err(Error::Config(
+                    "[solver] eps_schedule requires [solver] matfree = on (the ladder \
+                     schedules the kernel bandwidth)"
+                        .into(),
+                ));
+            }
+            if !(from.is_finite() && from > 0.0) {
+                return Err(Error::Config(format!(
+                    "[solver] eps_schedule start bandwidth {from} must be finite and > 0"
+                )));
+            }
+            if steps == 0 {
+                return Err(Error::Config(
+                    "[solver] eps_schedule needs at least one coarse rung (steps >= 1)".into(),
+                ));
+            }
+        }
         let batcher = Arc::new(Batcher::new(
             cfg.queue_cap,
             cfg.batch_max,
@@ -201,7 +228,9 @@ fn worker_loop(
             match &result {
                 Ok(s) => {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.iterations.fetch_add(s.report.iters as u64, Ordering::Relaxed);
+                    // record_iters folds the count into `iterations` and
+                    // the per-request histogram the ablation reads.
+                    metrics.record_iters(s.report.iters as u64);
                     metrics.record_latency(s.latency_s);
                 }
                 Err(_) => {
@@ -221,13 +250,19 @@ fn execute(
     req: &SolveRequest,
 ) -> Result<Solved> {
     let builder = || {
-        SolverSession::builder(cfg.solver)
+        let mut b = SolverSession::builder(cfg.solver)
             .threads(cfg.solver_threads)
             .backend(cfg.parallel)
             .affinity(cfg.affinity)
             .kernel(cfg.kernel)
             .tile(cfg.tile)
             .stop(cfg.stop)
+            .warm(cfg.warm)
+            .ti(cfg.ti);
+        if let Some((from, steps)) = cfg.eps_schedule {
+            b = b.eps_schedule(from, steps);
+        }
+        b
     };
     let (plan, report, backend) = match (&req.payload, pjrt) {
         // Geometric requests run the materialization-free backend on this
@@ -468,6 +503,52 @@ mod tests {
         cfg.matfree = true;
         cfg.sparse = Some(0.5);
         assert!(Service::start(cfg).is_err(), "matfree + sparse must fail fast");
+    }
+
+    #[test]
+    fn accelerator_config_rejected_at_start() {
+        let mut cfg = native_cfg(1);
+        cfg.ti = true;
+        cfg.solver = SolverKind::Pot;
+        assert!(Service::start(cfg).is_err(), "ti + POT must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.eps_schedule = Some((2.0, 3));
+        assert!(Service::start(cfg).is_err(), "eps_schedule without matfree must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.eps_schedule = Some((f32::NAN, 3));
+        assert!(Service::start(cfg).is_err(), "NaN ladder start must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.eps_schedule = Some((2.0, 0));
+        assert!(Service::start(cfg).is_err(), "zero-rung ladder must fail fast");
+    }
+
+    /// A warm-enabled single-worker service re-serves a repeated request
+    /// from its session cache: fewer iterations the second time, and the
+    /// per-request iteration histogram sees both solves.
+    #[test]
+    fn warm_service_reuses_cached_scalings() {
+        let mut cfg = native_cfg(1);
+        cfg.warm = 4;
+        let svc = Service::start(cfg).unwrap();
+        let p = Problem::random(24, 24, 0.7, 9);
+        let first = svc.solve_blocking(p.clone()).unwrap();
+        let second = svc.solve_blocking(p).unwrap();
+        assert!(first.report.converged && second.report.converged);
+        assert!(
+            second.report.iters <= first.report.iters,
+            "warm {} vs cold {} iterations",
+            second.report.iters,
+            first.report.iters
+        );
+        let m = svc.metrics();
+        assert_eq!(m.iter_requests, 2);
+        assert_eq!(
+            m.iterations,
+            first.report.iters as u64 + second.report.iters as u64
+        );
+        svc.shutdown();
     }
 
     #[test]

@@ -104,6 +104,12 @@ fn print_help() {
          \x20        materialization-free scaling-form backend — O(m+n) state, the plan\n\
          \x20        is never stored; MAP-UOT only) --dim <d> (point dimension, default 3)\n\
          \x20        --cost sqeuclid|euclid (ground cost; the kernel is exp(-cost/eps))\n\
+         \x20        --warm <cap>|off (warm-start cache: seed repeated solves from up to\n\
+         \x20        <cap> cached converged scalings; default off)\n\
+         \x20        --ti (translation-invariant sweeps — pre-sweep global-mass\n\
+         \x20        correction; MAP-UOT only)\n\
+         \x20        --eps-schedule <from>:<steps> (matfree only: geometric coarse-to-fine\n\
+         \x20        bandwidth ladder from <from> down to the problem epsilon)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -138,6 +144,58 @@ fn cmd_solve(a: &Args) -> i32 {
     }
     if a.flags.contains_key("matfree") && a.str("backend", "native") == "pjrt" {
         eprintln!("error: --matfree runs on the native backend only (PJRT executes dense artifacts)");
+        return 1;
+    }
+
+    // The iteration-count accelerators live in the native session layer, so
+    // they fail loudly on the PJRT path instead of silently not applying.
+    let warm = match a.flags.get("warm") {
+        None => 0usize,
+        Some(raw) => match raw.to_ascii_lowercase().as_str() {
+            "off" | "none" => 0,
+            s => match s.parse::<usize>() {
+                Ok(cap) => cap,
+                Err(_) => {
+                    eprintln!("error: --warm expects an entry count or off, got {raw:?}");
+                    return 1;
+                }
+            },
+        },
+    };
+    let ti = a.get("ti", false);
+    if ti && solver != SolverKind::MapUot {
+        eprintln!("error: --ti corrects the MAP-UOT sweep (use --solver mapuot)");
+        return 1;
+    }
+    let eps_schedule = match a.flags.get("eps-schedule") {
+        None => None,
+        Some(raw) => {
+            if !a.flags.contains_key("matfree") {
+                eprintln!(
+                    "error: --eps-schedule schedules the matfree kernel bandwidth and \
+                     requires --matfree <epsilon>"
+                );
+                return 1;
+            }
+            let parsed = raw.split_once(':').and_then(|(f, s)| {
+                Some((f.parse::<f32>().ok()?, s.parse::<usize>().ok()?))
+            });
+            match parsed {
+                Some((from, steps)) if from.is_finite() && from > 0.0 && steps >= 1 => {
+                    Some((from, steps))
+                }
+                _ => {
+                    eprintln!(
+                        "error: --eps-schedule expects <from>:<steps> with a finite \
+                         bandwidth > 0 and steps >= 1, got {raw:?}"
+                    );
+                    return 1;
+                }
+            }
+        }
+    };
+    if a.str("backend", "native") == "pjrt" && (warm > 0 || ti) {
+        eprintln!("error: --warm/--ti apply to the native session layer, not --backend pjrt");
         return 1;
     }
 
@@ -202,7 +260,14 @@ fn cmd_solve(a: &Args) -> i32 {
         .threads(a.get("threads", 1usize))
         .backend(par)
         .affinity(affinity)
-        .stop(stop);
+        .stop(stop)
+        .warm(warm)
+        .ti(ti);
+    // Only reachable with --matfree (rejected above otherwise), so the
+    // dense/sparse paths never see a ladder they would refuse.
+    if let Some((from, steps)) = eps_schedule {
+        builder = builder.eps_schedule(from, steps);
+    }
     if a.get("progress", false) {
         builder = builder.observer(|ev: CheckEvent| {
             eprintln!("  iter {:5}  err={:.3e}  delta={:.3e}", ev.iters, ev.err, ev.delta);

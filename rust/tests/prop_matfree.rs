@@ -141,9 +141,10 @@ fn engines_bitmatch_partitioned_serial_reference() {
             // engine's colsum identically (serial pass).
             let mut seed_ws = MatfreeWorkspace::new(m, n, 1);
             seed_ws.prepare(m, n);
+            let ones_m = vec![1f32; m];
             let ones = vec![1f32; n];
             let mut seeded = vec![0f32; n];
-            seed_ws.seed_col_sums(&gp, &ones, &mut seeded);
+            seed_ws.seed_col_sums(&gp, &ones_m, &ones, &mut seeded);
             let fresh = || (vec![1f32; m], vec![1f32; n], seeded.clone(), vec![0f32; m]);
             let (mut u_a, mut v_a, mut c_a, mut r_a) = fresh(); // scope
             let (mut u_b, mut v_b, mut c_b, mut r_b) = fresh(); // pool
@@ -255,8 +256,9 @@ fn workspace_engines_track_dense_for_all_thread_counts() {
             .collect();
         for (ws, st) in engines.iter_mut().zip(states.iter_mut()) {
             ws.prepare(m, n);
+            let ones_m = vec![1f32; m];
             let ones = vec![1f32; n];
-            ws.seed_col_sums(&gp, &ones, &mut st.2);
+            ws.seed_col_sums(&gp, &ones_m, &ones, &mut st.2);
         }
         for _ in 0..6 {
             mapuot::iterate(&mut plan, &mut cs_dense, &gp.rpd, &gp.cpd, gp.fi);

@@ -1,0 +1,377 @@
+//! Property tests for the iteration-count accelerators:
+//!
+//! * **Warm-start exactness** — a warm-seeded re-solve converges to the
+//!   same plan as a cold solve within 1e-5 relative, on every path
+//!   (dense fused, sparse CSR, matfree) and every engine (serial, scope,
+//!   pool) across thread counts. Warm seeding only moves the *starting
+//!   point* inside the diag-scaling family the iteration preserves, so
+//!   the fixed point cannot move.
+//! * **TI exactness** — translation-invariant sweeps share the plain
+//!   fixed point: the pre-sweep colsum rescale is exactly 1 at
+//!   stationarity, so the converged plan matches within 1e-5 on all
+//!   three paths.
+//! * **Seed-engine bit-identity** — for any fixed row partition, the
+//!   scope and pool warm-seed engines produce bit-identical column sums
+//!   to the partitioned serial reference.
+//! * **ε-schedule** — the ladder lands on the plain answer at the target
+//!   bandwidth; misuse (non-matfree path, `from <= ε`, zero steps) is a
+//!   typed error, never a panic. `Deadline` cancels with `Canceled`.
+//!
+//! CI runs this file under the same thread-oversubscription matrix as
+//! `prop_pool.rs`/`prop_sparse.rs`/`prop_matfree.rs`: set
+//! `MAP_UOT_POOL_THREADS=t` to restrict the sweep.
+
+use std::time::Duration;
+
+use map_uot::algo::matfree::{CostKind, GeomProblem};
+use map_uot::algo::pool::{AccArena, Partition, ThreadPool};
+use map_uot::algo::sparse::SparseProblem;
+use map_uot::algo::{
+    parallel, Deadline, KernelKind, KernelPolicy, Problem, SolverKind, SolverSession, StopRule,
+    TileSpec,
+};
+use map_uot::error::Error;
+use map_uot::util::XorShift;
+
+/// Thread counts to sweep: the full ladder by default, or the single value
+/// from `MAP_UOT_POOL_THREADS` (the CI oversubscription matrix).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("MAP_UOT_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("MAP_UOT_POOL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 3, 4, 8, 16],
+    }
+}
+
+/// Shapes crossing the engine edges: single cell, more threads than rows,
+/// wide rows, odd dims.
+const SHAPES: &[(usize, usize)] = &[(1, 1), (2, 3), (9, 8), (23, 17), (7, 64)];
+
+/// Tight stop so both the cold and the warm trajectory land well inside
+/// the 1e-5 agreement band (convergence is geometric in (1-fi), so the
+/// final error sits far below the threshold that stopped the solve).
+const STOP: StopRule = StopRule { tol: 1e-6, delta_tol: 1e-9, max_iter: 5_000 };
+
+fn geom(m: usize, n: usize, seed: u64) -> GeomProblem {
+    GeomProblem::random(m, n, 3, CostKind::SqEuclidean, 0.25, 0.7, seed)
+}
+
+/// Warm-seeded dense re-solves converge to the cold plan within 1e-5 on
+/// every thread count, and the second solve is a cache hit.
+#[test]
+fn warm_dense_resolve_matches_cold_plan() {
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        for &t in &thread_counts() {
+            let p = Problem::random(m, n, 0.7, 100 + seed as u64);
+            let mut cold = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .build(&p);
+            let rc = cold.solve(&p).unwrap();
+            assert!(rc.converged, "{m}x{n} t={t}: cold must converge");
+
+            let mut warm = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .warm(4)
+                .build(&p);
+            let first = warm.solve(&p).unwrap();
+            assert!(first.converged);
+            assert_eq!(warm.warm_stats(), Some((0, 1)), "{m}x{n} t={t}: first solve misses");
+            let second = warm.solve(&p).unwrap();
+            assert!(second.converged);
+            assert_eq!(warm.warm_stats(), Some((1, 1)), "{m}x{n} t={t}: re-solve hits");
+            assert!(
+                second.iters <= first.iters,
+                "{m}x{n} t={t}: warm {} vs cold {} iters",
+                second.iters,
+                first.iters
+            );
+            let rel = warm.plan().max_rel_diff(cold.plan(), 1e-6);
+            assert!(rel < 1e-5, "{m}x{n} t={t}: warm plan off by {rel}");
+        }
+    }
+}
+
+/// Same property on the sparse CSR path: warm re-solve hits the cache and
+/// lands on the cold plan, support preserved exactly.
+#[test]
+fn warm_sparse_resolve_matches_cold_plan() {
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        for &t in &thread_counts() {
+            let p = Problem::random(m, n, 0.7, 200 + seed as u64);
+            let sp = SparseProblem::from_problem(&p, 0.0).unwrap();
+            let mut cold = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .build_sparse(&sp);
+            let rc = cold.solve_sparse(&sp).unwrap();
+            assert!(rc.converged, "{m}x{n} t={t}: cold must converge");
+            let cold_plan = cold.sparse_plan().unwrap().clone();
+
+            let mut warm = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .warm(4)
+                .build_sparse(&sp);
+            warm.solve_sparse(&sp).unwrap();
+            assert_eq!(warm.warm_stats(), Some((0, 1)), "{m}x{n} t={t}: first solve misses");
+            let second = warm.solve_sparse(&sp).unwrap();
+            assert!(second.converged);
+            assert_eq!(warm.warm_stats(), Some((1, 1)), "{m}x{n} t={t}: re-solve hits");
+            let warm_plan = warm.sparse_plan().unwrap();
+            assert_eq!(warm_plan.col_idx, cold_plan.col_idx, "{m}x{n} t={t}: support moved");
+            for (k, (a, b)) in warm_plan.values.iter().zip(&cold_plan.values).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * b.abs().max(1e-6),
+                    "{m}x{n} t={t} nnz {k}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Same property on the matfree path: the warm hit copies the cached
+/// scaling vectors and re-seeds the carried colsum through the engine
+/// dispatch, then converges to the cold plan.
+#[test]
+fn warm_matfree_resolve_matches_cold_plan() {
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        for &t in &thread_counts() {
+            let gp = geom(m, n, 300 + seed as u64);
+            let mut cold = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .build_matfree(&gp);
+            let rc = cold.solve_matfree(&gp).unwrap();
+            assert!(rc.converged, "{m}x{n} t={t}: cold must converge");
+            let cold_plan = cold.matfree_materialize(&gp).unwrap();
+
+            let mut warm = SolverSession::builder(SolverKind::MapUot)
+                .threads(t)
+                .stop(STOP)
+                .check_every(1)
+                .warm(4)
+                .build_matfree(&gp);
+            warm.solve_matfree(&gp).unwrap();
+            assert_eq!(warm.warm_stats(), Some((0, 1)), "{m}x{n} t={t}: first solve misses");
+            let second = warm.solve_matfree(&gp).unwrap();
+            assert!(second.converged);
+            assert_eq!(warm.warm_stats(), Some((1, 1)), "{m}x{n} t={t}: re-solve hits");
+            let warm_plan = warm.matfree_materialize(&gp).unwrap();
+            let rel = warm_plan.max_rel_diff(&cold_plan, 1e-6);
+            assert!(rel < 1e-5, "{m}x{n} t={t}: warm plan off by {rel}");
+        }
+    }
+}
+
+/// TI sweeps share the plain fixed point on all three paths: the mass
+/// rescale is exactly 1 at stationarity, so the converged plans agree.
+#[test]
+fn ti_solves_share_the_plain_fixed_point_on_all_paths() {
+    for &t in &thread_counts() {
+        // fi = 0.5: slow (1-fi) mass contraction, the regime TI targets.
+        let p = Problem::random(18, 14, 0.5, 77);
+        let mut plain = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .build(&p);
+        plain.solve(&p).unwrap();
+        let mut ti = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .ti(true)
+            .build(&p);
+        let rt = ti.solve(&p).unwrap();
+        assert!(rt.converged, "t={t}");
+        let rel = ti.plan().max_rel_diff(plain.plan(), 1e-6);
+        assert!(rel < 1e-5, "t={t}: dense TI plan off by {rel}");
+
+        let sp = SparseProblem::from_problem(&p, 0.0).unwrap();
+        let mut plain_s = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .build_sparse(&sp);
+        plain_s.solve_sparse(&sp).unwrap();
+        let mut ti_s = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .ti(true)
+            .build_sparse(&sp);
+        ti_s.solve_sparse(&sp).unwrap();
+        for (k, (a, b)) in ti_s
+            .sparse_plan()
+            .unwrap()
+            .values
+            .iter()
+            .zip(&plain_s.sparse_plan().unwrap().values)
+            .enumerate()
+        {
+            assert!(
+                (a - b).abs() <= 1e-5 * b.abs().max(1e-6),
+                "t={t} nnz {k}: sparse TI {a} vs plain {b}"
+            );
+        }
+
+        let gp = GeomProblem::random(16, 12, 3, CostKind::SqEuclidean, 0.25, 0.5, 77);
+        let mut plain_g = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .build_matfree(&gp);
+        plain_g.solve_matfree(&gp).unwrap();
+        let mut ti_g = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .ti(true)
+            .build_matfree(&gp);
+        ti_g.solve_matfree(&gp).unwrap();
+        let rel = ti_g
+            .matfree_materialize(&gp)
+            .unwrap()
+            .max_rel_diff(&plain_g.matfree_materialize(&gp).unwrap(), 1e-6);
+        assert!(rel < 1e-5, "t={t}: matfree TI plan off by {rel}");
+    }
+}
+
+/// For any fixed row partition, the scope and pool warm-seed engines are
+/// bit-identical to the partitioned serial reference — the same contract
+/// the iterate engines honor, extended to warm seeding.
+#[test]
+fn seed_engines_bitmatch_partitioned_serial_reference() {
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        for &t in &thread_counts() {
+            let gp = geom(m, n, 400 + seed as u64);
+            let policy = KernelPolicy::for_shape(KernelKind::Auto, TileSpec::Auto, m, n);
+            let part = Partition::new(m, t, t);
+            let pool = ThreadPool::new(t);
+            let mut rng = XorShift::new(4000 + seed as u64);
+            // Non-trivial scalings: warm seeding never runs at u = v = 1.
+            let u = rng.uniform_vec(m, 0.5, 1.5);
+            let v = rng.uniform_vec(n, 0.5, 1.5);
+            let mut c_serial = vec![0f32; n];
+            let mut c_scope = vec![0f32; n];
+            let mut c_pool = vec![0f32; n];
+            let (mut pan_a, mut acc_a) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            let (mut pan_b, mut acc_b) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            let (mut pan_c, mut acc_c) = (AccArena::padded(t, n), AccArena::padded(t, n));
+            parallel::matfree_seed_partitioned(
+                &gp, &u, &v, &mut c_serial, &mut pan_a, &mut acc_a, &part, &policy,
+            );
+            parallel::matfree_seed_scope(
+                &gp, &u, &v, &mut c_scope, &mut pan_b, &mut acc_b, &part, &policy,
+            );
+            parallel::matfree_seed_pool(
+                &gp, &u, &v, &mut c_pool, &pool, &mut pan_c, &mut acc_c, &part, &policy,
+            );
+            for j in 0..n {
+                assert_eq!(
+                    c_scope[j].to_bits(),
+                    c_serial[j].to_bits(),
+                    "{m}x{n} t={t} col {j}: scope seed"
+                );
+                assert_eq!(
+                    c_pool[j].to_bits(),
+                    c_serial[j].to_bits(),
+                    "{m}x{n} t={t} col {j}: pool seed"
+                );
+            }
+        }
+    }
+}
+
+/// The ε ladder lands on the plain answer at the target bandwidth, and
+/// rung iterations are visible in the report.
+#[test]
+fn eps_schedule_lands_on_the_plain_answer() {
+    for &t in &thread_counts() {
+        let gp = GeomProblem::random(16, 12, 3, CostKind::SqEuclidean, 0.3, 0.7, 55);
+        let mut plain = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .build_matfree(&gp);
+        plain.solve_matfree(&gp).unwrap();
+        let mut laddered = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(STOP)
+            .check_every(1)
+            .eps_schedule(1.2, 3)
+            .build_matfree(&gp);
+        let rl = laddered.solve_matfree(&gp).unwrap();
+        assert!(rl.converged, "t={t}");
+        assert!(rl.iters >= 3, "t={t}: rung iterations must be counted, got {}", rl.iters);
+        let rel = laddered
+            .matfree_materialize(&gp)
+            .unwrap()
+            .max_rel_diff(&plain.matfree_materialize(&gp).unwrap(), 1e-6);
+        // The ladder changes the trajectory, not the fixed point; the
+        // landing solve still runs the plain stop rule at the target ε.
+        assert!(rel < 1e-4, "t={t}: laddered plan off by {rel}");
+    }
+}
+
+/// Accelerator misuse is a typed error, never a panic or a silent no-op.
+#[test]
+fn accelerator_misuse_is_rejected_with_typed_errors() {
+    let p = Problem::random(6, 5, 0.7, 9);
+    let gp = geom(6, 5, 9);
+    let sp = SparseProblem::from_problem(&p, 0.0).unwrap();
+
+    // ε-schedule is matfree-only.
+    let mut dense = SolverSession::builder(SolverKind::MapUot).eps_schedule(2.0, 2).build(&p);
+    assert!(matches!(dense.solve(&p), Err(Error::InvalidProblem(_))));
+    let mut sparse =
+        SolverSession::builder(SolverKind::MapUot).eps_schedule(2.0, 2).build_sparse(&sp);
+    assert!(matches!(sparse.solve_sparse(&sp), Err(Error::InvalidProblem(_))));
+
+    // The ladder must start above the target bandwidth, with >= 1 rung.
+    let mut low =
+        SolverSession::builder(SolverKind::MapUot).eps_schedule(0.1, 2).build_matfree(&gp);
+    assert!(matches!(low.solve_matfree(&gp), Err(Error::InvalidProblem(_))));
+    let mut zero =
+        SolverSession::builder(SolverKind::MapUot).eps_schedule(2.0, 0).build_matfree(&gp);
+    assert!(matches!(zero.solve_matfree(&gp), Err(Error::InvalidProblem(_))));
+
+    // TI is a MAP-UOT iteration identity; other solvers reject it.
+    for kind in [SolverKind::Pot, SolverKind::Coffee] {
+        let mut s = SolverSession::builder(kind).ti(true).build(&p);
+        assert!(matches!(s.solve(&p), Err(Error::InvalidProblem(_))), "{kind:?}");
+    }
+}
+
+/// A `Deadline` in the past cancels at the first check boundary with the
+/// typed `Canceled` error on every path.
+#[test]
+fn expired_deadline_cancels_with_typed_error() {
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 1_000_000 };
+    let p = Problem::random(12, 10, 0.7, 3);
+    let mut dense = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(2)
+        .observer(Deadline::within(Duration::from_millis(0)))
+        .build(&p);
+    match dense.solve(&p) {
+        Err(Error::Canceled { iters }) => assert!(iters <= 2, "canceled after {iters}"),
+        other => panic!("expected Canceled, got {other:?}"),
+    }
+    let gp = geom(12, 10, 3);
+    let mut mf = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(2)
+        .observer(Deadline::within(Duration::from_millis(0)))
+        .build_matfree(&gp);
+    match mf.solve_matfree(&gp) {
+        Err(Error::Canceled { iters }) => assert!(iters <= 2, "canceled after {iters}"),
+        other => panic!("expected Canceled, got {other:?}"),
+    }
+}
