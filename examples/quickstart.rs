@@ -33,6 +33,7 @@ use map_uot::algo::{
     AffinityHint, CheckEvent, CostKind, Deadline, GeomProblem, KernelKind, ObserverAction,
     Problem, SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
 };
+use map_uot::coordinator::{classify_geom, ProblemClass, ONED_AXIS_TOL};
 
 fn main() {
     // A 512x512 problem: random positive plan, random positive marginals,
@@ -204,6 +205,40 @@ fn main() {
     let mut row = vec![0f32; 2048];
     matfree.matfree_plan_row(&geom, 0, &mut row).expect("row 0 exists");
     println!("matfree plan row 0 mass: {:.4}", row.iter().sum::<f32>());
+
+    // Exact 1D fast path: when the supports live on a line and the cost
+    // is |x - y| (the Laplace kernel), every kernel product in the sweep
+    // is computed *exactly* in O(m + n) by two prefix/suffix decay
+    // recursions over the sorted supports — same fixed point as matfree,
+    // near-linear total work, and the answer comes back as the scaling
+    // vectors plus a sparse monotone transport list (at most m + n
+    // entries) instead of any plan. Backend routing, in decision-table
+    // form (the service applies it per request via `classify_geom`;
+    // `solve --oned auto|on|off` and `[solver] oned` expose the knob):
+    //
+    //   d == 1, cost = euclid            -> oned   (exact, O(m+n)/iter)
+    //   d > 1 but one axis varies (tol)  -> oned   (projected to that axis)
+    //   cost = sqeuclid (Gaussian)       -> matfree (kernel doesn't factor)
+    //   d > 1, several axes vary         -> matfree (O(m·n)/iter, O(m+n) state)
+    //   plan given, geometry unknown     -> dense / sparse sessions above
+    let line = GeomProblem::random(4096, 4096, 1, CostKind::Euclidean, 0.25, 0.7, 42);
+    match classify_geom(&line, ONED_AXIS_TOL) {
+        ProblemClass::Oned { axis } => println!("\nrouter: 1D-eligible (axis {axis})"),
+        ProblemClass::General { reason } => println!("\nrouter: general ({reason})"),
+    }
+    let mut oned = SolverSession::builder(SolverKind::MapUot).stop(stop).build_oned(&line);
+    let report = oned.solve_oned(&line).expect("no observer to cancel");
+    let transport = oned.oned_transport().expect("solve ran");
+    println!(
+        "oned 4096x4096 exact sweep: iters={:4}  err={:.3e}  {:6.1} ms — {} transport \
+         entries, created={:.3}, destroyed={:.3}",
+        report.iters,
+        report.err,
+        report.seconds * 1e3,
+        transport.entries.len(),
+        transport.created,
+        transport.destroyed
+    );
 
     // Iteration-count accelerators (the third axis, after memory traffic
     // and parallelism): `.warm(cap)` gives the session an LRU cache of

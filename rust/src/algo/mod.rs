@@ -50,6 +50,16 @@
 //! [`SolverSession::solve_matfree`] / [`SessionBuilder::build_matfree`],
 //! the CLI `solve --matfree <epsilon>`, or the `[solver] matfree` config
 //! key (service `submit_geom`).
+//!
+//! One-dimensional geometry (`d == 1`, separable `|x − y|` cost) has an
+//! **exact near-linear fast path** ([`oned`]): the Laplace kernel factors
+//! over sorted supports, so `A·v` / `Aᵀ·u` cost O(m + n) per iteration —
+//! no m·n work of any kind — and the converged solve emits a sparse
+//! monotone [`TransportList`] alongside the scaling vectors. Entered
+//! through [`SolverSession::solve_oned`] / [`SessionBuilder::build_oned`],
+//! the CLI `solve --oned auto|on|off`, or the `[solver] oned` config key;
+//! `coordinator::router::classify_geom` routes eligible service requests
+//! there automatically.
 
 pub mod balancing;
 pub mod coffee;
@@ -59,6 +69,7 @@ pub mod kernels;
 pub mod lazy;
 pub mod mapuot;
 pub mod matfree;
+pub mod oned;
 pub mod parallel;
 pub mod pool;
 pub mod pot;
@@ -71,6 +82,7 @@ pub mod warmstart;
 pub use convergence::StopRule;
 pub use kernels::{kernel_for, Kernel, KernelKind, KernelPolicy, TileSpec};
 pub use matfree::{CostKind, GeomProblem, MatfreeWorkspace};
+pub use oned::{OnedWorkspace, Transport, TransportList};
 pub use pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 pub use problem::Problem;
 pub use session::{

@@ -1,0 +1,673 @@
+//! Exact near-linear 1D MAP-UOT: sorted-support sweeps over the Laplace
+//! kernel, O(m + n) per iteration, no plan matrix — ever.
+//!
+//! Every backend so far *iterates over pairs*: dense and CSR stream the
+//! plan, matfree regenerates m·n kernel entries per sweep. But when the
+//! supports are one-dimensional and the ground cost is the separable
+//! `|x − y|` distance ([`CostKind::Euclidean`]), the Gibbs kernel is the
+//! **Laplace kernel** `A_ij = exp(-|x_i − y_j|/ε)`, and the exponential of
+//! a distance *factors across sorted supports*:
+//!
+//! ```text
+//! (A·v)_i = Σ_{y_j ≤ x_i} v_j·e^{-(x_i−y_j)/ε}  +  Σ_{y_j > x_i} v_j·e^{-(y_j−x_i)/ε}
+//!         =        L_i (prefix, decaying right) +        R_i (suffix, decaying left)
+//! ```
+//!
+//! Both prefix sums obey a two-pointer merge recursion over the sorted
+//! event sequence — between consecutive events at positions `p < q` the
+//! accumulator just decays by `e^{-(q−p)/ε}` — so **one forward and one
+//! backward sweep compute the exact m·n kernel product in O(m + n)**
+//! (this is the classical semiseparable-matrix identity behind the exact
+//! 1D transport line of work, arXiv:2311.17704, applied to the scaling
+//! iteration; the TI analysis in arXiv:2201.00730 shows how much real
+//! workload is in this class). The MAP-UOT iteration itself is unchanged
+//! — the same column-factor / row-factor algebra as [`matfree`](crate::algo::matfree),
+//! same fixed point, same unbalanced `fi` relaxation — only `A·v` and
+//! `Aᵀ·u` stop costing m·n work. Per-solve total: O((m+n)·log(m+n)) for
+//! the one support sort, O(m + n) per iteration after it. Resident state
+//! is O(m + n): sorted positions, sort orders, two f64 apply buffers and
+//! the carried marginals. The squared-Euclidean (Gaussian) kernel does
+//! **not** factor this way — [`check_eligible`] rejects it with a typed
+//! error and the router falls back to matfree.
+//!
+//! # Output: monotone transport list
+//!
+//! The converged iterate is `plan = diag(u)·A·diag(v)` — still never
+//! materialized. For 1D output the solver instead extracts the **monotone
+//! quantile coupling** of the converged transported marginals
+//! ([`fused_monotone_coupling`]): a two-pointer walk over the sorted
+//! supports pairing row mass with column mass in position order, ≤ m+n−1
+//! entries (exact arithmetic), with the unbalanced creation/destruction
+//! slack per side recorded on the [`TransportList`]. For convex 1D costs
+//! the monotone coupling is the ε → 0 optimal rearrangement of those
+//! marginals, which makes it the canonical sparse representative of the
+//! entropic plan's transported mass.
+//!
+//! # Numerics
+//!
+//! The sweeps accumulate in f64 (the decay recursion is a long product of
+//! factors in (0, 1]; f32 would lose the tail) and cast each result back
+//! to f32 before the shared [`scaling::factor`](crate::algo::scaling::factor)
+//! guard, so factor semantics (zero-sum ⇒ factor 0) are bit-compatible
+//! with every other backend. Ties are counted exactly once: the forward
+//! sweep takes a source event *before* a coincident target (the pair
+//! contributes `e^0 = 1` to the prefix), the backward sweep takes sources
+//! only *strictly after* the target. Duplicate and unsorted support
+//! positions therefore need no pre-deduplication.
+//!
+//! The tracked per-iteration delta is **marginal-space motion** — the
+//! L∞ change of the carried row/column sums — not the dense backends'
+//! plan-element motion (tracking that would cost the very m·n the module
+//! exists to avoid). Both are Cauchy-style stop signals; equivalence
+//! tests pin against dense runs under fixed iteration budgets.
+//!
+//! # Allocation contract
+//!
+//! Construction and [`OnedWorkspace::ensure_shape`] growth may allocate;
+//! [`OnedWorkspace::prepare`] (the in-place `sort_unstable_by` support
+//! sort included), the sweeps and the coupling extraction must not —
+//! same contract as every hot path, enforced by `tools/uotlint` and the
+//! counting-allocator legs in `rust/tests/alloc_free.rs` (which also
+//! prove the headline claim: an m = n = 1_000_000 solve performs no
+//! allocation within orders of magnitude of O(m·n)).
+
+use crate::algo::matfree::{CostKind, GeomProblem};
+use crate::algo::scaling::factor;
+use crate::error::{Error, Result};
+
+/// One entry of the sparse monotone transport list: `mass` units moved
+/// from row support point `from` to column support point `to` (original,
+/// pre-sort indices).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transport {
+    pub from: u32,
+    pub to: u32,
+    pub mass: f32,
+}
+
+/// Sparse monotone coupling of the converged transported marginals, plus
+/// the unbalanced slack per side. `destroyed = Σrpd − transported` is the
+/// row-target mass the relaxed plan chose not to move; `created = Σcpd −
+/// transported` the column-side analogue. Either may be negative when the
+/// stationary plan mass overshoots that side's target (the damped
+/// unbalanced fixed point sits *between* the two totals — see
+/// [`scaling::ti_mass_target`](crate::algo::scaling::ti_mass_target)).
+#[derive(Debug, Clone, Default)]
+pub struct TransportList {
+    /// Monotone in sorted support order: successive entries never cross.
+    pub entries: Vec<Transport>,
+    pub destroyed: f32,
+    pub created: f32,
+}
+
+impl TransportList {
+    /// Reserve the worst-case m + n entry capacity so
+    /// [`fused_monotone_coupling`] never reallocates.
+    pub fn reserve_for(&mut self, m: usize, n: usize) {
+        self.entries.clear();
+        self.entries.reserve(m + n);
+    }
+
+    /// Total transported mass (f64 accumulation).
+    pub fn transported(&self) -> f32 {
+        self.entries.iter().map(|t| t.mass as f64).sum::<f64>() as f32
+    }
+}
+
+/// Typed eligibility gate for the 1D fast path. The router and the
+/// session both funnel through this so the rejection text is uniform.
+pub fn check_eligible(p: &GeomProblem) -> Result<()> {
+    if p.d != 1 {
+        return Err(Error::InvalidProblem(format!(
+            "the 1D fast path requires d == 1 supports (got d = {}) — route d > 1 \
+             geometry through matfree, or project an effectively-1D cloud first \
+             (coordinator::router::classify_geom)",
+            p.d
+        )));
+    }
+    if p.cost != CostKind::Euclidean {
+        return Err(Error::InvalidProblem(format!(
+            "the 1D fast path needs the separable |x - y| cost (cost = euclid): the \
+             Laplace kernel factors into prefix/suffix decay recursions, the {} \
+             (Gaussian) kernel does not — route it through matfree",
+            p.cost.name()
+        )));
+    }
+    if p.rows() > u32::MAX as usize || p.cols() > u32::MAX as usize {
+        return Err(Error::InvalidProblem(format!(
+            "1D supports are indexed u32 in the transport list: {} x {} exceeds u32",
+            p.rows(),
+            p.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// Exact Laplace-kernel apply over sorted supports: for every target
+/// event `k`, `out[tord[k]] = Σ_s sw[sord[s]] · exp(-|tpos[k] − spos[s]|/ε)`
+/// — the full m·n kernel product in two O(m + n) sweeps. `tpos`/`spos`
+/// are the sorted positions, `tord`/`sord` the original indices in sorted
+/// order, `sw` the source weights in *original* order; `out` is written
+/// in original order. Allocation-free; f64 accumulation throughout.
+pub fn fused_kernel_apply(
+    tpos: &[f64],
+    tord: &[u32],
+    spos: &[f64],
+    sord: &[u32],
+    sw: &[f32],
+    inv_eps: f64,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(tpos.len(), tord.len());
+    debug_assert_eq!(spos.len(), sord.len());
+    debug_assert_eq!(out.len(), tord.len());
+    let (nt, ns) = (tpos.len(), spos.len());
+
+    // Forward sweep: prefix sums L, decaying rightward. A source at the
+    // same position as a target is taken first (contributes e^0 = 1).
+    let mut acc = 0f64;
+    let mut prev = 0f64;
+    let mut started = false;
+    let (mut it, mut is) = (0usize, 0usize);
+    while it < nt {
+        let take_src = is < ns && spos[is] <= tpos[it];
+        let pos = if take_src { spos[is] } else { tpos[it] };
+        if started {
+            acc *= (-(pos - prev) * inv_eps).exp();
+        }
+        started = true;
+        prev = pos;
+        if take_src {
+            acc += sw[sord[is] as usize] as f64;
+            is += 1;
+        } else {
+            out[tord[it] as usize] = acc;
+            it += 1;
+        }
+    }
+
+    // Backward sweep: suffix sums R, decaying leftward. A coincident
+    // source is NOT taken (strict `>`), so ties are counted exactly once.
+    acc = 0.0;
+    started = false;
+    let (mut it, mut is) = (nt, ns);
+    while it > 0 {
+        let take_src = is > 0 && spos[is - 1] > tpos[it - 1];
+        let pos = if take_src { spos[is - 1] } else { tpos[it - 1] };
+        if started {
+            acc *= (-(prev - pos) * inv_eps).exp();
+        }
+        started = true;
+        prev = pos;
+        if take_src {
+            acc += sw[sord[is - 1] as usize] as f64;
+            is -= 1;
+        } else {
+            out[tord[it - 1] as usize] += acc;
+            it -= 1;
+        }
+    }
+}
+
+/// Extract the monotone quantile coupling of the transported marginals:
+/// walk both sorted supports in position order, pairing `min(remaining
+/// row mass, remaining column mass)` at each step. Pushes into
+/// `out.entries` within the capacity [`TransportList::reserve_for`]
+/// provisioned (≤ m + n entries — every push exhausts at least one side,
+/// and IEEE `a − a = 0` makes exhaustion exact), so the walk is
+/// allocation-free. Fills the unbalanced `destroyed`/`created` slacks
+/// against the problem targets `rpd`/`cpd`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_monotone_coupling(
+    sx_ord: &[u32],
+    sy_ord: &[u32],
+    rowsum: &[f32],
+    colsum: &[f32],
+    rpd: &[f32],
+    cpd: &[f32],
+    out: &mut TransportList,
+) {
+    out.entries.clear();
+    let (m, n) = (sx_ord.len(), sy_ord.len());
+    let mut transported = 0f64;
+    let (mut ix, mut iy) = (0usize, 0usize);
+    let mut ra = 0f64; // remaining mass of the current (sorted) row
+    let mut ca = 0f64; // remaining mass of the current (sorted) column
+    while ix < m && iy < n {
+        if ra == 0.0 {
+            ra = rowsum[sx_ord[ix] as usize] as f64;
+            if ra <= 0.0 {
+                ra = 0.0;
+                ix += 1;
+                continue;
+            }
+        }
+        if ca == 0.0 {
+            ca = colsum[sy_ord[iy] as usize] as f64;
+            if ca <= 0.0 {
+                ca = 0.0;
+                iy += 1;
+                continue;
+            }
+        }
+        let mv = ra.min(ca);
+        out.entries.push(Transport {
+            from: sx_ord[ix],
+            to: sy_ord[iy],
+            mass: mv as f32,
+        });
+        transported += mv;
+        ra -= mv;
+        ca -= mv;
+        if ra == 0.0 {
+            ix += 1;
+        }
+        if ca == 0.0 {
+            iy += 1;
+        }
+    }
+    let rpd_total: f64 = rpd.iter().map(|&t| t as f64).sum();
+    let cpd_total: f64 = cpd.iter().map(|&t| t as f64).sum();
+    out.destroyed = (rpd_total - transported) as f32;
+    out.created = (cpd_total - transported) as f32;
+}
+
+// ---------------------------------------------------------------------------
+// OnedWorkspace
+// ---------------------------------------------------------------------------
+
+/// Scratch for exact 1D solves — the near-linear twin of
+/// [`MatfreeWorkspace`](crate::algo::matfree::MatfreeWorkspace). Holds the
+/// sorted supports, their sort orders, the two f64 apply buffers and the
+/// previous-marginal snapshots for delta tracking. Everything is O(m + n);
+/// there is no engine — the sweeps are sequential recursions (each event
+/// depends on the previous accumulator), and at O(m + n) work per
+/// iteration they sit far below the shapes where fan-out pays.
+#[derive(Debug)]
+pub struct OnedWorkspace {
+    shape: (usize, usize),
+    /// Row support positions, sorted ascending (f64 for the decay math).
+    sxp: Vec<f64>,
+    /// Original row index of each sorted row event.
+    sx_ord: Vec<u32>,
+    /// Column support positions, sorted ascending.
+    syp: Vec<f64>,
+    /// Original column index of each sorted column event.
+    sy_ord: Vec<u32>,
+    /// `(A·v)_i` apply buffer, original row order.
+    av: Vec<f64>,
+    /// `(Aᵀ·u)_j` apply buffer, original column order.
+    bu: Vec<f64>,
+    /// Previous carried marginals for the tracked delta.
+    prev_rowsum: Vec<f32>,
+    prev_colsum: Vec<f32>,
+}
+
+impl OnedWorkspace {
+    /// Workspace for `m × n` 1D problems.
+    pub fn new(m: usize, n: usize) -> Self {
+        Self {
+            shape: (m, n),
+            sxp: vec![0f64; m],
+            sx_ord: vec![0u32; m],
+            syp: vec![0f64; n],
+            sy_ord: vec![0u32; n],
+            av: vec![0f64; m],
+            bu: vec![0f64; n],
+            prev_rowsum: vec![0f32; m],
+            prev_colsum: vec![0f32; n],
+        }
+    }
+
+    /// Current `(rows, cols)` shape.
+    pub fn shape(&self) -> (usize, usize) {
+        self.shape
+    }
+
+    /// Resize for a new shape. No-op (and allocation-free) when unchanged;
+    /// growing past any previously seen size reallocates.
+    pub fn ensure_shape(&mut self, m: usize, n: usize) {
+        if self.shape == (m, n) {
+            return;
+        }
+        self.shape = (m, n);
+        self.sxp.resize(m, 0.0);
+        self.sx_ord.resize(m, 0);
+        self.syp.resize(n, 0.0);
+        self.sy_ord.resize(n, 0);
+        self.av.resize(m, 0.0);
+        self.bu.resize(n, 0.0);
+        self.prev_rowsum.resize(m, 0.0);
+        self.prev_colsum.resize(n, 0.0);
+    }
+
+    /// Validate eligibility, size scratch and sort both supports — the
+    /// per-solve setup, O((m+n)·log(m+n)) via the in-place (non-allocating)
+    /// `sort_unstable_by`. Unsorted and duplicate positions are fine; the
+    /// sort is where the module's worst-case log factor lives.
+    pub fn prepare(&mut self, p: &GeomProblem) -> Result<()> {
+        check_eligible(p)?;
+        let (m, n) = (p.rows(), p.cols());
+        self.ensure_shape(m, n);
+        for (k, o) in self.sx_ord.iter_mut().enumerate() {
+            *o = k as u32;
+        }
+        let xs = &p.x;
+        self.sx_ord
+            .sort_unstable_by(|&a, &b| xs[a as usize].total_cmp(&xs[b as usize]));
+        for (sp, &o) in self.sxp.iter_mut().zip(self.sx_ord.iter()) {
+            *sp = xs[o as usize] as f64;
+        }
+        for (k, o) in self.sy_ord.iter_mut().enumerate() {
+            *o = k as u32;
+        }
+        let ys = &p.y;
+        self.sy_ord
+            .sort_unstable_by(|&a, &b| ys[a as usize].total_cmp(&ys[b as usize]));
+        for (sp, &o) in self.syp.iter_mut().zip(self.sy_ord.iter()) {
+            *sp = ys[o as usize] as f64;
+        }
+        Ok(())
+    }
+
+    /// Sorted row support order (valid after [`OnedWorkspace::prepare`]).
+    pub fn row_order(&self) -> &[u32] {
+        &self.sx_ord
+    }
+
+    /// Sorted column support order (valid after [`OnedWorkspace::prepare`]).
+    pub fn col_order(&self) -> &[u32] {
+        &self.sy_ord
+    }
+
+    /// Seed the carried column sums of a scaling state: `out[j] = v_j ·
+    /// (Aᵀ·u)_j`, exact, one backward+forward sweep pair — the 1D analogue
+    /// of `MatfreeWorkspace::seed_col_sums`, run once per solve (cold
+    /// all-ones or warm-started scalings). Allocation-free.
+    pub fn seed_col_sums(&mut self, p: &GeomProblem, u: &[f32], v: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(self.shape, (p.rows(), p.cols()));
+        let inv_eps = 1.0 / p.epsilon as f64;
+        fused_kernel_apply(&self.syp, &self.sy_ord, &self.sxp, &self.sx_ord, u, inv_eps, &mut self.bu);
+        for ((o, &vj), &b) in out.iter_mut().zip(v.iter()).zip(self.bu.iter()) {
+            *o = (vj as f64 * b) as f32;
+        }
+    }
+
+    /// One MAP-UOT scaling iteration with exact O(m + n) kernel products —
+    /// the same column-factor / row-factor / carried-colsum algebra as the
+    /// matfree sweep (same fixed point), with `A·v` and `Aᵀ·u_new` computed
+    /// by the sorted-support recursions instead of m·n generation.
+    /// `u`/`v`/`colsum`/`rowsum` are the carried solver state.
+    pub fn iterate(
+        &mut self,
+        p: &GeomProblem,
+        u: &mut [f32],
+        v: &mut [f32],
+        colsum: &mut [f32],
+        rowsum: &mut [f32],
+    ) {
+        debug_assert_eq!(self.shape, (p.rows(), p.cols()));
+        let inv_eps = 1.0 / p.epsilon as f64;
+        // Column stage: fold the column factors into v.
+        for ((vj, &t), &s) in v.iter_mut().zip(p.cpd.iter()).zip(colsum.iter()) {
+            *vj *= factor(t, s, p.fi);
+        }
+        // Exact (A·v)_i at every row support, then the row stage.
+        fused_kernel_apply(&self.sxp, &self.sx_ord, &self.syp, &self.sy_ord, v, inv_eps, &mut self.av);
+        for (((ui, &t), &a), rs) in u
+            .iter_mut()
+            .zip(p.rpd.iter())
+            .zip(self.av.iter())
+            .zip(rowsum.iter_mut())
+        {
+            let s = (*ui as f64 * a) as f32;
+            let fr = factor(t, s, p.fi);
+            *ui *= fr;
+            *rs = fr * s;
+        }
+        // Carried colsum of the new iterate: colsum[j] = v_j · (Aᵀ·u_new)_j.
+        fused_kernel_apply(&self.syp, &self.sy_ord, &self.sxp, &self.sx_ord, u, inv_eps, &mut self.bu);
+        for ((cs, &vj), &b) in colsum.iter_mut().zip(v.iter()).zip(self.bu.iter()) {
+            *cs = (vj as f64 * b) as f32;
+        }
+    }
+
+    /// [`OnedWorkspace::iterate`] with delta tracking; returns the
+    /// iteration's L∞ **marginal** motion (see the module docs — plan-space
+    /// motion would cost the m·n this backend exists to avoid).
+    pub fn iterate_tracked(
+        &mut self,
+        p: &GeomProblem,
+        u: &mut [f32],
+        v: &mut [f32],
+        colsum: &mut [f32],
+        rowsum: &mut [f32],
+    ) -> f32 {
+        self.prev_rowsum.copy_from_slice(rowsum);
+        self.prev_colsum.copy_from_slice(colsum);
+        self.iterate(p, u, v, colsum, rowsum);
+        let mut delta = 0f32;
+        for (&new, &old) in rowsum.iter().zip(self.prev_rowsum.iter()) {
+            delta = delta.max((new - old).abs());
+        }
+        for (&new, &old) in colsum.iter().zip(self.prev_colsum.iter()) {
+            delta = delta.max((new - old).abs());
+        }
+        delta
+    }
+
+    /// Bytes of resident workspace scratch — the figure the 1D ablation
+    /// reports against the dense plan's `4·m·n`.
+    pub fn resident_bytes(&self) -> usize {
+        let (m, n) = self.shape;
+        // sxp/av/prev_rowsum + sx_ord per row; syp/bu/prev_colsum + sy_ord
+        // per column.
+        m * (8 + 8 + 4 + 4) + n * (8 + 8 + 4 + 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::matfree::MatfreeWorkspace;
+    use crate::util::XorShift;
+
+    fn oned_problem(m: usize, n: usize, eps: f32, fi: f32, seed: u64) -> GeomProblem {
+        GeomProblem::random(m, n, 1, CostKind::Euclidean, eps, fi, seed)
+    }
+
+    #[test]
+    fn eligibility_is_typed_and_specific() {
+        let ok = oned_problem(6, 5, 0.5, 0.7, 1);
+        assert!(check_eligible(&ok).is_ok());
+        let d2 = GeomProblem::random(6, 5, 2, CostKind::Euclidean, 0.5, 0.7, 1);
+        match check_eligible(&d2) {
+            Err(Error::InvalidProblem(msg)) => assert!(msg.contains("d == 1"), "{msg}"),
+            other => panic!("expected InvalidProblem, got {other:?}"),
+        }
+        let gauss = GeomProblem::random(6, 5, 1, CostKind::SqEuclidean, 0.5, 0.7, 1);
+        match check_eligible(&gauss) {
+            Err(Error::InvalidProblem(msg)) => assert!(msg.contains("euclid"), "{msg}"),
+            other => panic!("expected InvalidProblem, got {other:?}"),
+        }
+    }
+
+    /// The two-sweep apply equals the brute-force m·n kernel product, on
+    /// unsorted supports with deliberate duplicates.
+    #[test]
+    fn fused_kernel_apply_matches_brute_force() {
+        let mut rng = XorShift::new(7);
+        for (m, n) in [(1usize, 1usize), (1, 9), (9, 1), (13, 17), (40, 33)] {
+            let mut p = oned_problem(m, n, 0.37, 0.7, (m * 31 + n) as u64);
+            // Seed duplicates: copy a few positions across and within clouds.
+            if m > 2 && n > 2 {
+                p.x[1] = p.x[0];
+                p.y[2] = p.x[0];
+                p.y[1] = p.y[0];
+            }
+            let w: Vec<f32> = (0..n).map(|_| 0.25 + rng.next_f32()).collect();
+            let mut ws = OnedWorkspace::new(m, n);
+            ws.prepare(&p).unwrap();
+            let mut out = vec![0f64; m];
+            fused_kernel_apply(&ws.sxp, &ws.sx_ord, &ws.syp, &ws.sy_ord, &w, 1.0 / p.epsilon as f64, &mut out);
+            for i in 0..m {
+                let want: f64 = (0..n)
+                    .map(|j| {
+                        w[j] as f64
+                            * (-((p.x[i] as f64 - p.y[j] as f64).abs()) / p.epsilon as f64).exp()
+                    })
+                    .sum();
+                assert!(
+                    (out[i] - want).abs() <= 1e-12 * want.abs().max(1e-9),
+                    "{m}x{n} row {i}: {} vs {want}",
+                    out[i]
+                );
+            }
+        }
+    }
+
+    /// The exact sweep runs the same iteration as matfree: identical
+    /// carried state to tolerance, iteration by iteration.
+    #[test]
+    fn iterations_track_the_matfree_sweep() {
+        for (m, n) in [(9usize, 7usize), (16, 12), (5, 40), (1, 6), (6, 1)] {
+            let p = oned_problem(m, n, 0.3, 0.7, (m + 3 * n) as u64);
+            let mut mf = MatfreeWorkspace::new(m, n, 1);
+            mf.prepare(m, n);
+            let mut od = OnedWorkspace::new(m, n);
+            od.prepare(&p).unwrap();
+            let (mut ua, mut va) = (vec![1f32; m], vec![1f32; n]);
+            let (mut ub, mut vb) = (vec![1f32; m], vec![1f32; n]);
+            let (mut ca, mut ra) = (vec![0f32; n], vec![0f32; m]);
+            let (mut cb, mut rb) = (vec![0f32; n], vec![0f32; m]);
+            mf.seed_col_sums(&p, &ua, &va, &mut ca);
+            od.seed_col_sums(&p, &ub, &vb, &mut cb);
+            for (j, (a, b)) in ca.iter().zip(&cb).enumerate() {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1e-4), "seed col {j}: {a} vs {b}");
+            }
+            for it in 0..8 {
+                mf.iterate(&p, &mut ua, &mut va, &mut ca, &mut ra);
+                od.iterate(&p, &mut ub, &mut vb, &mut cb, &mut rb);
+                for (j, (a, b)) in ca.iter().zip(&cb).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * b.abs().max(1e-3),
+                        "{m}x{n} it={it} col {j}: {a} vs {b}"
+                    );
+                }
+                for (i, (a, b)) in ra.iter().zip(&rb).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * b.abs().max(1e-3),
+                        "{m}x{n} it={it} row {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tracked_iteration_is_bit_identical_to_untracked() {
+        let p = oned_problem(14, 11, 0.5, 0.8, 9);
+        let (m, n) = (14, 11);
+        let mut ws_a = OnedWorkspace::new(m, n);
+        let mut ws_b = OnedWorkspace::new(m, n);
+        ws_a.prepare(&p).unwrap();
+        ws_b.prepare(&p).unwrap();
+        let (mut ua, mut va) = (vec![1f32; m], vec![1f32; n]);
+        let (mut ub, mut vb) = (vec![1f32; m], vec![1f32; n]);
+        let (mut ca, mut ra) = (vec![0f32; n], vec![0f32; m]);
+        let (mut cb, mut rb) = (vec![0f32; n], vec![0f32; m]);
+        ws_a.seed_col_sums(&p, &ua, &va, &mut ca);
+        ws_b.seed_col_sums(&p, &ub, &vb, &mut cb);
+        let mut last_delta = f32::INFINITY;
+        for _ in 0..5 {
+            ws_a.iterate(&p, &mut ua, &mut va, &mut ca, &mut ra);
+            last_delta = ws_b.iterate_tracked(&p, &mut ub, &mut vb, &mut cb, &mut rb);
+        }
+        assert_eq!(ua, ub);
+        assert_eq!(va, vb);
+        assert_eq!(ca, cb);
+        assert_eq!(ra, rb);
+        assert!(last_delta.is_finite() && last_delta >= 0.0);
+    }
+
+    /// Hand-walked quantile coupling (same fixture as
+    /// `data/golden_oned_quantile.txt`): balanced masses, m+n−1 entries,
+    /// monotone, conservative.
+    #[test]
+    fn monotone_coupling_hand_example() {
+        let rowsum = [0.5f32, 1.0, 0.25, 1.25];
+        let colsum = [1.2f32, 0.8, 1.0];
+        let sx_ord = [0u32, 1, 2, 3];
+        let sy_ord = [0u32, 1, 2];
+        let mut out = TransportList::default();
+        out.reserve_for(4, 3);
+        fused_monotone_coupling(&sx_ord, &sy_ord, &rowsum, &colsum, &rowsum, &colsum, &mut out);
+        let want = [
+            (0u32, 0u32, 0.5f32),
+            (1, 0, 0.7),
+            (1, 1, 0.3),
+            (2, 1, 0.25),
+            (3, 1, 0.25),
+            (3, 2, 1.0),
+        ];
+        assert_eq!(out.entries.len(), want.len());
+        for (got, &(f, t, mass)) in out.entries.iter().zip(&want) {
+            assert_eq!((got.from, got.to), (f, t));
+            assert!((got.mass - mass).abs() <= 1e-6, "{got:?} vs mass {mass}");
+        }
+        assert!((out.transported() - 3.0).abs() <= 1e-6);
+        assert!(out.destroyed.abs() <= 1e-6 && out.created.abs() <= 1e-6);
+    }
+
+    /// Coupling properties on random marginals: monotone in sorted rank,
+    /// per-row/per-column mass conservation, ≤ m+n entries, slack totals.
+    #[test]
+    fn monotone_coupling_properties() {
+        let mut rng = XorShift::new(23);
+        for (m, n) in [(1usize, 1usize), (7, 5), (12, 31), (30, 4)] {
+            let rowsum: Vec<f32> = (0..m).map(|_| 0.1 + rng.next_f32()).collect();
+            // Column masses rescaled to a different total: the walk stops
+            // at the smaller side and the slacks record the difference.
+            let colsum: Vec<f32> = (0..n).map(|_| 0.1 + rng.next_f32()).collect();
+            let sx_ord: Vec<u32> = (0..m as u32).collect();
+            let sy_ord: Vec<u32> = (0..n as u32).collect();
+            let mut out = TransportList::default();
+            out.reserve_for(m, n);
+            fused_monotone_coupling(&sx_ord, &sy_ord, &rowsum, &colsum, &rowsum, &colsum, &mut out);
+            assert!(out.entries.len() <= m + n);
+            let mut prev = (0u32, 0u32);
+            let mut row_mass = vec![0f64; m];
+            let mut col_mass = vec![0f64; n];
+            for t in &out.entries {
+                assert!(t.from >= prev.0 && t.to >= prev.1, "crossing at {t:?}");
+                prev = (t.from, t.to);
+                assert!(t.mass > 0.0);
+                row_mass[t.from as usize] += t.mass as f64;
+                col_mass[t.to as usize] += t.mass as f64;
+            }
+            let rt: f64 = rowsum.iter().map(|&v| v as f64).sum();
+            let ct: f64 = colsum.iter().map(|&v| v as f64).sum();
+            let transported = out.transported() as f64;
+            assert!((transported - rt.min(ct)).abs() <= 1e-5 * rt.min(ct));
+            // The exhausted side's per-point masses are met exactly.
+            if rt <= ct {
+                for (i, &got) in row_mass.iter().enumerate() {
+                    assert!((got - rowsum[i] as f64).abs() <= 1e-6, "row {i}");
+                }
+            } else {
+                for (j, &got) in col_mass.iter().enumerate() {
+                    assert!((got - colsum[j] as f64).abs() <= 1e-6, "col {j}");
+                }
+            }
+            assert!((out.destroyed as f64 - (rt - transported)).abs() <= 1e-5);
+            assert!((out.created as f64 - (ct - transported)).abs() <= 1e-5);
+        }
+    }
+
+    #[test]
+    fn resident_state_is_o_m_plus_n() {
+        let ws = OnedWorkspace::new(1 << 20, 1 << 20);
+        // 24 bytes per support point per side; nowhere near 4·m·n.
+        assert_eq!(ws.resident_bytes(), 2 * (1 << 20) * 24);
+    }
+}

@@ -134,7 +134,28 @@
 //!   kernel), and either the plan cannot be allocated at all or kernel
 //!   regeneration (one SIMD exp per cell) is cheaper than re-streaming
 //!   8 bytes per cell from DRAM. Marginal errors come from the carried
-//!   `u, v` sums, so convergence checks are O(m + n).
+//!   `u, v` sums, so convergence checks are O(m + n);
+//! * **oned** — the geometry is one-dimensional (`d == 1`) with the
+//!   separable `|x − y|` cost: the Laplace kernel factors over sorted
+//!   supports, so each sweep costs O(m + n) *total* — not per row — and
+//!   the answer includes a sparse monotone [`TransportList`]. Strictly
+//!   dominates matfree on eligible problems at every shape.
+//!
+//! The full routing decision table (`coordinator::router::classify_geom`
+//! applies the geometric rows automatically for service requests):
+//!
+//! | problem                                   | backend  | per-sweep cost |
+//! |-------------------------------------------|----------|----------------|
+//! | dense plan, general cost                  | dense    | O(m·n) stream  |
+//! | mostly-zero plan                          | sparse   | O(nnz)         |
+//! | geometric, `d > 1` or Gaussian kernel     | matfree  | O(m·n) exp     |
+//! | geometric, `d == 1`, `\|x − y\|` cost     | **oned** | O(m + n) exact |
+//! | geometric, one varying axis (within tol)  | **oned** | O(m + n) exact |
+//!
+//! Ineligible geometry handed to [`SolverSession::solve_oned`] fails with
+//! a typed [`Error::InvalidProblem`] naming the fallback — nothing is
+//! silently rerouted at the session layer (the service's `oned = auto`
+//! mode is where graceful fallback lives).
 //!
 //! The matfree path shares the session's stop rule, check cadence,
 //! observer, cancellation and execution engine (serial / scope / the same
@@ -150,6 +171,26 @@
 //! m = n = 16384 in `rust/tests/alloc_free.rs`. Serial/scope/pool matfree
 //! iterations are bit-identical for any fixed partition
 //! (`rust/tests/prop_matfree.rs`).
+//!
+//! # Exact 1D problems
+//!
+//! A `d == 1` [`GeomProblem`] with [`CostKind::Euclidean`](crate::algo::CostKind)
+//! cost solves on the exact near-linear path
+//! ([`SolverSession::solve_oned`] / [`SessionBuilder::build_oned`]): the
+//! same MAP-UOT scaling iteration — same fixed point, same stop rule,
+//! observer and cancellation — but with `A·v` / `Aᵀ·u` computed exactly
+//! in O(m + n) by the sorted-support sweeps of [`crate::algo::oned`]
+//! instead of m·n kernel generation. Results:
+//! [`SolverSession::oned_scaling`] (the scaling vectors),
+//! [`SolverSession::oned_transport`] (the sparse monotone coupling of the
+//! converged transported marginals), and
+//! [`SolverSession::oned_materialize`] for on-demand dense output. TI
+//! sweeps compose; the ε ladder does not (a near-linear solve has no
+//! expensive iterations to amortize — typed error). Warm starting
+//! interoperates with matfree **by design**: a 1D solve stores its
+//! scalings under the same fingerprint a matfree solve of the identical
+//! geometry would, so either path seeds the other. Same allocation
+//! contract, proven at m = n = 1_000_000 in `rust/tests/alloc_free.rs`.
 //!
 //! # Iteration-count accelerators
 //!
@@ -204,6 +245,7 @@ use std::time::{Duration, Instant};
 use crate::algo::convergence::{self, StopRule};
 use crate::algo::kernels::{KernelKind, KernelPolicy, TileSpec};
 use crate::algo::matfree::{self, GeomProblem, MatfreeWorkspace};
+use crate::algo::oned::{self, OnedWorkspace, TransportList};
 use crate::algo::pool::{AccArena, AffinityHint, PaddedSlots, ParallelBackend, ThreadPool};
 use crate::algo::problem::Problem;
 use crate::algo::scaling;
@@ -934,6 +976,21 @@ impl SessionBuilder {
         session
     }
 
+    /// Build a session for an **exact 1D** geometric problem: the dense
+    /// buffers stay at a 1×1 placeholder and the oned state — scaling
+    /// vectors, carried marginal sums, sorted-support [`OnedWorkspace`],
+    /// transport-list capacity — is sized so the first
+    /// [`SolverSession::solve_oned`] on this shape is already
+    /// allocation-free. Eligibility (`d == 1`, `|x − y|` cost) is enforced
+    /// at solve time with a typed error, like every other per-solve
+    /// precondition; building against an ineligible problem just sizes
+    /// O(m + n) buffers that the first eligible solve reuses.
+    pub fn build_oned(self, problem: &GeomProblem) -> SolverSession {
+        let mut session = self.build_for_shape(1, 1);
+        session.size_oned(problem);
+        session
+    }
+
     fn build_for_shape(self, m: usize, n: usize) -> SolverSession {
         // Resolved exactly once per build (a `tune` tile measures here).
         let policy = KernelPolicy::for_shape(self.kernel, self.tile, m, n);
@@ -958,6 +1015,7 @@ impl SessionBuilder {
             colsum: vec![0f32; n],
             sparse: None,
             matfree: None,
+            oned: None,
             warm: (self.warm > 0).then(|| WarmCache::new(self.warm)),
             ti: self.ti,
             eps_schedule: self.eps_schedule,
@@ -982,6 +1040,9 @@ pub struct SolverSession {
     /// Matfree state, populated by the first matfree solve (or
     /// `build_matfree`) and reused across same-shape matfree solves.
     matfree: Option<MatfreeState>,
+    /// Exact-1D state, populated by the first oned solve (or `build_oned`)
+    /// and reused across same-shape oned solves.
+    oned: Option<OnedState>,
     /// Warm-start cache of converged diagonal scalings (`None` = off).
     warm: Option<WarmCache>,
     /// Translation-invariant pre-sweep mass correction (MAP-UOT only).
@@ -1006,6 +1067,18 @@ struct MatfreeState {
     colsum: Vec<f32>,
     rowsum: Vec<f32>,
     ws: MatfreeWorkspace,
+}
+
+/// The exact-1D twin: the same O(m + n) carried scaling state as matfree
+/// plus the sorted-support workspace and the converged monotone transport
+/// list (entry capacity pre-reserved, so extraction never allocates).
+struct OnedState {
+    u: Vec<f32>,
+    v: Vec<f32>,
+    colsum: Vec<f32>,
+    rowsum: Vec<f32>,
+    transport: TransportList,
+    ws: OnedWorkspace,
 }
 
 impl SolverSession {
@@ -1500,6 +1573,178 @@ impl SolverSession {
         st.ws.seed_col_sums(problem, &st.u, &st.v, &mut st.colsum);
     }
 
+    /// Solve a 1D geometric `problem` **exactly** on the sorted-support
+    /// fast path: the same MAP-UOT scaling iteration as
+    /// [`SolverSession::solve_matfree`] — same fixed point, stop rule,
+    /// `check_every` cadence, observer and cancellation — with every
+    /// kernel product computed in O(m + n) by the Laplace-kernel sweeps
+    /// of [`crate::algo::oned`]. On return the session additionally holds
+    /// the sparse monotone [`TransportList`] of the final iterate's
+    /// transported marginals ([`SolverSession::oned_transport`]).
+    ///
+    /// Typed rejections: non-MapUot sessions, `d != 1`, the
+    /// squared-Euclidean (Gaussian) kernel, and a configured ε ladder
+    /// (near-linear sweeps have nothing for the ladder to amortize). TI
+    /// sweeps and warm starting compose; the warm fingerprint is shared
+    /// with the matfree path on purpose, so a 1D solve seeds later
+    /// matfree solves of the same geometry and vice versa.
+    ///
+    /// Allocation contract: the first call on a new shape sizes the
+    /// O(m + n) state; after that, same-shape solves — support sort,
+    /// sweeps, coupling extraction included — are allocation-free end to
+    /// end, proven at m = n = 1_000_000 by the counting-allocator test in
+    /// `rust/tests/alloc_free.rs`.
+    pub fn solve_oned(&mut self, problem: &GeomProblem) -> Result<SolveReport> {
+        if self.solver.kind() != SolverKind::MapUot {
+            return Err(Error::InvalidProblem(format!(
+                "the 1D fast path runs the scaling-form MAP-UOT sweep; this session is {} — \
+                 build it with SolverKind::MapUot",
+                self.solver.kind().name()
+            )));
+        }
+        if let Some((from, steps)) = self.eps_schedule {
+            return Err(Error::InvalidProblem(format!(
+                "eps_schedule({from}, {steps}) amortizes expensive matfree sweeps; the exact \
+                 1D sweep is already O(m + n) per iteration — drop the ladder for oned solves"
+            )));
+        }
+        let timer = Timer::start();
+        self.ensure_oned(problem)?;
+        let (m, n) = (problem.rows(), problem.cols());
+        let fi = problem.fi;
+
+        // Warm start — deliberately the *matfree* fingerprint: an eligible
+        // 1D geometry hashes identically on both paths, so each seeds the
+        // other (the cache key never includes which sweep ran; seeding
+        // only relocates the start point along the iteration's own
+        // trajectory space, which is always sound).
+        let fp = self.warm.as_ref().map(|_| warmstart::fingerprint_matfree(problem));
+        if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+            if let Some((uc, vc)) = cache.lookup(fp) {
+                let st = self.oned.as_mut().expect("ensure_oned populated the state");
+                st.u.copy_from_slice(uc);
+                st.v.copy_from_slice(vc);
+                let OnedState { u, v, colsum, ws, .. } = st;
+                ws.seed_col_sums(problem, u, v, colsum);
+            }
+        }
+        let ti_target = self.ti.then(|| {
+            scaling::ti_mass_target(problem.rpd.iter().sum(), problem.cpd.iter().sum(), fi)
+        });
+
+        let st = self.oned.as_mut().expect("ensure_oned populated the state");
+        let OnedState { u, v, colsum, rowsum, ws, .. } = st;
+        let report =
+            drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let mut delta = 0f32;
+                for _ in 0..steps {
+                    if let Some(t) = ti_target {
+                        scaling::ti_rescale(colsum, t, fi);
+                    }
+                    delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
+                }
+                let err =
+                    matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
+                (delta, err)
+            })?;
+        // Extract the monotone coupling of the final iterate's transported
+        // marginals — O(m + n), within the reserved entry capacity.
+        let st = self.oned.as_mut().expect("state retained across the solve");
+        oned::fused_monotone_coupling(
+            st.ws.row_order(),
+            st.ws.col_order(),
+            &st.rowsum,
+            &st.colsum,
+            &problem.rpd,
+            &problem.cpd,
+            &mut st.transport,
+        );
+        if report.converged {
+            if let (Some(cache), Some(fp)) = (self.warm.as_mut(), fp.as_ref()) {
+                let st = self.oned.as_ref().expect("state retained across the solve");
+                cache.store_with(fp, m, n, |cu, cv| {
+                    cu.copy_from_slice(&st.u);
+                    cv.copy_from_slice(&st.v);
+                });
+            }
+        }
+        Ok(report)
+    }
+
+    /// The scaling vectors `(u, v)` of the most recent
+    /// [`SolverSession::solve_oned`] (`None` before the first oned solve).
+    /// Exactly as on the matfree path, `plan_ij = u[i] · A_ij · v[j]` —
+    /// these O(m + n) vectors are the full answer.
+    pub fn oned_scaling(&self) -> Option<(&[f32], &[f32])> {
+        self.oned.as_ref().map(|st| (st.u.as_slice(), st.v.as_slice()))
+    }
+
+    /// The sparse monotone transport list extracted by the most recent
+    /// [`SolverSession::solve_oned`] (`None` before the first oned solve):
+    /// ≤ m + n entries coupling the converged transported marginals in
+    /// sorted-support order, plus the unbalanced creation/destruction
+    /// slack per side.
+    pub fn oned_transport(&self) -> Option<&TransportList> {
+        self.oned.as_ref().map(|st| &st.transport)
+    }
+
+    /// Materialize the full solved plan `u[i] · exp(-|x_i − y_j|/ε) ·
+    /// v[j]` — the **one** deliberate O(m·n) allocation in the oned path,
+    /// for equivalence tests and callers that genuinely need a dense
+    /// result. Everything on the solve path stays O(m + n).
+    pub fn oned_materialize(&self, problem: &GeomProblem) -> Result<Matrix> {
+        let st = self.oned.as_ref().ok_or_else(|| {
+            Error::InvalidProblem("no oned solve has run on this session".into())
+        })?;
+        let (m, n) = st.ws.shape();
+        if problem.rows() != m || problem.cols() != n {
+            return Err(Error::InvalidProblem(format!(
+                "problem shape {}x{} does not match the solved oned state {m}x{n}",
+                problem.rows(),
+                problem.cols()
+            )));
+        }
+        Ok(Matrix::from_fn(m, n, |i, j| {
+            st.u[i] * problem.kernel_entry(i, j) * st.v[j]
+        }))
+    }
+
+    /// Size (or reuse) the oned state for `problem`'s shape — the warmup
+    /// allocation, without touching the problem data (eligibility is a
+    /// solve-time check). Same-shape problems reuse every buffer,
+    /// transport-list capacity included.
+    fn size_oned(&mut self, problem: &GeomProblem) {
+        let (m, n) = (problem.rows(), problem.cols());
+        let reusable = self.oned.as_ref().is_some_and(|st| st.ws.shape() == (m, n));
+        if !reusable {
+            let mut transport = TransportList::default();
+            transport.reserve_for(m, n);
+            self.oned = Some(OnedState {
+                u: vec![1f32; m],
+                v: vec![1f32; n],
+                colsum: vec![0f32; n],
+                rowsum: vec![0f32; m],
+                transport,
+                ws: OnedWorkspace::new(m, n),
+            });
+        }
+    }
+
+    /// [`SolverSession::size_oned`] plus per-solve state derivation:
+    /// validate eligibility, sort the supports, reset the scaling vectors
+    /// to 1 and seed the carried column sums exactly (one sweep pair).
+    fn ensure_oned(&mut self, problem: &GeomProblem) -> Result<()> {
+        self.size_oned(problem);
+        let st = self.oned.as_mut().expect("just sized");
+        st.ws.prepare(problem)?;
+        st.u.fill(1.0);
+        st.v.fill(1.0);
+        st.rowsum.fill(0.0);
+        st.transport.entries.clear();
+        st.ws.seed_col_sums(problem, &st.u, &st.v, &mut st.colsum);
+        Ok(())
+    }
+
     /// Shared guard for the accelerator knobs: TI is a MAP-UOT mass
     /// correction (meaningless for the POT/COFFEE comparator loops), and
     /// the ε ladder only exists where there is an ε — the matfree path.
@@ -1676,6 +1921,7 @@ impl std::fmt::Debug for SolverSession {
             .field("observer", &self.observer.is_some())
             .field("sparse", &self.sparse.is_some())
             .field("matfree", &self.matfree.is_some())
+            .field("oned", &self.oned.is_some())
             .field("warm", &self.warm.as_ref().map(|c| c.capacity()))
             .field("ti", &self.ti)
             .field("eps_schedule", &self.eps_schedule)

@@ -16,6 +16,43 @@ pub enum Backend {
     Pjrt,
 }
 
+/// Routing policy for the exact near-linear 1D fast path (config key
+/// `[solver] oned = auto|on|off`, CLI `solve --oned auto|on|off`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnedMode {
+    /// Classify each geometric request (`coordinator::router::classify_geom`)
+    /// and take the exact 1D sweep when eligible, silently falling back to
+    /// the iterative matfree path otherwise. The default: eligible requests
+    /// get the near-linear solve for free, nothing is ever rejected.
+    Auto,
+    /// Require the 1D path: an ineligible request (d > 1 with more than one
+    /// varying axis, or a non-factoring cost) fails with a typed
+    /// per-request error instead of falling back.
+    On,
+    /// Never route to the 1D path, even for eligible requests.
+    Off,
+}
+
+impl OnedMode {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(OnedMode::Auto),
+            "on" | "true" | "1" => Some(OnedMode::On),
+            "off" | "false" | "0" | "none" => Some(OnedMode::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OnedMode::Auto => "auto",
+            OnedMode::On => "on",
+            OnedMode::Off => "off",
+        }
+    }
+}
+
 /// Full service configuration (coordinator + solver defaults).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -56,6 +93,15 @@ pub struct ServiceConfig {
     /// the boundary. Requires `kind = mapuot`, the native backend, and no
     /// `sparse` threshold (validated at `Service::start`).
     pub matfree: bool,
+    /// Exact 1D fast-path routing policy (config key `[solver] oned =
+    /// auto|on|off`). `auto` (default) classifies each geometric request
+    /// and takes the near-linear exact sweep when the geometry is 1D
+    /// (`d == 1`, or effectively 1D) under the Euclidean cost, falling
+    /// back to matfree otherwise; `on` makes ineligibility a typed
+    /// per-request error; `off` disables the path. `on` requires
+    /// `matfree = on` — geometric requests enter through the matfree
+    /// protocol (validated at `Service::start`).
+    pub oned: OnedMode,
     /// Warm-start cache capacity per worker session (config key
     /// `[solver] warm = <entries>` or `off`). `0` disables warm starting;
     /// `cap > 0` seeds each solve from the nearest cached converged
@@ -91,6 +137,7 @@ impl Default for ServiceConfig {
             tile: TileSpec::Auto,
             sparse: None,
             matfree: false,
+            oned: OnedMode::Auto,
             warm: 0,
             ti: false,
             eps_schedule: None,
@@ -149,6 +196,14 @@ impl ServiceConfig {
                     )))
                 }
             },
+        };
+        let oned = match c.get("solver", "oned") {
+            None => d.oned,
+            Some(s) => OnedMode::parse(s).ok_or_else(|| {
+                crate::error::Error::Config(format!(
+                    "invalid oned setting {s:?} (expected auto|on|off)"
+                ))
+            })?,
         };
         let sparse = match c.get("solver", "sparse") {
             None => d.sparse,
@@ -238,6 +293,7 @@ impl ServiceConfig {
             tile,
             sparse,
             matfree,
+            oned,
             warm,
             ti,
             eps_schedule,
@@ -327,6 +383,24 @@ mod tests {
         }
         let raw = parser::RawConfig::parse("[solver]\nmatfree=0.5\n").unwrap();
         assert!(ServiceConfig::from_raw(&raw).is_err(), "matfree takes on|off, not a number");
+    }
+
+    #[test]
+    fn oned_parses_and_rejects() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.oned, OnedMode::Auto, "auto-routing is the default");
+        for (s, want) in [
+            ("auto", OnedMode::Auto),
+            ("on", OnedMode::On),
+            ("true", OnedMode::On),
+            ("off", OnedMode::Off),
+            ("none", OnedMode::Off),
+        ] {
+            let raw = parser::RawConfig::parse(&format!("[solver]\noned={s}\n")).unwrap();
+            assert_eq!(ServiceConfig::from_raw(&raw).unwrap().oned, want, "oned={s}");
+        }
+        let raw = parser::RawConfig::parse("[solver]\noned=maybe\n").unwrap();
+        assert!(ServiceConfig::from_raw(&raw).is_err(), "oned takes auto|on|off");
     }
 
     #[test]

@@ -6,12 +6,33 @@
 //! waiting up to `batch_wait` after the first arrival so concurrent
 //! requests of the same shape can share a worker (and, on the PJRT path,
 //! an executable's warm state).
+//!
+//! # Poison recovery
+//!
+//! The queue mutex is *recovered*, never trusted to kill the service: a
+//! worker that panics while holding the lock (a poisoned `Mutex`) must
+//! not cascade into panicking every other producer and consumer. The
+//! protected state is a plain `VecDeque` + `closed` flag — every
+//! operation on it either completes or does not start, so the state is
+//! valid at every observable point and `PoisonError::into_inner` is
+//! sound. Requests the panicking worker had already drained die with it
+//! (their reply channels drop, which submitters observe as a typed
+//! `Error::Service` through `Service::await_response`); everything still
+//! queued is served by the surviving workers.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::SolveRequest;
+
+/// Unwrap a lock/wait result, recovering the payload from poisoning (see
+/// the module docs: the queue state is valid at every observable point,
+/// so a panic elsewhere must not cascade here). Works for `lock()`
+/// guards and for `wait_timeout()`'s `(guard, timeout)` pairs alike.
+fn recover<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 /// What `push` does when the queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,7 +76,7 @@ impl Batcher {
     /// Enqueue a request. Returns `Err(request)` if rejected (full under
     /// `Reject`, or queue closed).
     pub fn push(&self, req: SolveRequest, policy: FullPolicy) -> Result<(), SolveRequest> {
-        let mut st = self.state.lock().expect("batcher poisoned");
+        let mut st = recover(self.state.lock());
         loop {
             if st.closed {
                 return Err(req);
@@ -68,7 +89,7 @@ impl Batcher {
             match policy {
                 FullPolicy::Reject => return Err(req),
                 FullPolicy::Block => {
-                    st = self.not_full.wait(st).expect("batcher poisoned");
+                    st = recover(self.not_full.wait(st));
                 }
             }
         }
@@ -78,7 +99,7 @@ impl Batcher {
     /// drains same-shape requests up to `batch_max`, waiting up to
     /// `batch_wait` to top the batch up. Returns `None` when closed+empty.
     pub fn pop_batch(&self) -> Option<Vec<SolveRequest>> {
-        let mut st = self.state.lock().expect("batcher poisoned");
+        let mut st = recover(self.state.lock());
         // Wait for work.
         loop {
             if !st.queue.is_empty() {
@@ -87,7 +108,7 @@ impl Batcher {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).expect("batcher poisoned");
+            st = recover(self.not_empty.wait(st));
         }
 
         let mut batch = vec![st.queue.pop_front().expect("non-empty")];
@@ -112,10 +133,7 @@ impl Batcher {
             if now >= deadline {
                 break;
             }
-            let (next, timeout) = self
-                .not_empty
-                .wait_timeout(st, deadline - now)
-                .expect("batcher poisoned");
+            let (next, timeout) = recover(self.not_empty.wait_timeout(st, deadline - now));
             st = next;
             if timeout.timed_out() && st.queue.iter().all(|r| r.shape() != shape) {
                 break;
@@ -127,13 +145,13 @@ impl Batcher {
 
     /// Close the queue: producers fail, consumers drain then get `None`.
     pub fn close(&self) {
-        self.state.lock().expect("batcher poisoned").closed = true;
+        recover(self.state.lock()).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().expect("batcher poisoned").queue.len()
+        recover(self.state.lock()).queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -229,6 +247,30 @@ mod tests {
         b.push(req(1, 4, 4), FullPolicy::Reject).unwrap();
         b.close();
         assert_eq!(b.pop_batch().unwrap().len(), 1);
+        assert!(b.pop_batch().is_none());
+    }
+
+    /// A thread that panics while holding the queue lock poisons the
+    /// mutex; every subsequent operation must recover and keep serving —
+    /// one crashed worker must not cascade into killing the service.
+    #[test]
+    fn survives_a_poisoned_lock() {
+        let b = Arc::new(batcher(8, 4));
+        b.push(req(1, 4, 4), FullPolicy::Reject).unwrap();
+        let b2 = Arc::clone(&b);
+        let _ = std::thread::spawn(move || {
+            let _guard = b2.state.lock().unwrap();
+            panic!("worker dies while holding the batcher lock");
+        })
+        .join();
+        assert!(b.state.is_poisoned(), "the panic above must have poisoned the lock");
+        // The full surface still works on the recovered state.
+        b.push(req(2, 4, 4), FullPolicy::Reject).unwrap();
+        assert_eq!(b.len(), 2);
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        b.close();
+        assert!(b.push(req(3, 4, 4), FullPolicy::Block).is_err());
         assert!(b.pop_batch().is_none());
     }
 }

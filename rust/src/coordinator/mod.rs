@@ -15,6 +15,6 @@ pub mod service;
 
 pub use batcher::{Batcher, FullPolicy};
 pub use metrics::{Metrics, Snapshot};
-pub use request::{Payload, RequestId, SolveRequest, SolveResponse, Solved};
-pub use router::Route;
+pub use request::{Payload, RequestId, Response, SolveRequest, SolveResponse, Solved};
+pub use router::{classify_geom, project_oned, ProblemClass, Route, ONED_AXIS_TOL};
 pub use service::Service;

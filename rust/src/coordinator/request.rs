@@ -2,7 +2,7 @@
 
 use std::sync::mpsc::Sender;
 
-use crate::algo::{GeomProblem, Problem, SolveReport, SolverKind};
+use crate::algo::{GeomProblem, Problem, SolveReport, SolverKind, TransportList};
 use crate::config::Backend;
 use crate::error::Error;
 use crate::util::Matrix;
@@ -18,9 +18,10 @@ pub enum Payload {
     /// Geometric point-cloud instance for the materialization-free
     /// backend (requires `ServiceConfig.matfree`; accepted through
     /// `Service::submit_geom`). O((m+n)·d) on the wire where a dense
-    /// request carries O(m·n); the response plan is densified at the
-    /// boundary — a scaling-vector response protocol is a ROADMAP
-    /// follow-on.
+    /// request carries O(m·n), and O(m+n) on the way back too: geometric
+    /// requests answer with [`Response::Scaling`] — the scaling vectors
+    /// (plus the sparse transport list when the exact 1D path ran) —
+    /// never a densified m×n plan.
     Geom(GeomProblem),
 }
 
@@ -60,10 +61,53 @@ pub struct SolveResponse {
     pub result: Result<Solved, Error>,
 }
 
+/// The solved artifact itself, in whichever representation the executing
+/// backend produces natively.
+#[derive(Debug)]
+pub enum Response {
+    /// Dense m×n transport plan — what the dense, sparse-densified and
+    /// PJRT backends hand back.
+    Plan(Matrix),
+    /// Scaling vectors `(u, v)` defining `plan_ij = u_i · A_ij · v_j`
+    /// over the request's implicit kernel — the native answer of the
+    /// geometric backends, O(m+n) instead of O(m·n). When the exact 1D
+    /// path solved the request, `transport` additionally carries its
+    /// sparse monotone coupling (≤ m+n entries plus the unbalanced
+    /// creation/destruction slacks); the iterative matfree path leaves it
+    /// `None`.
+    Scaling { u: Vec<f32>, v: Vec<f32>, transport: Option<TransportList> },
+}
+
+impl Response {
+    /// The dense plan, if this response carries one.
+    pub fn plan(&self) -> Option<&Matrix> {
+        match self {
+            Response::Plan(p) => Some(p),
+            Response::Scaling { .. } => None,
+        }
+    }
+
+    /// The scaling vectors, if this response carries them.
+    pub fn scaling(&self) -> Option<(&[f32], &[f32])> {
+        match self {
+            Response::Plan(_) => None,
+            Response::Scaling { u, v, .. } => Some((u.as_slice(), v.as_slice())),
+        }
+    }
+
+    /// The sparse 1D transport list, if the exact path produced one.
+    pub fn transport(&self) -> Option<&TransportList> {
+        match self {
+            Response::Scaling { transport, .. } => transport.as_ref(),
+            Response::Plan(_) => None,
+        }
+    }
+}
+
 /// Successful solve payload.
 #[derive(Debug)]
 pub struct Solved {
-    pub plan: Matrix,
+    pub response: Response,
     pub report: SolveReport,
     /// Which backend executed it.
     pub backend: Backend,

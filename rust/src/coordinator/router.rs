@@ -1,4 +1,5 @@
-//! Routing: backend choice and shape-bucket padding.
+//! Routing: backend choice, problem-class detection and shape-bucket
+//! padding.
 //!
 //! The PJRT backend executes shape-specialized artifacts, so a request is
 //! routed to the smallest chunk bucket that fits and zero-padded into it.
@@ -6,8 +7,19 @@
 //! guard `(target/sum)^fi with sum=0 → 0` keeps it identically zero, the
 //! real support evolves exactly as unpadded, and the padded rows contribute
 //! 0 to the device-side marginal error (their target is also 0).
+//!
+//! Geometric requests additionally get a **problem-class** decision:
+//! [`classify_geom`] detects problems the exact near-linear 1D sweep
+//! ([`crate::algo::oned`]) can solve — explicit `d == 1` Euclidean
+//! problems, plus higher-`d` problems whose points only actually vary
+//! along one coordinate axis (within a tolerance) and therefore carry a
+//! 1D geometry in disguise. The service consults this classifier under
+//! `oned = auto|on` and falls back to the O(m·n)-per-sweep matfree path
+//! with the classifier's stated reason otherwise.
 
+use crate::algo::matfree::{CostKind, GeomProblem};
 use crate::algo::Problem;
+use crate::error::{Error, Result};
 use crate::runtime::Manifest;
 use crate::util::Matrix;
 
@@ -26,6 +38,108 @@ pub fn route(manifest: Option<&Manifest>, m: usize, n: usize) -> Route {
         Some(meta) => Route::Pjrt { bucket_m: meta.m, bucket_n: meta.n },
         None => Route::Native,
     }
+}
+
+/// Default coordinate-agreement tolerance for the effectively-1D test:
+/// an axis whose coordinates (over the union of both supports) span no
+/// more than this is treated as constant. Tight enough that dropping the
+/// axis perturbs each pairwise Euclidean cost by at most
+/// `sqrt(d) · 1e-6` — far below the f32 kernel's own rounding at any ε
+/// the validated constructors accept.
+pub const ONED_AXIS_TOL: f32 = 1e-6;
+
+/// Which solver class a geometric request belongs to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProblemClass {
+    /// Eligible for the exact near-linear 1D sweep, reading coordinate
+    /// `axis` of every point (always 0 for genuinely 1D problems).
+    Oned { axis: usize },
+    /// Needs an iterative 2D backend; `reason` says why, verbatim usable
+    /// in typed errors and fallback logs.
+    General { reason: String },
+}
+
+/// Classify a geometric problem for routing: [`ProblemClass::Oned`] when
+/// the exact 1D sweep applies, [`ProblemClass::General`] with the reason
+/// otherwise.
+///
+/// Eligibility is the conjunction of two facts:
+/// - the cost is [`CostKind::Euclidean`] — the Laplace kernel
+///   `exp(-|x − y|/ε)` is the one that factors into prefix/suffix sweeps
+///   (the Gaussian of `SqEuclidean` does not; see `algo::oned`), and
+/// - the geometry is one-dimensional: either `d == 1` outright, or at
+///   most one coordinate axis actually varies across `x ∪ y` (every other
+///   axis spans ≤ `tol`). A zero-varying-axes problem (all points
+///   coincident within `tol`) is degenerate-1D and routes to axis 0.
+///
+/// The scan is a single O((m + n) · d) pass tracking per-axis min/max —
+/// no allocation beyond the return value.
+pub fn classify_geom(p: &GeomProblem, tol: f32) -> ProblemClass {
+    if p.cost != CostKind::Euclidean {
+        return ProblemClass::General {
+            reason: format!(
+                "cost {} does not factor into the 1D prefix/suffix sweeps (only euclid does)",
+                p.cost.name()
+            ),
+        };
+    }
+    if p.d == 1 {
+        return ProblemClass::Oned { axis: 0 };
+    }
+    // Per-axis coordinate span over the union of both supports.
+    let mut varying_axis = None;
+    let mut varying = 0usize;
+    for axis in 0..p.d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for pts in [&p.x, &p.y] {
+            for point in pts.chunks_exact(p.d) {
+                let c = point[axis];
+                lo = lo.min(c);
+                hi = hi.max(c);
+            }
+        }
+        if hi - lo > tol {
+            varying += 1;
+            varying_axis = Some(axis);
+        }
+    }
+    match varying {
+        0 => ProblemClass::Oned { axis: 0 },
+        1 => ProblemClass::Oned { axis: varying_axis.expect("varying == 1 recorded an axis") },
+        k => ProblemClass::General {
+            reason: format!(
+                "{k} of {} coordinate axes vary by more than {tol:e}; the exact sweep needs \
+                 a one-dimensional geometry",
+                p.d
+            ),
+        },
+    }
+}
+
+/// Project an effectively-1D problem onto `axis`: a validated `d == 1`
+/// [`GeomProblem`] carrying coordinate `axis` of every point with the
+/// original cost, ε, marginals and fi. Combined with
+/// [`classify_geom`]'s span bound, solving the projection equals solving
+/// the original within the stated tolerance.
+pub fn project_oned(p: &GeomProblem, axis: usize) -> Result<GeomProblem> {
+    if axis >= p.d {
+        return Err(Error::InvalidProblem(format!(
+            "projection axis {axis} out of range for d = {}",
+            p.d
+        )));
+    }
+    let take = |pts: &[f32]| pts.iter().skip(axis).step_by(p.d).copied().collect::<Vec<f32>>();
+    GeomProblem::new(
+        take(&p.x),
+        take(&p.y),
+        1,
+        p.cost,
+        p.epsilon,
+        p.rpd.clone(),
+        p.cpd.clone(),
+        p.fi,
+    )
 }
 
 /// A problem padded into a bucket, remembering its true shape.
@@ -128,5 +242,88 @@ c512 file=b kind=uot_chunk m=512 n=512 steps=8 block_m=64
     fn pad_rejects_too_small_bucket() {
         let p = Problem::random(10, 10, 0.5, 1);
         let _ = pad(&p, 8, 16);
+    }
+
+    #[test]
+    fn classifies_explicit_1d_euclidean_as_oned() {
+        let p = GeomProblem::random(9, 7, 1, CostKind::Euclidean, 0.5, 0.7, 11);
+        assert_eq!(classify_geom(&p, ONED_AXIS_TOL), ProblemClass::Oned { axis: 0 });
+    }
+
+    #[test]
+    fn rejects_non_factoring_cost_with_reason() {
+        let p = GeomProblem::random(9, 7, 1, CostKind::SqEuclidean, 0.5, 0.7, 11);
+        match classify_geom(&p, ONED_AXIS_TOL) {
+            ProblemClass::General { reason } => {
+                assert!(reason.contains("sqeuclid"), "reason names the cost: {reason}")
+            }
+            other => panic!("sqeuclid must not classify as 1D: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn detects_effectively_1d_axis_in_higher_d() {
+        // 3D points whose axes 0 and 2 are pinned to constants: only axis
+        // 1 carries geometry.
+        let mut p = GeomProblem::random(8, 6, 3, CostKind::Euclidean, 0.5, 0.7, 23);
+        for point in p.x.chunks_exact_mut(3).chain(p.y.chunks_exact_mut(3)) {
+            point[0] = 0.25;
+            point[2] = -1.5;
+        }
+        assert_eq!(classify_geom(&p, ONED_AXIS_TOL), ProblemClass::Oned { axis: 1 });
+
+        // Re-enable axis 2 → two varying axes → general, with the count
+        // in the reason.
+        for (k, point) in p.y.chunks_exact_mut(3).enumerate() {
+            point[2] = -1.5 + 0.1 * (k + 1) as f32;
+        }
+        match classify_geom(&p, ONED_AXIS_TOL) {
+            ProblemClass::General { reason } => {
+                assert!(reason.contains("2 of 3"), "reason counts varying axes: {reason}")
+            }
+            other => panic!("two varying axes must be general: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coincident_points_are_degenerate_1d() {
+        let mut p = GeomProblem::random(4, 5, 2, CostKind::Euclidean, 0.5, 0.7, 3);
+        for c in p.x.iter_mut().chain(p.y.iter_mut()) {
+            *c = 0.5;
+        }
+        assert_eq!(classify_geom(&p, ONED_AXIS_TOL), ProblemClass::Oned { axis: 0 });
+    }
+
+    #[test]
+    fn projection_extracts_the_varying_axis() {
+        let mut p = GeomProblem::random(8, 6, 3, CostKind::Euclidean, 0.5, 0.7, 23);
+        for point in p.x.chunks_exact_mut(3).chain(p.y.chunks_exact_mut(3)) {
+            point[0] = 0.25;
+            point[2] = -1.5;
+        }
+        let q = project_oned(&p, 1).unwrap();
+        assert_eq!(q.d, 1);
+        assert_eq!(q.rows(), 8);
+        assert_eq!(q.cols(), 6);
+        for (i, c) in q.x.iter().enumerate() {
+            assert_eq!(*c, p.x[i * 3 + 1], "row point {i}");
+        }
+        for (j, c) in q.y.iter().enumerate() {
+            assert_eq!(*c, p.y[j * 3 + 1], "col point {j}");
+        }
+        assert_eq!(q.rpd, p.rpd);
+        assert_eq!(q.cpd, p.cpd);
+        assert_eq!(q.epsilon, p.epsilon);
+        assert_eq!(q.fi, p.fi);
+
+        // The projected cost equals the original within the span bound.
+        for i in 0..8 {
+            for j in 0..6 {
+                let a = p.cost_entry(i, j);
+                let b = q.cost_entry(i, j);
+                assert!((a - b).abs() < 1e-5, "cost ({i},{j}): {a} vs {b}");
+            }
+        }
+        assert!(project_oned(&p, 3).is_err(), "axis out of range is typed");
     }
 }

@@ -8,11 +8,12 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::algo::{GeomProblem, Problem, SolverKind, SolverSession, SparseProblem};
-use crate::config::{Backend, ServiceConfig};
+use crate::config::{Backend, OnedMode, ServiceConfig};
 use crate::coordinator::batcher::{Batcher, FullPolicy};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pjrt_exec::{self, PjrtHandle};
-use crate::coordinator::request::{Payload, SolveRequest, SolveResponse, Solved};
+use crate::coordinator::request::{Payload, Response, SolveRequest, SolveResponse, Solved};
+use crate::coordinator::router::{self, ProblemClass};
 use crate::error::{Error, Result};
 
 /// A running solver service.
@@ -96,6 +97,26 @@ impl Service {
                 ));
             }
         }
+        // The 1D fast-path policy fails fast too: `on` hard-requires the
+        // geometric protocol (only matfree services accept geom requests,
+        // so oned = on without it could never fire), and the ε ladder
+        // schedules iterative matfree sweeps the exact path does not run.
+        if cfg.oned == OnedMode::On {
+            if !cfg.matfree {
+                return Err(Error::Config(
+                    "[solver] oned = on requires [solver] matfree = on (geometric \
+                     requests enter through the matfree protocol)"
+                        .into(),
+                ));
+            }
+            if cfg.eps_schedule.is_some() {
+                return Err(Error::Config(
+                    "[solver] oned = on and [solver] eps_schedule are mutually exclusive \
+                     (the ladder amortizes matfree sweeps; the exact 1D path has none)"
+                        .into(),
+                ));
+            }
+        }
         let batcher = Arc::new(Batcher::new(
             cfg.queue_cap,
             cfg.batch_max,
@@ -131,13 +152,14 @@ impl Service {
         self.submit_payload(Payload::Dense(problem))
     }
 
-    /// Submit a geometric point-cloud problem for the
-    /// materialization-free backend. Rejected up front (typed
-    /// [`Error::Config`]) unless the service was started with
-    /// `ServiceConfig.matfree` — a geom request must fail at the boundary,
-    /// not inside a worker. O((m+n)·d) on the wire; the response plan is
-    /// densified (the scaling-vector response protocol is a ROADMAP
-    /// follow-on).
+    /// Submit a geometric point-cloud problem for the geometric backends.
+    /// Rejected up front (typed [`Error::Config`]) unless the service was
+    /// started with `ServiceConfig.matfree` — a geom request must fail at
+    /// the boundary, not inside a worker. O((m+n)·d) on the wire and
+    /// O(m+n) back: the worker classifies the request
+    /// (`ServiceConfig.oned` policy) between the exact near-linear 1D
+    /// sweep and the iterative matfree sweep, and either way answers with
+    /// [`Response::Scaling`] — never a densified m×n plan.
     pub fn submit_geom(&self, problem: GeomProblem) -> Result<Receiver<SolveResponse>> {
         if !self.cfg.matfree {
             return Err(Error::Config(
@@ -264,27 +286,74 @@ fn execute(
         }
         b
     };
-    let (plan, report, backend) = match (&req.payload, pjrt) {
-        // Geometric requests run the materialization-free backend on this
-        // worker's reusable session (defensive re-checks of the start-time
+    let (response, report, backend) = match (&req.payload, pjrt) {
+        // Geometric requests run the geometric backends on this worker's
+        // reusable session (defensive re-checks of the start-time
         // validation: submit_geom already gates on cfg.matfree, and a
-        // matfree service can never have a PJRT executor).
+        // matfree service can never have a PJRT executor). The response is
+        // the solver's native O(m+n) representation — scaling vectors,
+        // plus the sparse transport list when the exact 1D path ran.
         (Payload::Geom(g), _) => {
             if !cfg.matfree || pjrt.is_some() {
                 return Err(Error::Config(
                     "geometric request on a service without [solver] matfree".into(),
                 ));
             }
-            let sess = session.get_or_insert_with(|| builder().build_matfree(g));
-            let report = sess.solve_matfree(g)?;
-            // Densified response — the one deliberate O(m·n) allocation,
-            // at the protocol boundary (same contract as the sparse path).
-            let plan = sess.matfree_materialize(g)?;
-            (plan, report, Backend::Native)
+            // Problem-class routing (`[solver] oned` policy). An ε ladder
+            // pins auto mode to matfree: the ladder amortizes iterative
+            // sweeps the exact path does not run (oned = on + ladder is
+            // already rejected at start).
+            let class = match cfg.oned {
+                OnedMode::Off => {
+                    ProblemClass::General { reason: "[solver] oned = off".into() }
+                }
+                _ if cfg.eps_schedule.is_some() => ProblemClass::General {
+                    reason: "[solver] eps_schedule pins geometric requests to the \
+                             iterative matfree path"
+                        .into(),
+                },
+                _ => router::classify_geom(g, router::ONED_AXIS_TOL),
+            };
+            match class {
+                ProblemClass::Oned { axis } => {
+                    // Effectively-1D problems (d > 1, one varying axis)
+                    // solve their validated 1D projection.
+                    let projected;
+                    let p1 = if g.d == 1 {
+                        g
+                    } else {
+                        projected = router::project_oned(g, axis)?;
+                        &projected
+                    };
+                    let sess = session.get_or_insert_with(|| builder().build_oned(p1));
+                    let report = sess.solve_oned(p1)?;
+                    let (u, v) = sess.oned_scaling().expect("solve_oned populates scalings");
+                    let response = Response::Scaling {
+                        u: u.to_vec(),
+                        v: v.to_vec(),
+                        transport: sess.oned_transport().cloned(),
+                    };
+                    (response, report, Backend::Native)
+                }
+                ProblemClass::General { reason } => {
+                    if cfg.oned == OnedMode::On {
+                        return Err(Error::InvalidProblem(format!(
+                            "[solver] oned = on, but the request is not 1D-eligible: {reason}"
+                        )));
+                    }
+                    let sess = session.get_or_insert_with(|| builder().build_matfree(g));
+                    let report = sess.solve_matfree(g)?;
+                    let (u, v) =
+                        sess.matfree_scaling().expect("solve_matfree populates scalings");
+                    let response =
+                        Response::Scaling { u: u.to_vec(), v: v.to_vec(), transport: None };
+                    (response, report, Backend::Native)
+                }
+            }
         }
         (Payload::Dense(problem), Some(handle)) => {
             let (plan, report) = handle.solve(problem.clone(), cfg.stop)?;
-            (plan, report, Backend::Pjrt)
+            (Response::Plan(plan), report, Backend::Pjrt)
         }
         (Payload::Dense(problem), None) => {
             match cfg.sparse {
@@ -313,18 +382,18 @@ fn execute(
                         .sparse_plan()
                         .expect("solve_sparse populates the CSR plan")
                         .to_dense();
-                    (plan, report, Backend::Native)
+                    (Response::Plan(plan), report, Backend::Native)
                 }
                 None => {
                     let sess = session.get_or_insert_with(|| builder().build(problem));
                     let (plan, report) = sess.solve_cloned(problem)?;
-                    (plan, report, Backend::Native)
+                    (Response::Plan(plan), report, Backend::Native)
                 }
             }
         }
     };
     Ok(Solved {
-        plan,
+        response,
         report,
         backend,
         solver: cfg.solver,
@@ -351,7 +420,7 @@ mod tests {
         let solved = svc.solve_blocking(p).unwrap();
         assert!(solved.report.converged);
         assert_eq!(solved.backend, Backend::Native);
-        assert_eq!(solved.plan.rows(), 24);
+        assert_eq!(solved.response.plan().expect("dense request answers dense").rows(), 24);
         let m = svc.metrics();
         assert_eq!(m.completed, 1);
         svc.shutdown();
@@ -403,7 +472,8 @@ mod tests {
         let p = Problem::random(24, 24, 0.8, 5);
         let solved = svc.solve_blocking(p.clone()).unwrap();
         assert_eq!(solved.backend, Backend::Native);
-        assert_eq!((solved.plan.rows(), solved.plan.cols()), (24, 24));
+        let plan = solved.response.plan().expect("sparse responses stay dense");
+        assert_eq!((plan.rows(), plan.cols()), (24, 24));
         // The served result is the densified CSR solve, bit-for-bit.
         let sp = SparseProblem::from_problem(&p, 1.0).unwrap();
         let mut direct = SolverSession::builder(SolverKind::MapUot)
@@ -413,7 +483,7 @@ mod tests {
         let direct_report = direct.solve_sparse(&sp).unwrap();
         assert_eq!(solved.report.iters, direct_report.iters);
         assert_eq!(
-            solved.plan.as_slice(),
+            plan.as_slice(),
             direct.sparse_plan().unwrap().to_dense().as_slice()
         );
         svc.shutdown();
@@ -459,22 +529,121 @@ mod tests {
         let g = GeomProblem::random(24, 18, 3, CostKind::SqEuclidean, 0.25, 0.8, 5);
         let solved = svc.solve_geom_blocking(g.clone()).unwrap();
         assert_eq!(solved.backend, Backend::Native);
-        assert_eq!((solved.plan.rows(), solved.plan.cols()), (24, 18));
-        // The served result is the densified matfree solve, bit-for-bit.
+        // d = 3 SqEuclidean is not 1D-eligible, so the iterative matfree
+        // path serves it — as scaling vectors, never a densified plan.
+        let (u, v) = solved.response.scaling().expect("geom responses are Scaling");
+        assert_eq!((u.len(), v.len()), (24, 18));
+        assert!(solved.response.transport().is_none(), "matfree leaves no transport list");
+        // The served scalings are the direct matfree solve, bit-for-bit.
         let mut direct = SolverSession::builder(SolverKind::MapUot)
             .threads(2)
             .stop(svc.config().stop)
             .build_matfree(&g);
         let direct_report = direct.solve_matfree(&g).unwrap();
         assert_eq!(solved.report.iters, direct_report.iters);
-        assert_eq!(
-            solved.plan.as_slice(),
-            direct.matfree_materialize(&g).unwrap().as_slice()
-        );
+        let (du, dv) = direct.matfree_scaling().unwrap();
+        assert_eq!(u, du);
+        assert_eq!(v, dv);
         // Dense requests still work on the same matfree-enabled service.
         let dense = svc.solve_blocking(Problem::random(16, 16, 0.7, 1)).unwrap();
         assert!(dense.report.iters > 0);
         svc.shutdown();
+    }
+
+    /// Satellite 1 + tentpole routing: a `d == 1` Euclidean request
+    /// auto-routes to the exact 1D sweep and answers with the scaling
+    /// vectors plus the sparse monotone transport list, bit-equal to a
+    /// direct `solve_oned` on a fresh session.
+    #[test]
+    fn oned_service_roundtrip_matches_direct_oned_solve() {
+        use crate::algo::{CostKind, GeomProblem};
+        let mut cfg = native_cfg(2);
+        cfg.matfree = true;
+        let svc = Service::start(cfg).unwrap();
+        let g = GeomProblem::random(24, 18, 1, CostKind::Euclidean, 0.5, 0.8, 5);
+        let solved = svc.solve_geom_blocking(g.clone()).unwrap();
+        assert_eq!(solved.backend, Backend::Native);
+        let (u, v) = solved.response.scaling().expect("geom responses are Scaling");
+        let transport = solved.response.transport().expect("the 1D path couples its answer");
+
+        let mut direct = SolverSession::builder(SolverKind::MapUot)
+            .stop(svc.config().stop)
+            .build_oned(&g);
+        let direct_report = direct.solve_oned(&g).unwrap();
+        assert_eq!(solved.report.iters, direct_report.iters);
+        let (du, dv) = direct.oned_scaling().unwrap();
+        assert_eq!(u, du, "served u is the direct solve bit-for-bit");
+        assert_eq!(v, dv, "served v is the direct solve bit-for-bit");
+        let dt = direct.oned_transport().unwrap();
+        assert_eq!(transport.entries, dt.entries);
+        assert_eq!(transport.destroyed, dt.destroyed);
+        assert_eq!(transport.created, dt.created);
+        svc.shutdown();
+    }
+
+    /// An effectively-1D request (d = 3, one varying axis) also routes to
+    /// the exact path under auto mode.
+    #[test]
+    fn oned_service_detects_effectively_1d_requests() {
+        use crate::algo::{CostKind, GeomProblem};
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        let svc = Service::start(cfg).unwrap();
+        let mut g = GeomProblem::random(16, 12, 3, CostKind::Euclidean, 0.5, 0.8, 7);
+        for point in g.x.chunks_exact_mut(3).chain(g.y.chunks_exact_mut(3)) {
+            point[0] = 0.5;
+            point[2] = 0.25;
+        }
+        let solved = svc.solve_geom_blocking(g).unwrap();
+        assert!(solved.report.converged);
+        assert!(
+            solved.response.transport().is_some(),
+            "a transport list proves the exact 1D path served the request"
+        );
+        svc.shutdown();
+    }
+
+    /// `oned = on` makes ineligibility a typed per-request error;
+    /// `oned = off` pins even eligible requests to matfree.
+    #[test]
+    fn oned_policy_on_rejects_and_off_pins_to_matfree() {
+        use crate::algo::{CostKind, GeomProblem};
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.oned = OnedMode::On;
+        let svc = Service::start(cfg).unwrap();
+        let bad = GeomProblem::random(8, 8, 3, CostKind::SqEuclidean, 0.5, 0.7, 3);
+        match svc.solve_geom_blocking(bad) {
+            Err(Error::InvalidProblem(msg)) => {
+                assert!(msg.contains("not 1D-eligible"), "{msg}")
+            }
+            other => panic!("oned = on must reject ineligible requests, got {other:?}"),
+        }
+        svc.shutdown();
+
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.oned = OnedMode::Off;
+        let svc = Service::start(cfg).unwrap();
+        let eligible = GeomProblem::random(8, 8, 1, CostKind::Euclidean, 0.5, 0.7, 3);
+        let solved = svc.solve_geom_blocking(eligible).unwrap();
+        assert!(
+            solved.response.transport().is_none(),
+            "oned = off must serve the request on the matfree path"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oned_service_rejects_bad_config_at_start() {
+        let mut cfg = native_cfg(1);
+        cfg.oned = OnedMode::On;
+        assert!(Service::start(cfg).is_err(), "oned = on without matfree must fail fast");
+        let mut cfg = native_cfg(1);
+        cfg.matfree = true;
+        cfg.oned = OnedMode::On;
+        cfg.eps_schedule = Some((2.0, 3));
+        assert!(Service::start(cfg).is_err(), "oned = on + eps_schedule must fail fast");
     }
 
     #[test]

@@ -18,8 +18,8 @@ use map_uot::algo::{
 };
 use map_uot::apps;
 use map_uot::bench::figures;
-use map_uot::config::{Backend, ServiceConfig};
-use map_uot::coordinator::Service;
+use map_uot::config::{Backend, OnedMode, ServiceConfig};
+use map_uot::coordinator::{self, Service};
 use map_uot::error::Result;
 use map_uot::runtime::Runtime;
 use map_uot::util::Timer;
@@ -110,6 +110,9 @@ fn print_help() {
          \x20        correction; MAP-UOT only)\n\
          \x20        --eps-schedule <from>:<steps> (matfree only: geometric coarse-to-fine\n\
          \x20        bandwidth ladder from <from> down to the problem epsilon)\n\
+         \x20        --oned auto|on|off (matfree only: route 1D Euclidean geometries to\n\
+         \x20        the exact near-linear sweep; auto falls back to matfree when\n\
+         \x20        ineligible, on makes ineligibility an error; default auto)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
@@ -194,6 +197,33 @@ fn cmd_solve(a: &Args) -> i32 {
             }
         }
     };
+    // The 1D fast-path selector rides on the geometric (matfree) path and
+    // conflicts with the ε ladder when hard-required — same loud contract.
+    let oned = match a.flags.get("oned") {
+        None => OnedMode::Auto,
+        Some(raw) => {
+            if !a.flags.contains_key("matfree") {
+                eprintln!(
+                    "error: --oned routes geometric solves and requires --matfree <epsilon>"
+                );
+                return 1;
+            }
+            match OnedMode::parse(raw) {
+                Some(mode) => mode,
+                None => {
+                    eprintln!("error: --oned expects auto|on|off, got {raw:?}");
+                    return 1;
+                }
+            }
+        }
+    };
+    if oned == OnedMode::On && eps_schedule.is_some() {
+        eprintln!(
+            "error: --oned on and --eps-schedule are mutually exclusive (the ladder \
+             amortizes matfree sweeps; the exact 1D path has none)"
+        );
+        return 1;
+    }
     if a.str("backend", "native") == "pjrt" && (warm > 0 || ti) {
         eprintln!("error: --warm/--ti apply to the native session layer, not --backend pjrt");
         return 1;
@@ -313,6 +343,72 @@ fn cmd_solve(a: &Args) -> i32 {
             }
         };
         let gp = GeomProblem::random(m, n, d, cost, epsilon, fi, seed);
+        // Problem-class routing (--oned): the same classifier the service
+        // uses picks between the exact near-linear 1D sweep and the
+        // iterative matfree sweep.
+        let class = match oned {
+            OnedMode::Off => {
+                coordinator::ProblemClass::General { reason: "--oned off".into() }
+            }
+            _ if eps_schedule.is_some() => coordinator::ProblemClass::General {
+                reason: "--eps-schedule pins the solve to the matfree path".into(),
+            },
+            _ => coordinator::classify_geom(&gp, coordinator::ONED_AXIS_TOL),
+        };
+        match class {
+            coordinator::ProblemClass::Oned { axis } => {
+                let projected;
+                let p1 = if gp.d == 1 {
+                    &gp
+                } else {
+                    match coordinator::project_oned(&gp, axis) {
+                        Ok(p) => {
+                            projected = p;
+                            &projected
+                        }
+                        Err(e) => {
+                            eprintln!("error: {e}");
+                            return 1;
+                        }
+                    }
+                };
+                let mut session = builder.build_oned(p1);
+                let report = match session.solve_oned(p1) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        eprintln!("error: {e}");
+                        return 1;
+                    }
+                };
+                let t = session
+                    .oned_transport()
+                    .expect("solve_oned populates the transport list");
+                let state_kb = (24 * (m + n)) as f64 / 1024.0;
+                let dense_mb = (m * n * 4) as f64 / (1024.0 * 1024.0);
+                println!(
+                    "MAP-UOT oned solve {m}x{n} cost={} eps={epsilon} [axis={axis}]: \
+                     iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms | \
+                     transport {} entries, created={:.3} destroyed={:.3} | \
+                     resident ~{state_kb:.0} KB vs dense plan {dense_mb:.0} MB",
+                    cost.name(),
+                    report.iters,
+                    report.err,
+                    report.delta,
+                    report.converged,
+                    report.seconds * 1e3,
+                    t.entries.len(),
+                    t.created,
+                    t.destroyed,
+                );
+                return 0;
+            }
+            coordinator::ProblemClass::General { reason } => {
+                if oned == OnedMode::On {
+                    eprintln!("error: --oned on, but the problem is not 1D-eligible: {reason}");
+                    return 1;
+                }
+            }
+        }
         // The kernel/tile knobs *do* apply here: they select the exp
         // backend and the generation panel width.
         let mut session = builder.kernel(kernel).tile(tile).build_matfree(&gp);

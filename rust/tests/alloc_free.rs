@@ -230,6 +230,44 @@ fn hot_loop_allocates_nothing_after_warmup() {
         }
     }
 
+    // Exact 1D path, same contract: after the first solve on a shape,
+    // same-shape `solve_oned` calls re-gather the sorted supports into the
+    // retained workspace (`sort_unstable_by` is in-place), run the
+    // prefix/suffix sweeps out of the O(m + n) buffers, and extract the
+    // monotone coupling into the reserved m + n entry capacity — zero
+    // heap allocations end to end.
+    let base_oned = GeomProblem::random(48, 40, 1, CostKind::Euclidean, 0.25, 0.7, 17);
+    let oned_variants: Vec<GeomProblem> = (0..3)
+        .map(|k| {
+            let mut g = base_oned.clone();
+            for t in g.rpd.iter_mut().chain(g.cpd.iter_mut()) {
+                *t *= 1.0 + 0.1 * (k as f32 + 1.0);
+            }
+            g
+        })
+        .collect();
+    for threads in [1usize, 4] {
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(threads)
+            .stop(stop)
+            .check_every(8)
+            .build_oned(&base_oned);
+        session.solve_oned(&base_oned).expect("oned warmup solve");
+
+        ALLOCATIONS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        for g in &oned_variants {
+            session.solve_oned(g).expect("steady-state oned solve");
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+
+        let count = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            count, 0,
+            "oned (threads={threads}): {count} heap allocations in the post-warmup hot loop"
+        );
+    }
+
     // The headline acceptance: an m = n = 16384 matfree solve — a shape
     // whose dense plan would be a single 1 GiB allocation — never
     // allocates anything O(m·n). Counting covers problem construction,
@@ -265,5 +303,39 @@ fn hot_loop_allocates_nothing_after_warmup() {
             BIG * BIG * 4
         );
         assert!(max_single > 0, "counting was not engaged");
+    }
+
+    // The 1D headline acceptance: an m = n = 1_000_000 exact oned solve —
+    // a shape whose dense plan would be a 4 TB allocation — stays O(m + n)
+    // resident. Counting covers problem construction, session build AND
+    // the solve; the tripwire is the largest single allocation, capped at
+    // 48 bytes per support point (the actual maximum is the reserved
+    // m + n transport entry capacity at 12 bytes each) — five orders of
+    // magnitude below anything O(m·n).
+    {
+        const BIG1D: usize = 1_000_000;
+        ALLOCATIONS.store(0, Ordering::SeqCst);
+        MAX_ALLOC_BYTES.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        let g = GeomProblem::random(BIG1D, BIG1D, 1, CostKind::Euclidean, 0.25, 0.7, 31);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .stop(StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 2 })
+            .check_every(1)
+            .build_oned(&g);
+        session.solve_oned(&g).expect("1M oned solve");
+        COUNTING.store(false, Ordering::SeqCst);
+
+        let max_single = MAX_ALLOC_BYTES.load(Ordering::SeqCst);
+        assert!(
+            max_single <= 48 * (BIG1D + BIG1D),
+            "oned 1M: a {max_single}-byte allocation appeared — not O(m + n)"
+        );
+        assert!(max_single > 0, "counting was not engaged");
+        let transport = session.oned_transport().expect("coupling extracted");
+        assert!(
+            !transport.entries.is_empty() && transport.entries.len() <= 2 * BIG1D,
+            "coupling has {} entries",
+            transport.entries.len()
+        );
     }
 }

@@ -43,7 +43,8 @@ fn pjrt_service_solves_exact_bucket() {
 
     // Same answer as the native solver.
     let native = native_solve(&p, pjrt_cfg().stop);
-    let diff = solved.plan.max_rel_diff(&native, 1e-5);
+    let plan = solved.response.plan().expect("dense requests return a plan");
+    let diff = plan.max_rel_diff(&native, 1e-5);
     assert!(diff < 2e-2, "pjrt vs native diff={diff}");
     svc.shutdown();
 }
@@ -57,10 +58,11 @@ fn pjrt_service_pads_odd_shapes() {
     // 200x180 pads into the 256x256 bucket.
     let p = Problem::random(200, 180, 0.7, 11);
     let solved = svc.solve_blocking(p.clone()).unwrap();
-    assert_eq!(solved.plan.rows(), 200);
-    assert_eq!(solved.plan.cols(), 180);
+    let plan = solved.response.plan().expect("dense requests return a plan");
+    assert_eq!(plan.rows(), 200);
+    assert_eq!(plan.cols(), 180);
     let native = native_solve(&p, pjrt_cfg().stop);
-    let diff = solved.plan.max_rel_diff(&native, 1e-5);
+    let diff = plan.max_rel_diff(&native, 1e-5);
     assert!(diff < 2e-2, "padded pjrt vs native diff={diff}");
     svc.shutdown();
 }

@@ -1,0 +1,353 @@
+//! Property tests for the exact near-linear 1D fast path (`algo::oned`):
+//!
+//! * **Equivalence** — a oned solve tracks the dense MAP-UOT session on
+//!   the materialized Laplace-kernel problem: same iteration counts under
+//!   a fixed budget, materialized plans within tolerance everywhere, and
+//!   within 1e-5 on the golden-seeded small-shape pin (the acceptance
+//!   criterion).
+//! * **Robustness** — unsorted and duplicate support positions need no
+//!   pre-processing; degenerate m = 1 / n = 1 shapes solve cleanly.
+//! * **Typed rejection** — d > 1, the squared-Euclidean (Gaussian)
+//!   kernel, non-MapUot sessions, and a configured ε ladder are typed
+//!   `InvalidProblem` errors, never panics.
+//! * **Transport contract** — the extracted coupling is monotone in
+//!   sorted support order, strictly positive, at most m + n entries, and
+//!   its destroyed/created slacks balance against the problem marginals.
+//!   The quantile fixture is golden-pinned against
+//!   `data/golden_oned_quantile.txt`.
+//! * **Interop** — the warm cache fingerprint is shared with matfree on
+//!   purpose: a converged 1D solve seeds a later matfree solve of the
+//!   same geometry (and vice versa), and the sweep is thread-count
+//!   invariant (bit-identical scaling vectors for every pool size).
+//!
+//! CI runs this file under the same `MAP_UOT_POOL_THREADS` matrix as
+//! `prop_matfree.rs`, and the small sweep-index tests under Miri.
+
+use map_uot::algo::matfree::{CostKind, GeomProblem};
+use map_uot::algo::oned::{fused_monotone_coupling, TransportList};
+use map_uot::algo::{KernelKind, SolverKind, SolverSession, StopRule};
+use map_uot::error::Error;
+
+/// Thread counts to sweep: the full ladder by default, or the single value
+/// from `MAP_UOT_POOL_THREADS` (the CI oversubscription matrix).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("MAP_UOT_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("MAP_UOT_POOL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 3, 4, 8, 16],
+    }
+}
+
+/// 1D shapes crossing the interesting edges: scalar, single row/col,
+/// skewed, odd dims.
+const SHAPES: &[(usize, usize)] = &[(1, 1), (1, 9), (9, 1), (2, 3), (23, 17), (7, 120)];
+
+fn problem(m: usize, n: usize, seed: u64) -> GeomProblem {
+    GeomProblem::random(m, n, 1, CostKind::Euclidean, 0.25, 0.7, seed)
+}
+
+/// Rank of each original index in sorted position order (ties broken by
+/// index, matching the stable outcome of the workspace gather).
+fn ranks(pos: &[f32]) -> Vec<usize> {
+    let mut ord: Vec<usize> = (0..pos.len()).collect();
+    ord.sort_by(|&a, &b| pos[a].total_cmp(&pos[b]).then(a.cmp(&b)));
+    let mut rank = vec![0usize; pos.len()];
+    for (r, &i) in ord.iter().enumerate() {
+        rank[i] = r;
+    }
+    rank
+}
+
+/// Full session solves on the exact 1D sweep and the dense kernel agree:
+/// a fixed iteration budget (negative tolerances never fire) makes the
+/// iteration counts trivially deterministic, and the materialized plans
+/// must match within tolerance (the sweeps accumulate in f64, the dense
+/// path mutates a stored f32 plan — relative, not bitwise).
+#[test]
+#[cfg_attr(miri, ignore)] // dense comparator is O(m·n·iters) under the interpreter
+fn oned_solve_matches_dense_session() {
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 48 };
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        let gp = problem(m, n, 91 + seed as u64);
+        let dense = gp.dense_problem();
+
+        let mut od = SolverSession::builder(SolverKind::MapUot)
+            .stop(stop)
+            .check_every(4)
+            .build_oned(&gp);
+        let od_report = od.solve_oned(&gp).unwrap();
+
+        let mut ds = SolverSession::builder(SolverKind::MapUot)
+            .stop(stop)
+            .check_every(4)
+            .build(&dense);
+        let ds_report = ds.solve(&dense).unwrap();
+
+        assert_eq!(od_report.iters, ds_report.iters, "{m}x{n}");
+        let materialized = od.oned_materialize(&gp).unwrap();
+        let rel = materialized.max_rel_diff(ds.plan(), 1e-4);
+        assert!(rel < 1e-3, "{m}x{n}: materialized oned plan off by {rel}");
+    }
+}
+
+/// The golden-seeded equivalence pin (the acceptance criterion): a small
+/// fixed shape over a fixed iteration budget, forced-scalar dense kernel
+/// so both sides evaluate libm exp — the exact sweep must land within
+/// 1e-5 relative of the dense MAP-UOT plan.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn oned_matches_dense_golden_seeded() {
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 64 };
+    let gp = GeomProblem::random(16, 12, 1, CostKind::Euclidean, 0.25, 0.7, 1234);
+    let dense = gp.dense_problem();
+    let mut od = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(4)
+        .build_oned(&gp);
+    let mut ds = SolverSession::builder(SolverKind::MapUot)
+        .kernel(KernelKind::Scalar)
+        .stop(stop)
+        .check_every(4)
+        .build(&dense);
+    let ro = od.solve_oned(&gp).unwrap();
+    let rd = ds.solve(&dense).unwrap();
+    assert_eq!(ro.iters, rd.iters);
+    let materialized = od.oned_materialize(&gp).unwrap();
+    let rel = materialized.max_rel_diff(ds.plan(), 1e-3);
+    assert!(rel < 1e-5, "golden 1D shape off by {rel}");
+    assert!((ro.err - rd.err).abs() <= 1e-3 * rd.err.max(1e-2), "{} vs {}", ro.err, rd.err);
+}
+
+/// Unsorted, interleaved, and duplicated support positions are handled by
+/// the in-workspace sort + tie rules with no pre-deduplication — still
+/// equivalent to the dense solve on the same geometry.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn unsorted_and_duplicate_supports_match_dense() {
+    let stop = StopRule { tol: -1.0, delta_tol: -1.0, max_iter: 48 };
+    // Descending x with duplicates; y interleaved, coincident with two of
+    // the x positions (tie between a source and a target event).
+    let x = vec![2.0f32, 0.5, 2.0, -1.0, 0.5, 3.25];
+    let y = vec![0.5f32, -1.0, 1.75, 0.5, 2.0];
+    let rpd = vec![0.9f32, 1.1, 0.6, 1.4, 0.8, 1.0];
+    let cpd = vec![1.2f32, 0.7, 1.0, 0.9, 1.3];
+    let gp =
+        GeomProblem::new(x, y, 1, CostKind::Euclidean, 0.3, rpd, cpd, 0.7).unwrap();
+    let dense = gp.dense_problem();
+    let mut od = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(4)
+        .build_oned(&gp);
+    let mut ds = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .check_every(4)
+        .build(&dense);
+    od.solve_oned(&gp).unwrap();
+    ds.solve(&dense).unwrap();
+    let rel = od.oned_materialize(&gp).unwrap().max_rel_diff(ds.plan(), 1e-4);
+    assert!(rel < 1e-3, "duplicate-support plan off by {rel}");
+}
+
+/// Degenerate single-row / single-column / scalar shapes solve cleanly to
+/// convergence and produce finite scaling vectors plus a coupling of at
+/// most m + n entries.
+#[test]
+fn degenerate_shapes_terminate_cleanly() {
+    for &(m, n) in &[(1usize, 1usize), (1, 7), (7, 1)] {
+        let gp = problem(m, n, (m * 31 + n) as u64);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .stop(StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 200 })
+            .build_oned(&gp);
+        let report = session.solve_oned(&gp).unwrap();
+        assert!(report.iters <= 200, "{m}x{n}");
+        let (u, v) = session.oned_scaling().unwrap();
+        assert!(u.iter().chain(v.iter()).all(|x| x.is_finite()), "{m}x{n}");
+        let transport = session.oned_transport().unwrap();
+        assert!(transport.entries.len() <= m + n, "{m}x{n}");
+        assert!(transport.entries.iter().all(|t| t.mass > 0.0), "{m}x{n}");
+    }
+}
+
+/// Every ineligible request is a typed `InvalidProblem` carrying enough
+/// text to route the caller to the right backend — never a panic.
+#[test]
+fn ineligible_requests_are_typed_errors() {
+    // d > 1 geometry.
+    let d2 = GeomProblem::random(6, 5, 2, CostKind::Euclidean, 0.5, 0.7, 3);
+    let mut s = SolverSession::builder(SolverKind::MapUot).build_oned(&d2);
+    match s.solve_oned(&d2) {
+        Err(Error::InvalidProblem(msg)) => assert!(msg.contains("d == 1"), "{msg}"),
+        other => panic!("d=2: expected InvalidProblem, got {other:?}"),
+    }
+    // Squared-Euclidean (Gaussian) kernel does not factor.
+    let gauss = GeomProblem::random(6, 5, 1, CostKind::SqEuclidean, 0.5, 0.7, 3);
+    let mut s = SolverSession::builder(SolverKind::MapUot).build_oned(&gauss);
+    match s.solve_oned(&gauss) {
+        Err(Error::InvalidProblem(msg)) => assert!(msg.contains("euclid"), "{msg}"),
+        other => panic!("gaussian: expected InvalidProblem, got {other:?}"),
+    }
+    // Non-MapUot sessions have no scaling-form sweep.
+    let gp = problem(6, 5, 3);
+    let mut s = SolverSession::builder(SolverKind::Pot).build_oned(&gp);
+    match s.solve_oned(&gp) {
+        Err(Error::InvalidProblem(msg)) => assert!(msg.contains("MapUot"), "{msg}"),
+        other => panic!("pot: expected InvalidProblem, got {other:?}"),
+    }
+    // A configured ε ladder has nothing to amortize on the exact sweep.
+    let mut s = SolverSession::builder(SolverKind::MapUot)
+        .eps_schedule(2.0, 3)
+        .build_oned(&gp);
+    match s.solve_oned(&gp) {
+        Err(Error::InvalidProblem(msg)) => assert!(msg.contains("eps_schedule"), "{msg}"),
+        other => panic!("ladder: expected InvalidProblem, got {other:?}"),
+    }
+    // Materializing before any solve is typed, too.
+    let s2 = SolverSession::builder(SolverKind::MapUot).build_oned(&gp);
+    assert!(matches!(s2.oned_materialize(&gp), Err(Error::InvalidProblem(_))));
+}
+
+/// The extracted coupling is monotone in *sorted* support order (entries
+/// never cross), strictly positive, bounded by m + n entries, and its
+/// slacks balance: `transported + destroyed = Σrpd` and
+/// `transported + created = Σcpd`.
+#[test]
+fn transport_list_is_monotone_and_balances() {
+    for (seed, &(m, n)) in SHAPES.iter().enumerate() {
+        let gp = problem(m, n, 700 + seed as u64);
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .stop(StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 })
+            .build_oned(&gp);
+        session.solve_oned(&gp).unwrap();
+        let t = session.oned_transport().unwrap();
+        assert!(t.entries.len() <= m + n, "{m}x{n}");
+        assert!(t.entries.iter().all(|e| e.mass > 0.0), "{m}x{n}");
+        let rx = ranks(&gp.x);
+        let ry = ranks(&gp.y);
+        for w in t.entries.windows(2) {
+            assert!(
+                rx[w[0].from as usize] <= rx[w[1].from as usize]
+                    && ry[w[0].to as usize] <= ry[w[1].to as usize],
+                "{m}x{n}: coupling entries cross in sorted order"
+            );
+        }
+        let tr = t.transported();
+        let sum_rpd: f32 = gp.rpd.iter().sum();
+        let sum_cpd: f32 = gp.cpd.iter().sum();
+        assert!(
+            (tr + t.destroyed - sum_rpd).abs() <= 1e-3 * sum_rpd.max(1.0),
+            "{m}x{n}: row slack"
+        );
+        assert!(
+            (tr + t.created - sum_cpd).abs() <= 1e-3 * sum_cpd.max(1.0),
+            "{m}x{n}: col slack"
+        );
+    }
+}
+
+/// The quantile coupling pins against `data/golden_oned_quantile.txt`
+/// (hand-derived: two marginal vectors and the six entries of their
+/// monotone pairing). Skips with a notice if the data directory is not
+/// checked out.
+#[test]
+fn golden_oned_quantile_coupling() {
+    let Some(text) = ["../data/golden_oned_quantile.txt", "data/golden_oned_quantile.txt"]
+        .iter()
+        .find_map(|p| std::fs::read_to_string(p).ok())
+    else {
+        eprintln!("skipping: data/golden_oned_quantile.txt not found");
+        return;
+    };
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('#'));
+    let parse_row = |l: &str| -> Vec<f32> {
+        l.split_whitespace().map(|t| t.parse().expect("golden float")).collect()
+    };
+    let rowsum = parse_row(lines.next().expect("rowsum line"));
+    let colsum = parse_row(lines.next().expect("colsum line"));
+    let expected: Vec<(u32, u32, f32)> = lines
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let f = parse_row(l);
+            assert_eq!(f.len(), 3, "entry line");
+            (f[0] as u32, f[1] as u32, f[2])
+        })
+        .collect();
+
+    // Identity orders: the golden marginals are already in sorted support
+    // order, and the targets (rpd/cpd) equal the transported masses so
+    // both slacks must vanish.
+    let sx: Vec<u32> = (0..rowsum.len() as u32).collect();
+    let sy: Vec<u32> = (0..colsum.len() as u32).collect();
+    let mut out = TransportList::default();
+    out.reserve_for(rowsum.len(), colsum.len());
+    fused_monotone_coupling(&sx, &sy, &rowsum, &colsum, &rowsum, &colsum, &mut out);
+    assert_eq!(out.entries.len(), expected.len());
+    for (got, want) in out.entries.iter().zip(&expected) {
+        assert_eq!((got.from, got.to), (want.0, want.1));
+        assert!((got.mass - want.2).abs() <= 1e-6, "{} vs {}", got.mass, want.2);
+    }
+    assert!(out.destroyed.abs() <= 1e-6 && out.created.abs() <= 1e-6);
+}
+
+/// Warm interop: the oned path hashes a problem with the *matfree*
+/// fingerprint on purpose, so a converged 1D solve seeds a later matfree
+/// solve of the same geometry on the same session — observable as a cache
+/// hit and an iteration count no worse than the cold run.
+#[test]
+#[cfg_attr(miri, ignore)] // matfree leg is O(m·n·iters) under the interpreter
+fn warm_cache_interops_between_oned_and_matfree() {
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 };
+    let gp = problem(24, 18, 77);
+
+    let mut cold = SolverSession::builder(SolverKind::MapUot).stop(stop).build_matfree(&gp);
+    let cold_iters = cold.solve_matfree(&gp).unwrap().iters;
+
+    let mut warm = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .warm(4)
+        .build_oned(&gp);
+    let ro = warm.solve_oned(&gp).unwrap();
+    assert!(ro.converged, "1D solve must converge to store its scaling");
+    assert_eq!(warm.warm_stats(), Some((0, 1)), "first solve is a miss + store");
+    let rm = warm.solve_matfree(&gp).unwrap();
+    let (hits, _) = warm.warm_stats().unwrap();
+    assert!(hits >= 1, "matfree solve must hit the 1D-seeded entry");
+    assert!(
+        rm.iters <= cold_iters,
+        "seeded matfree took {} iters, cold took {cold_iters}",
+        rm.iters
+    );
+
+    // And the reverse direction: a matfree solve seeds a later oned solve.
+    let mut warm2 = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .warm(4)
+        .build_matfree(&gp);
+    let r1 = warm2.solve_matfree(&gp).unwrap();
+    assert!(r1.converged);
+    let r2 = warm2.solve_oned(&gp).unwrap();
+    let (hits2, _) = warm2.warm_stats().unwrap();
+    assert!(hits2 >= 1, "oned solve must hit the matfree-seeded entry");
+    assert!(r2.iters <= r1.iters, "seeded oned took {} vs {}", r2.iters, r1.iters);
+}
+
+/// The exact sweep is serial by construction: solves are bit-identical
+/// for every session thread count (the pool only exists for the other
+/// backends). This is what the CI pool matrix pins.
+#[test]
+#[cfg_attr(miri, ignore)] // spins real thread pools; nothing here touches raw memory
+fn oned_solves_are_thread_count_invariant() {
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 400 };
+    let gp = problem(32, 24, 55);
+    let mut reference = SolverSession::builder(SolverKind::MapUot).stop(stop).build_oned(&gp);
+    reference.solve_oned(&gp).unwrap();
+    let (ru, rv) = reference.oned_scaling().unwrap();
+    for &t in &thread_counts() {
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(t)
+            .stop(stop)
+            .build_oned(&gp);
+        session.solve_oned(&gp).unwrap();
+        let (u, v) = session.oned_scaling().unwrap();
+        assert_eq!(u, ru, "t={t}: u diverged");
+        assert_eq!(v, rv, "t={t}: v diverged");
+    }
+}

@@ -23,7 +23,7 @@
 use crate::lexer::{contains_word, find_words, lex, Line};
 
 /// Hot solver files under the allocation contract.
-const HOT_FILES: [&str; 7] = [
+const HOT_FILES: [&str; 8] = [
     "algo/mapuot.rs",
     "algo/pot.rs",
     "algo/coffee.rs",
@@ -31,6 +31,7 @@ const HOT_FILES: [&str; 7] = [
     "algo/matfree.rs",
     "algo/parallel.rs",
     "algo/kernels.rs",
+    "algo/oned.rs",
 ];
 
 /// Allocating constructs forbidden in hot-path fn bodies.
