@@ -22,7 +22,14 @@
 //!
 //! Correctness tooling: the unsafe/allocation/concurrency contracts the
 //! pool engine relies on are machine-checked — `cargo run -p uotlint`
-//! lints `rust/src` for them in seconds (it is a required CI gate), and
+//! lints `rust/src` for them in seconds (call-graph-aware: an allocation
+//! reachable from a hot loop through any chain of helpers is flagged
+//! with its chain; exemptions are written `// uotlint: allow(alloc) —
+//! reason` above the fn or site, `// uotlint: allow(panic) — reason`
+//! for provably-infallible sites in service code), and
+//! `cargo run -p uotlint -- --model-check` exhaustively interleaves the
+//! pool's epoch-barrier state machine to prove no lost wakeup, no
+//! deadlock, exactly-once part execution. Both are required CI gates;
 //! nightly Miri/TSan/ASan legs re-run the edge-case and property suites
 //! under interpretation and sanitizers. Commands and what each gate
 //! guarantees: `EXPERIMENTS.md` §Correctness tooling.

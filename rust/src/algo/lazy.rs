@@ -39,6 +39,8 @@ pub struct LazySolver {
     pending_frow: Vec<f32>,
     /// Column sums of the *true* iterate (post both rescalings).
     colsum: Vec<f32>,
+    /// Scratch: this iteration's column factors (reused every iterate).
+    fcol: Vec<f32>,
     rpd: Vec<f32>,
     cpd: Vec<f32>,
     fi: f32,
@@ -49,7 +51,8 @@ impl LazySolver {
     pub fn new(plan: Matrix, rpd: Vec<f32>, cpd: Vec<f32>, fi: f32) -> Self {
         let colsum = plan.col_sums();
         let m = plan.rows();
-        Self { plan, pending_frow: vec![1.0; m], colsum, rpd, cpd, fi, iters: 0 }
+        let fcol = vec![0f32; plan.cols()];
+        Self { plan, pending_frow: vec![1.0; m], colsum, fcol, rpd, cpd, fi, iters: 0 }
     }
 
     pub fn iters(&self) -> usize {
@@ -60,8 +63,7 @@ impl LazySolver {
     /// folded in, plus a cached colsum re-read (no store).
     pub fn iterate(&mut self) {
         let (m, n) = (self.plan.rows(), self.plan.cols());
-        let mut fcol = vec![0f32; n];
-        factors_into(&mut fcol, &self.cpd, &self.colsum, self.fi);
+        factors_into(&mut self.fcol, &self.cpd, &self.colsum, self.fi);
         self.colsum.fill(0.0);
 
         for i in 0..m {
@@ -73,7 +75,7 @@ impl LazySolver {
             let mut acc = [0f32; W];
             let chunks = n / W;
             let (rh, rt) = row.split_at_mut(chunks * W);
-            let (fh, ft) = fcol.split_at(chunks * W);
+            let (fh, ft) = self.fcol.split_at(chunks * W);
             for (rw, fw) in rh.chunks_exact_mut(W).zip(fh.chunks_exact(W)) {
                 for k in 0..W {
                     rw[k] *= fp * fw[k];

@@ -96,6 +96,9 @@ fn reduce_acc_pool(colsum: &mut [f32], acc: &AccArena, used: usize, pool: &Threa
 }
 
 /// Parallel column sums of `plan` into `out` (scope backend).
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn par_col_sums_into(plan: &Matrix, part: &Partition, out: &mut [f32], acc: &mut AccArena) {
     let n = plan.cols();
     thread::scope(|s| {
@@ -238,6 +241,9 @@ pub fn mapuot_iterate_tracked_policy(
 }
 
 /// Shared body of the scope-backend MAP-UOT iteration.
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn mapuot_scope(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -536,6 +542,9 @@ pub fn sparse_mapuot_iterate_tracked(
 
 /// Shared body of the scope-engine sparse iteration.
 #[allow(clippy::too_many_arguments)]
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn sparse_scope(
     a: &mut CsrMatrix,
     colsum: &mut [f32],
@@ -784,6 +793,9 @@ pub fn matfree_iterate_tracked(
 
 /// Shared body of the scope-engine matfree iteration.
 #[allow(clippy::too_many_arguments)]
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn matfree_scope(
     p: &GeomProblem,
     u: &mut [f32],
@@ -1182,6 +1194,9 @@ pub fn coffee_iterate_tracked(
 
 /// Shared body of the scope-backend COFFEE iteration; tracks deltas in
 /// phase B when `inv_fcol` is provided (same pattern as [`pot_sweeps`]).
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn coffee_phases(
     plan: &mut Matrix,
     colsum: &mut [f32],
@@ -1441,6 +1456,9 @@ pub fn pot_iterate_tracked(
 
 /// Shared body of the scope-backend POT iteration; tracks deltas in sweep 4
 /// when `inv_fcol` is provided.
+// uotlint: allow(alloc) — scope engine spawns OS threads per call by
+// design (join-handle Vec included); the persistent pool engine is the
+// allocation-free path (tests/alloc_free.rs exempts scope likewise).
 fn pot_sweeps(
     plan: &mut Matrix,
     colsum: &mut [f32],

@@ -412,6 +412,14 @@ fn worker_loop(shared: &Shared, idx: usize) {
     }
 }
 
+/// Model-checking view of the protocol above (see `pool_model.rs`):
+/// every atomic op and park/unpark becomes one step of an explicit state
+/// machine that uotlint's `sched` driver exhaustively interleaves. Gated
+/// so normal builds carry zero extra code.
+#[cfg(feature = "model_check")]
+#[path = "pool_model.rs"]
+pub mod model;
+
 /// Balanced row-block partition of `rows` over at most `threads` blocks
 /// (further capped by `cap`, the number of available accumulators).
 ///
@@ -701,6 +709,25 @@ mod tests {
                 assert_eq!(h.load(Ordering::Relaxed), 1, "parts={parts} p={p}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_survives_a_poisoned_lock() {
+        // A panic while holding the dispatch lock poisons the mutex; the
+        // next dispatch must recover via `PoisonError::into_inner` (the
+        // tree-wide lock-discipline contract) instead of cascading.
+        let pool = ThreadPool::new(2);
+        let poison = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = pool.dispatch.lock().unwrap();
+            panic!("poison the dispatch lock");
+        }));
+        assert!(poison.is_err());
+        assert!(pool.dispatch.is_poisoned(), "lock should be poisoned");
+        let total = AtomicU32::new(0);
+        pool.run(2, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 2, "pool unusable after poison");
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! Model-checking shim for the [`super`] epoch-barrier protocol
+//! (`model_check` feature only; nothing here exists in normal builds).
+//!
+//! The real pool runs the protocol through `AtomicU64`/`AtomicUsize`
+//! loads and stores plus `park`/`unpark`. This module re-states that
+//! protocol as an explicit-state machine in which **every shared-memory
+//! operation is one step**: the dispatcher and each worker carry a
+//! program counter, the atomics become plain fields of a [`State`], and
+//! park/unpark follow `std::thread` token semantics — an `unpark` sets a
+//! token, a `park` consumes one or blocks. Spurious wakeups are
+//! deliberately *not* modeled: the protocol must not need them, and
+//! granting them would mask lost-wakeup bugs.
+//!
+//! An external driver (uotlint's `sched` module) exhaustively enumerates
+//! thread interleavings over these steps — sequential consistency, DFS
+//! with visited-state pruning — and checks:
+//!
+//! * **no deadlock**: whenever a thread is not done, some thread can run;
+//! * **job-slot validity**: a participating worker always reads the job
+//!   published for the epoch generation it observed;
+//! * **exact-once**: every part of every epoch executes exactly once;
+//! * **barrier-drain-on-panic**: a panicking part still drains the
+//!   barrier, and the dispatcher's `poisoned` swap observes the panic
+//!   (and only then);
+//! * **termination**: every maximal run ends with all threads done.
+//!
+//! The epoch packing reuses the real constants ([`super::PARTS_BITS`] /
+//! [`super::PARTS_MASK`]), so a repack of the epoch word breaks the
+//! model too. Why one writer: `run_dyn` serializes dispatchers on the
+//! dispatch lock, so a single modeled caller is faithful.
+//!
+//! [`Bug`] enumerates seedable protocol mutations. Each deletes or
+//! reorders exactly one step the way a plausible refactor might, and the
+//! checker's mutation matrix proves every one of them is caught — the
+//! gate can actually fail.
+
+use std::rc::Rc;
+
+use super::{PARTS_BITS, PARTS_MASK};
+
+/// One scenario: pool shape, dispatched epochs, optional seeded panic
+/// and/or protocol mutation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Config {
+    /// Spawned workers (their loop indices are `1..=workers`).
+    pub workers: usize,
+    /// Parts per dispatch; the caller runs part 0, workers `1..parts`
+    /// participate, workers `parts..=workers` must sleep through.
+    pub parts: usize,
+    /// Dispatches before shutdown. Two epochs are the minimum that
+    /// exercises re-publish over parked workers (where the lost-wakeup
+    /// and stale-token hazards live).
+    pub epochs: usize,
+    /// Seed a contained panic in `(epoch, part)`; part 0 is the caller.
+    pub panic: Option<(usize, usize)>,
+    /// Seeded protocol mutation (mutation tests); `None` = faithful.
+    pub bug: Option<Bug>,
+}
+
+impl Config {
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "{}w/{}p/{}e",
+            self.workers, self.parts, self.epochs
+        );
+        if let Some((e, p)) = self.panic {
+            s.push_str(&format!(" panic@({e},{p})"));
+        }
+        if let Some(bug) = self.bug {
+            s.push_str(&format!(" bug={bug:?}"));
+        }
+        s
+    }
+}
+
+/// Seedable single-step protocol mutations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bug {
+    /// The barrier-closing worker skips `caller.unpark()`.
+    DropWorkerUnpark,
+    /// The dispatcher skips unparking the participants.
+    DropCallerUnpark,
+    /// The dispatcher clears the job slot before the barrier drains.
+    ClearJobBeforeBarrier,
+    /// The epoch is published before the job slot is written.
+    PublishBeforeJobWrite,
+    /// The dispatcher forgets `remaining.store(parts - 1)`.
+    SkipRemainingStore,
+}
+
+/// Every seedable mutation, for the mutation matrix.
+pub const BUGS: [Bug; 5] = [
+    Bug::DropWorkerUnpark,
+    Bug::DropCallerUnpark,
+    Bug::ClearJobBeforeBarrier,
+    Bug::PublishBeforeJobWrite,
+    Bug::SkipRemainingStore,
+];
+
+/// Dispatcher program counter (one epoch of `run_dyn`, then `Drop`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum CallerPc {
+    WriteJob,
+    StoreRemaining,
+    Publish,
+    /// Unparking participant `k + 1` (field is `k`).
+    Unpark,
+    RunOwnPart,
+    BarrierRead,
+    BarrierParked,
+    ClearJob,
+    SwapPoison,
+    ShutStore,
+    ShutPublish,
+    ShutUnpark,
+    Join,
+    Done,
+}
+
+/// Worker program counter (`worker_loop`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum WorkerPc {
+    LoadEpoch,
+    /// Epoch unchanged: the pre-park shutdown check.
+    CheckShutSpin,
+    Park,
+    /// New epoch observed: the post-wake shutdown check.
+    CheckShutNew,
+    ReadJob,
+    Exec,
+    FetchSub,
+    UnparkCaller,
+    Done,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Caller {
+    pc: CallerPc,
+    /// Epoch being dispatched (0-based).
+    epoch: usize,
+    /// Unpark loop counter.
+    k: usize,
+    /// `poisoned` value observed by each epoch's post-barrier swap.
+    observed: Vec<bool>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Worker {
+    pc: WorkerPc,
+    /// Last packed epoch this worker consumed (`seen` in the real loop).
+    seen: u64,
+    /// The packed word the current wake observed.
+    packed: u64,
+    /// Whether this worker's `fetch_sub` closed the barrier.
+    was_last: bool,
+}
+
+/// The modeled shared memory (the real pool's `Shared`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct SharedMem {
+    /// Packed `(generation << PARTS_BITS) | parts`.
+    epoch: u64,
+    remaining: usize,
+    /// The job slot, modeled as "the epoch index this job belongs to".
+    job: Option<usize>,
+    shutdown: bool,
+    poisoned: bool,
+}
+
+/// One interleaving state: all thread frames + shared memory + park
+/// tokens + the execution ledger the properties are checked against.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct State {
+    caller: Caller,
+    workers: Vec<Worker>,
+    shared: SharedMem,
+    caller_token: bool,
+    worker_tokens: Vec<bool>,
+    /// `executed[epoch][part]` run counts.
+    executed: Vec<Vec<u8>>,
+}
+
+/// Result of stepping one thread.
+pub enum Step {
+    /// The op ran; here is the next state and a trace label.
+    Next(State, String),
+    /// The op exposed a property violation.
+    Violation(String),
+}
+
+impl State {
+    pub fn initial(cfg: &Config) -> State {
+        State {
+            caller: Caller { pc: CallerPc::WriteJob, epoch: 0, k: 0, observed: Vec::new() },
+            workers: (0..cfg.workers)
+                .map(|_| Worker { pc: WorkerPc::LoadEpoch, seen: 0, packed: 0, was_last: false })
+                .collect(),
+            shared: SharedMem {
+                epoch: 0,
+                remaining: 0,
+                job: None,
+                shutdown: false,
+                poisoned: false,
+            },
+            caller_token: false,
+            worker_tokens: vec![false; cfg.workers],
+            executed: vec![vec![0; cfg.parts]; cfg.epochs],
+        }
+    }
+
+    /// Thread ids that can take a step: 0 is the caller, `i + 1` is
+    /// worker `i`. Parked threads without a token (and a joining caller
+    /// with live workers) are blocked.
+    pub fn runnable(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        match self.caller.pc {
+            CallerPc::Done => {}
+            CallerPc::BarrierParked => {
+                if self.caller_token {
+                    out.push(0);
+                }
+            }
+            CallerPc::Join => {
+                if self.workers.iter().all(|w| w.pc == WorkerPc::Done) {
+                    out.push(0);
+                }
+            }
+            _ => out.push(0),
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            let blocked = w.pc == WorkerPc::Done
+                || (w.pc == WorkerPc::Park && !self.worker_tokens[i]);
+            if !blocked {
+                out.push(i + 1);
+            }
+        }
+        out
+    }
+
+    /// All threads done: a maximal run to check final properties on.
+    pub fn is_final(&self) -> bool {
+        self.caller.pc == CallerPc::Done && self.workers.iter().all(|w| w.pc == WorkerPc::Done)
+    }
+
+    /// One shared-memory op of thread `tid`.
+    pub fn step(&self, tid: usize, cfg: &Config) -> Step {
+        if tid == 0 {
+            self.step_caller(cfg)
+        } else {
+            self.step_worker(tid - 1, cfg)
+        }
+    }
+
+    fn step_caller(&self, cfg: &Config) -> Step {
+        let mut st = self.clone();
+        let e = st.caller.epoch;
+        let bug = cfg.bug;
+        let label = match st.caller.pc {
+            CallerPc::WriteJob => {
+                if bug == Some(Bug::PublishBeforeJobWrite) {
+                    // Mutation: epoch bump first; the job write lands one
+                    // step later, racing the workers it just woke.
+                    st.publish(cfg.parts);
+                    st.caller.pc = CallerPc::StoreRemaining;
+                    format!("caller: publish epoch {e} BEFORE job write (bug)")
+                } else {
+                    st.shared.job = Some(e);
+                    st.caller.pc = CallerPc::StoreRemaining;
+                    format!("caller: job = epoch {e}")
+                }
+            }
+            CallerPc::StoreRemaining => {
+                if bug == Some(Bug::PublishBeforeJobWrite) {
+                    st.shared.job = Some(e);
+                    st.shared.remaining = cfg.parts - 1;
+                    st.caller.pc = CallerPc::Unpark;
+                    st.caller.k = 0;
+                    "caller: late job write (bug)".to_string()
+                } else {
+                    if bug != Some(Bug::SkipRemainingStore) {
+                        st.shared.remaining = cfg.parts - 1;
+                    }
+                    st.caller.pc = CallerPc::Publish;
+                    format!("caller: remaining = {}", st.shared.remaining)
+                }
+            }
+            CallerPc::Publish => {
+                st.publish(cfg.parts);
+                st.caller.pc = CallerPc::Unpark;
+                st.caller.k = 0;
+                format!("caller: publish epoch {e} (parts {})", cfg.parts)
+            }
+            CallerPc::Unpark => {
+                if st.caller.k >= cfg.parts - 1 {
+                    st.caller.pc = CallerPc::RunOwnPart;
+                    "caller: all participants unparked".to_string()
+                } else {
+                    let k = st.caller.k;
+                    st.caller.k += 1;
+                    if bug == Some(Bug::DropCallerUnpark) {
+                        format!("caller: unpark worker {} DROPPED (bug)", k + 1)
+                    } else {
+                        st.worker_tokens[k] = true;
+                        format!("caller: unpark worker {}", k + 1)
+                    }
+                }
+            }
+            CallerPc::RunOwnPart => {
+                if let Err(v) = st.record_exec(e, 0) {
+                    return Step::Violation(v);
+                }
+                st.caller.pc = if bug == Some(Bug::ClearJobBeforeBarrier) {
+                    CallerPc::ClearJob
+                } else {
+                    CallerPc::BarrierRead
+                };
+                let panicked = cfg.panic == Some((e, 0));
+                format!(
+                    "caller: run part 0 of epoch {e}{}",
+                    if panicked { " (panics, contained)" } else { "" }
+                )
+            }
+            CallerPc::BarrierRead => {
+                if st.shared.remaining == 0 {
+                    st.caller.pc = if bug == Some(Bug::ClearJobBeforeBarrier) {
+                        CallerPc::SwapPoison
+                    } else {
+                        CallerPc::ClearJob
+                    };
+                    "caller: remaining == 0, barrier drained".to_string()
+                } else {
+                    st.caller.pc = CallerPc::BarrierParked;
+                    format!("caller: remaining == {}, parking", st.shared.remaining)
+                }
+            }
+            CallerPc::BarrierParked => {
+                // Only runnable with a token; consume it and re-check.
+                st.caller_token = false;
+                st.caller.pc = CallerPc::BarrierRead;
+                "caller: unparked, re-checking barrier".to_string()
+            }
+            CallerPc::ClearJob => {
+                st.shared.job = None;
+                st.caller.pc = if bug == Some(Bug::ClearJobBeforeBarrier) {
+                    CallerPc::BarrierRead
+                } else {
+                    CallerPc::SwapPoison
+                };
+                if bug == Some(Bug::ClearJobBeforeBarrier) {
+                    "caller: clear job BEFORE barrier (bug)".to_string()
+                } else {
+                    "caller: clear job".to_string()
+                }
+            }
+            CallerPc::SwapPoison => {
+                let observed = st.shared.poisoned;
+                st.shared.poisoned = false;
+                st.caller.observed.push(observed);
+                if e + 1 < cfg.epochs {
+                    st.caller = Caller {
+                        pc: CallerPc::WriteJob,
+                        epoch: e + 1,
+                        k: 0,
+                        observed: st.caller.observed,
+                    };
+                    format!("caller: observed poisoned = {observed}, next epoch")
+                } else {
+                    st.caller.pc = CallerPc::ShutStore;
+                    format!("caller: observed poisoned = {observed}, shutting down")
+                }
+            }
+            CallerPc::ShutStore => {
+                st.shared.shutdown = true;
+                st.caller.pc = CallerPc::ShutPublish;
+                "caller: shutdown = true".to_string()
+            }
+            CallerPc::ShutPublish => {
+                st.publish(0);
+                st.caller.pc = CallerPc::ShutUnpark;
+                st.caller.k = 0;
+                "caller: publish shutdown epoch (parts 0)".to_string()
+            }
+            CallerPc::ShutUnpark => {
+                if st.caller.k >= st.workers.len() {
+                    st.caller.pc = CallerPc::Join;
+                    "caller: all workers unparked for shutdown".to_string()
+                } else {
+                    let k = st.caller.k;
+                    st.caller.k += 1;
+                    st.worker_tokens[k] = true;
+                    format!("caller: unpark worker {} for shutdown", k + 1)
+                }
+            }
+            CallerPc::Join => {
+                st.caller.pc = CallerPc::Done;
+                "caller: joined all workers".to_string()
+            }
+            CallerPc::Done => unreachable!("done caller stepped"),
+        };
+        Step::Next(st, label)
+    }
+
+    fn step_worker(&self, i: usize, cfg: &Config) -> Step {
+        let mut st = self.clone();
+        let idx = i + 1; // worker_loop index: workers are parts 1..
+        let w = st.workers[i].clone();
+        let label = match w.pc {
+            WorkerPc::LoadEpoch => {
+                if st.shared.epoch != w.seen {
+                    let packed = st.shared.epoch;
+                    st.workers[i] = Worker {
+                        pc: WorkerPc::CheckShutNew,
+                        seen: packed,
+                        packed,
+                        was_last: w.was_last,
+                    };
+                    format!(
+                        "worker {idx}: epoch load -> gen {} parts {}",
+                        packed >> PARTS_BITS,
+                        packed & PARTS_MASK
+                    )
+                } else {
+                    st.workers[i].pc = WorkerPc::CheckShutSpin;
+                    format!("worker {idx}: epoch load -> unchanged")
+                }
+            }
+            WorkerPc::CheckShutSpin => {
+                if st.shared.shutdown {
+                    st.workers[i].pc = WorkerPc::Done;
+                    format!("worker {idx}: shutdown observed, exiting")
+                } else {
+                    st.workers[i].pc = WorkerPc::Park;
+                    format!("worker {idx}: no new epoch, parking")
+                }
+            }
+            WorkerPc::Park => {
+                // Only runnable with a token; consume it and re-load.
+                st.worker_tokens[i] = false;
+                st.workers[i].pc = WorkerPc::LoadEpoch;
+                format!("worker {idx}: unparked")
+            }
+            WorkerPc::CheckShutNew => {
+                if st.shared.shutdown {
+                    st.workers[i].pc = WorkerPc::Done;
+                    format!("worker {idx}: shutdown observed, exiting")
+                } else if idx >= (w.packed & PARTS_MASK) as usize {
+                    st.workers[i].pc = WorkerPc::LoadEpoch;
+                    format!("worker {idx}: non-participant, back to waiting")
+                } else {
+                    st.workers[i].pc = WorkerPc::ReadJob;
+                    format!("worker {idx}: participating")
+                }
+            }
+            WorkerPc::ReadJob => {
+                // Generations are 1-based (publish pre-increments), so
+                // generation g carries the job of epoch index g - 1.
+                let gen = (w.packed >> PARTS_BITS) as usize;
+                if st.shared.job != Some(gen - 1) {
+                    return Step::Violation(format!(
+                        "worker {idx} read job slot {:?} while executing epoch \
+                         generation {gen} (expected the epoch-{} job)",
+                        st.shared.job,
+                        gen - 1
+                    ));
+                }
+                st.workers[i].pc = WorkerPc::Exec;
+                format!("worker {idx}: job read ok (epoch {})", gen - 1)
+            }
+            WorkerPc::Exec => {
+                let e = (w.packed >> PARTS_BITS) as usize - 1;
+                if let Err(v) = st.record_exec(e, idx) {
+                    return Step::Violation(v);
+                }
+                let panicked = cfg.panic == Some((e, idx));
+                if panicked {
+                    st.shared.poisoned = true;
+                }
+                st.workers[i].pc = WorkerPc::FetchSub;
+                format!(
+                    "worker {idx}: run part {idx} of epoch {e}{}",
+                    if panicked { " (panics -> poisoned)" } else { "" }
+                )
+            }
+            WorkerPc::FetchSub => {
+                if st.shared.remaining == 0 {
+                    return Step::Violation(format!(
+                        "worker {idx}: `remaining` underflow (fetch_sub at 0)"
+                    ));
+                }
+                let was = st.shared.remaining;
+                st.shared.remaining -= 1;
+                st.workers[i].pc = WorkerPc::UnparkCaller;
+                st.workers[i].was_last = was == 1;
+                format!("worker {idx}: remaining {} -> {}", was, was - 1)
+            }
+            WorkerPc::UnparkCaller => {
+                let closing = w.was_last;
+                st.workers[i].pc = WorkerPc::LoadEpoch;
+                st.workers[i].was_last = false;
+                if closing {
+                    if cfg.bug == Some(Bug::DropWorkerUnpark) {
+                        format!("worker {idx}: last out — unpark caller DROPPED (bug)")
+                    } else {
+                        st.caller_token = true;
+                        format!("worker {idx}: last out, unpark caller")
+                    }
+                } else {
+                    format!("worker {idx}: not last, no unpark")
+                }
+            }
+            WorkerPc::Done => unreachable!("done worker stepped"),
+        };
+        Step::Next(st, label)
+    }
+
+    /// Check the end-state properties of a maximal run.
+    pub fn check_final(&self, cfg: &Config) -> Result<(), String> {
+        for (e, parts) in self.executed.iter().enumerate() {
+            for (p, &count) in parts.iter().enumerate() {
+                if count != 1 {
+                    return Err(format!("part {p} of epoch {e} executed {count} times"));
+                }
+            }
+        }
+        for e in 0..cfg.epochs {
+            let want = matches!(cfg.panic, Some((pe, pp)) if pe == e && pp >= 1);
+            let got = self.caller.observed.get(e).copied();
+            if got != Some(want) {
+                return Err(format!(
+                    "epoch {e}: dispatcher observed poisoned = {got:?}, expected {want}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Thread snapshot for deadlock reports.
+    pub fn describe_threads(&self) -> String {
+        let workers: Vec<String> =
+            self.workers.iter().map(|w| format!("{:?}", w.pc)).collect();
+        format!("caller {:?}, workers [{}]", self.caller.pc, workers.join(", "))
+    }
+
+    fn publish(&mut self, parts: usize) {
+        let generation = self.shared.epoch >> PARTS_BITS;
+        self.shared.epoch = ((generation + 1) << PARTS_BITS) | parts as u64;
+    }
+
+    fn record_exec(&mut self, epoch: usize, part: usize) -> Result<(), String> {
+        self.executed[epoch][part] += 1;
+        if self.executed[epoch][part] > 1 {
+            return Err(format!("part {part} of epoch {epoch} executed twice"));
+        }
+        Ok(())
+    }
+}
+
+/// Immutable trace spine: DFS shares prefixes instead of cloning label
+/// vectors per state.
+#[derive(Debug)]
+pub struct TraceNode {
+    pub label: String,
+    pub prev: Option<Rc<TraceNode>>,
+}
+
+/// Materialize a trace (oldest step first).
+pub fn trace_to_vec(tail: &Option<Rc<TraceNode>>) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = tail.clone();
+    while let Some(node) = cur {
+        out.push(node.label.clone());
+        cur = node.prev.clone();
+    }
+    out.reverse();
+    out
+}

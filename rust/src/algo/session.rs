@@ -233,11 +233,25 @@
 //!
 //! The allocation contract above and the pool's unsafe disjoint-split
 //! arguments are enforced *statically* by the repo's own lint
-//! (`cargo run -p uotlint`: SAFETY-comment coverage, hot-path allocation
-//! bans, spawn/intrinsic encapsulation) and *dynamically* by the Miri /
+//! (`cargo run -p uotlint`: SAFETY-comment coverage, a call-graph-aware
+//! allocation ban — any fn reachable from a hot loop, not just the loop
+//! body itself — panic-free service layers, lock-poison recovery,
+//! spawn/intrinsic encapsulation), *exhaustively* for the pool's
+//! park/unpark protocol by the interleaving checker
+//! (`cargo run -p uotlint -- --model-check`, over
+//! `algo::pool::model`), and *dynamically* by the Miri /
 //! ThreadSanitizer / AddressSanitizer CI legs over
-//! `rust/tests/miri_edges.rs` and the property suites. See
-//! `EXPERIMENTS.md` §Correctness tooling for how to run each locally.
+//! `rust/tests/miri_edges.rs` and the property suites.
+//!
+//! Marker vocabulary, for when a rule is right to ask but the site is
+//! deliberate: `// uotlint: allow(alloc) — reason` above a fn or
+//! allocation line grants an allocation exemption (fn-level markers
+//! also cut the fn's outgoing call edges from the reachability walk);
+//! `// uotlint: allow(panic) — reason` justifies a provably-infallible
+//! `unwrap`/index in `coordinator/`, `config/` or `runtime/`. Every
+//! marker is counted in the lint summary, so exemption drift is as
+//! visible as violation drift. See `EXPERIMENTS.md` §Correctness
+//! tooling for how to run each gate locally.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};

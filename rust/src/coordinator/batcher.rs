@@ -111,17 +111,25 @@ impl Batcher {
             st = recover(self.not_empty.wait(st));
         }
 
-        let mut batch = vec![st.queue.pop_front().expect("non-empty")];
-        let shape = batch[0].shape();
+        // The wait loop above only breaks on a non-empty queue, but a typed
+        // drain beats a panic while holding the queue lock.
+        let first = match st.queue.pop_front() {
+            Some(req) => req,
+            None => return None,
+        };
+        let shape = first.shape();
+        let mut batch = vec![first];
         let deadline = Instant::now() + self.batch_wait;
 
         loop {
             // Drain compatible requests (stable order for the rest).
             let mut i = 0;
             while batch.len() < self.batch_max && i < st.queue.len() {
-                if st.queue[i].shape() == shape {
-                    let req = st.queue.remove(i).expect("index valid");
-                    batch.push(req);
+                if st.queue.get(i).is_some_and(|r| r.shape() == shape) {
+                    match st.queue.remove(i) {
+                        Some(req) => batch.push(req),
+                        None => break,
+                    }
                 } else {
                     i += 1;
                 }

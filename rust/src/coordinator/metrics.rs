@@ -36,6 +36,8 @@ impl Metrics {
     pub fn record_latency(&self, seconds: f64) {
         let ms = seconds * 1e3;
         let idx = LATENCY_BUCKETS_MS.iter().position(|&b| ms <= b).unwrap_or(8);
+        // uotlint: allow(panic) — idx is position()'s in-range index over an
+        // 8-element table or the literal 8; the bucket array has length 9.
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_total_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
     }
@@ -49,6 +51,8 @@ impl Metrics {
     /// into the [`Metrics::iterations`] running total).
     pub fn record_iters(&self, iters: u64) {
         let idx = ITER_BUCKETS.iter().position(|&b| iters <= b).unwrap_or(8);
+        // uotlint: allow(panic) — idx is position()'s in-range index over an
+        // 8-element table or the literal 8; the bucket array has length 9.
         self.iter_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.iter_requests.fetch_add(1, Ordering::Relaxed);
         self.iterations.fetch_add(iters, Ordering::Relaxed);
@@ -58,6 +62,8 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let latency_buckets = self.latency_buckets.each_ref().map(|a| a.load(Ordering::Relaxed));
+        let iter_buckets = self.iter_buckets.each_ref().map(|a| a.load(Ordering::Relaxed));
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -75,8 +81,8 @@ impl Metrics {
             } else {
                 self.latency_total_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1e3
             },
-            latency_buckets: std::array::from_fn(|i| self.latency_buckets[i].load(Ordering::Relaxed)),
-            iter_buckets: std::array::from_fn(|i| self.iter_buckets[i].load(Ordering::Relaxed)),
+            latency_buckets,
+            iter_buckets,
             iter_requests: self.iter_requests.load(Ordering::Relaxed),
         }
     }

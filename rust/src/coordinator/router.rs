@@ -94,6 +94,8 @@ pub fn classify_geom(p: &GeomProblem, tol: f32) -> ProblemClass {
         let mut hi = f32::NEG_INFINITY;
         for pts in [&p.x, &p.y] {
             for point in pts.chunks_exact(p.d) {
+                // uotlint: allow(panic) — chunks_exact(p.d) yields windows
+                // of length p.d, and axis < p.d by the loop bound.
                 let c = point[axis];
                 lo = lo.min(c);
                 hi = hi.max(c);
@@ -104,10 +106,10 @@ pub fn classify_geom(p: &GeomProblem, tol: f32) -> ProblemClass {
             varying_axis = Some(axis);
         }
     }
-    match varying {
-        0 => ProblemClass::Oned { axis: 0 },
-        1 => ProblemClass::Oned { axis: varying_axis.expect("varying == 1 recorded an axis") },
-        k => ProblemClass::General {
+    match (varying, varying_axis) {
+        (0, _) => ProblemClass::Oned { axis: 0 },
+        (1, Some(axis)) => ProblemClass::Oned { axis },
+        (k, _) => ProblemClass::General {
             reason: format!(
                 "{k} of {} coordinate axes vary by more than {tol:e}; the exact sweep needs \
                  a one-dimensional geometry",
@@ -160,11 +162,15 @@ pub fn pad(problem: &Problem, bm: usize, bn: usize) -> Padded {
     assert!(bm >= m && bn >= n, "bucket {bm}x{bn} smaller than problem {m}x{n}");
     let mut plan = Matrix::zeros(bm, bn);
     for i in 0..m {
+        // uotlint: allow(panic) — bm >= m && bn >= n is asserted above, so
+        // every row/prefix slice in this fn is in bounds by construction.
         plan.row_mut(i)[..n].copy_from_slice(problem.plan.row(i));
     }
     let mut rpd = vec![0f32; bm];
+    // uotlint: allow(panic) — m <= bm asserted above.
     rpd[..m].copy_from_slice(&problem.rpd);
     let mut cpd = vec![0f32; bn];
+    // uotlint: allow(panic) — n <= bn asserted above.
     cpd[..n].copy_from_slice(&problem.cpd);
     let colsum = plan.col_sums();
     Padded { plan, colsum, rpd, cpd, fi: problem.fi, orig_m: m, orig_n: n }
@@ -175,8 +181,9 @@ impl Padded {
     pub fn unpad(&self) -> Matrix {
         let mut out = Matrix::zeros(self.orig_m, self.orig_n);
         for i in 0..self.orig_m {
-            out.row_mut(i)
-                .copy_from_slice(&self.plan.row(i)[..self.orig_n]);
+            // uotlint: allow(panic) — orig_n <= the padded width by
+            // construction in `pad`.
+            out.row_mut(i).copy_from_slice(&self.plan.row(i)[..self.orig_n]);
         }
         out
     }

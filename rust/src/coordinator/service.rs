@@ -327,7 +327,9 @@ fn execute(
                     };
                     let sess = session.get_or_insert_with(|| builder().build_oned(p1));
                     let report = sess.solve_oned(p1)?;
-                    let (u, v) = sess.oned_scaling().expect("solve_oned populates scalings");
+                    let (u, v) = sess
+                        .oned_scaling()
+                        .ok_or_else(|| Error::Service("solve_oned left no scalings".into()))?;
                     let response = Response::Scaling {
                         u: u.to_vec(),
                         v: v.to_vec(),
@@ -343,8 +345,9 @@ fn execute(
                     }
                     let sess = session.get_or_insert_with(|| builder().build_matfree(g));
                     let report = sess.solve_matfree(g)?;
-                    let (u, v) =
-                        sess.matfree_scaling().expect("solve_matfree populates scalings");
+                    let (u, v) = sess
+                        .matfree_scaling()
+                        .ok_or_else(|| Error::Service("solve_matfree left no scalings".into()))?;
                     let response =
                         Response::Scaling { u: u.to_vec(), v: v.to_vec(), transport: None };
                     (response, report, Backend::Native)
@@ -380,7 +383,7 @@ fn execute(
                     let report = sess.solve_sparse(&sp)?;
                     let plan = sess
                         .sparse_plan()
-                        .expect("solve_sparse populates the CSR plan")
+                        .ok_or_else(|| Error::Service("solve_sparse left no CSR plan".into()))?
                         .to_dense();
                     (Response::Plan(plan), report, Backend::Native)
                 }

@@ -29,6 +29,15 @@ pub struct ChunkOutput {
     pub steps: usize,
 }
 
+/// First device buffer of an execution's `[replica][output]` result, as a
+/// typed error instead of a double index (an artifact compiled with no
+/// outputs would otherwise panic the service worker).
+fn first_output<'b>(bufs: &'b [Vec<xla::PjRtBuffer>], what: &str) -> Result<&'b xla::PjRtBuffer> {
+    bufs.first()
+        .and_then(|replica| replica.first())
+        .ok_or_else(|| Error::Runtime(format!("{what} execution returned no output buffer")))
+}
+
 /// A PJRT CPU client plus a cache of compiled executables.
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -69,7 +78,9 @@ impl Runtime {
             let exe = self.client.compile(&comp)?;
             self.executables.insert(name.to_string(), exe);
         }
-        Ok(&self.executables[name])
+        self.executables
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("artifact {name:?} missing from cache")))
     }
 
     /// Warm the executable cache for every artifact of `kind`.
@@ -117,16 +128,19 @@ impl Runtime {
         let cpd_lit = xla::Literal::vec1(cpd);
         let fi_lit = xla::Literal::vec1(&[fi]);
 
-        let result = exe.execute::<xla::Literal>(&[a_lit, cs_lit, rpd_lit, cpd_lit, fi_lit])?[0]
-            [0]
-        .to_literal_sync()?;
+        let bufs = exe.execute::<xla::Literal>(&[a_lit, cs_lit, rpd_lit, cpd_lit, fi_lit])?;
+        let result = first_output(&bufs, "uot_chunk")?.to_literal_sync()?;
         let (a_out, cs_out, err_out) = result.to_tuple3()?;
 
         let a_vec = a_out.to_vec::<f32>()?;
         plan.as_mut_slice().copy_from_slice(&a_vec);
         let cs_vec = cs_out.to_vec::<f32>()?;
         colsum.copy_from_slice(&cs_vec);
-        let err = err_out.to_vec::<f32>()?[0];
+        let err = err_out
+            .to_vec::<f32>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Runtime("uot_chunk returned an empty err output".into()))?;
         Ok(ChunkOutput { err, steps })
     }
 
@@ -150,8 +164,8 @@ impl Runtime {
         let x_lit = xla::Literal::vec1(xs).reshape(&[m as i64, d as i64])?;
         let y_lit = xla::Literal::vec1(ys).reshape(&[n as i64, d as i64])?;
         let eps_lit = xla::Literal::vec1(&[eps]);
-        let result =
-            exe.execute::<xla::Literal>(&[x_lit, y_lit, eps_lit])?[0][0].to_literal_sync()?;
+        let bufs = exe.execute::<xla::Literal>(&[x_lit, y_lit, eps_lit])?;
+        let result = first_output(&bufs, "gibbs_init")?.to_literal_sync()?;
         let (k_out, cs_out) = result.to_tuple2()?;
         let plan = Matrix::from_slice(m, n, &k_out.to_vec::<f32>()?);
         Ok((plan, cs_out.to_vec::<f32>()?))
@@ -169,7 +183,8 @@ impl Runtime {
         let exe = self.executable(&meta.name)?;
         let a_lit = xla::Literal::vec1(plan.as_slice()).reshape(&[m as i64, n as i64])?;
         let y_lit = xla::Literal::vec1(ys).reshape(&[n as i64, d as i64])?;
-        let result = exe.execute::<xla::Literal>(&[a_lit, y_lit])?[0][0].to_literal_sync()?;
+        let bufs = exe.execute::<xla::Literal>(&[a_lit, y_lit])?;
+        let result = first_output(&bufs, "barycentric")?.to_literal_sync()?;
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }

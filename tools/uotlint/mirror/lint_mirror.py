@@ -1,0 +1,541 @@
+#!/usr/bin/env python3
+"""Faithful Python mirror of uotlint v2 (tools/uotlint/src/{lexer,parse,callgraph,rules}.rs).
+
+The container building this repo has no Rust toolchain, so the lint's logic
+is validated here: the mirror implements the same line-oriented lexer, the
+same two-pass symbol-table/call-graph construction, and the same rules, and
+is run over rust/src to prove the tree is clean (and over seeded violations
+to prove each rule fires). The Rust implementation is the source of truth;
+keep the two in sync when rules change.
+
+Usage: python3 lint_mirror.py [root]   (default: rust/src relative to repo)
+"""
+import os
+import re
+import sys
+from collections import defaultdict
+
+# --- lexer (mirror of lexer.rs) ---------------------------------------------
+
+def lex(source):
+    """Return list of (code, comment) per line; strings blanked, comments split."""
+    out = []
+    block_depth = 0
+    for raw in source.split("\n"):
+        code, comment, block_depth = lex_line(raw, block_depth)
+        out.append((code, comment))
+    return out
+
+
+def lex_line(raw, block_depth):
+    code, comment = [], []
+    i, n = 0, len(raw)
+    while i < n:
+        if block_depth > 0:
+            if raw.startswith("*/", i):
+                block_depth -= 1
+                i += 2
+            elif raw.startswith("/*", i):
+                block_depth += 1
+                i += 2
+            else:
+                comment.append(raw[i])
+                i += 1
+            continue
+        if raw.startswith("//", i):
+            comment.append(raw[i:])
+            break
+        if raw.startswith("/*", i):
+            block_depth += 1
+            i += 2
+            continue
+        c = raw[i]
+        if c == '"':
+            code.append('""')
+            i += 1
+            while i < n:
+                if raw[i] == "\\":
+                    i += 2
+                elif raw[i] == '"':
+                    i += 1
+                    break
+                else:
+                    i += 1
+        elif c == "r" and (raw.startswith('r"', i) or raw.startswith('r#"', i)):
+            code.append('""')
+            hashed = raw[i + 1] == "#"
+            close = '"#' if hashed else '"'
+            i += 3 if hashed else 2
+            j = raw.find(close, i)
+            i = n if j < 0 else j + len(close)
+        elif c == "'":
+            rest = raw[i + 1 :]
+            if len(rest) >= 3 and rest[0] == "\\" and rest[2] == "'":
+                code.append("' '")
+                i += 4
+            elif len(rest) >= 2 and rest[1] == "'" and rest[0] != "'":
+                code.append("' '")
+                i += 3
+            else:
+                code.append("'")
+                i += 1
+        else:
+            code.append(c)
+            i += 1
+    return "".join(code), "".join(comment), block_depth
+
+
+IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+KEYWORDS = {
+    "if", "else", "while", "match", "for", "loop", "return", "in", "as",
+    "let", "move", "ref", "mut", "pub", "fn", "impl", "use", "mod",
+    "struct", "enum", "trait", "type", "where", "unsafe", "dyn", "box",
+    "break", "continue", "crate", "self", "Self", "super", "static",
+    "const", "extern", "async", "await",
+}
+
+# --- parse (mirror of parse.rs) ---------------------------------------------
+
+ALLOW_ALLOC = "uotlint: allow(alloc)"
+ALLOW_PANIC = "uotlint: allow(panic)"
+
+ALLOC_PATTERNS = [
+    "Vec::new", "Vec::with_capacity", "vec!", ".to_vec()", ".collect()",
+    "Box::new", "String::new", ".to_string()", "format!",
+]
+
+
+class FnDef:
+    __slots__ = (
+        "name", "file", "line", "in_impl", "impl_type", "is_test",
+        "allow_alloc", "calls", "allocs",
+    )
+
+    def __init__(self, name, file, line, in_impl, is_test, allow_alloc, impl_type=None):
+        self.name = name
+        self.file = file
+        self.line = line
+        self.in_impl = in_impl
+        self.impl_type = impl_type
+        self.is_test = is_test
+        self.allow_alloc = allow_alloc
+        self.calls = []   # (name, line, is_method)
+        self.allocs = []  # (pattern, line, allowed)
+
+
+def contains_word(hay, needle):
+    return find_words(hay, needle) != []
+
+
+def find_words(hay, needle):
+    out = []
+    needs_before = needle[:1].isalnum() or needle[:1] == "_"
+    needs_after = (needle[-1:].isalnum()) or needle[-1:] == "_"
+    start = 0
+    while True:
+        i = hay.find(needle, start)
+        if i < 0:
+            return out
+        before_ok = (not needs_before) or i == 0 or not (hay[i - 1].isalnum() or hay[i - 1] == "_")
+        end = i + len(needle)
+        after_ok = (not needs_after) or end >= len(hay) or not (hay[end].isalnum() or hay[end] == "_")
+        if before_ok and after_ok:
+            out.append(i)
+        start = i + 1
+
+
+def comment_run_above(lines, idx):
+    texts = []
+    j = idx
+    while j > 0:
+        j -= 1
+        code, comment = lines[j]
+        c = code.strip()
+        if c == "" and comment.strip() != "":
+            texts.append(comment)
+        elif c.startswith("#[") or c.startswith("#!["):
+            continue
+        else:
+            break
+    return "\n".join(texts)
+
+
+def parse_file(rel, source):
+    """Pass 1 over one file: fn defs with their call and alloc sites."""
+    lines = lex(source)
+    fns = []
+    depth = 0
+    in_test = False
+    impl_stack = []        # (entry_depth, self_type) of impl/trait blocks
+    pending_impl = None
+    fn_stack = []          # (fn_index, entry_depth)
+    pending_fn = None      # FnDef awaiting its `{`
+    for idx, (code, comment) in enumerate(lines):
+        lineno = idx + 1
+        trimmed = code.strip()
+        if not in_test and depth == 0 and trimmed.startswith("#[cfg(test)]"):
+            in_test = True
+
+        # impl/trait block entry (method-call resolution targets).
+        starts_item = any(
+            find_words(code, kw) and _item_at_depth(code, kw, depth, impl_stack)
+            for kw in ("impl", "trait")
+        )
+        if starts_item:
+            ty = impl_self_type(code)
+            if "{" in code:
+                impl_stack.append((depth, ty))
+            elif ";" not in code:
+                pending_impl = ty
+        elif pending_impl is not None:
+            if "{" in code:
+                impl_stack.append((depth, pending_impl))
+                pending_impl = None
+            elif ";" in code:
+                pending_impl = None
+
+        # fn definition tracking (multi-line signatures).
+        fn_def_col = None
+        offs = find_words(code, "fn")
+        if offs:
+            off = offs[0]
+            rest = code[off + 2 :].lstrip()
+            m = IDENT.match(rest)
+            if m:
+                name = m.group(0)
+                fn_def_col = off + 2 + (len(code[off + 2 :]) - len(rest)) + m.end()
+                allow = ALLOW_ALLOC in comment_run_above(lines, idx) or ALLOW_ALLOC in comment
+                d = FnDef(
+                    name, rel, lineno, bool(impl_stack), in_test, allow,
+                    impl_stack[-1][1] if impl_stack else None,
+                )
+                after = code[off:]
+                if "{" in after:
+                    fns.append(d)
+                    fn_stack.append((len(fns) - 1, depth))
+                    pending_fn = None
+                elif ";" in after:
+                    pending_fn = None
+                else:
+                    pending_fn = d
+        if pending_fn is not None and fn_def_col is None:
+            if "{" in code:
+                fns.append(pending_fn)
+                fn_stack.append((len(fns) - 1, depth))
+                pending_fn = None
+            elif ";" in code:
+                pending_fn = None
+
+        # call + alloc sites attributed to the innermost open fn.
+        if fn_stack:
+            fi, _ = fn_stack[-1]
+            cur = fns[fi]
+            for name, is_method, qual in call_sites(code, fn_def_col):
+                cur.calls.append((name, lineno, is_method, qual))
+            for pat in ALLOC_PATTERNS:
+                if contains_word(code, pat):
+                    allowed = ALLOW_ALLOC in comment
+                    cur.allocs.append((pat, lineno, allowed))
+
+        # brace upkeep.
+        for ch in code:
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth = max(0, depth - 1)
+                if fn_stack and depth == fn_stack[-1][1]:
+                    fn_stack.pop()
+                if impl_stack and depth == impl_stack[-1][0]:
+                    impl_stack.pop()
+    return fns, lines, in_test
+
+
+def _item_at_depth(code, kw, depth, impl_stack):
+    # `impl`/`trait` keyword introducing an item (not e.g. `impl Trait` in
+    # a return type). Heuristic: the line's trimmed code starts with the
+    # keyword or with pub/unsafe + keyword, at module or impl-free depth.
+    t = code.strip()
+    for prefix in (kw + " ", kw + "<"):
+        if t.startswith(prefix) or t.startswith("pub " + prefix) or t.startswith("unsafe " + prefix) or t.startswith("pub unsafe " + prefix):
+            return True
+    return False
+
+
+def impl_self_type(code):
+    """Self-type name of an `impl`/`trait` header line: the last path
+    segment (generics stripped) after `for`, or the first type after the
+    keyword. `impl<T> fmt::Debug for Foo<T>` -> `Foo`."""
+    t = code.strip()
+    for kw in ("impl", "trait"):
+        offs = find_words(t, kw)
+        if offs:
+            rest = t[offs[0] + len(kw):]
+            break
+    else:
+        return None
+    # skip generic params on the keyword itself
+    rest = rest.lstrip()
+    if rest.startswith("<"):
+        angle, k = 1, 1
+        while k < len(rest) and angle > 0:
+            if rest[k] == "<":
+                angle += 1
+            elif rest[k] == ">":
+                angle -= 1
+            k += 1
+        rest = rest[k:]
+    if " for " in rest:
+        rest = rest.split(" for ", 1)[1]
+    rest = rest.strip()
+    # last path segment before generics/brace
+    rest = rest.split("{", 1)[0].split("<", 1)[0].strip()
+    seg = rest.rsplit("::", 1)[-1].strip()
+    m = IDENT.match(seg)
+    return m.group(0) if m else None
+
+
+def call_sites(code, fn_def_col):
+    """Identifier-followed-by-( occurrences: (name, is_method, qualifier)."""
+    out = []
+    for m in IDENT.finditer(code):
+        name = m.group(0)
+        if name in KEYWORDS:
+            continue
+        if fn_def_col is not None and m.end() == fn_def_col:
+            continue  # the fn's own name in its definition
+        j = m.end()
+        # optional turbofish ::<...>
+        if code.startswith("::<", j):
+            k, angle = j + 3, 1
+            while k < len(code) and angle > 0:
+                if code[k] == "<":
+                    angle += 1
+                elif code[k] == ">":
+                    angle -= 1
+                k += 1
+            j = k
+        if j < len(code) and code[j] == "(":
+            if j == m.end() and code[m.end():m.end()+1] == "!":
+                continue  # macro (unreachable: '(' != '!')
+            # macro? ident immediately followed by ! was excluded by '(' check
+            back = m.start() - 1
+            while back >= 0 and code[back] == " ":
+                back -= 1
+            is_method = back >= 0 and code[back] == "."
+            qual = None
+            if back >= 1 and code[back] == ":" and code[back - 1] == ":":
+                qm = [q for q in IDENT.finditer(code, 0, back - 1) if q.end() == back - 1]
+                if qm:
+                    qual = qm[0].group(0)
+            out.append((name, is_method, qual))
+        elif j < len(code) and code[j] == "!":
+            continue  # macro call
+    return out
+
+
+# --- callgraph + rules (mirror of callgraph.rs / rules.rs) ------------------
+
+HOT_FILES = [
+    "algo/mapuot.rs", "algo/pot.rs", "algo/coffee.rs", "algo/sparse.rs",
+    "algo/matfree.rs", "algo/parallel.rs", "algo/kernels.rs", "algo/oned.rs",
+]
+
+PANIC_DIRS = ("coordinator/", "config/", "runtime/")
+
+# The transitive-allocation universe: the hot core and the helper layer it
+# is allowed to call. Calls resolving outside (coordinator, config, sim,
+# apps, bench, CLI) are dispatch/setup layers that call INTO the core, not
+# hot-path callees - resolving into them by bare name only manufactures
+# phantom chains.
+ALLOC_UNIVERSE = ("algo/", "util/")
+
+
+def is_hot_name(name):
+    # `with_pool`-style builders share the _pool suffix but are
+    # constructors, not sweep kernels.
+    if name.startswith("with_"):
+        return False
+    return (
+        name.startswith("iterate") or name.startswith("fused_")
+        or "_pool" in name or name.startswith("pool_")
+    )
+
+
+def analyze(files):
+    """files: dict rel -> source. Returns (violations, stats)."""
+    all_fns = []
+    lexed = {}
+    for rel in sorted(files):
+        fns, lines, _ = parse_file(rel, files[rel])
+        lexed[rel] = lines
+        all_fns.extend(
+            f for f in fns
+            if not f.is_test and f.file.startswith(ALLOC_UNIVERSE)
+        )
+
+    by_name = defaultdict(list)
+    for i, f in enumerate(all_fns):
+        by_name[f.name].append(i)
+
+    # Edges: method calls resolve to impl/trait fns only; path/bare calls to
+    # any fn of that name.
+    edges = defaultdict(set)
+    for i, f in enumerate(all_fns):
+        if f.allow_alloc:
+            continue  # an allowed-to-allocate fn's callees are its own business
+        for name, _line, is_method, qual in f.calls:
+            cands = by_name.get(name, ())
+            if qual is not None:
+                typed = [j for j in cands if all_fns[j].impl_type == qual]
+                if typed:
+                    edges[i].update(typed)
+                    continue
+            for j in cands:
+                if is_method and not all_fns[j].in_impl:
+                    continue
+                edges[i].add(j)
+
+    roots = [
+        i for i, f in enumerate(all_fns)
+        if f.file in HOT_FILES and is_hot_name(f.name)
+    ]
+    # BFS with parent pointers for chain reporting.
+    parent = {}
+    order = list(roots)
+    seen = set(roots)
+    qi = 0
+    while qi < len(order):
+        u = order[qi]
+        qi += 1
+        for v in sorted(edges[u]):
+            if v not in seen:
+                seen.add(v)
+                parent[v] = u
+                order.append(v)
+
+    violations = []
+    allow_allocs = 0
+    for i in seen:
+        f = all_fns[i]
+        if f.allow_alloc:
+            allow_allocs += 1
+            continue
+        for pat, line, allowed in f.allocs:
+            if allowed:
+                allow_allocs += 1
+                continue
+            chain = [f.name]
+            k = i
+            while k in parent:
+                k = parent[k]
+                chain.append(all_fns[k].name)
+            chain.reverse()
+            violations.append(
+                (f.file, line, "alloc",
+                 f"`{pat}` in `{f.name}`, reachable from hot root via {' -> '.join(chain)}")
+            )
+
+    # panic-path + lock rules are line-oriented over the lexed files.
+    allow_panics = 0
+    lock_sites = 0
+    for rel in sorted(files):
+        lines = lexed[rel]
+        depth = 0
+        in_test = False
+        for idx, (code, comment) in enumerate(lines):
+            lineno = idx + 1
+            trimmed = code.strip()
+            if not in_test and depth == 0 and trimmed.startswith("#[cfg(test)]"):
+                in_test = True
+            if not in_test:
+                if rel.startswith(PANIC_DIRS):
+                    allowed = ALLOW_PANIC in comment or ALLOW_PANIC in comment_run_above(lines, idx)
+                    sites = panic_sites(code, trimmed)
+                    for what in sites:
+                        if allowed:
+                            allow_panics += 1
+                        else:
+                            violations.append(
+                                (rel, lineno, "panic",
+                                 f"{what} in service-facing code - return a typed Error "
+                                 f"(or justify with `// {ALLOW_PANIC} - reason`)")
+                            )
+                if ".lock()" in code:
+                    lock_sites += 1
+                    stmt = " ".join(c for c, _ in lines[idx: idx + 4])
+                    if "into_inner" not in stmt and "recover(" not in stmt:
+                        violations.append(
+                            (rel, lineno, "lock",
+                             "`.lock()` without the PoisonError::into_inner recovery "
+                             "pattern (see coordinator::batcher::recover)")
+                        )
+            for ch in code:
+                if ch == "{":
+                    depth += 1
+                elif ch == "}":
+                    depth = max(0, depth - 1)
+
+    stats = {
+        "fns": len(all_fns),
+        "roots": len(roots),
+        "reachable": len(seen),
+        "allow_allocs": allow_allocs,
+        "allow_panics": allow_panics,
+        "lock_sites": lock_sites,
+    }
+    return violations, stats
+
+
+def panic_sites(code, trimmed):
+    out = []
+    if ".unwrap()" in code:
+        out.append("`unwrap()`")
+    if ".expect(" in code:
+        out.append("`expect(...)`")
+    if not trimmed.startswith("#"):
+        for i, ch in enumerate(code):
+            if ch != "[":
+                continue
+            back = i - 1
+            while back >= 0 and code[back] == " ":
+                back -= 1
+            if back < 0 or not (code[back].isalnum() or code[back] in "_)]?"):
+                continue
+            # `mut [f32]`, `in [..]`, `&'b [..]`: type/iterator position,
+            # not indexing — the preceding token is a keyword or lifetime.
+            if code[back].isalnum() or code[back] == "_":
+                end = back + 1
+                while back >= 0 and (code[back].isalnum() or code[back] == "_"):
+                    back -= 1
+                word = code[back + 1:end]
+                if word in KEYWORDS or (back >= 0 and code[back] == "'"):
+                    continue
+            out.append("direct indexing")
+            break
+    return out
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = sys.argv[1] if len(sys.argv) > 1 else os.path.join(here, "../../../rust/src")
+    files = {}
+    for dirpath, _dirs, names in os.walk(root):
+        for n in sorted(names):
+            if n.endswith(".rs"):
+                p = os.path.join(dirpath, n)
+                rel = os.path.relpath(p, root).replace(os.sep, "/")
+                files[rel] = open(p).read()
+    violations, stats = analyze(files)
+    for rel, line, rule, msg in sorted(violations):
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    print(
+        f"mirror: {len(files)} files, {stats['fns']} fns, {stats['roots']} hot roots, "
+        f"{stats['reachable']} reachable, {stats['allow_allocs']} allow(alloc), "
+        f"{stats['allow_panics']} allow(panic), {stats['lock_sites']} lock sites, "
+        f"{len(violations)} violations"
+    )
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

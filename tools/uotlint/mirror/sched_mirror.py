@@ -1,0 +1,377 @@
+#!/usr/bin/env python3
+"""Design-validation mirror of uotlint's pool interleaving checker
+(tools/uotlint/src/sched.rs + rust/src/algo/pool_model.rs).
+
+Models algo::pool's epoch-barrier protocol as explicit state machines
+(one shared-memory op per step, sequential consistency, std-park token
+semantics WITHOUT spurious wakeups) and exhaustively enumerates thread
+interleavings by DFS with visited-state pruning.
+
+Checked properties:
+  - no deadlock (a non-done thread exists but nothing is runnable)
+  - job-slot validity: a participating worker always reads the job
+    belonging to the epoch it observed
+  - exact-once execution of every part of every epoch
+  - barrier-drain-on-panic: a panicking part still drains the barrier,
+    and the dispatcher observes `poisoned` iff a worker part panicked
+  - termination: every maximal run ends with all threads done
+
+Seedable bugs (mutation tests -- the checker must catch each):
+  drop_worker_unpark, drop_caller_unpark, clear_job_before_barrier,
+  publish_before_job_write, skip_remaining_store
+"""
+import sys
+from collections import namedtuple
+
+PARTS_BITS = 16
+
+# Caller program counters.
+C_WRITE_JOB, C_STORE_REM, C_PUBLISH, C_UNPARK, C_RUN_OWN, C_BARRIER_READ, \
+    C_BARRIER_PARKED, C_CLEAR_JOB, C_SWAP_POISON, C_SHUT_STORE, \
+    C_SHUT_PUBLISH, C_SHUT_UNPARK, C_JOIN, C_DONE = range(14)
+
+# Worker program counters.
+W_LOAD_EPOCH, W_CHECK_SHUT_SPIN, W_PARK, W_CHECK_SHUT_NEW, W_READ_JOB, \
+    W_EXEC, W_FETCH_SUB, W_UNPARK_CALLER, W_DONE = range(9)
+
+BUGS = (
+    "drop_worker_unpark", "drop_caller_unpark", "clear_job_before_barrier",
+    "publish_before_job_write", "skip_remaining_store",
+)
+
+# caller: (pc, epoch_idx, unpark_k, observed_poison tuple)
+# workers: tuple of (pc, seen, last_packed, decremented_to_zero)
+# shared: (epoch, remaining, job, shutdown, poisoned)
+# tokens: (caller_token, worker_tokens tuple)
+# executed: tuple over epochs of tuple over parts of count
+State = namedtuple(
+    "State", "caller workers shared tokens executed")
+
+
+class Violation(Exception):
+    def __init__(self, msg, trace):
+        super().__init__(msg)
+        self.trace = trace
+
+
+def initial(cfg):
+    return State(
+        caller=(C_WRITE_JOB, 0, 0, ()),
+        workers=tuple((W_LOAD_EPOCH, 0, 0, False) for _ in range(cfg["workers"])),
+        shared=(0, 0, None, False, False),
+        tokens=(False, tuple(False for _ in range(cfg["workers"]))),
+        executed=tuple(tuple(0 for _ in range(cfg["parts"]))
+                       for _ in range(cfg["epochs"])),
+    )
+
+
+def runnable(st, cfg):
+    out = []
+    pc = st.caller[0]
+    if pc != C_DONE:
+        if pc == C_BARRIER_PARKED:
+            if st.tokens[0]:
+                out.append(0)
+        elif pc == C_JOIN:
+            if all(w[0] == W_DONE for w in st.workers):
+                out.append(0)
+        else:
+            out.append(0)
+    for i, w in enumerate(st.workers):
+        if w[0] == W_DONE:
+            continue
+        if w[0] == W_PARK and not st.tokens[1][i]:
+            continue
+        out.append(i + 1)
+    return out
+
+
+def set_worker_token(tokens, i, val):
+    wt = list(tokens[1])
+    wt[i] = val
+    return (tokens[0], tuple(wt))
+
+
+def step(st, tid, cfg, trace):
+    """One shared-memory op of thread `tid`. Returns (new_state, label)."""
+    epoch, remaining, job, shutdown, poisoned = st.shared
+    bug = cfg.get("bug")
+    parts = cfg["parts"]
+    if tid == 0:
+        pc, e, k, obs = st.caller
+        if pc == C_WRITE_JOB:
+            if bug == "publish_before_job_write":
+                # Mutation: bump the epoch first; the job write happens
+                # on the next step, racing the woken workers.
+                gen = epoch >> PARTS_BITS
+                sh = ((gen + 1) << PARTS_BITS | parts, remaining, job,
+                      shutdown, poisoned)
+                return st._replace(caller=(C_STORE_REM, e, k, obs), shared=sh), \
+                    f"caller: publish epoch {e} BEFORE job write (bug)"
+            sh = (epoch, remaining, e, shutdown, poisoned)
+            return st._replace(caller=(C_STORE_REM, e, k, obs), shared=sh), \
+                f"caller: job = epoch {e}"
+        if pc == C_STORE_REM:
+            if bug == "publish_before_job_write":
+                # The delayed job write from the mutation above.
+                sh = (epoch, parts - 1, e, shutdown, poisoned)
+                return st._replace(caller=(C_UNPARK, e, 0, obs), shared=sh), \
+                    f"caller: late job write + remaining = {parts - 1} (bug)"
+            rem = remaining if bug == "skip_remaining_store" else parts - 1
+            sh = (epoch, rem, job, shutdown, poisoned)
+            return st._replace(caller=(C_PUBLISH, e, k, obs), shared=sh), \
+                f"caller: remaining = {rem}"
+        if pc == C_PUBLISH:
+            gen = epoch >> PARTS_BITS
+            sh = ((gen + 1) << PARTS_BITS | parts, remaining, job, shutdown,
+                  poisoned)
+            return st._replace(caller=(C_UNPARK, e, 0, obs), shared=sh), \
+                f"caller: publish epoch {e} (gen {gen + 1}, parts {parts})"
+        if pc == C_UNPARK:
+            if k >= parts - 1:
+                return st._replace(caller=(C_RUN_OWN, e, k, obs)), \
+                    "caller: all participants unparked"
+            tokens = st.tokens if bug == "drop_caller_unpark" \
+                else set_worker_token(st.tokens, k, True)
+            lbl = f"caller: unpark worker {k + 1}" + \
+                (" DROPPED (bug)" if bug == "drop_caller_unpark" else "")
+            return st._replace(caller=(C_UNPARK, e, k + 1, obs), tokens=tokens), lbl
+        if pc == C_RUN_OWN:
+            ex = bump_exec(st.executed, e, 0, trace)
+            panicked = cfg.get("panic") == (e, 0)
+            nxt = C_CLEAR_JOB if bug == "clear_job_before_barrier" else C_BARRIER_READ
+            return st._replace(caller=(nxt, e, k, obs), executed=ex), \
+                f"caller: run part 0 of epoch {e}" + \
+                (" (panics, contained)" if panicked else "")
+        if pc == C_BARRIER_READ:
+            if remaining == 0:
+                nxt = C_SWAP_POISON if bug == "clear_job_before_barrier" else C_CLEAR_JOB
+                return st._replace(caller=(nxt, e, k, obs)), \
+                    "caller: remaining == 0, barrier drained"
+            return st._replace(caller=(C_BARRIER_PARKED, e, k, obs)), \
+                f"caller: remaining == {remaining}, parking"
+        if pc == C_BARRIER_PARKED:
+            # Runnable only with a token (no spurious wakeups -- the
+            # protocol must not rely on them).
+            return st._replace(caller=(C_BARRIER_READ, e, k, obs),
+                               tokens=(False, st.tokens[1])), \
+                "caller: unparked, re-checking barrier"
+        if pc == C_CLEAR_JOB:
+            sh = (epoch, remaining, None, shutdown, poisoned)
+            nxt = C_BARRIER_READ if bug == "clear_job_before_barrier" else C_SWAP_POISON
+            return st._replace(caller=(nxt, e, k, obs), shared=sh), \
+                f"caller: clear job" + \
+                (" BEFORE barrier (bug)" if bug == "clear_job_before_barrier" else "")
+        if pc == C_SWAP_POISON:
+            sh = (epoch, remaining, job, shutdown, False)
+            obs = obs + (poisoned,)
+            if e + 1 < cfg["epochs"]:
+                return st._replace(caller=(C_WRITE_JOB, e + 1, 0, obs), shared=sh), \
+                    f"caller: observed poisoned = {poisoned}, next epoch"
+            return st._replace(caller=(C_SHUT_STORE, e, 0, obs), shared=sh), \
+                f"caller: observed poisoned = {poisoned}, shutting down"
+        if pc == C_SHUT_STORE:
+            sh = (epoch, remaining, job, True, poisoned)
+            return st._replace(caller=(C_SHUT_PUBLISH, e, 0, obs), shared=sh), \
+                "caller: shutdown = true"
+        if pc == C_SHUT_PUBLISH:
+            gen = epoch >> PARTS_BITS
+            sh = ((gen + 1) << PARTS_BITS, remaining, job, shutdown, poisoned)
+            return st._replace(caller=(C_SHUT_UNPARK, e, 0, obs), shared=sh), \
+                "caller: publish shutdown epoch (parts 0)"
+        if pc == C_SHUT_UNPARK:
+            if k >= len(st.workers):
+                return st._replace(caller=(C_JOIN, e, k, obs)), \
+                    "caller: all workers unparked for shutdown"
+            tokens = set_worker_token(st.tokens, k, True)
+            return st._replace(caller=(C_SHUT_UNPARK, e, k + 1, obs),
+                               tokens=tokens), f"caller: unpark worker {k + 1}"
+        if pc == C_JOIN:
+            return st._replace(caller=(C_DONE, e, k, obs)), "caller: joined all"
+        raise AssertionError(pc)
+
+    i = tid - 1
+    idx = tid  # worker_loop idx: workers are 1-based parts
+    pc, seen, last, deced = st.workers[i]
+
+    def upd(w):
+        ws = list(st.workers)
+        ws[i] = w
+        return tuple(ws)
+
+    if pc == W_LOAD_EPOCH:
+        if epoch != seen:
+            return st._replace(workers=upd((W_CHECK_SHUT_NEW, epoch, epoch, deced))), \
+                f"worker {idx}: epoch load -> new packed {epoch >> PARTS_BITS}|{epoch & (2**PARTS_BITS - 1)}"
+        return st._replace(workers=upd((W_CHECK_SHUT_SPIN, seen, last, deced))), \
+            f"worker {idx}: epoch load -> unchanged"
+    if pc == W_CHECK_SHUT_SPIN:
+        if shutdown:
+            return st._replace(workers=upd((W_DONE, seen, last, deced))), \
+                f"worker {idx}: shutdown observed, exiting"
+        return st._replace(workers=upd((W_PARK, seen, last, deced))), \
+            f"worker {idx}: no new epoch, parking"
+    if pc == W_PARK:
+        return st._replace(workers=upd((W_LOAD_EPOCH, seen, last, deced)),
+                           tokens=set_worker_token(st.tokens, i, False)), \
+            f"worker {idx}: unparked"
+    if pc == W_CHECK_SHUT_NEW:
+        if shutdown:
+            return st._replace(workers=upd((W_DONE, seen, last, deced))), \
+                f"worker {idx}: shutdown observed, exiting"
+        if idx >= (last & (2**PARTS_BITS - 1)):
+            return st._replace(workers=upd((W_LOAD_EPOCH, seen, last, deced))), \
+                f"worker {idx}: non-participant, back to waiting"
+        return st._replace(workers=upd((W_READ_JOB, seen, last, deced))), \
+            f"worker {idx}: participating"
+    if pc == W_READ_JOB:
+        gen = last >> PARTS_BITS
+        if job != gen - 1:
+            raise Violation(
+                f"worker {idx} read job slot {job!r} for epoch generation "
+                f"{gen} (expected job {gen - 1})", trace)
+        return st._replace(workers=upd((W_EXEC, seen, last, deced))), \
+            f"worker {idx}: job read ok (epoch {job})"
+    if pc == W_EXEC:
+        e = last >> PARTS_BITS
+        ex = bump_exec(st.executed, e - 1, idx, trace)
+        pois = poisoned
+        lbl = f"worker {idx}: run part {idx} of epoch {e - 1}"
+        if cfg.get("panic") == (e - 1, idx):
+            pois = True
+            lbl += " (panics -> poisoned = true)"
+        sh = (epoch, remaining, job, shutdown, pois)
+        return st._replace(workers=upd((W_FETCH_SUB, seen, last, deced)),
+                           shared=sh, executed=ex), lbl
+    if pc == W_FETCH_SUB:
+        if remaining == 0:
+            raise Violation(
+                f"worker {idx}: remaining underflow (fetch_sub at 0)", trace)
+        sh = (epoch, remaining - 1, job, shutdown, poisoned)
+        was_last = remaining == 1
+        return st._replace(workers=upd((W_UNPARK_CALLER, seen, last, was_last)),
+                           shared=sh), \
+            f"worker {idx}: remaining {remaining} -> {remaining - 1}"
+    if pc == W_UNPARK_CALLER:
+        tokens = st.tokens
+        lbl = f"worker {idx}: not last, no unpark"
+        if deced:
+            if cfg.get("bug") == "drop_worker_unpark":
+                lbl = f"worker {idx}: last out -- unpark caller DROPPED (bug)"
+            else:
+                tokens = (True, st.tokens[1])
+                lbl = f"worker {idx}: last out, unpark caller"
+        return st._replace(workers=upd((W_LOAD_EPOCH, seen, last, False)),
+                           tokens=tokens), lbl
+    raise AssertionError(pc)
+
+
+def bump_exec(executed, e, part, trace):
+    ex = [list(row) for row in executed]
+    ex[e][part] += 1
+    if ex[e][part] > 1:
+        raise Violation(f"part {part} of epoch {e} executed twice", trace)
+    return tuple(tuple(row) for row in ex)
+
+
+def check_final(st, cfg, trace):
+    if st.caller[0] != C_DONE or any(w[0] != W_DONE for w in st.workers):
+        raise Violation("maximal run ended with live threads", trace)
+    for e, row in enumerate(st.executed):
+        for p, count in enumerate(row):
+            if count != 1:
+                raise Violation(
+                    f"part {p} of epoch {e} executed {count} times", trace)
+    obs = st.caller[3]
+    for e in range(cfg["epochs"]):
+        want = cfg.get("panic") is not None and cfg["panic"][0] == e \
+            and cfg["panic"][1] >= 1
+        if obs[e] != want:
+            raise Violation(
+                f"epoch {e}: dispatcher observed poisoned = {obs[e]}, "
+                f"expected {want}", trace)
+
+
+def explore(cfg, max_states=2_000_000):
+    """DFS over schedule choices; returns (states, maximal_runs)."""
+    init = initial(cfg)
+    visited = set()
+    finals = 0
+    stack = [(init, ())]
+    while stack:
+        st, trace = stack.pop()
+        if st in visited:
+            continue
+        visited.add(st)
+        if len(visited) > max_states:
+            raise RuntimeError("state-space explosion")
+        threads = runnable(st, cfg)
+        if not threads:
+            if st.caller[0] == C_DONE and all(w[0] == W_DONE for w in st.workers):
+                check_final(st, cfg, trace)
+                finals += 1
+                continue
+            raise Violation(
+                "deadlock: live threads but nothing runnable "
+                f"(caller pc {st.caller[0]}, workers "
+                f"{[w[0] for w in st.workers]})", trace)
+        for tid in threads:
+            nxt, lbl = step(st, tid, cfg, trace)
+            stack.append((nxt, trace + (lbl,)))
+    return len(visited), finals
+
+
+def sweep(full=False):
+    """The checker's fast (CI) or full (nightly) configuration sweep."""
+    worker_counts = (1, 2, 3) if full else (1, 2)
+    cases = []
+    for w in worker_counts:
+        for parts in range(2, w + 2):
+            cases.append({"workers": w, "parts": parts, "epochs": 2})
+            # Panic containment: dispatcher part and one worker part.
+            cases.append({"workers": w, "parts": parts, "epochs": 2,
+                          "panic": (0, 0)})
+            cases.append({"workers": w, "parts": parts, "epochs": 2,
+                          "panic": (1, parts - 1)})
+    return cases
+
+
+def main():
+    full = "--full" in sys.argv
+    total_states = 0
+    for cfg in sweep(full):
+        try:
+            states, finals = explore(cfg)
+        except Violation as v:
+            print(f"FAIL {cfg}: {v}")
+            for line in v.trace[-20:]:
+                print(f"    {line}")
+            return 1
+        total_states += states
+        print(f"ok   {cfg}: {states} states, {finals} maximal runs")
+
+    # Mutation matrix: every seeded bug must be caught.
+    caught = 0
+    for bug in BUGS:
+        hit = None
+        for base in sweep(full):
+            cfg = dict(base, bug=bug)
+            try:
+                explore(cfg)
+            except Violation as v:
+                hit = (cfg, v)
+                break
+        if hit is None:
+            print(f"MUTATION ESCAPED: {bug}")
+            return 1
+        cfg, v = hit
+        print(f"ok   mutation {bug} caught in {cfg['workers']}w/"
+              f"{cfg['parts']}p: {v}")
+        caught += 1
+    print(f"sched mirror: {total_states} states explored, "
+          f"{caught}/{len(BUGS)} mutations caught")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

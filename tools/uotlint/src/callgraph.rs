@@ -1,0 +1,290 @@
+//! Pass 2, interprocedural: the transitive-allocation ban.
+//!
+//! The per-file v1 rule only saw allocations written *inside* a hot fn;
+//! a `vec!` hidden one call away (allocation laundering through a helper)
+//! passed. This pass builds a call graph over the whole symbol table from
+//! [`crate::parse`] and walks it: any fn reachable from a hot root may
+//! not allocate.
+//!
+//! Resolution is name-based with two precision aids: method calls
+//! (`x.f(...)`) resolve only to impl/trait-defined fns, and qualified
+//! calls (`Type::f(...)`) prefer fns whose enclosing impl names `Type`.
+//! The universe is restricted to the hot core and its helper layer
+//! (`algo/`, `util/`): dispatch and setup layers call INTO the core, and
+//! resolving into them by bare name only manufactures phantom chains.
+//!
+//! Escape hatch: `// uotlint: allow(alloc) — reason` above a fn exempts
+//! it AND cuts its outgoing edges (an allowed-to-allocate fn's callees
+//! are its own business); on an allocation line it exempts that site.
+
+use std::collections::BTreeSet;
+use std::collections::HashMap;
+
+use crate::parse::FnDef;
+
+/// Files whose `iterate*` / `fused_*` / `*_pool*` fns are the hot roots.
+pub const HOT_FILES: [&str; 8] = [
+    "algo/mapuot.rs",
+    "algo/pot.rs",
+    "algo/coffee.rs",
+    "algo/sparse.rs",
+    "algo/matfree.rs",
+    "algo/parallel.rs",
+    "algo/kernels.rs",
+    "algo/oned.rs",
+];
+
+/// The reachability universe: the hot core plus the helper layer it is
+/// allowed to call.
+pub const ALLOC_UNIVERSE: [&str; 2] = ["algo/", "util/"];
+
+/// A violation attributed across files (unlike `rules::Violation`, which
+/// is per-file).
+#[derive(Debug)]
+pub struct GlobalViolation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Result of the interprocedural pass, plus the stats the summary prints.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    pub violations: Vec<GlobalViolation>,
+    /// Non-test fns in the universe.
+    pub fns: usize,
+    pub roots: usize,
+    pub reachable: usize,
+    /// `allow(alloc)` markers honored (fn-level + site-level).
+    pub allow_allocs: usize,
+}
+
+/// Sweep-kernel name shape; `with_pool`-style builders share the `_pool`
+/// suffix but are constructors, not sweep kernels.
+pub fn is_hot_name(name: &str) -> bool {
+    if name.starts_with("with_") {
+        return false;
+    }
+    name.starts_with("iterate")
+        || name.starts_with("fused_")
+        || name.contains("_pool")
+        || name.starts_with("pool_")
+}
+
+/// Run the transitive-allocation rule over the whole tree's fn defs.
+/// `all_fns` must be in deterministic (sorted-by-file) order so edge sets
+/// and chains are stable run to run.
+pub fn analyze(all_fns: &[FnDef]) -> Analysis {
+    let fns: Vec<&FnDef> = all_fns
+        .iter()
+        .filter(|f| !f.is_test && ALLOC_UNIVERSE.iter().any(|d| f.file.starts_with(d)))
+        .collect();
+
+    let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        by_name.entry(&f.name).or_default().push(i);
+    }
+
+    // Edges: method calls resolve to impl/trait fns only; qualified calls
+    // prefer a matching impl type; bare calls to any fn of that name.
+    let mut edges: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); fns.len()];
+    for (i, f) in fns.iter().enumerate() {
+        if f.allow_alloc {
+            continue;
+        }
+        for call in &f.calls {
+            let Some(cands) = by_name.get(call.name.as_str()) else {
+                continue;
+            };
+            if let Some(qual) = &call.qual {
+                let typed: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&j| fns[j].impl_type.as_deref() == Some(qual.as_str()))
+                    .collect();
+                if !typed.is_empty() {
+                    edges[i].extend(typed);
+                    continue;
+                }
+            }
+            for &j in cands {
+                if call.is_method && !fns[j].in_impl {
+                    continue;
+                }
+                edges[i].insert(j);
+            }
+        }
+    }
+
+    let roots: Vec<usize> = fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| HOT_FILES.contains(&f.file.as_str()) && is_hot_name(&f.name))
+        .map(|(i, _)| i)
+        .collect();
+
+    // BFS with parent pointers for chain reporting.
+    let mut parent: Vec<Option<usize>> = vec![None; fns.len()];
+    let mut seen: Vec<bool> = vec![false; fns.len()];
+    for &r in &roots {
+        seen[r] = true;
+    }
+    let mut order: Vec<usize> = roots.clone();
+    let mut qi = 0;
+    while qi < order.len() {
+        let u = order[qi];
+        qi += 1;
+        for &v in &edges[u] {
+            if !seen[v] {
+                seen[v] = true;
+                parent[v] = Some(u);
+                order.push(v);
+            }
+        }
+    }
+
+    let mut out = Analysis {
+        fns: fns.len(),
+        roots: roots.len(),
+        reachable: order.len(),
+        ..Analysis::default()
+    };
+    for &i in &order {
+        let f = fns[i];
+        if f.allow_alloc {
+            out.allow_allocs += 1;
+            continue;
+        }
+        for site in &f.allocs {
+            if site.allowed {
+                out.allow_allocs += 1;
+                continue;
+            }
+            let mut chain = vec![f.name.as_str()];
+            let mut k = i;
+            while let Some(p) = parent[k] {
+                k = p;
+                chain.push(fns[k].name.as_str());
+            }
+            chain.reverse();
+            out.violations.push(GlobalViolation {
+                file: f.file.clone(),
+                line: site.line,
+                rule: "alloc",
+                msg: format!(
+                    "`{}` in `{}`, reachable from hot root via {}",
+                    site.pattern,
+                    f.name,
+                    chain.join(" -> ")
+                ),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+    use crate::parse::parse_file;
+
+    fn analyze_sources(files: &[(&str, &str)]) -> Analysis {
+        let mut all = Vec::new();
+        for (rel, src) in files {
+            all.extend(parse_file(rel, &lex(src)));
+        }
+        analyze(&all)
+    }
+
+    #[test]
+    fn cross_file_allocation_laundering_is_caught() {
+        // The hot root itself is clean; the helper it calls (in another
+        // file) allocates — exactly what the per-file v1 rule missed.
+        let a = analyze_sources(&[
+            ("algo/kernels.rs", "pub fn iterate_row(n: usize) {\n    helper(n);\n}\n"),
+            ("util/scratch.rs", "pub fn helper(n: usize) {\n    let v = vec![0f32; n];\n}\n"),
+        ]);
+        assert_eq!(a.violations.len(), 1);
+        let v = &a.violations[0];
+        assert_eq!(v.file, "util/scratch.rs");
+        assert!(v.msg.contains("iterate_row -> helper"), "chain in {}", v.msg);
+    }
+
+    #[test]
+    fn unreachable_allocations_pass() {
+        let a = analyze_sources(&[
+            ("algo/kernels.rs", "pub fn iterate_row(n: usize) {\n    let x = n + 1;\n}\n"),
+            ("util/setup.rs", "pub fn build(n: usize) -> Vec<f32> {\n    vec![0f32; n]\n}\n"),
+        ]);
+        assert!(a.violations.is_empty());
+        assert_eq!(a.roots, 1);
+        assert_eq!(a.reachable, 1);
+    }
+
+    #[test]
+    fn qualified_calls_prefer_the_matching_impl() {
+        // Two `new` fns; the hot root calls `Scratch::new`, whose impl is
+        // clean. The allocating `Pod::new` must not be dragged in by the
+        // bare name.
+        let a = analyze_sources(&[
+            (
+                "algo/kernels.rs",
+                "pub fn iterate_row(n: usize) {\n    let s = Scratch::new(n);\n}\nimpl Scratch {\n    fn new(n: usize) -> Self {\n        Scratch\n    }\n}\n",
+            ),
+            (
+                "util/pod.rs",
+                "impl Pod {\n    fn new(n: usize) -> Self {\n        let v = vec![0u8; n];\n        Pod\n    }\n}\n",
+            ),
+        ]);
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+    }
+
+    #[test]
+    fn with_builders_are_not_hot_roots() {
+        let a = analyze_sources(&[(
+            "algo/parallel.rs",
+            "pub fn with_pool(n: usize) {\n    let v = Vec::with_capacity(n);\n}\n",
+        )]);
+        assert!(a.violations.is_empty());
+        assert_eq!(a.roots, 0);
+    }
+
+    #[test]
+    fn allow_marker_cuts_the_fns_outgoing_edges() {
+        // `baseline` is allowed to allocate, so its callee's allocation
+        // must not be reported either — the marker cuts the whole edge.
+        let a = analyze_sources(&[(
+            "algo/kernels.rs",
+            "// uotlint: allow(alloc) — comparator, not a hot path.\npub fn iterate_baseline(n: usize) {\n    alloc_helper(n);\n}\npub fn alloc_helper(n: usize) {\n    let v = vec![0f32; n];\n}\n",
+        )]);
+        assert!(a.violations.is_empty(), "{:?}", a.violations);
+        assert_eq!(a.allow_allocs, 1);
+    }
+
+    #[test]
+    fn outside_universe_calls_do_not_form_chains() {
+        // A coordinator fn with the same name as a hot callee must not be
+        // resolved into (phantom chain) — it is outside the universe.
+        let a = analyze_sources(&[
+            ("algo/kernels.rs", "pub fn iterate_row(n: usize) {\n    dispatch(n);\n}\n"),
+            (
+                "coordinator/service.rs",
+                "pub fn dispatch(n: usize) {\n    let v = vec![0f32; n];\n}\n",
+            ),
+        ]);
+        assert!(a.violations.is_empty());
+        assert_eq!(a.fns, 1, "coordinator fn excluded from the universe");
+    }
+
+    #[test]
+    fn test_fns_are_excluded() {
+        let a = analyze_sources(&[(
+            "algo/kernels.rs",
+            "#[cfg(test)]\nmod tests {\n    fn iterate_fake(n: usize) {\n        let v = vec![0f32; n];\n    }\n}\n",
+        )]);
+        assert!(a.violations.is_empty());
+        assert_eq!(a.fns, 0);
+    }
+}

@@ -131,6 +131,26 @@ fn skip_char_or_lifetime(bytes: &[u8], start: usize, code: &mut String) -> usize
     }
 }
 
+/// Comment text of the run of comment-only / attribute-only lines
+/// immediately above `idx` (no blank lines allowed in between).
+pub fn comment_run_above(lines: &[Line], idx: usize) -> String {
+    let mut texts: Vec<&str> = Vec::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() && !l.comment.trim().is_empty() {
+            texts.push(&l.comment);
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            continue;
+        } else {
+            break;
+        }
+    }
+    texts.join("\n")
+}
+
 /// True if `needle` occurs in `hay` as a whole word (not a substring of a
 /// longer identifier).
 pub fn contains_word(hay: &str, needle: &str) -> bool {

@@ -1,25 +1,54 @@
 //! uotlint — repo-local static analysis for the MAP-UOT core.
 //!
-//! Enforces the contracts the solver's soundness and performance rest on
-//! (see [`rules`] for the rule set). Run from anywhere in the workspace:
+//! Two engines behind one binary:
+//!
+//! * **Lint** — the per-file contract rules ([`rules`]) plus the
+//!   interprocedural transitive-allocation rule ([`callgraph`], built on
+//!   the [`parse`] symbol table): any fn reachable from a hot root
+//!   (`iterate*` / `fused_*` / `*_pool*` in the solver files) may not
+//!   allocate, no matter how many calls deep.
+//! * **Model check** — [`sched`] exhaustively interleaves the pool
+//!   epoch-barrier state machine (`map_uot::algo::pool::model`) and
+//!   proves no lost wakeup, no deadlock, exactly-once part execution and
+//!   barrier drain on panic; the mutation matrix seeds known protocol
+//!   bugs and requires each to be caught.
 //!
 //! ```text
-//! cargo run -p uotlint            # lint rust/src (CI gate; exit 1 on violations)
-//! cargo run -p uotlint -- <path>  # lint another file/tree (rule self-tests, demos)
+//! cargo run -p uotlint                          # lint rust/src (CI gate)
+//! cargo run -p uotlint -- <path>                # lint another file/tree
+//! cargo run -p uotlint -- --model-check         # fast interleaving sweep (CI gate)
+//! cargo run -p uotlint -- --model-check-full    # 3-worker sweep (nightly)
+//! cargo run -p uotlint -- --model-check-mutations  # seeded-bug matrix (CI gate)
 //! ```
 //!
-//! Output is `path:line: [rule] message`, one line per violation, plus a
-//! summary with the unsafe-site and exemption counts so audit drift is
-//! visible even when the tree is clean.
+//! Lint output is `path:line: [rule] message`, one line per violation,
+//! plus a summary with per-rule violation counts and the unsafe-site /
+//! exemption tallies so audit drift is visible even when the tree is
+//! clean. Exit code 1 on any violation, escaped mutation, or
+//! counterexample.
 
+mod callgraph;
 mod lexer;
+mod parse;
 mod rules;
+mod sched;
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
-    let (root, display_prefix) = match std::env::args().nth(1) {
+    match std::env::args().nth(1).as_deref() {
+        Some("--model-check") => model_check(false),
+        Some("--model-check-full") => model_check(true),
+        Some("--model-check-mutations") => model_check_mutations(),
+        arg => lint(arg),
+    }
+}
+
+/// Lint mode: per-file rules + the call-graph allocation rule.
+fn lint(arg: Option<&str>) -> ExitCode {
+    let (root, display_prefix) = match arg {
         Some(arg) => (PathBuf::from(arg), String::new()),
         // Resolve relative to this crate so `cargo run -p uotlint` works
         // from any CWD in the workspace.
@@ -37,9 +66,12 @@ fn main() -> ExitCode {
     collect_rs_files(&root, &mut files);
     files.sort();
 
-    let mut violations = 0usize;
+    // (file, line, rule, msg) across both passes, sorted for stable output.
+    let mut findings: Vec<(String, usize, &'static str, String)> = Vec::new();
     let mut unsafe_sites = 0usize;
-    let mut alloc_allows = 0usize;
+    let mut panic_allows = 0usize;
+    let mut lock_sites = 0usize;
+    let mut all_fns: Vec<parse::FnDef> = Vec::new();
     for path in &files {
         let rel = path
             .strip_prefix(&root)
@@ -60,27 +92,86 @@ fn main() -> ExitCode {
                 return ExitCode::FAILURE;
             }
         };
-        let report = rules::check_file(&rel, &source);
+        // Lex once; both passes read the same token stream.
+        let lines = lexer::lex(&source);
+        let report = rules::check_file(&rel, &lines);
         unsafe_sites += report.unsafe_sites;
-        alloc_allows += report.alloc_allows;
-        violations += report.violations.len();
-        for v in &report.violations {
-            println!("{display_prefix}{rel}:{}: [{}] {}", v.line, v.rule, v.msg);
-        }
+        panic_allows += report.panic_allows;
+        lock_sites += report.lock_sites;
+        findings.extend(
+            report.violations.into_iter().map(|v| (rel.clone(), v.line, v.rule, v.msg)),
+        );
+        all_fns.extend(parse::parse_file(&rel, &lines));
     }
 
+    let analysis = callgraph::analyze(&all_fns);
+    findings.extend(analysis.violations.into_iter().map(|v| (v.file, v.line, v.rule, v.msg)));
+    findings.sort();
+
+    let mut per_rule: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for (file, line, rule, msg) in &findings {
+        *per_rule.entry(*rule).or_insert(0) += 1;
+        println!("{display_prefix}{file}:{line}: [{rule}] {msg}");
+    }
+    let by_rule: Vec<String> = ["alloc", "panic", "lock", "safety", "sendsync", "encapsulation"]
+        .iter()
+        .map(|r| format!("{r} {}", per_rule.get(r).copied().unwrap_or(0)))
+        .collect();
+
     println!(
-        "uotlint: {} files, {} unsafe sites, {} allow(alloc) exemptions, {} violation{}",
+        "uotlint: {} files, {} fns, {} hot roots, {} reachable, {} unsafe sites, \
+         {} allow(alloc), {} allow(panic), {} lock sites",
         files.len(),
+        analysis.fns,
+        analysis.roots,
+        analysis.reachable,
         unsafe_sites,
-        alloc_allows,
-        violations,
-        if violations == 1 { "" } else { "s" },
+        analysis.allow_allocs,
+        panic_allows,
+        lock_sites,
     );
-    if violations == 0 {
+    println!(
+        "uotlint: {} violation{} ({})",
+        findings.len(),
+        if findings.len() == 1 { "" } else { "s" },
+        by_rule.join(", "),
+    );
+    if findings.is_empty() {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE
+    }
+}
+
+/// Exhaustive interleaving sweep over the pool epoch-barrier model.
+fn model_check(full: bool) -> ExitCode {
+    match sched::check_protocol(full) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+            ExitCode::SUCCESS
+        }
+        Err(cx) => {
+            print!("{}", sched::render(&cx));
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Seeded-bug matrix: the checker must catch every known mutation.
+fn model_check_mutations() -> ExitCode {
+    match sched::check_mutations(false) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+            ExitCode::SUCCESS
+        }
+        Err(msg) => {
+            println!("{msg}");
+            ExitCode::FAILURE
+        }
     }
 }
 

@@ -1,0 +1,406 @@
+//! Pass 1 of the two-pass analyzer: item boundaries, fn signatures, call
+//! sites and allocation sites for every file — the symbol table the
+//! call-graph rules (see [`crate::callgraph`]) are built from.
+//!
+//! Still a lexer-grade parser (zero deps, no `syn`): brace depth tracks
+//! item nesting, `impl`/`trait` headers record the self type so
+//! `Type::method(...)` calls resolve precisely, and multi-line fn
+//! signatures are carried until their `{` opens. The restricted grammar
+//! the rules need — who defines fns, who calls whom, who allocates — is
+//! exactly what survives this approximation.
+
+use crate::lexer::{comment_run_above, contains_word, Line};
+
+/// Allocating constructs the transitive-allocation rule bans on hot
+/// paths.
+pub const ALLOC_PATTERNS: [&str; 9] = [
+    "Vec::new",
+    "Vec::with_capacity",
+    "vec!",
+    ".to_vec()",
+    ".collect()",
+    "Box::new",
+    "String::new",
+    ".to_string()",
+    "format!",
+];
+
+/// The escape marker for the allocation rules.
+pub const ALLOW_ALLOC: &str = "uotlint: allow(alloc)";
+
+/// Reserved words that look like call/indexing prefixes but are not.
+pub const KEYWORDS: [&str; 37] = [
+    "if", "else", "while", "match", "for", "loop", "return", "in", "as", "let", "move", "ref",
+    "mut", "pub", "fn", "impl", "use", "mod", "struct", "enum", "trait", "type", "where",
+    "unsafe", "dyn", "box", "break", "continue", "crate", "self", "Self", "super", "static",
+    "const", "extern", "async", "await",
+];
+
+/// One call site inside a fn body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub name: String,
+    /// Preceded by `.` — resolves only to impl/trait-defined fns.
+    pub is_method: bool,
+    /// `Qual::name(...)` path qualifier (last segment), if any.
+    pub qual: Option<String>,
+}
+
+/// One allocation site inside a fn body.
+#[derive(Debug, Clone)]
+pub struct AllocSite {
+    pub pattern: &'static str,
+    pub line: usize,
+    /// Carries a same-line `allow(alloc)` marker.
+    pub allowed: bool,
+}
+
+/// One parsed fn definition.
+#[derive(Debug, Clone)]
+pub struct FnDef {
+    pub name: String,
+    /// Lint-root-relative path with `/` separators.
+    pub file: String,
+    pub line: usize,
+    /// Defined inside an `impl` or `trait` block (method-call target).
+    pub in_impl: bool,
+    /// Self type of the enclosing impl/trait, for qualified resolution.
+    pub impl_type: Option<String>,
+    /// Defined under a depth-0 `#[cfg(test)]`.
+    pub is_test: bool,
+    /// Carries an `allow(alloc)` marker above the definition: its own
+    /// allocations are exempt AND its outgoing calls are cut from the
+    /// reachability traversal (an allowed-to-allocate fn's callees are
+    /// its own business).
+    pub allow_alloc: bool,
+    pub calls: Vec<Call>,
+    pub allocs: Vec<AllocSite>,
+}
+
+/// Parse one lexed file into its fn definitions.
+pub fn parse_file(rel: &str, lines: &[Line]) -> Vec<FnDef> {
+    let mut fns: Vec<FnDef> = Vec::new();
+    let mut depth = 0usize;
+    let mut in_test = false;
+    // (entry depth, self type) of open impl/trait blocks.
+    let mut impl_stack: Vec<(usize, Option<String>)> = Vec::new();
+    let mut pending_impl: Option<Option<String>> = None;
+    // (index into fns, entry depth) of open fn bodies.
+    let mut fn_stack: Vec<(usize, usize)> = Vec::new();
+    // A fn header seen but its `{` not yet (multi-line signatures).
+    let mut pending_fn: Option<FnDef> = None;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let trimmed = code.trim();
+        if !in_test && depth == 0 && trimmed.starts_with("#[cfg(test)]") {
+            in_test = true;
+        }
+
+        // impl/trait block entry (method-call resolution targets).
+        if starts_item(trimmed) {
+            let ty = impl_self_type(trimmed);
+            if code.contains('{') {
+                impl_stack.push((depth, ty));
+            } else if !code.contains(';') {
+                pending_impl = Some(ty);
+            }
+        } else if let Some(ty) = pending_impl.take() {
+            if code.contains('{') {
+                impl_stack.push((depth, ty));
+            } else if !code.contains(';') {
+                pending_impl = Some(ty);
+            }
+        }
+
+        // fn definition tracking.
+        let mut fn_def_end: Option<usize> = None;
+        if let Some(off) = crate::lexer::find_words(code, "fn").next() {
+            let after = &code[off + 2..];
+            let ws = after.len() - after.trim_start().len();
+            let rest = &after[ws..];
+            let name_len = ident_len(rest);
+            if name_len > 0 {
+                let name = &rest[..name_len];
+                fn_def_end = Some(off + 2 + ws + name_len);
+                let above = comment_run_above(lines, idx);
+                let allow = above.contains(ALLOW_ALLOC) || line.comment.contains(ALLOW_ALLOC);
+                let def = FnDef {
+                    name: name.to_string(),
+                    file: rel.to_string(),
+                    line: lineno,
+                    in_impl: !impl_stack.is_empty(),
+                    impl_type: impl_stack.last().and_then(|(_, t)| t.clone()),
+                    is_test: in_test,
+                    allow_alloc: allow,
+                    calls: Vec::new(),
+                    allocs: Vec::new(),
+                };
+                let tail = &code[off..];
+                if tail.contains('{') {
+                    fns.push(def);
+                    fn_stack.push((fns.len() - 1, depth));
+                    pending_fn = None;
+                } else if tail.contains(';') {
+                    pending_fn = None; // trait declaration, no body
+                } else {
+                    pending_fn = Some(def);
+                }
+            }
+        }
+        if pending_fn.is_some() && fn_def_end.is_none() {
+            if code.contains('{') {
+                if let Some(def) = pending_fn.take() {
+                    fns.push(def);
+                    fn_stack.push((fns.len() - 1, depth));
+                }
+            } else if code.contains(';') {
+                pending_fn = None;
+            }
+        }
+
+        // Call + alloc sites, attributed to the innermost open fn.
+        if let Some(&(fi, _)) = fn_stack.last() {
+            collect_call_sites(code, fn_def_end, &mut fns[fi].calls);
+            for pat in ALLOC_PATTERNS {
+                if contains_word(code, pat) {
+                    fns[fi].allocs.push(AllocSite {
+                        pattern: pat,
+                        line: lineno,
+                        allowed: line.comment.contains(ALLOW_ALLOC),
+                    });
+                }
+            }
+        }
+
+        // Brace upkeep.
+        for ch in code.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if fn_stack.last().is_some_and(|&(_, d)| d == depth) {
+                        fn_stack.pop();
+                    }
+                    if impl_stack.last().is_some_and(|&(d, _)| d == depth) {
+                        impl_stack.pop();
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    fns
+}
+
+/// The line introduces an `impl`/`trait` item (not e.g. `impl Trait` in a
+/// return type): trimmed code starts with the keyword, optionally behind
+/// `pub` / `unsafe`.
+fn starts_item(trimmed: &str) -> bool {
+    let mut t = trimmed;
+    for prefix in ["pub ", "unsafe "] {
+        t = t.strip_prefix(prefix).unwrap_or(t);
+    }
+    for kw in ["impl", "trait"] {
+        if let Some(rest) = t.strip_prefix(kw) {
+            if rest.starts_with([' ', '<']) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Self-type name of an `impl`/`trait` header: the last path segment
+/// (generics stripped) after `for`, else the first type after the
+/// keyword. `impl<T> fmt::Debug for Foo<T>` -> `Foo`.
+fn impl_self_type(trimmed: &str) -> Option<String> {
+    let mut t = trimmed;
+    for prefix in ["pub ", "unsafe "] {
+        t = t.strip_prefix(prefix).unwrap_or(t);
+    }
+    let rest = ["impl", "trait"].iter().find_map(|kw| t.strip_prefix(kw))?;
+    let mut rest = rest.trim_start();
+    // Skip generic params on the keyword itself.
+    if let Some(inner) = rest.strip_prefix('<') {
+        let mut angle = 1usize;
+        // Unbalanced on this line (multi-line generics) consumes the rest,
+        // yielding no self type — matching the header-on-one-line reality
+        // of the tree.
+        let mut consumed = inner.len();
+        for (i, ch) in inner.char_indices() {
+            match ch {
+                '<' => angle += 1,
+                '>' => {
+                    angle -= 1;
+                    if angle == 0 {
+                        consumed = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        rest = &inner[consumed..];
+    }
+    if let Some((_, after)) = rest.split_once(" for ") {
+        rest = after;
+    }
+    let rest = rest.split('{').next().unwrap_or("").split('<').next().unwrap_or("").trim();
+    let seg = rest.rsplit("::").next().unwrap_or("").trim();
+    let len = ident_len(seg);
+    (len > 0).then(|| seg[..len].to_string())
+}
+
+/// Identifier-followed-by-`(` occurrences on one code line (strings and
+/// comments already stripped by the lexer). `fn_def_end` is the byte end
+/// of the line's own fn-definition name, excluded from the call list.
+fn collect_call_sites(code: &str, fn_def_end: Option<usize>, out: &mut Vec<Call>) {
+    let bytes = code.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if !is_ident_start(bytes[i]) || (i > 0 && is_ident_byte(bytes[i - 1])) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let mut end = i;
+        while end < bytes.len() && is_ident_byte(bytes[end]) {
+            end += 1;
+        }
+        i = end;
+        let name = &code[start..end];
+        if KEYWORDS.contains(&name) || Some(end) == fn_def_end {
+            continue;
+        }
+        // Optional turbofish `::<...>` between the name and `(`.
+        let mut j = end;
+        if code[j..].starts_with("::<") {
+            let mut angle = 1usize;
+            j += 3;
+            while j < bytes.len() && angle > 0 {
+                match bytes[j] {
+                    b'<' => angle += 1,
+                    b'>' => angle -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        if bytes.get(j) != Some(&b'(') {
+            continue;
+        }
+        // Classify by what precedes the name (skipping spaces).
+        let mut back = start;
+        while back > 0 && bytes[back - 1] == b' ' {
+            back -= 1;
+        }
+        let is_method = back > 0 && bytes[back - 1] == b'.';
+        let qual = (back >= 2 && &code[back - 2..back] == "::")
+            .then(|| {
+                let qend = back - 2;
+                let mut qstart = qend;
+                while qstart > 0 && is_ident_byte(bytes[qstart - 1]) {
+                    qstart -= 1;
+                }
+                (qstart < qend && is_ident_start(bytes[qstart])).then(|| code[qstart..qend].to_string())
+            })
+            .flatten();
+        out.push(Call { name: name.to_string(), is_method, qual });
+    }
+}
+
+/// Length of the leading identifier of `s` (0 if none).
+pub fn ident_len(s: &str) -> usize {
+    let bytes = s.as_bytes();
+    if bytes.is_empty() || !is_ident_start(bytes[0]) {
+        return 0;
+    }
+    bytes.iter().take_while(|&&b| is_ident_byte(b)).count()
+}
+
+pub fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn parse(rel: &str, src: &str) -> Vec<FnDef> {
+        parse_file(rel, &lex(src))
+    }
+
+    #[test]
+    fn fn_defs_and_call_sites_are_collected() {
+        let src = "fn outer(n: usize) {\n    helper(n);\n    x.method(n);\n}\nfn helper(n: usize) {}\n";
+        let fns = parse("algo/a.rs", src);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "outer");
+        let calls: Vec<(&str, bool)> =
+            fns[0].calls.iter().map(|c| (c.name.as_str(), c.is_method)).collect();
+        assert_eq!(calls, vec![("helper", false), ("method", true)]);
+    }
+
+    #[test]
+    fn qualified_calls_record_the_last_path_segment() {
+        let src = "fn f() {\n    let p = Partition::new(4, 2, 8);\n    let q = algo::pool::Partition::new(1, 1, 1);\n}\n";
+        let fns = parse("algo/a.rs", src);
+        let quals: Vec<Option<&str>> =
+            fns[0].calls.iter().map(|c| c.qual.as_deref()).collect();
+        assert_eq!(quals, vec![Some("Partition"), Some("Partition")]);
+    }
+
+    #[test]
+    fn impl_blocks_record_the_self_type() {
+        let src = "impl<T> std::fmt::Debug for Foo<T> {\n    fn fmt(&self) {}\n}\nimpl Bar {\n    fn new() -> Self { Bar }\n}\n";
+        let fns = parse("algo/a.rs", src);
+        assert_eq!(fns[0].impl_type.as_deref(), Some("Foo"));
+        assert_eq!(fns[1].impl_type.as_deref(), Some("Bar"));
+        assert!(fns.iter().all(|f| f.in_impl));
+    }
+
+    #[test]
+    fn multiline_signatures_and_trait_decls() {
+        let src = "trait K {\n    fn decl(\n        &self,\n    ) -> f32;\n}\nfn real(\n    n: usize,\n) -> f32 {\n    body(n)\n}\n";
+        let fns = parse("algo/a.rs", src);
+        // The bodyless trait declaration contributes no def with a body;
+        // the multi-line `real` still collects its call sites.
+        let real = fns.iter().find(|f| f.name == "real").expect("real parsed");
+        assert_eq!(real.calls.len(), 1);
+        assert_eq!(real.calls[0].name, "body");
+    }
+
+    #[test]
+    fn allow_marker_and_alloc_sites() {
+        let src = "// uotlint: allow(alloc) — baseline comparator.\nfn baseline(n: usize) {\n    let v = vec![0f32; n];\n}\nfn hot(n: usize) {\n    let v = Vec::with_capacity(n); // uotlint: allow(alloc): bootstrap\n    let w = vec![0; n];\n}\n";
+        let fns = parse("algo/a.rs", src);
+        assert!(fns[0].allow_alloc);
+        assert!(!fns[1].allow_alloc);
+        assert_eq!(fns[1].allocs.len(), 2);
+        assert!(fns[1].allocs[0].allowed, "same-line marker grants the site");
+        assert!(!fns[1].allocs[1].allowed);
+    }
+
+    #[test]
+    fn macros_are_not_call_sites() {
+        let src = "fn f() {\n    let v = vec![0; 4];\n    assert!(true);\n    g::<f32>(1.0);\n}\n";
+        let fns = parse("algo/a.rs", src);
+        let names: Vec<&str> = fns[0].calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["g"], "turbofish call kept, macros dropped");
+    }
+
+    #[test]
+    fn test_modules_mark_their_fns() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n";
+        let fns = parse("algo/a.rs", src);
+        assert!(!fns[0].is_test);
+        assert!(fns[1].is_test);
+    }
+}
