@@ -41,6 +41,7 @@ use map_uot::algo::{
     Problem, SolverKind, SolverSession, SparseProblem, StopRule, TileSpec,
 };
 use map_uot::coordinator::{classify_geom, ProblemClass, ONED_AXIS_TOL};
+use map_uot::util::telemetry::Roofline;
 
 fn main() {
     // A 512x512 problem: random positive plan, random positive marginals,
@@ -289,4 +290,35 @@ fn main() {
         Ok(r) => println!("deadline-bounded solve finished in {:.1} ms", r.seconds * 1e3),
         Err(e) => println!("deadline hit first: {e}"),
     }
+
+    // In-band telemetry: `.trace(path)` arms the lock-free span recorder —
+    // every sweep phase (kernel generation, fused sweep, reduction,
+    // convergence check) lands in fixed-capacity per-thread rings, and the
+    // record path is allocation-free, so tracing keeps the zero-alloc
+    // steady-state contract above. `export_trace()` drains what was
+    // recorded: a `.jsonl` path gets one event object per line, any other
+    // path gets chrome://tracing JSON (open at ui.perfetto.dev — one track
+    // per recording thread, pool workers included). CLI: `solve --trace
+    // <path>`, plus `map-uot stats` for the versioned service-metrics
+    // JSON and `stats --check-trace <path>` to validate an export.
+    let trace_path = std::env::temp_dir().join("quickstart_trace.json");
+    let trace_path = trace_path.to_str().expect("utf-8 temp path").to_string();
+    let mut traced = SolverSession::builder(SolverKind::MapUot)
+        .threads(threads)
+        .stop(stop)
+        .trace(trace_path.clone())
+        .build(&batch[0]);
+    let report = traced.solve(&batch[0]).expect("traced solve");
+    let spans = traced.export_trace().expect("trace export");
+    println!("\ntelemetry: {spans} spans -> {trace_path} (chrome://tracing format)");
+    // The analytic roofline line the CLI prints for traced solves, from
+    // the solver's pass/access accounting (MAP-UOT: 1 pass, 2 accesses).
+    let roof = Roofline::materialized(
+        (512 * 512) as u64,
+        SolverKind::MapUot.passes_per_iter() as u64,
+        SolverKind::MapUot.accesses_per_element() as u64,
+        4,
+        report.iters as u64,
+    );
+    println!("{}", roof.cli_line(report.seconds));
 }

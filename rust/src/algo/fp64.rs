@@ -9,6 +9,7 @@
 //! path (monomorphization would be free, but the f32 path's layout
 //! guarantees and tests stay simpler untouched).
 
+use crate::util::telemetry::{self, Phase};
 use crate::util::XorShift;
 
 /// One fused MAP-UOT iteration over a row-major f64 matrix,
@@ -28,6 +29,7 @@ pub fn mapuot_iterate_into(
 ) {
     debug_assert_eq!(plan.len(), rpd.len() * n);
     debug_assert_eq!(fcol.len(), n);
+    let _sweep = telemetry::span(Phase::FusedSweep);
     for ((f, &t), &s) in fcol.iter_mut().zip(cpd).zip(colsum.iter()) {
         *f = if s > 0.0 { (t / s).powf(fi) } else { 0.0 };
     }

@@ -48,6 +48,8 @@ use crate::algo::mapuot::{
 use crate::algo::pool::{AccArena, PaddedSlots, Partition, SliceRef, ThreadPool};
 use crate::algo::scaling::{factor, factors_into, recip_into};
 use crate::algo::sparse::{fused_csr_rows, CsrMatrix, NnzPartition};
+use crate::util::telemetry;
+use crate::util::telemetry::Phase;
 use crate::util::Matrix;
 
 /// Clamp a thread-count request to something usable.
@@ -63,6 +65,7 @@ const PAR_REDUCE_MIN_COLS: usize = 1024;
 /// Reduce the first `used` accumulators into `colsum` (Algorithm 1 lines
 /// 16–20) on the calling thread, in ascending block order.
 fn reduce_acc(colsum: &mut [f32], acc: &AccArena, used: usize) {
+    let _red = telemetry::span(Phase::Reduction);
     colsum.fill(0.0);
     for b in 0..used {
         for (s, &v) in colsum.iter_mut().zip(acc.row(b)) {
@@ -80,8 +83,10 @@ fn reduce_acc_pool(colsum: &mut [f32], acc: &AccArena, used: usize, pool: &Threa
         reduce_acc(colsum, acc, used);
         return;
     }
+    let _red = telemetry::span(Phase::Reduction);
     let cols = Partition::new(n, pool.threads(), usize::MAX);
     let out = SliceRef::new(colsum);
+    pool.set_reduction_hint(true);
     pool.run(cols.blocks(), |k| {
         let r = cols.range(k);
         // SAFETY: column segments are pairwise disjoint.
@@ -93,6 +98,7 @@ fn reduce_acc_pool(colsum: &mut [f32], acc: &AccArena, used: usize, pool: &Threa
             }
         }
     });
+    pool.set_reduction_hint(false);
 }
 
 /// Parallel column sums of `plan` into `out` (scope backend).

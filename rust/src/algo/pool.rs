@@ -52,11 +52,12 @@
 use std::cell::UnsafeCell;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle, Thread};
 
 use crate::util::matrix::{Matrix, CACHE_LINE};
+use crate::util::telemetry::{self, Phase};
 
 /// f32 lanes per cache line: arena rows are padded to a multiple of this.
 const LINE_F32: usize = CACHE_LINE / std::mem::size_of::<f32>();
@@ -161,6 +162,11 @@ struct Shared {
     /// Set by a worker whose part panicked (the panic is contained so the
     /// barrier still drains); the dispatcher re-raises it after the wait.
     poisoned: AtomicBool,
+    /// Telemetry label for worker-side part spans: `1` while the dispatch
+    /// is the column-parallel reduction, `0` for sweep epochs. Relaxed —
+    /// a trace label only, never part of the barrier protocol (so the
+    /// `pool_model` state machine does not model it).
+    reduction_hint: AtomicU8,
 }
 
 impl Shared {
@@ -213,6 +219,7 @@ impl ThreadPool {
             job: UnsafeCell::new(Job { task: None, caller: None }),
             shutdown: AtomicBool::new(false),
             poisoned: AtomicBool::new(false),
+            reduction_hint: AtomicU8::new(0),
         });
         let cores = thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         let workers = (0..threads - 1)
@@ -235,6 +242,13 @@ impl ThreadPool {
     /// Total parts per dispatch (workers + the dispatching caller).
     pub fn threads(&self) -> usize {
         self.workers.len() + 1
+    }
+
+    /// Label the worker-side telemetry spans of subsequent dispatches as
+    /// the column-parallel reduction (`true`) or a fused sweep (`false`,
+    /// the default). Purely a trace label; no effect on execution.
+    pub(crate) fn set_reduction_hint(&self, on: bool) {
+        self.shared.reduction_hint.store(on as u8, Ordering::Relaxed);
     }
 
     /// Execute `task(p)` for every `p in 0..parts`, in parallel, returning
@@ -397,6 +411,14 @@ fn worker_loop(shared: &Shared, idx: usize) {
             (job.task, job.caller.clone())
         };
         if let Some(task) = task {
+            // Each part execution is one span on this worker's telemetry
+            // lane, so traces attribute epoch work per pool thread.
+            let phase = if shared.reduction_hint.load(Ordering::Relaxed) != 0 {
+                Phase::Reduction
+            } else {
+                Phase::FusedSweep
+            };
+            let _part = telemetry::span(phase);
             // Contain panics so the barrier always drains: a dead or
             // unwound worker would leave the dispatcher waiting forever.
             // SAFETY: pointer valid per the publish protocol above.

@@ -252,6 +252,38 @@
 //! marker is counted in the lint summary, so exemption drift is as
 //! visible as violation drift. See `EXPERIMENTS.md` §Correctness
 //! tooling for how to run each gate locally.
+//!
+//! # Observability
+//!
+//! Every solve path is instrumented with [`crate::util::telemetry`]
+//! spans at check-burst granularity: a `solve` envelope per call,
+//! `kernel_generate` around per-solve state derivation (matfree/oned
+//! seeding, support sort), `fused_sweep` around each `check_every`-burst
+//! and `convergence_check` around each boundary error evaluation. The
+//! overhead contract (see the telemetry module docs): with tracing off
+//! each site costs one relaxed atomic load; with tracing on, recording
+//! is allocation-free after a thread's first span, so the session's
+//! allocation contract holds under tracing too (asserted in
+//! `rust/tests/alloc_free_trace.rs`).
+//!
+//! Capture a trace: [`SessionBuilder::trace`] names an export path and
+//! turns recording on; after solving, [`SolverSession::export_trace`]
+//! writes a chrome://tracing JSON (open in `ui.perfetto.dev`) or a JSONL
+//! event log for a `.jsonl` path:
+//!
+//! ```no_run
+//! use map_uot::algo::{Problem, SolverKind, SolverSession};
+//! let p = Problem::random(256, 256, 0.7, 1);
+//! let mut s = SolverSession::builder(SolverKind::MapUot)
+//!     .trace("solve.trace.json")
+//!     .build(&p);
+//! s.solve(&p).unwrap();
+//! s.export_trace().unwrap();
+//! ```
+//!
+//! The CLI exposes the same flow as `solve --trace <path>` (plus a
+//! `roofline:` report line from [`crate::util::telemetry::Roofline`])
+//! and `stats` for the service's machine-readable metrics JSON.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -267,6 +299,7 @@ use crate::algo::sparse::{CsrMatrix, SparseProblem, SparseWorkspace};
 use crate::algo::warmstart::{self, WarmCache};
 use crate::algo::{coffee, mapuot, parallel, pot, SolveReport, SolverKind};
 use crate::error::{Error, Result};
+use crate::util::telemetry::{self, Phase};
 use crate::util::{Matrix, Timer};
 
 /// Scratch buffers for one solver shape, reused across iterations and solves.
@@ -849,6 +882,7 @@ pub struct SessionBuilder {
     warm: usize,
     ti: bool,
     eps_schedule: Option<(f32, usize)>,
+    trace: Option<String>,
 }
 
 impl SessionBuilder {
@@ -945,6 +979,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Record a span trace of every solve on this session and remember
+    /// `path` as its export destination ([`SolverSession::export_trace`];
+    /// chrome://tracing JSON, or JSONL events when the path ends in
+    /// `.jsonl`). Turns the process-wide recorder on at build — see the
+    /// module docs (*Observability*) for the overhead contract. Default
+    /// off.
+    pub fn trace(mut self, path: impl Into<String>) -> Self {
+        self.trace = Some(path.into());
+        self
+    }
+
     /// Build a session sized for `problem`'s shape. This is the warmup
     /// allocation (including the one-time pool spawn); subsequent
     /// same-shape solves are allocation-free.
@@ -1006,6 +1051,9 @@ impl SessionBuilder {
     }
 
     fn build_for_shape(self, m: usize, n: usize) -> SolverSession {
+        if self.trace.is_some() {
+            telemetry::set_enabled(true);
+        }
         // Resolved exactly once per build (a `tune` tile measures here).
         let policy = KernelPolicy::for_shape(self.kernel, self.tile, m, n);
         let ws = match self.pool {
@@ -1033,6 +1081,7 @@ impl SessionBuilder {
             warm: (self.warm > 0).then(|| WarmCache::new(self.warm)),
             ti: self.ti,
             eps_schedule: self.eps_schedule,
+            trace: self.trace,
         }
     }
 }
@@ -1063,6 +1112,8 @@ pub struct SolverSession {
     ti: bool,
     /// Geometric ε ladder `(from, steps)` for matfree solves.
     eps_schedule: Option<(f32, usize)>,
+    /// Span-trace export path ([`SessionBuilder::trace`]; `None` = off).
+    trace: Option<String>,
 }
 
 /// The sparse twin of the session's `(plan, colsum, ws)` triple.
@@ -1112,6 +1163,7 @@ impl SolverSession {
             warm: 0,
             ti: false,
             eps_schedule: None,
+            trace: None,
         }
     }
 
@@ -1120,6 +1172,21 @@ impl SolverSession {
     /// cache itself.
     pub fn warm_stats(&self) -> Option<(u64, u64)> {
         self.warm.as_ref().map(|c| (c.hits(), c.misses()))
+    }
+
+    /// Export every span recorded so far (all lanes — pool workers
+    /// included) to the [`SessionBuilder::trace`] path: chrome://tracing
+    /// JSON, or JSONL events when the path ends in `.jsonl`. Returns the
+    /// event count. Cold; call after solving, not between bursts.
+    /// [`Error::Config`] when the session was built without a trace
+    /// path; [`Error::Io`] when the write fails.
+    pub fn export_trace(&self) -> Result<usize> {
+        let path = self.trace.as_deref().ok_or_else(|| {
+            Error::Config("session was built without a trace path (SessionBuilder::trace)".into())
+        })?;
+        let events = telemetry::snapshot_spans();
+        telemetry::export_trace(path, &events).map_err(Error::Io)?;
+        Ok(events.len())
     }
 
     /// The resolved kernel/tiling policy of this session's workspace.
@@ -1153,6 +1220,7 @@ impl SolverSession {
     pub fn solve(&mut self, problem: &Problem) -> Result<SolveReport> {
         self.check_accelerators(false)?;
         let timer = Timer::start();
+        let _solve_span = telemetry::span(Phase::Solve);
         let (m, n) = (problem.rows(), problem.cols());
         if self.plan.rows() != m || self.plan.cols() != n {
             self.plan = problem.plan.clone();
@@ -1189,6 +1257,7 @@ impl SolverSession {
         let (plan, colsum, ws) = (&mut self.plan, &mut self.colsum, &mut self.ws);
         let report =
             drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let sweep = telemetry::span(Phase::FusedSweep);
                 let mut delta = 0f32;
                 for _ in 0..steps {
                     if let Some(t) = ti_target {
@@ -1196,6 +1265,8 @@ impl SolverSession {
                     }
                     delta += solver.iterate_tracked(plan, colsum, rpd, cpd, fi, ws);
                 }
+                drop(sweep);
+                let _check = telemetry::span(Phase::ConvergenceCheck);
                 let err = ws.marginal_error(plan, rpd, cpd);
                 (delta, err)
             })?;
@@ -1238,7 +1309,11 @@ impl SolverSession {
         }
         self.check_accelerators(false)?;
         let timer = Timer::start();
-        self.ensure_sparse(problem);
+        let _solve_span = telemetry::span(Phase::Solve);
+        {
+            let _gen = telemetry::span(Phase::KernelGenerate);
+            self.ensure_sparse(problem);
+        }
         let (rpd, cpd, fi) = (&problem.rpd, &problem.cpd, problem.fi);
         let (m, n) = (problem.plan.m, problem.plan.n);
 
@@ -1262,6 +1337,7 @@ impl SolverSession {
         let SparseState { plan, colsum, ws } = st;
         let report =
             drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let sweep = telemetry::span(Phase::FusedSweep);
                 let mut delta = 0f32;
                 for _ in 0..steps {
                     if let Some(t) = ti_target {
@@ -1269,6 +1345,8 @@ impl SolverSession {
                     }
                     delta += ws.iterate_tracked(plan, colsum, rpd, cpd, fi);
                 }
+                drop(sweep);
+                let _check = telemetry::span(Phase::ConvergenceCheck);
                 let err = ws.marginal_error(plan, rpd, cpd);
                 (delta, err)
             })?;
@@ -1375,7 +1453,11 @@ impl SolverSession {
             }
         }
         let timer = Timer::start();
-        self.ensure_matfree(problem);
+        let _solve_span = telemetry::span(Phase::Solve);
+        {
+            let _gen = telemetry::span(Phase::KernelGenerate);
+            self.ensure_matfree(problem);
+        }
         let (m, n) = (problem.rows(), problem.cols());
         let fi = problem.fi;
 
@@ -1434,6 +1516,7 @@ impl SolverSession {
                         self.check_every,
                         &mut self.observer,
                         |burst| {
+                            let sweep = telemetry::span(Phase::FusedSweep);
                             let mut delta = 0f32;
                             for _ in 0..burst {
                                 if let Some(t) = ti_target {
@@ -1441,6 +1524,8 @@ impl SolverSession {
                                 }
                                 delta += ws.iterate_tracked(cp, u, v, colsum, rowsum);
                             }
+                            drop(sweep);
+                            let _check = telemetry::span(Phase::ConvergenceCheck);
                             let err = matfree::carried_marginal_error(
                                 rowsum, colsum, &cp.rpd, &cp.cpd,
                             );
@@ -1463,6 +1548,7 @@ impl SolverSession {
 
         let mut report =
             drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let sweep = telemetry::span(Phase::FusedSweep);
                 let mut delta = 0f32;
                 for _ in 0..steps {
                     if let Some(t) = ti_target {
@@ -1470,6 +1556,8 @@ impl SolverSession {
                     }
                     delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
                 }
+                drop(sweep);
+                let _check = telemetry::span(Phase::ConvergenceCheck);
                 let err =
                     matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
                 (delta, err)
@@ -1623,7 +1711,11 @@ impl SolverSession {
             )));
         }
         let timer = Timer::start();
-        self.ensure_oned(problem)?;
+        let _solve_span = telemetry::span(Phase::Solve);
+        {
+            let _gen = telemetry::span(Phase::KernelGenerate);
+            self.ensure_oned(problem)?;
+        }
         let (m, n) = (problem.rows(), problem.cols());
         let fi = problem.fi;
 
@@ -1650,6 +1742,7 @@ impl SolverSession {
         let OnedState { u, v, colsum, rowsum, ws, .. } = st;
         let report =
             drive_loop(timer, self.stop, self.check_every, &mut self.observer, |steps| {
+                let sweep = telemetry::span(Phase::FusedSweep);
                 let mut delta = 0f32;
                 for _ in 0..steps {
                     if let Some(t) = ti_target {
@@ -1657,6 +1750,8 @@ impl SolverSession {
                     }
                     delta += ws.iterate_tracked(problem, u, v, colsum, rowsum);
                 }
+                drop(sweep);
+                let _check = telemetry::span(Phase::ConvergenceCheck);
                 let err =
                     matfree::carried_marginal_error(rowsum, colsum, &problem.rpd, &problem.cpd);
                 (delta, err)

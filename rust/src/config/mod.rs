@@ -117,6 +117,12 @@ pub struct ServiceConfig {
     pub eps_schedule: Option<(f32, usize)>,
     /// Stopping criteria.
     pub stop: StopRule,
+    /// Span-trace export path (config key `[solver] trace = <path>`, or
+    /// `off`; CLI `serve`/`solve --trace <path>`). When set the service
+    /// enables in-band telemetry (`util::telemetry`) at start and exports
+    /// the recorded spans on shutdown — chrome://tracing JSON, or JSONL
+    /// events when the path ends in `.jsonl`.
+    pub trace: Option<String>,
     /// Artifact directory for the PJRT backend.
     pub artifacts_dir: String,
 }
@@ -142,6 +148,7 @@ impl Default for ServiceConfig {
             ti: false,
             eps_schedule: None,
             stop: StopRule::default(),
+            trace: None,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -279,6 +286,13 @@ impl ServiceConfig {
                 }
             },
         };
+        let trace = match c.get("solver", "trace") {
+            None => d.trace,
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "off" | "none" => None,
+                _ => Some(s.to_string()),
+            },
+        };
         Ok(Self {
             workers: c.get_or("coordinator", "workers", d.workers)?,
             batch_max: c.get_or("coordinator", "batch_max", d.batch_max)?,
@@ -297,6 +311,7 @@ impl ServiceConfig {
             warm,
             ti,
             eps_schedule,
+            trace,
             stop: StopRule {
                 tol: c.get_or("solver", "tol", d.stop.tol)?,
                 delta_tol: c.get_or("solver", "delta_tol", d.stop.delta_tol)?,
@@ -428,6 +443,17 @@ mod tests {
             let raw = parser::RawConfig::parse(&format!("[solver]\n{bad}\n")).unwrap();
             assert!(ServiceConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn trace_path_parses_and_defaults_off() {
+        let c = ServiceConfig::from_raw(&parser::RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(c.trace, None, "tracing is opt-in");
+        let raw = parser::RawConfig::parse("[solver]\ntrace=out/solve.trace.json\n").unwrap();
+        let c = ServiceConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.trace.as_deref(), Some("out/solve.trace.json"));
+        let raw = parser::RawConfig::parse("[solver]\ntrace=off\n").unwrap();
+        assert_eq!(ServiceConfig::from_raw(&raw).unwrap().trace, None);
     }
 
     #[test]

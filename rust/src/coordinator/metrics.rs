@@ -1,4 +1,11 @@
-//! Lock-free service metrics (counters + latency histogram).
+//! Lock-free service metrics (counters + latency histograms).
+//!
+//! Latency is decomposed at the batcher seam: **queue wait** (submission
+//! to dequeue) and **solve** (dequeue to completion) are recorded into
+//! separate histograms sharing [`LATENCY_BUCKETS_MS`], so a p99 regression
+//! is attributable to queueing vs. compute from the snapshot alone. The
+//! machine-readable labeled surface on top of this lives in
+//! [`crate::coordinator::obs`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -24,6 +31,9 @@ pub struct Metrics {
     pub iterations: AtomicU64,
     latency_buckets: [AtomicU64; 9], // 8 bounded + overflow
     latency_total_us: AtomicU64,
+    wait_buckets: [AtomicU64; 9], // 8 bounded + overflow
+    wait_total_us: AtomicU64,
+    wait_count: AtomicU64,
     iter_buckets: [AtomicU64; 9], // 8 bounded + overflow
     iter_requests: AtomicU64,
 }
@@ -33,6 +43,9 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record one request's **solve** latency (dequeue to completion).
+    /// Queue wait goes through [`Metrics::record_wait`] — recording the
+    /// end-to-end figure here would conflate the two (the pre-PR-10 bug).
     pub fn record_latency(&self, seconds: f64) {
         let ms = seconds * 1e3;
         let idx = LATENCY_BUCKETS_MS.iter().position(|&b| ms <= b).unwrap_or(8);
@@ -40,6 +53,17 @@ impl Metrics {
         // 8-element table or the literal 8; the bucket array has length 9.
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.latency_total_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one request's **queue wait** (submission to dequeue).
+    pub fn record_wait(&self, seconds: f64) {
+        let ms = seconds * 1e3;
+        let idx = LATENCY_BUCKETS_MS.iter().position(|&b| ms <= b).unwrap_or(8);
+        // uotlint: allow(panic) — idx is position()'s in-range index over an
+        // 8-element table or the literal 8; the bucket array has length 9.
+        self.wait_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.wait_total_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.wait_count.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -63,6 +87,8 @@ impl Metrics {
         let completed = self.completed.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let latency_buckets = self.latency_buckets.each_ref().map(|a| a.load(Ordering::Relaxed));
+        let wait_buckets = self.wait_buckets.each_ref().map(|a| a.load(Ordering::Relaxed));
+        let wait_count = self.wait_count.load(Ordering::Relaxed);
         let iter_buckets = self.iter_buckets.each_ref().map(|a| a.load(Ordering::Relaxed));
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
@@ -82,6 +108,13 @@ impl Metrics {
                 self.latency_total_us.load(Ordering::Relaxed) as f64 / completed as f64 / 1e3
             },
             latency_buckets,
+            wait_buckets,
+            mean_wait_ms: if wait_count == 0 {
+                0.0
+            } else {
+                self.wait_total_us.load(Ordering::Relaxed) as f64 / wait_count as f64 / 1e3
+            },
+            wait_count,
             iter_buckets,
             iter_requests: self.iter_requests.load(Ordering::Relaxed),
         }
@@ -98,51 +131,76 @@ pub struct Snapshot {
     pub batches: u64,
     pub mean_batch_size: f64,
     pub iterations: u64,
+    /// Mean **solve** latency (dequeue to completion); queue wait is
+    /// tracked separately in `mean_wait_ms`.
     pub mean_latency_ms: f64,
+    /// Solve-latency histogram counts (bounds: [`LATENCY_BUCKETS_MS`] +
+    /// overflow).
     pub latency_buckets: [u64; 9],
+    /// Queue-wait histogram counts (same bounds as `latency_buckets`).
+    pub wait_buckets: [u64; 9],
+    /// Mean queue wait (submission to dequeue).
+    pub mean_wait_ms: f64,
+    /// Requests with a recorded queue wait (wait-histogram mass).
+    pub wait_count: u64,
     pub iter_buckets: [u64; 9],
     /// Requests with a recorded iteration count (histogram mass).
     pub iter_requests: u64,
 }
 
+/// Shared histogram-percentile walk with total edge semantics:
+/// no samples or `p` that is ≤ 0 / NaN → 0.0; otherwise the upper bound
+/// of the bucket holding the ceil(p%·total)-th sample, `inf` for the
+/// overflow bucket; `p` ≥ 100 reads the last occupied bucket.
+fn percentile(buckets: &[u64; 9], bounds: &[f64; 8], p: f64) -> f64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 || p.is_nan() || p <= 0.0 {
+        return 0.0;
+    }
+    let target = (p.min(100.0) / 100.0 * total as f64).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return bounds.get(i).copied().unwrap_or(f64::INFINITY);
+        }
+    }
+    f64::INFINITY
+}
+
 impl Snapshot {
-    /// Approximate latency percentile from the histogram (ms).
+    /// Approximate **solve**-latency percentile from the histogram (ms):
+    /// the upper bound of the bucket containing the p-th-percentile
+    /// sample, `inf` when it falls in the overflow bucket. Degenerate
+    /// inputs are total, not NaN: an empty histogram returns 0.0 for any
+    /// `p`; `p ≤ 0` (or NaN) returns 0.0; `p ≥ 100` is clamped to the
+    /// last occupied bucket.
     pub fn latency_percentile_ms(&self, p: f64) -> f64 {
-        let total: u64 = self.latency_buckets.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.latency_buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return LATENCY_BUCKETS_MS.get(i).copied().unwrap_or(f64::INFINITY);
-            }
-        }
-        f64::INFINITY
+        percentile(&self.latency_buckets, &LATENCY_BUCKETS_MS, p)
+    }
+
+    /// Approximate **queue-wait** percentile (ms); same bucket bounds and
+    /// edge semantics as [`Snapshot::latency_percentile_ms`]. Together
+    /// they decompose end-to-end p99 into wait + solve.
+    pub fn wait_percentile_ms(&self, p: f64) -> f64 {
+        percentile(&self.wait_buckets, &LATENCY_BUCKETS_MS, p)
     }
 
     /// Approximate per-request iteration-count percentile (bucket upper
-    /// bound; `inf` in the overflow bucket).
+    /// bound; `inf` in the overflow bucket). Edge semantics as
+    /// [`Snapshot::latency_percentile_ms`]: empty histogram or `p ≤ 0`
+    /// (or NaN) → 0.0, `p ≥ 100` clamps.
     pub fn iters_percentile(&self, p: f64) -> f64 {
-        let total: u64 = self.iter_buckets.iter().sum();
-        if total == 0 {
-            return 0.0;
+        let mut bounds = [0.0f64; 8];
+        for (b, &v) in bounds.iter_mut().zip(ITER_BUCKETS.iter()) {
+            *b = v as f64;
         }
-        let target = (p / 100.0 * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.iter_buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return ITER_BUCKETS.get(i).map(|&b| b as f64).unwrap_or(f64::INFINITY);
-            }
-        }
-        f64::INFINITY
+        percentile(&self.iter_buckets, &bounds, p)
     }
 
     /// Mean iterations-to-tolerance across recorded requests — the
-    /// warm-start ablation's headline number.
+    /// warm-start ablation's headline number. 0.0 (not NaN) when no
+    /// request has recorded an iteration count.
     pub fn mean_iters(&self) -> f64 {
         if self.iter_requests == 0 {
             0.0
@@ -205,5 +263,51 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.iters_percentile(99.0), 0.0);
         assert_eq!(s.mean_iters(), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases_are_total() {
+        // No samples: every percentile reads a documented 0.0, never NaN.
+        let empty = Metrics::new().snapshot();
+        for p in [0.0, 50.0, 100.0, 200.0, -5.0, f64::NAN] {
+            assert_eq!(empty.latency_percentile_ms(p), 0.0, "p={p}");
+            assert_eq!(empty.wait_percentile_ms(p), 0.0, "p={p}");
+            assert_eq!(empty.iters_percentile(p), 0.0, "p={p}");
+        }
+        assert_eq!(empty.mean_latency_ms, 0.0);
+        assert_eq!(empty.mean_wait_ms, 0.0);
+
+        // Single-bucket histogram: p=0 reads 0.0 (no sample demanded),
+        // any positive p up to and past 100 reads that bucket's bound.
+        let m = Metrics::new();
+        m.record_latency(0.003); // 3 ms -> the 5 ms bucket
+        m.record_iters(100); // -> the 128 bucket
+        let s = m.snapshot();
+        assert_eq!(s.latency_percentile_ms(0.0), 0.0);
+        assert_eq!(s.latency_percentile_ms(0.1), 5.0);
+        assert_eq!(s.latency_percentile_ms(100.0), 5.0);
+        assert_eq!(s.latency_percentile_ms(250.0), 5.0, "p past 100 clamps");
+        assert_eq!(s.iters_percentile(0.0), 0.0);
+        assert_eq!(s.iters_percentile(100.0), 128.0);
+        // Overflow-bucket mass still reads inf at p=100.
+        m.record_latency(9.0); // 9000 ms -> overflow
+        assert!(m.snapshot().latency_percentile_ms(100.0).is_infinite());
+    }
+
+    #[test]
+    fn wait_and_solve_decompose() {
+        let m = Metrics::new();
+        // 10 requests: ~0.4 ms queue wait, 100 ms solve.
+        for _ in 0..10 {
+            m.record_wait(0.0004);
+            m.record_latency(0.1);
+        }
+        m.completed.store(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.wait_count, 10);
+        assert_eq!(s.wait_percentile_ms(99.0), 0.5, "wait stays in the fast bucket");
+        assert_eq!(s.latency_percentile_ms(99.0), 200.0, "solve dominates");
+        assert!((s.mean_wait_ms - 0.4).abs() < 1e-9);
+        assert!((s.mean_latency_ms - 100.0).abs() < 1e-9);
     }
 }

@@ -4,10 +4,12 @@
 //! backpressure / load-shedding), a worker pool executes them on the
 //! [`router`]-chosen backend — native solvers in-thread, or the PJRT
 //! executor actor ([`pjrt_exec`]) running the AOT artifacts — and
-//! [`metrics`] tracks throughput/latency. Python never appears here.
+//! [`metrics`] tracks throughput/latency, with the labeled
+//! machine-readable surface in [`obs`]. Python never appears here.
 
 pub mod batcher;
 pub mod metrics;
+pub mod obs;
 pub mod pjrt_exec;
 pub mod request;
 pub mod router;
@@ -15,6 +17,7 @@ pub mod service;
 
 pub use batcher::{Batcher, FullPolicy};
 pub use metrics::{Metrics, Snapshot};
+pub use obs::{stats_json, BackendClass, Obs, ObsSnapshot, STATS_SCHEMA_VERSION};
 pub use request::{Payload, RequestId, Response, SolveRequest, SolveResponse, Solved};
 pub use router::{classify_geom, project_oned, ProblemClass, Route, ONED_AXIS_TOL};
 pub use service::Service;

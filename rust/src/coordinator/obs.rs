@@ -1,0 +1,413 @@
+//! Labeled observability surface on top of the core [`Metrics`]
+//! counters: per-backend-class latency/iteration histograms, live
+//! gauges (in-flight solves, queue depth), warm-cache hit counters, and
+//! the versioned machine-readable `stats` JSON the CLI prints.
+//!
+//! Labels are the flat [`BackendClass`] vocabulary rather than the full
+//! backend × problem-class product: routing makes the product sparse
+//! (e.g. a PJRT service never executes the CSR path, a geometric request
+//! never lands on the dense path), so one label per *executed* backend
+//! keeps every bucket meaningful. All five labels always appear in the
+//! JSON — zero-count labels included — so the schema is fixed and a
+//! consumer can diff two snapshots field-by-field.
+//!
+//! The JSON is hand-rolled (the crate is zero-dependency) and versioned
+//! through [`STATS_SCHEMA_VERSION`]; any key rename or semantic change
+//! must bump it. Non-finite floats (an overflow-bucket percentile reads
+//! `inf`) render as JSON `null` — JSON has no `Infinity`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::metrics::{Snapshot, ITER_BUCKETS, LATENCY_BUCKETS_MS};
+
+/// Version of the `stats` JSON schema. Bump on any key rename, removal,
+/// or semantic change; additions may ride on the same version.
+pub const STATS_SCHEMA_VERSION: u32 = 1;
+
+/// Which backend actually executed a request — the label vocabulary of
+/// the per-backend histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendClass {
+    /// Native dense fused sweep.
+    Dense,
+    /// Native fused CSR sweep (`[solver] sparse`).
+    Sparse,
+    /// Materialization-free scaling-form sweep (`[solver] matfree`).
+    Matfree,
+    /// Exact near-linear 1D path.
+    Oned,
+    /// PJRT executor running AOT artifacts.
+    Pjrt,
+}
+
+impl BackendClass {
+    /// Every label, in stable serialization order.
+    pub const ALL: [BackendClass; 5] = [
+        BackendClass::Dense,
+        BackendClass::Sparse,
+        BackendClass::Matfree,
+        BackendClass::Oned,
+        BackendClass::Pjrt,
+    ];
+
+    /// Stable label name used as the JSON key.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendClass::Dense => "dense",
+            BackendClass::Sparse => "sparse",
+            BackendClass::Matfree => "matfree",
+            BackendClass::Oned => "oned",
+            BackendClass::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// One label's histograms (solve latency + iterations), lock-free.
+#[derive(Debug, Default)]
+struct LabelHist {
+    count: AtomicU64,
+    solve_total_us: AtomicU64,
+    latency_buckets: [AtomicU64; 9], // 8 bounded + overflow
+    iterations: AtomicU64,
+    iter_buckets: [AtomicU64; 9], // 8 bounded + overflow
+}
+
+/// The labeled service-observability state, cheap to update from any
+/// worker thread. Lives next to (not inside) [`Metrics`]: the core
+/// counters stay label-free and dependency-free, this type owns the
+/// label vocabulary and the JSON surface.
+#[derive(Debug, Default)]
+pub struct Obs {
+    hists: [LabelHist; 5],
+    in_flight: AtomicU64,
+    queue_depth: AtomicU64,
+    warm_hits: AtomicU64,
+    warm_misses: AtomicU64,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed solve under its backend-class label.
+    /// `solve_s` is the solve share (dequeue to completion) — the same
+    /// figure [`Metrics::record_latency`] takes, not end-to-end.
+    ///
+    /// [`Metrics::record_latency`]: crate::coordinator::metrics::Metrics::record_latency
+    pub fn record(&self, class: BackendClass, solve_s: f64, iters: u64) {
+        // uotlint: allow(panic) — the enum discriminant indexes the
+        // 5-label array; `ALL` and `hists` share their length.
+        let h = &self.hists[class as usize];
+        let ms = solve_s * 1e3;
+        let idx = LATENCY_BUCKETS_MS.iter().position(|&b| ms <= b).unwrap_or(8);
+        // uotlint: allow(panic) — idx is position()'s in-range index over an
+        // 8-element table or the literal 8; the bucket array has length 9.
+        h.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let iidx = ITER_BUCKETS.iter().position(|&b| iters <= b).unwrap_or(8);
+        // uotlint: allow(panic) — same in-range argument as above.
+        h.iter_buckets[iidx].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        h.solve_total_us.fetch_add((solve_s * 1e6) as u64, Ordering::Relaxed);
+        h.iterations.fetch_add(iters, Ordering::Relaxed);
+    }
+
+    /// A worker started executing a request. Pair with [`Obs::exit`].
+    pub fn enter(&self) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The paired request finished (success or failure).
+    pub fn exit(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Publish the batcher's current queue depth (sampled per batch).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Fold a warm-cache delta in (hits/misses since the caller's last
+    /// fold — workers keep per-session baselines and add differences).
+    pub fn add_warm(&self, hits: u64, misses: u64) {
+        self.warm_hits.fetch_add(hits, Ordering::Relaxed);
+        self.warm_misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot for reporting.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let labels = BackendClass::ALL.map(|class| {
+            // uotlint: allow(panic) — the enum discriminant indexes the
+            // 5-label array; `ALL` and `hists` share their length.
+            let h = &self.hists[class as usize];
+            let count = h.count.load(Ordering::Relaxed);
+            LabelSnapshot {
+                class,
+                count,
+                mean_latency_ms: if count == 0 {
+                    0.0
+                } else {
+                    h.solve_total_us.load(Ordering::Relaxed) as f64 / count as f64 / 1e3
+                },
+                latency_buckets: h.latency_buckets.each_ref().map(|a| a.load(Ordering::Relaxed)),
+                iterations: h.iterations.load(Ordering::Relaxed),
+                iter_buckets: h.iter_buckets.each_ref().map(|a| a.load(Ordering::Relaxed)),
+            }
+        });
+        ObsSnapshot {
+            labels,
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            warm_misses: self.warm_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One label's immutable snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct LabelSnapshot {
+    pub class: BackendClass,
+    /// Requests recorded under this label.
+    pub count: u64,
+    /// Mean solve latency (ms); 0.0 when the label is empty.
+    pub mean_latency_ms: f64,
+    /// Solve-latency histogram (bounds: [`LATENCY_BUCKETS_MS`] +
+    /// overflow).
+    pub latency_buckets: [u64; 9],
+    /// Total iterations executed under this label.
+    pub iterations: u64,
+    /// Iteration histogram (bounds: [`ITER_BUCKETS`] + overflow).
+    pub iter_buckets: [u64; 9],
+}
+
+impl LabelSnapshot {
+    /// Mean iterations per request under this label; 0.0 when empty.
+    pub fn mean_iters(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.iterations as f64 / self.count as f64
+        }
+    }
+}
+
+/// Immutable labeled-observability snapshot.
+#[derive(Debug, Clone, Copy)]
+pub struct ObsSnapshot {
+    /// Per-label histograms, in [`BackendClass::ALL`] order.
+    pub labels: [LabelSnapshot; 5],
+    /// Requests currently executing on a worker.
+    pub in_flight: u64,
+    /// Batcher queue depth at the last batch pop.
+    pub queue_depth: u64,
+    pub warm_hits: u64,
+    pub warm_misses: u64,
+}
+
+impl ObsSnapshot {
+    /// Warm-cache hit rate in [0, 1]; 0.0 when no lookups were folded
+    /// in (warm starting off, or no geometric/dense repeats yet).
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Render an `f64` as a JSON number; non-finite values (overflow-bucket
+/// percentiles read `inf`) become `null`.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a 9-slot histogram as a JSON array of counts.
+fn jarr(buckets: &[u64; 9]) -> String {
+    let mut out = String::with_capacity(64);
+    out.push('[');
+    for (i, b) in buckets.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&b.to_string());
+    }
+    out.push(']');
+    out
+}
+
+/// Serialize the core [`Snapshot`] plus the labeled [`ObsSnapshot`] into
+/// the versioned `stats` JSON — the machine-readable surface behind the
+/// `stats` CLI report mode. One line, no trailing newline; every key is
+/// always present (fixed schema), floats are 6-decimal fixed-point, and
+/// non-finite floats are `null`.
+pub fn stats_json(core: &Snapshot, obs: &ObsSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut o = String::with_capacity(4096);
+    let _ = write!(o, "{{\"schema_version\":{STATS_SCHEMA_VERSION}");
+    let _ = write!(
+        o,
+        ",\"counters\":{{\"submitted\":{},\"completed\":{},\"rejected\":{},\"failed\":{},\
+         \"batches\":{},\"iterations\":{}}}",
+        core.submitted, core.completed, core.rejected, core.failed, core.batches, core.iterations
+    );
+    let _ = write!(
+        o,
+        ",\"solve_ms\":{{\"mean\":{},\"p50\":{},\"p99\":{},\"buckets\":{}}}",
+        jnum(core.mean_latency_ms),
+        jnum(core.latency_percentile_ms(50.0)),
+        jnum(core.latency_percentile_ms(99.0)),
+        jarr(&core.latency_buckets)
+    );
+    let _ = write!(
+        o,
+        ",\"wait_ms\":{{\"mean\":{},\"p50\":{},\"p99\":{},\"count\":{},\"buckets\":{}}}",
+        jnum(core.mean_wait_ms),
+        jnum(core.wait_percentile_ms(50.0)),
+        jnum(core.wait_percentile_ms(99.0)),
+        core.wait_count,
+        jarr(&core.wait_buckets)
+    );
+    let _ = write!(
+        o,
+        ",\"iters\":{{\"mean\":{},\"p50\":{},\"p99\":{},\"requests\":{},\"buckets\":{}}}",
+        jnum(core.mean_iters()),
+        jnum(core.iters_percentile(50.0)),
+        jnum(core.iters_percentile(99.0)),
+        core.iter_requests,
+        jarr(&core.iter_buckets)
+    );
+    let _ = write!(
+        o,
+        ",\"gauges\":{{\"in_flight\":{},\"queue_depth\":{}}}",
+        obs.in_flight, obs.queue_depth
+    );
+    let _ = write!(
+        o,
+        ",\"warm\":{{\"hits\":{},\"misses\":{},\"hit_rate\":{}}}",
+        obs.warm_hits,
+        obs.warm_misses,
+        jnum(obs.warm_hit_rate())
+    );
+    o.push_str(",\"backends\":{");
+    for (i, l) in obs.labels.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        let _ = write!(
+            o,
+            "\"{}\":{{\"count\":{},\"mean_latency_ms\":{},\"mean_iters\":{},\
+             \"latency_buckets\":{},\"iter_buckets\":{}}}",
+            l.class.name(),
+            l.count,
+            jnum(l.mean_latency_ms),
+            jnum(l.mean_iters()),
+            jarr(&l.latency_buckets),
+            jarr(&l.iter_buckets)
+        );
+    }
+    o.push_str("}}");
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+
+    /// Minimal structural JSON check: balanced braces/brackets outside
+    /// strings, and no bare `inf`/`NaN` tokens anywhere.
+    fn assert_wellformed(json: &str) {
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for c in json.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' | '[' => depth += 1,
+                '}' | ']' => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0, "unbalanced close in {json}");
+        }
+        assert_eq!(depth, 0, "unbalanced JSON: {json}");
+        assert!(!in_str, "unterminated string: {json}");
+        assert!(!json.contains("inf") && !json.contains("NaN"), "non-finite leaked: {json}");
+    }
+
+    #[test]
+    fn labeled_histograms_and_hit_rate() {
+        let obs = Obs::new();
+        obs.record(BackendClass::Dense, 0.003, 40);
+        obs.record(BackendClass::Dense, 0.004, 44);
+        obs.record(BackendClass::Oned, 0.0002, 1);
+        obs.enter();
+        obs.set_queue_depth(7);
+        obs.add_warm(3, 1);
+        let s = obs.snapshot();
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.queue_depth, 7);
+        assert!((s.warm_hit_rate() - 0.75).abs() < 1e-12);
+        let dense = s.labels[0];
+        assert_eq!(dense.class, BackendClass::Dense);
+        assert_eq!(dense.count, 2);
+        assert!((dense.mean_latency_ms - 3.5).abs() < 1e-9);
+        assert!((dense.mean_iters() - 42.0).abs() < 1e-9);
+        assert_eq!(dense.latency_buckets[3], 2, "3 ms and 4 ms land in the 5 ms bucket");
+        let oned = s.labels[3];
+        assert_eq!(oned.count, 1);
+        assert_eq!(oned.latency_buckets[0], 1, "0.2 ms lands in the 0.5 ms bucket");
+        // Untouched labels stay at zero with total means.
+        assert_eq!(s.labels[4].count, 0);
+        assert_eq!(s.labels[4].mean_latency_ms, 0.0);
+        assert_eq!(s.labels[4].mean_iters(), 0.0);
+        obs.exit();
+        assert_eq!(obs.snapshot().in_flight, 0);
+    }
+
+    #[test]
+    fn stats_json_is_versioned_wellformed_and_fixed_schema() {
+        let m = Metrics::new();
+        m.record_wait(0.0004);
+        m.record_latency(0.003);
+        m.record_iters(40);
+        let obs = Obs::new();
+        obs.record(BackendClass::Sparse, 0.003, 40);
+        let json = stats_json(&m.snapshot(), &obs.snapshot());
+        assert_wellformed(&json);
+        assert!(json.starts_with("{\"schema_version\":1,"), "{json}");
+        // Every label key appears even at count 0 — fixed schema.
+        for key in ["\"dense\":", "\"sparse\":", "\"matfree\":", "\"oned\":", "\"pjrt\":"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        for key in ["counters", "solve_ms", "wait_ms", "iters", "gauges", "warm", "backends"] {
+            assert!(json.contains(&format!("\"{key}\":")), "missing {key} in {json}");
+        }
+        assert!(json.contains("\"p99\":5.000000"), "solve p99 reads the 5 ms bucket: {json}");
+    }
+
+    #[test]
+    fn non_finite_values_render_null() {
+        let m = Metrics::new();
+        m.record_latency(9.0); // 9000 ms -> overflow bucket, percentiles read inf
+        let obs = Obs::new();
+        let json = stats_json(&m.snapshot(), &obs.snapshot());
+        assert_wellformed(&json);
+        assert!(json.contains("\"p99\":null"), "overflow percentile must be null: {json}");
+        assert!(jnum(f64::NAN) == "null" && jnum(f64::INFINITY) == "null");
+    }
+}

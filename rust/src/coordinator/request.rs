@@ -114,8 +114,12 @@ pub struct Solved {
     /// Which solver kind ran (native) — MAP-UOT for PJRT (the artifact is
     /// the fused kernel).
     pub solver: SolverKind,
-    /// End-to-end latency from submission to completion (seconds).
+    /// End-to-end latency from submission to completion (seconds);
+    /// `latency_s - wait_s` is the solve share.
     pub latency_s: f64,
+    /// Queue wait from submission to worker dequeue (seconds) — recorded
+    /// separately so tail latency decomposes into wait + solve.
+    pub wait_s: f64,
 }
 
 #[cfg(test)]

@@ -11,16 +11,19 @@ use crate::algo::{GeomProblem, Problem, SolverKind, SolverSession, SparseProblem
 use crate::config::{Backend, OnedMode, ServiceConfig};
 use crate::coordinator::batcher::{Batcher, FullPolicy};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::obs::{self, BackendClass, Obs};
 use crate::coordinator::pjrt_exec::{self, PjrtHandle};
 use crate::coordinator::request::{Payload, Response, SolveRequest, SolveResponse, Solved};
 use crate::coordinator::router::{self, ProblemClass};
 use crate::error::{Error, Result};
+use crate::util::telemetry;
 
 /// A running solver service.
 pub struct Service {
     cfg: ServiceConfig,
     batcher: Arc<Batcher>,
     metrics: Arc<Metrics>,
+    obs: Arc<Obs>,
     workers: Vec<JoinHandle<()>>,
     pjrt: Option<(PjrtHandle, JoinHandle<()>)>,
     next_id: AtomicU64,
@@ -123,6 +126,14 @@ impl Service {
             Duration::from_micros(cfg.batch_wait_us),
         ));
         let metrics = Arc::new(Metrics::new());
+        let obs = Arc::new(Obs::new());
+        // A traced service turns the span recorder on before any worker
+        // runs — the per-thread rings then register lazily on each
+        // worker's first recorded span (the documented warmup
+        // allocation), and `shutdown` exports whatever was captured.
+        if cfg.trace.is_some() {
+            telemetry::set_enabled(true);
+        }
 
         let pjrt = match cfg.backend {
             Backend::Pjrt => Some(pjrt_exec::spawn(cfg.artifacts_dir.clone())?),
@@ -134,16 +145,17 @@ impl Service {
         for w in 0..cfg.workers.max(1) {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
+            let obs_w = Arc::clone(&obs);
             let cfg_w = cfg.clone();
             let pjrt_w = pjrt_handle.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("uot-worker-{w}"))
-                    .spawn(move || worker_loop(&batcher, &metrics, &cfg_w, pjrt_w.as_ref()))
+                    .spawn(move || worker_loop(&batcher, &metrics, &obs_w, &cfg_w, pjrt_w.as_ref()))
                     .map_err(|e| Error::Service(format!("spawn worker: {e}")))?,
             );
         }
-        Ok(Self { cfg, batcher, metrics, workers, pjrt, next_id: AtomicU64::new(1) })
+        Ok(Self { cfg, batcher, metrics, obs, workers, pjrt, next_id: AtomicU64::new(1) })
     }
 
     /// Submit a dense problem; returns the reply channel. `Err` on
@@ -208,6 +220,18 @@ impl Service {
         self.metrics.snapshot()
     }
 
+    /// Labeled observability snapshot (per-backend histograms, gauges,
+    /// warm-cache counters).
+    pub fn obs(&self) -> obs::ObsSnapshot {
+        self.obs.snapshot()
+    }
+
+    /// The versioned machine-readable `stats` JSON for this service —
+    /// core counters plus the labeled surface, in one line.
+    pub fn stats_json(&self) -> String {
+        obs::stats_json(&self.metrics.snapshot(), &self.obs.snapshot())
+    }
+
     pub fn config(&self) -> &ServiceConfig {
         &self.cfg
     }
@@ -216,7 +240,9 @@ impl Service {
         self.batcher.len()
     }
 
-    /// Drain and stop. Pending requests are completed first.
+    /// Drain and stop. Pending requests are completed first. When the
+    /// service was started with a `trace` path, the recorded span trace
+    /// is exported here, after every worker has quiesced.
     pub fn shutdown(mut self) {
         self.batcher.close();
         for w in self.workers.drain(..) {
@@ -226,12 +252,35 @@ impl Service {
             h.shutdown();
             let _ = j.join();
         }
+        if let Some(path) = self.cfg.trace.as_deref() {
+            let events = telemetry::snapshot_spans();
+            if let Err(e) = telemetry::export_trace(path, &events) {
+                eprintln!("trace export failed ({path}): {e}");
+            }
+        }
+    }
+}
+
+/// Which backend class executed a solved request. Derivable after the
+/// fact from the response shape plus the service config — routing makes
+/// the full backend × problem-class product sparse (see
+/// [`crate::coordinator::obs`]), so no extra plumbing through `Solved`.
+fn backend_class(cfg: &ServiceConfig, s: &Solved) -> BackendClass {
+    if s.backend == Backend::Pjrt {
+        return BackendClass::Pjrt;
+    }
+    match &s.response {
+        Response::Scaling { transport: Some(_), .. } => BackendClass::Oned,
+        Response::Scaling { .. } => BackendClass::Matfree,
+        Response::Plan(_) if cfg.sparse.is_some() => BackendClass::Sparse,
+        Response::Plan(_) => BackendClass::Dense,
     }
 }
 
 fn worker_loop(
     batcher: &Batcher,
     metrics: &Metrics,
+    obs: &Obs,
     cfg: &ServiceConfig,
     pjrt: Option<&PjrtHandle>,
 ) {
@@ -243,17 +292,27 @@ fn worker_loop(
     // between iterations), so this OS thread reuses the same workers for
     // every solve it ever executes — no spawn/join on the request path.
     let mut session: Option<SolverSession> = None;
+    // The session's warm-cache counters are monotonic totals; fold only
+    // the delta since this worker's last batch into the shared gauge.
+    let mut warm_seen = (0u64, 0u64);
     while let Some(batch) = batcher.pop_batch() {
         metrics.record_batch(batch.len());
+        obs.set_queue_depth(batcher.len());
         for req in batch {
+            obs.enter();
             let result = execute(cfg, pjrt, &mut session, &req);
+            obs.exit();
             match &result {
                 Ok(s) => {
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
                     // record_iters folds the count into `iterations` and
                     // the per-request histogram the ablation reads.
                     metrics.record_iters(s.report.iters as u64);
-                    metrics.record_latency(s.latency_s);
+                    // Decomposed latency: queue wait vs the solve share.
+                    metrics.record_wait(s.wait_s);
+                    metrics.record_latency(s.latency_s - s.wait_s);
+                    let class = backend_class(cfg, s);
+                    obs.record(class, s.latency_s - s.wait_s, s.report.iters as u64);
                 }
                 Err(_) => {
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -261,6 +320,10 @@ fn worker_loop(
             }
             // Receiver may have given up; dropping the response is fine.
             let _ = req.reply.send(SolveResponse { id: req.id, result });
+        }
+        if let Some((hits, misses)) = session.as_ref().and_then(|s| s.warm_stats()) {
+            obs.add_warm(hits.saturating_sub(warm_seen.0), misses.saturating_sub(warm_seen.1));
+            warm_seen = (hits, misses);
         }
     }
 }
@@ -271,6 +334,9 @@ fn execute(
     session: &mut Option<SolverSession>,
     req: &SolveRequest,
 ) -> Result<Solved> {
+    // Entering execution ends the queue-wait clock: everything from here
+    // on (including conversions and routing) is the solve share.
+    let wait_s = req.submitted_at.elapsed().as_secs_f64();
     let builder = || {
         let mut b = SolverSession::builder(cfg.solver)
             .threads(cfg.solver_threads)
@@ -401,6 +467,7 @@ fn execute(
         backend,
         solver: cfg.solver,
         latency_s: req.submitted_at.elapsed().as_secs_f64(),
+        wait_s,
     })
 }
 
@@ -721,6 +788,52 @@ mod tests {
             first.report.iters as u64 + second.report.iters as u64
         );
         svc.shutdown();
+    }
+
+    /// PR 10: end-to-end latency decomposes into queue wait + solve at
+    /// the batcher seam, and the labeled surface sees every request.
+    #[test]
+    fn stats_surface_decomposes_wait_and_labels_backends() {
+        let mut cfg = native_cfg(1);
+        cfg.warm = 4;
+        let svc = Service::start(cfg).unwrap();
+        let p = Problem::random(24, 24, 0.7, 11);
+        svc.solve_blocking(p.clone()).unwrap();
+        svc.solve_blocking(p).unwrap();
+        let m = svc.metrics();
+        assert_eq!(m.wait_count, 2, "every completed request records its wait");
+        let o = svc.obs();
+        assert_eq!(o.labels[0].count, 2, "both solves land on the dense label");
+        assert_eq!(o.in_flight, 0, "enter/exit pairs balance");
+        assert_eq!(o.warm_hits + o.warm_misses, 2, "warm deltas folded per batch");
+        assert_eq!(o.warm_hits, 1, "the repeat solve hit the warm cache");
+        let json = svc.stats_json();
+        assert!(json.starts_with("{\"schema_version\":"), "{json}");
+        assert!(json.contains("\"dense\":{\"count\":2"), "{json}");
+        assert!(json.contains("\"wait_ms\":{\"mean\":"), "{json}");
+        svc.shutdown();
+    }
+
+    /// PR 10 tentpole: a traced service exports a valid Perfetto trace of
+    /// the solve's spans on shutdown.
+    #[test]
+    fn traced_service_exports_a_valid_trace_on_shutdown() {
+        let _g = crate::util::telemetry::test_guard();
+        let dir = std::env::temp_dir().join("mapuot_service_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("svc.trace.json");
+        let mut cfg = native_cfg(1);
+        cfg.trace = Some(path.to_string_lossy().into_owned());
+        let svc = Service::start(cfg).unwrap();
+        svc.solve_blocking(Problem::random(24, 24, 0.7, 3)).unwrap();
+        svc.shutdown();
+        crate::util::telemetry::set_enabled(false);
+        crate::util::telemetry::reset();
+        let json = std::fs::read_to_string(&path).unwrap();
+        let events = crate::util::telemetry::validate_perfetto(&json).unwrap();
+        assert!(events > 0, "a traced solve leaves spans in the export");
+        assert!(json.contains("\"name\":\"solve\""), "the solve envelope span is present");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

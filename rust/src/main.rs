@@ -22,6 +22,7 @@ use map_uot::config::{Backend, OnedMode, ServiceConfig};
 use map_uot::coordinator::{self, Service};
 use map_uot::error::Result;
 use map_uot::runtime::Runtime;
+use map_uot::util::telemetry::{self, Roofline};
 use map_uot::util::Timer;
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -73,6 +74,7 @@ fn main() {
     let code = match cmd {
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "app" => cmd_app(&argv.get(1).map(String::as_str).unwrap_or(""), &args),
         "fig" => cmd_fig(&argv.get(1).map(String::as_str).unwrap_or("all")),
         "info" => cmd_info(&args),
@@ -114,7 +116,16 @@ fn print_help() {
          \x20        the exact near-linear sweep; auto falls back to matfree when\n\
          \x20        ineligible, on makes ineligibility an error; default auto)\n\
          \x20        --progress (print per-check convergence telemetry)\n\
+         \x20        --trace <path> (record phase spans and export them on exit:\n\
+         \x20        .jsonl = one event per line, else chrome://tracing JSON; also\n\
+         \x20        prints the analytic roofline line for the solve)\n\
          \x20 serve  --requests 64 --workers 4 --size 256 --backend native|pjrt\n\
+         \x20        --trace <path> (span trace across the worker pool, exported at\n\
+         \x20        shutdown)\n\
+         \x20 stats  --requests 16 --workers 2 --size 128 (run an in-process demo\n\
+         \x20        load and print the versioned metrics JSON; --trace <path> also\n\
+         \x20        exports the span trace) | --check-trace <path> (validate a\n\
+         \x20        previously exported trace file and exit)\n\
          \x20 app    color|domain|bayes|filter|entropic2d|wmd  [--solver mapuot]\n\
          \x20 fig    2|3|4|5|8|9|10|11|12|13|14|15|16|17|all\n\
          \x20 info   [--artifacts artifacts]"
@@ -228,6 +239,10 @@ fn cmd_solve(a: &Args) -> i32 {
         eprintln!("error: --warm/--ti apply to the native session layer, not --backend pjrt");
         return 1;
     }
+    // Span tracing + the analytic roofline report ride on every solve
+    // path; the export format is picked from the extension (.jsonl =
+    // line-delimited events, anything else chrome://tracing JSON).
+    let trace = a.flags.get("trace").cloned();
 
     if a.str("backend", "native") == "pjrt" {
         return run_or_die(|| {
@@ -235,6 +250,7 @@ fn cmd_solve(a: &Args) -> i32 {
                 backend: Backend::Pjrt,
                 stop,
                 artifacts_dir: a.str("artifacts", "artifacts"),
+                trace: trace.clone(),
                 ..ServiceConfig::default()
             };
             let svc = Service::start(cfg)?;
@@ -246,6 +262,17 @@ fn cmd_solve(a: &Args) -> i32 {
                 solved.report.converged,
                 solved.latency_s * 1e3
             );
+            if trace.is_some() {
+                let roof = Roofline::materialized(
+                    (m * n) as u64,
+                    solver.passes_per_iter() as u64,
+                    solver.accesses_per_element() as u64,
+                    4,
+                    solved.report.iters as u64,
+                );
+                println!("{}", roof.cli_line(solved.latency_s));
+            }
+            // The service exports the span trace itself at shutdown.
             svc.shutdown();
             Ok(())
         });
@@ -293,6 +320,9 @@ fn cmd_solve(a: &Args) -> i32 {
         .stop(stop)
         .warm(warm)
         .ti(ti);
+    if let Some(path) = &trace {
+        builder = builder.trace(path.clone());
+    }
     // Only reachable with --matfree (rejected above otherwise), so the
     // dense/sparse paths never see a ladder they would refuse.
     if let Some((from, steps)) = eps_schedule {
@@ -400,6 +430,8 @@ fn cmd_solve(a: &Args) -> i32 {
                     t.created,
                     t.destroyed,
                 );
+                let roof = Roofline::oned(m as u64, n as u64, report.iters as u64);
+                report_trace(&session, &trace, roof, report.seconds);
                 return 0;
             }
             coordinator::ProblemClass::General { reason } => {
@@ -437,6 +469,8 @@ fn cmd_solve(a: &Args) -> i32 {
             report.seconds * 1e3,
             report.seconds * 1e3 / report.iters.max(1) as f64,
         );
+        let roof = Roofline::regenerated(m as u64, n as u64, report.iters as u64);
+        report_trace(&session, &trace, roof, report.seconds);
         return 0;
     }
 
@@ -495,6 +529,14 @@ fn cmd_solve(a: &Args) -> i32 {
             report.seconds * 1e3,
             report.seconds * 1e3 / report.iters.max(1) as f64,
         );
+        let roof = Roofline::materialized(
+            sp.nnz() as u64,
+            solver.passes_per_iter() as u64,
+            solver.accesses_per_element() as u64,
+            4,
+            report.iters as u64,
+        );
+        report_trace(&session, &trace, roof, report.seconds);
         return 0;
     }
 
@@ -508,7 +550,6 @@ fn cmd_solve(a: &Args) -> i32 {
             return 1;
         }
     };
-    let plan = session.into_plan();
     println!(
         "{} solve {m}x{n} fi={fi} [kernel={} tile={}]: iters={} err={:.3e} delta={:.3e} converged={} time={:.1}ms ({:.2} ms/iter)",
         solver.name(),
@@ -521,8 +562,29 @@ fn cmd_solve(a: &Args) -> i32 {
         report.seconds * 1e3,
         report.seconds * 1e3 / report.iters.max(1) as f64,
     );
+    let roof = Roofline::materialized(
+        (m * n) as u64,
+        solver.passes_per_iter() as u64,
+        solver.accesses_per_element() as u64,
+        4,
+        report.iters as u64,
+    );
+    report_trace(&session, &trace, roof, report.seconds);
+    let plan = session.into_plan();
     let _ = plan;
     0
+}
+
+/// Shared tail of every traced `solve` path: the analytic roofline line
+/// plus the span-trace export (no-op without `--trace`).
+fn report_trace(session: &SolverSession, trace: &Option<String>, roof: Roofline, seconds: f64) {
+    if let Some(path) = trace {
+        println!("{}", roof.cli_line(seconds));
+        match session.export_trace() {
+            Ok(events) => println!("trace: {events} spans -> {path}"),
+            Err(e) => eprintln!("trace export failed ({path}): {e}"),
+        }
+    }
 }
 
 fn cmd_serve(a: &Args) -> i32 {
@@ -537,6 +599,7 @@ fn cmd_serve(a: &Args) -> i32 {
             backend,
             artifacts_dir: a.str("artifacts", "artifacts"),
             stop: StopRule { max_iter: a.get("max-iter", 400usize), ..Default::default() },
+            trace: a.flags.get("trace").cloned(),
             ..ServiceConfig::default()
         };
         let requests = a.get("requests", 64usize);
@@ -556,18 +619,93 @@ fn cmd_serve(a: &Args) -> i32 {
         }
         let wall = timer.elapsed().as_secs_f64();
         let m = svc.metrics();
+        // Latency decomposes into queue wait + solve (PR 10): the p99s are
+        // reported separately so a deep queue is not mistaken for a slow
+        // solver.
         println!(
             "serve: {ok}/{accepted} ok of {requests} submitted in {wall:.2}s \
-             ({:.1} req/s) | mean batch {:.2} | mean latency {:.1}ms | p99<= {:.0}ms | rejected {}",
+             ({:.1} req/s) | mean batch {:.2} | mean solve {:.1}ms + wait {:.1}ms | \
+             p99<= {:.0}ms solve / {:.0}ms wait | rejected {}",
             ok as f64 / wall,
             m.mean_batch_size,
             m.mean_latency_ms,
+            m.mean_wait_ms,
             m.latency_percentile_ms(99.0),
+            m.wait_percentile_ms(99.0),
             m.rejected,
         );
         svc.shutdown();
         Ok(())
     })
+}
+
+/// `stats` — run an in-process demo load and print the versioned metrics
+/// JSON ([`coordinator::stats_json`]); with `--check-trace <path>`,
+/// validate a previously exported trace file instead (the CI gate for the
+/// traced-solve leg).
+fn cmd_stats(a: &Args) -> i32 {
+    if let Some(path) = a.flags.get("check-trace") {
+        return match check_trace_file(path) {
+            Ok(events) => {
+                println!("trace ok: {events} events in {path}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: invalid trace {path}: {e}");
+                1
+            }
+        };
+    }
+    run_or_die(|| {
+        let cfg = ServiceConfig {
+            workers: a.get("workers", 2usize),
+            stop: StopRule { max_iter: a.get("max-iter", 200usize), ..Default::default() },
+            trace: a.flags.get("trace").cloned(),
+            ..ServiceConfig::default()
+        };
+        let requests = a.get("requests", 16usize);
+        let size = a.get("size", 128usize);
+        let svc = Service::start(cfg)?;
+        let rxs: Vec<_> = (0..requests)
+            .filter_map(|i| svc.submit(Problem::random(size, size, 0.8, i as u64)).ok())
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        println!("{}", svc.stats_json());
+        svc.shutdown();
+        Ok(())
+    })
+}
+
+/// Validate an exported trace file: chrome://tracing JSON goes through
+/// the structural validator; `.jsonl` exports are checked line-by-line
+/// (every non-empty line one brace-delimited event object).
+fn check_trace_file(path: &str) -> std::result::Result<usize, String> {
+    let raw = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    if path.ends_with(".jsonl") {
+        let mut events = 0usize;
+        for (i, line) in raw.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if !line.starts_with('{') || !line.ends_with('}') {
+                return Err(format!("line {} is not an event object", i + 1));
+            }
+            events += 1;
+        }
+        if events == 0 {
+            return Err("no events".to_string());
+        }
+        Ok(events)
+    } else {
+        let events = telemetry::validate_perfetto(&raw)?;
+        if events == 0 {
+            return Err("no events".to_string());
+        }
+        Ok(events)
+    }
 }
 
 fn cmd_app(which: &str, a: &Args) -> i32 {

@@ -1,11 +1,12 @@
 //! Shared low-level utilities: aligned matrix storage, cache-topology
-//! detection, RNG, lane-reduction helpers, stats, timing.
+//! detection, RNG, lane-reduction helpers, stats, timing, telemetry.
 
 pub mod cputopo;
 pub mod matrix;
 pub mod rng;
 pub mod simd;
 pub mod stats;
+pub mod telemetry;
 pub mod timer;
 
 pub use matrix::Matrix;

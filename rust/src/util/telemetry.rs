@@ -1,0 +1,710 @@
+//! In-band solver telemetry: one monotonic clock, an alloc-free per-thread
+//! span recorder, analytic roofline counters, and trace exporters.
+//!
+//! # The overhead contract
+//!
+//! * **Disabled tracing is free.** Every record entry point checks one
+//!   `Relaxed` atomic flag ([`enabled`]) before doing anything else, so a
+//!   solve with tracing off pays one predictable branch per span site —
+//!   all sites sit at check-burst granularity, never per element.
+//! * **Enabled tracing is alloc-free after warmup.** A thread's first
+//!   recorded span registers a fixed-capacity ring ([`RING_CAP`] slots of
+//!   three `AtomicU64`s) in the process-wide lane registry — that is the
+//!   one documented warmup allocation. Every later record is a
+//!   thread-local lookup plus three relaxed stores: no locks, no heap,
+//!   legal inside the uotlint-guarded hot loops (the `telemetry` lint
+//!   rule additionally pins hot files to this alloc-free API surface).
+//! * **Overflow overwrites, never blocks.** The ring keeps the most
+//!   recent [`RING_CAP`] spans per lane; older spans are overwritten and
+//!   counted in [`lost_spans`]. Threads past the [`MAX_LANES`] cap (only
+//!   reachable by churning ephemeral scope-engine threads) drop their
+//!   spans silently — recording is best-effort by design.
+//!
+//! Drains ([`snapshot_spans`]) are cold paths intended for quiescent
+//! moments (after a solve, at service shutdown); a drain racing a live
+//! recorder may skip slots being overwritten mid-read, which the
+//! per-slot sequence tag detects.
+//!
+//! The clock ([`now_ns`]) is the single monotonic source for the whole
+//! crate — `util::timer::Timer` and the span recorder share it, so bench
+//! timings and trace timestamps are directly comparable.
+
+use std::cell::OnceCell;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+// --- clock ------------------------------------------------------------------
+
+/// Process-wide clock anchor, pinned on first use (module scope keeps the
+/// `OnceLock::new()` call out of `now_ns`'s body, which must stay free of
+/// constructor calls for the uotlint call-graph allocation rule).
+static ANCHOR: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide clock anchor (first use).
+///
+/// Monotonic, alloc-free, and shared by `util::timer::Timer`, the span
+/// recorder, and the exporters — one clock source for the whole crate.
+#[inline]
+pub fn now_ns() -> u64 {
+    ANCHOR.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+// --- enable flag ------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span recording on? One `Relaxed` load — the cold-flag branch every
+/// record path takes first.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (process-wide). Enabling pins the clock
+/// anchor so the first span does not pay the one-time init.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = now_ns();
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+// --- phases -----------------------------------------------------------------
+
+/// The per-sweep phase a span covers. Every backend maps its work onto
+/// this fixed vocabulary so traces are comparable across dense / CSR /
+/// matfree / oned / fp64 and across the serial, scope and pool engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    /// Kernel/state (re)generation: matfree row regeneration seeding,
+    /// oned sorted-support preparation, warm-start seeding.
+    KernelGenerate = 0,
+    /// The fused scaling sweep itself (a burst of `check_every`
+    /// iterations, or one pool worker's part of it).
+    FusedSweep = 1,
+    /// Cross-part reduction of partial column sums on the threaded
+    /// engines.
+    Reduction = 2,
+    /// Marginal-error evaluation at a check boundary.
+    ConvergenceCheck = 3,
+    /// A whole solve, dispatch to report (the envelope span).
+    Solve = 4,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::KernelGenerate,
+        Phase::FusedSweep,
+        Phase::Reduction,
+        Phase::ConvergenceCheck,
+        Phase::Solve,
+    ];
+
+    /// Stable lowercase name used by both exporters (part of the trace
+    /// schema — do not rename without bumping consumers).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::KernelGenerate => "kernel_generate",
+            Phase::FusedSweep => "fused_sweep",
+            Phase::Reduction => "reduction",
+            Phase::ConvergenceCheck => "convergence_check",
+            Phase::Solve => "solve",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| *p as u8 == v)
+    }
+}
+
+// --- the per-thread ring ----------------------------------------------------
+
+/// Spans kept per lane; older spans are overwritten (power of two).
+pub const RING_CAP: usize = 1024;
+
+/// Hard cap on registered lanes. Persistent threads (main, pool workers,
+/// service workers) register well under this; only churning ephemeral
+/// scope-engine threads can exhaust it, after which their spans drop.
+pub const MAX_LANES: usize = 64;
+
+#[derive(Default)]
+struct Slot {
+    /// `(seq + 1) << 8 | phase`; 0 = never written. The sequence tag lets
+    /// a drain detect slots overwritten while being read.
+    meta: AtomicU64,
+    start: AtomicU64,
+    end: AtomicU64,
+}
+
+struct ThreadRing {
+    lane: u32,
+    /// Monotonic count of spans ever recorded on this lane; the slot for
+    /// span `seq` is `seq & (RING_CAP - 1)`.
+    head: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl ThreadRing {
+    // uotlint: allow(alloc) — ring construction is the recorder's one
+    // documented warmup allocation, never on the steady-state record path.
+    fn new(lane: u32) -> Self {
+        let mut slots = Vec::with_capacity(RING_CAP);
+        slots.resize_with(RING_CAP, Slot::default);
+        Self { lane, head: AtomicU64::new(0), slots }
+    }
+
+    #[inline]
+    fn push(&self, phase: Phase, start_ns: u64, end_ns: u64) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq as usize) & (RING_CAP - 1)];
+        slot.start.store(start_ns, Ordering::Relaxed);
+        slot.end.store(end_ns, Ordering::Relaxed);
+        slot.meta.store(((seq + 1) << 8) | phase as u64, Ordering::Release);
+    }
+}
+
+/// Mutex poison recovery (the `coordinator::batcher::recover` pattern):
+/// the registry holds plain `Arc` handles, valid at every observable
+/// point, so a panicked holder loses nothing.
+fn recover<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+// uotlint: allow(alloc) — one-time registry construction (warmup path).
+fn registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::with_capacity(MAX_LANES)))
+}
+
+// uotlint: allow(alloc) — lane registration is the recorder's documented
+// warmup allocation; it runs once per thread, never on the record path.
+fn register() -> Option<Arc<ThreadRing>> {
+    let mut lanes = recover(registry().lock());
+    if lanes.len() >= MAX_LANES {
+        return None;
+    }
+    let ring = Arc::new(ThreadRing::new(lanes.len() as u32));
+    lanes.push(Arc::clone(&ring));
+    Some(ring)
+}
+
+thread_local! {
+    static RING: OnceCell<Option<Arc<ThreadRing>>> = const { OnceCell::new() };
+}
+
+/// Record one finished span on the calling thread's lane.
+///
+/// The alloc-free hot entry point: a cold-flag branch when disabled; a
+/// thread-local lookup plus three relaxed stores when enabled (after the
+/// thread's one-time lane registration).
+#[inline]
+pub fn record_span(phase: Phase, start_ns: u64, end_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let _ = RING.try_with(|cell| {
+        if let Some(ring) = cell.get_or_init(register) {
+            ring.push(phase, start_ns, end_ns);
+        }
+    });
+}
+
+/// RAII span: records `phase` from construction to drop. When tracing is
+/// disabled both ends are a single cold-flag branch.
+pub struct SpanGuard {
+    phase: Phase,
+    start_ns: u64,
+    armed: bool,
+}
+
+/// Open a span over the enclosing scope (see [`SpanGuard`]).
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    if enabled() {
+        SpanGuard { phase, start_ns: now_ns(), armed: true }
+    } else {
+        SpanGuard { phase, start_ns: 0, armed: false }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if self.armed {
+            record_span(self.phase, self.start_ns, now_ns());
+        }
+    }
+}
+
+// --- drain / export (cold paths) --------------------------------------------
+
+/// One drained span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Registration-order lane id of the recording thread.
+    pub lane: u32,
+    /// Per-lane monotonic sequence number.
+    pub seq: u64,
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+/// Collect every lane's retained spans, sorted by start time. Cold,
+/// non-destructive; intended for quiescent moments (slots overwritten
+/// mid-read are skipped via their sequence tags).
+// uotlint: allow(alloc) — cold drain path, never called from hot roots.
+pub fn snapshot_spans() -> Vec<SpanEvent> {
+    let lanes = recover(registry().lock());
+    let mut out = Vec::new();
+    for ring in lanes.iter() {
+        let head = ring.head.load(Ordering::Acquire);
+        let kept = head.min(RING_CAP as u64);
+        for seq in (head - kept)..head {
+            let slot = &ring.slots[(seq as usize) & (RING_CAP - 1)];
+            let meta = slot.meta.load(Ordering::Acquire);
+            if meta >> 8 != seq + 1 {
+                continue; // empty, overwritten, or torn mid-record
+            }
+            let Some(phase) = Phase::from_u8((meta & 0xff) as u8) else {
+                continue;
+            };
+            out.push(SpanEvent {
+                lane: ring.lane,
+                seq,
+                phase,
+                start_ns: slot.start.load(Ordering::Relaxed),
+                end_ns: slot.end.load(Ordering::Relaxed),
+            });
+        }
+    }
+    out.sort_by_key(|e| (e.start_ns, e.lane, e.seq));
+    out
+}
+
+/// Spans overwritten before any drain saw them, across all lanes.
+pub fn lost_spans() -> u64 {
+    let lanes = recover(registry().lock());
+    let mut lost = 0u64;
+    for ring in lanes.iter() {
+        lost += ring.head.load(Ordering::Relaxed).saturating_sub(RING_CAP as u64);
+    }
+    lost
+}
+
+/// Registered lanes (threads that have recorded at least one span).
+pub fn lane_count() -> usize {
+    recover(registry().lock()).len()
+}
+
+/// Clear every lane's retained spans and sequence counters. Lanes stay
+/// registered (the warmup allocation is kept). Cold.
+pub fn reset() {
+    let lanes = recover(registry().lock());
+    for ring in lanes.iter() {
+        ring.head.store(0, Ordering::Release);
+        for slot in ring.slots.iter() {
+            slot.meta.store(0, Ordering::Release);
+        }
+    }
+}
+
+/// Export `events` to `path`: a JSONL event log when the path ends in
+/// `.jsonl`, otherwise a chrome://tracing (Perfetto "trace event") JSON
+/// array loadable by `chrome://tracing` and `ui.perfetto.dev`.
+// uotlint: allow(alloc) — cold export path, never called from hot roots.
+pub fn export_trace(path: &str, events: &[SpanEvent]) -> io::Result<()> {
+    let body =
+        if path.ends_with(".jsonl") { render_jsonl(events) } else { render_perfetto(events) };
+    std::fs::write(path, body)
+}
+
+/// One JSON object per line: `lane`, `seq`, `phase`, `start_ns`, `end_ns`.
+// uotlint: allow(alloc) — cold export path, never called from hot roots.
+pub fn render_jsonl(events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&format!(
+            "{{\"lane\":{},\"seq\":{},\"phase\":\"{}\",\"start_ns\":{},\"end_ns\":{}}}\n",
+            e.lane,
+            e.seq,
+            e.phase.name(),
+            e.start_ns,
+            e.end_ns
+        ));
+    }
+    out
+}
+
+/// Chrome trace-event JSON: complete (`"ph":"X"`) events, microsecond
+/// timestamps, one `tid` per lane. The schema [`validate_perfetto`]
+/// checks is exactly what this emits.
+// uotlint: allow(alloc) — cold export path, never called from hot roots.
+pub fn render_perfetto(events: &[SpanEvent]) -> String {
+    let mut out = String::from("[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ts = e.start_ns as f64 / 1e3;
+        let dur = e.end_ns.saturating_sub(e.start_ns) as f64 / 1e3;
+        out.push_str(&format!(
+            "\n{{\"name\":\"{}\",\"cat\":\"mapuot\",\"ph\":\"X\",\"ts\":{ts:.3},\
+             \"dur\":{dur:.3},\"pid\":1,\"tid\":{}}}",
+            e.phase.name(),
+            e.lane
+        ));
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Minimal schema check for an exported Perfetto trace: a JSON array of
+/// objects, each carrying `name`, `ph:"X"`, `ts`, `dur`, `pid`, `tid`.
+/// Returns the event count. This is the check the golden trace test and
+/// the CI traced-solve leg run against fresh exports.
+// uotlint: allow(alloc) — cold validation path, never called from hot roots.
+pub fn validate_perfetto(json: &str) -> Result<usize, String> {
+    let t = json.trim();
+    if !t.starts_with('[') || !t.ends_with(']') {
+        return Err("not a JSON array".to_string());
+    }
+    let mut events = 0usize;
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut esc = false;
+    let mut obj_start = 0usize;
+    for (i, ch) in t.char_indices() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if ch == '\\' {
+                esc = true;
+            } else if ch == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match ch {
+            '"' => in_str = true,
+            '{' => {
+                depth += 1;
+                if depth == 1 {
+                    obj_start = i;
+                }
+            }
+            '}' => {
+                if depth == 0 {
+                    return Err(format!("unbalanced braces at byte {i}"));
+                }
+                depth -= 1;
+                if depth == 0 {
+                    let obj = &t[obj_start..=i];
+                    for key in
+                        ["\"name\":", "\"ph\":\"X\"", "\"ts\":", "\"dur\":", "\"pid\":", "\"tid\":"]
+                    {
+                        if !obj.contains(key) {
+                            return Err(format!("event {events} missing {key}"));
+                        }
+                    }
+                    events += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || in_str {
+        return Err("unterminated object or string".to_string());
+    }
+    Ok(events)
+}
+
+// --- roofline counters ------------------------------------------------------
+
+/// Analytic per-solve traffic/compute estimate, derived from the solver's
+/// pass/access accounting (`SolverKind::passes_per_iter` /
+/// `accesses_per_element`) rather than runtime counters — so the hot
+/// loops stay untouched and the estimate is exact for the streaming
+/// model the paper's roofline (Fig. 3) uses.
+///
+/// Flop counts are the documented estimate `2 × element accesses +
+/// 16 × exp evaluations` (fused multiply-add per element, degree-5
+/// polynomial + range reduction per transcendental).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    /// DRAM bytes touched across the solve.
+    pub bytes: f64,
+    /// Matrix-element visits (elements × passes × iterations).
+    pub element_passes: f64,
+    /// Transcendental (exp) evaluations (matfree/oned regeneration).
+    pub exp_evals: f64,
+    /// Plan/state element stores (the read+write share of the passes).
+    pub plan_stores: f64,
+    /// Estimated floating-point operations.
+    pub flops: f64,
+}
+
+impl Roofline {
+    /// Materialized sweep (dense or CSR): `elems` stored matrix elements
+    /// of `bytes_per_elem` bytes, walked `passes` times per iteration
+    /// with `accesses` DRAM accesses per element per iteration.
+    pub fn materialized(
+        elems: u64,
+        passes: u64,
+        accesses: u64,
+        bytes_per_elem: u64,
+        iters: u64,
+    ) -> Self {
+        let it = iters as f64;
+        let e = elems as f64;
+        let element_passes = e * passes as f64 * it;
+        let bytes = e * accesses as f64 * bytes_per_elem as f64 * it;
+        let plan_stores = e * accesses.saturating_sub(passes) as f64 * it;
+        Roofline { bytes, element_passes, exp_evals: 0.0, plan_stores, flops: 2.0 * element_passes }
+    }
+
+    /// Materialization-free sweep: kernel entries regenerated on the fly
+    /// (one exp per element per iteration), resident state O(m + n).
+    pub fn regenerated(m: u64, n: u64, iters: u64) -> Self {
+        let it = iters as f64;
+        let e = (m as f64) * (n as f64);
+        let element_passes = e * it;
+        let exp_evals = e * it;
+        // Streamed state per iteration: u, v, fcol, colsum, rowsum, and
+        // the two marginals — ~7 f32 vectors of O(m + n).
+        let bytes = (m + n) as f64 * 7.0 * 4.0 * it;
+        Roofline {
+            bytes,
+            element_passes,
+            exp_evals,
+            plan_stores: 0.0,
+            flops: 2.0 * element_passes + 16.0 * exp_evals,
+        }
+    }
+
+    /// Exact 1D fast path: O(m + n) work per iteration via the
+    /// prefix/suffix decay recursions (two exp-decay factors per event),
+    /// f64 accumulator state of 24 bytes per point.
+    pub fn oned(m: u64, n: u64, iters: u64) -> Self {
+        let it = iters as f64;
+        let e = (m + n) as f64;
+        let element_passes = e * it;
+        let exp_evals = 2.0 * e * it;
+        let bytes = e * 24.0 * it;
+        Roofline {
+            bytes,
+            element_passes,
+            exp_evals,
+            plan_stores: 0.0,
+            flops: 4.0 * element_passes + 16.0 * exp_evals,
+        }
+    }
+
+    /// Arithmetic intensity, flop per DRAM byte (the roofline x-axis).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes > 0.0 {
+            self.flops / self.bytes
+        } else {
+            0.0
+        }
+    }
+
+    /// Achieved DRAM bandwidth for a solve of `seconds` (the live
+    /// roofline y-axis proxy for a memory-bound kernel).
+    pub fn bandwidth_gbs(&self, seconds: f64) -> f64 {
+        if seconds > 0.0 {
+            self.bytes / seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// The CLI report line: live arithmetic intensity + achieved
+    /// bandwidth + the raw counters.
+    // uotlint: allow(alloc) — cold report formatting, never on hot paths.
+    pub fn cli_line(&self, seconds: f64) -> String {
+        format!(
+            "roofline: {:.3} GB touched | {:.2} GB/s | AI {:.4} flop/B | {:.3e} elem passes | \
+             {:.3e} exp evals | {:.3e} plan stores",
+            self.bytes / 1e9,
+            self.bandwidth_gbs(seconds),
+            self.intensity(),
+            self.element_passes,
+            self.exp_evals,
+            self.plan_stores
+        )
+    }
+}
+
+/// Serializes lib tests that mutate the process-wide recorder state (the
+/// enable flag, the lane registry): any test anywhere in the crate that
+/// calls [`set_enabled`] or [`reset`] must hold this guard.
+/// Poison-tolerant — assertions may fire while held.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    recover(LOCK.lock())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    /// Sentinel start timestamps far above any real clock reading, so
+    /// concurrent lib tests recording real spans never collide.
+    const SENTINEL: u64 = 1 << 62;
+
+    #[test]
+    fn clock_is_monotonic_and_shared() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        let _g = test_lock();
+        set_enabled(false);
+        let before = snapshot_spans().len();
+        record_span(Phase::FusedSweep, SENTINEL, SENTINEL + 1);
+        let guard = span(Phase::Reduction);
+        drop(guard);
+        assert_eq!(snapshot_spans().len(), before);
+    }
+
+    #[test]
+    fn spans_record_and_drain_in_order() {
+        let _g = test_lock();
+        set_enabled(true);
+        for k in 0..4u64 {
+            record_span(Phase::ConvergenceCheck, SENTINEL + 10 * k, SENTINEL + 10 * k + 5);
+        }
+        set_enabled(false);
+        let mine: Vec<SpanEvent> = snapshot_spans()
+            .into_iter()
+            .filter(|e| e.start_ns >= SENTINEL && e.phase == Phase::ConvergenceCheck)
+            .collect();
+        assert_eq!(mine.len(), 4, "{mine:?}");
+        assert!(mine.windows(2).all(|w| w[0].start_ns < w[1].start_ns));
+        assert!(mine.windows(2).all(|w| w[0].lane == w[1].lane), "one thread, one lane");
+        assert_eq!(mine[0].end_ns - mine[0].start_ns, 5);
+        reset();
+        assert!(snapshot_spans().iter().all(|e| e.start_ns < SENTINEL));
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_lost_spans() {
+        let _g = test_lock();
+        set_enabled(true);
+        reset();
+        let extra = 10u64;
+        for k in 0..(RING_CAP as u64 + extra) {
+            record_span(Phase::FusedSweep, SENTINEL + k, SENTINEL + k + 1);
+        }
+        set_enabled(false);
+        let mine: Vec<SpanEvent> = snapshot_spans()
+            .into_iter()
+            .filter(|e| e.start_ns >= SENTINEL && e.phase == Phase::FusedSweep)
+            .collect();
+        // Exactly the most recent RING_CAP survive; the first `extra`
+        // were overwritten.
+        assert_eq!(mine.len(), RING_CAP, "wrap keeps the newest CAP spans");
+        assert_eq!(mine.first().map(|e| e.seq), Some(extra));
+        assert_eq!(mine.last().map(|e| e.seq), Some(RING_CAP as u64 + extra - 1));
+        assert!(lost_spans() >= extra);
+        reset();
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let _g = test_lock();
+        set_enabled(true);
+        reset();
+        {
+            let _s = span(Phase::Solve);
+        }
+        set_enabled(false);
+        let got = snapshot_spans().into_iter().any(|e| e.phase == Phase::Solve);
+        assert!(got, "guard drop recorded the span");
+        reset();
+    }
+
+    #[test]
+    fn jsonl_and_perfetto_renderers() {
+        let events = [
+            SpanEvent { lane: 0, seq: 0, phase: Phase::FusedSweep, start_ns: 1000, end_ns: 3500 },
+            SpanEvent { lane: 2, seq: 1, phase: Phase::Reduction, start_ns: 3500, end_ns: 4000 },
+        ];
+        let jsonl = render_jsonl(&events);
+        assert_eq!(jsonl.lines().count(), 2);
+        assert!(jsonl.starts_with("{\"lane\":0,\"seq\":0,\"phase\":\"fused_sweep\","));
+        assert!(jsonl.contains("\"start_ns\":3500"));
+
+        let perfetto = render_perfetto(&events);
+        assert_eq!(validate_perfetto(&perfetto), Ok(2));
+        assert!(perfetto.contains("\"name\":\"reduction\""));
+        assert!(perfetto.contains("\"ts\":1.000"));
+        assert!(perfetto.contains("\"dur\":2.500"));
+        assert!(perfetto.contains("\"tid\":2"));
+    }
+
+    #[test]
+    fn perfetto_validator_rejects_malformed_traces() {
+        assert!(validate_perfetto("{}").is_err(), "not an array");
+        assert!(validate_perfetto("[{\"name\":\"x\"}]").is_err(), "missing keys");
+        assert!(validate_perfetto("[{\"name\":").is_err(), "truncated");
+        assert_eq!(validate_perfetto("[]"), Ok(0));
+        // Brace characters inside strings must not confuse the scanner.
+        let tricky = "[\n{\"name\":\"a{b}\",\"cat\":\"m\",\"ph\":\"X\",\"ts\":0.0,\
+                      \"dur\":1.0,\"pid\":1,\"tid\":0}\n]";
+        assert_eq!(validate_perfetto(tricky), Ok(1));
+    }
+
+    #[test]
+    fn roofline_dense_math() {
+        // MAP-UOT 64x32, 10 iters: 1 pass, 2 accesses per element.
+        let r = Roofline::materialized(64 * 32, 1, 2, 4, 10);
+        assert_eq!(r.element_passes, 64.0 * 32.0 * 10.0);
+        assert_eq!(r.bytes, 64.0 * 32.0 * 2.0 * 4.0 * 10.0);
+        assert_eq!(r.plan_stores, 64.0 * 32.0 * 10.0, "one rw pass");
+        assert_eq!(r.flops, 2.0 * r.element_passes);
+        assert!((r.intensity() - 0.25).abs() < 1e-12, "2 flops / 8 bytes");
+        assert!((r.bandwidth_gbs(1.0) - r.bytes / 1e9).abs() < 1e-12);
+        // POT at the same shape touches 3x the bytes of MAP-UOT.
+        let pot = Roofline::materialized(64 * 32, 4, 6, 4, 10);
+        assert!((pot.bytes / r.bytes - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roofline_regenerated_and_oned_math() {
+        let r = Roofline::regenerated(100, 50, 4);
+        assert_eq!(r.exp_evals, 100.0 * 50.0 * 4.0);
+        assert_eq!(r.plan_stores, 0.0);
+        assert_eq!(r.bytes, 150.0 * 7.0 * 4.0 * 4.0);
+        let o = Roofline::oned(1000, 1000, 8);
+        assert_eq!(o.element_passes, 2000.0 * 8.0);
+        assert_eq!(o.bytes, 2000.0 * 24.0 * 8.0);
+        // Regeneration is compute-dense: far higher AI than a dense sweep.
+        assert!(r.intensity() > Roofline::materialized(5000, 1, 2, 4, 4).intensity());
+        let line = r.cli_line(0.5);
+        assert!(line.starts_with("roofline:"), "{line}");
+        assert!(line.contains("GB/s"));
+    }
+
+    #[test]
+    fn roofline_degenerate_inputs_are_total() {
+        let r = Roofline::materialized(0, 1, 2, 4, 0);
+        assert_eq!(r.intensity(), 0.0);
+        assert_eq!(r.bandwidth_gbs(0.0), 0.0);
+        // accesses < passes saturates instead of wrapping.
+        let w = Roofline::materialized(10, 4, 1, 4, 1);
+        assert_eq!(w.plan_stores, 0.0);
+    }
+}

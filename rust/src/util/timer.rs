@@ -1,24 +1,37 @@
 //! Wall-clock timing helpers for benches and service metrics.
+//!
+//! Built on [`super::telemetry::now_ns`], the crate's single monotonic
+//! clock source — bench timings and span-trace timestamps share one
+//! anchor, so a `Timer` reading can be compared directly against
+//! exported trace events.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// A simple start/elapsed timer.
+use super::telemetry::now_ns;
+
+/// A simple start/elapsed timer on the shared telemetry clock.
 #[derive(Debug, Clone, Copy)]
 pub struct Timer {
-    start: Instant,
+    start_ns: u64,
 }
 
 impl Timer {
     pub fn start() -> Self {
-        Self { start: Instant::now() }
+        Self { start_ns: now_ns() }
     }
 
     pub fn elapsed(&self) -> Duration {
-        self.start.elapsed()
+        Duration::from_nanos(now_ns().saturating_sub(self.start_ns))
     }
 
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// The shared-clock reading this timer started at (the value a span
+    /// recorded over the same region would carry as `start_ns`).
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
     }
 }
 

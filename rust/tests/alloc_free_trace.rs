@@ -1,0 +1,115 @@
+//! Counting-allocator proof of the telemetry overhead contract (PR 10):
+//! with span tracing **enabled**, the post-warmup hot loop still performs
+//! **zero heap allocations**. The recorder's only allocation is the
+//! one-time per-thread lane registration, which the warmup solve absorbs
+//! (session thread and every pool worker record at least one span there);
+//! after that each span is a clock read plus three relaxed stores into the
+//! thread's fixed-capacity ring — overflow wraps and counts, it never
+//! grows.
+//!
+//! This file holds exactly one test so no concurrent test in the same
+//! binary can pollute the global allocation counter (same discipline as
+//! `alloc_free.rs`, which proves the untraced contract).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
+use map_uot::util::telemetry::{self, Phase};
+
+struct CountingAllocator;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+fn record(_size: usize) {
+    if COUNTING.load(Ordering::Relaxed) {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+#[test]
+fn traced_hot_loop_allocates_nothing_after_warmup() {
+    let trace_path = std::env::temp_dir().join("map_uot_alloc_free_trace.jsonl");
+    let trace_path = trace_path.to_str().expect("utf-8 temp path").to_string();
+
+    // Problems are constructed (and allocate) before counting starts.
+    let problems: Vec<Problem> = (0..3).map(|s| Problem::random(48, 40, 0.7, s)).collect();
+    let stop = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 200 };
+
+    // Serial and pooled engines share the contract; threads = 4 makes the
+    // pool workers and the column-parallel reduction record spans too, so
+    // the counter (which sees every thread) covers their lanes.
+    for threads in [1usize, 4] {
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(threads)
+            .stop(stop)
+            .check_every(8)
+            .trace(trace_path.clone())
+            .build(&problems[0]);
+        assert!(telemetry::enabled(), "trace() arms span recording at build");
+        // Warmup: lane registration for the session thread and each pool
+        // worker happens on the first recorded span.
+        session.solve(&problems[0]).expect("warmup traced solve");
+
+        ALLOCATIONS.store(0, Ordering::SeqCst);
+        COUNTING.store(true, Ordering::SeqCst);
+        for p in &problems {
+            session.solve(p).expect("steady-state traced solve");
+        }
+        COUNTING.store(false, Ordering::SeqCst);
+
+        let count = ALLOCATIONS.load(Ordering::SeqCst);
+        assert_eq!(
+            count, 0,
+            "traced (threads={threads}): {count} heap allocations in the post-warmup hot loop"
+        );
+    }
+
+    // The zero-alloc proof must not be vacuous: the counted solves really
+    // recorded — the full phase vocabulary is present, and the pooled run
+    // put worker lanes (lane > 0) on the record.
+    let events = telemetry::snapshot_spans();
+    assert!(!events.is_empty(), "tracing was armed but nothing recorded");
+    for phase in [Phase::FusedSweep, Phase::Reduction, Phase::ConvergenceCheck, Phase::Solve] {
+        assert!(events.iter().any(|e| e.phase == phase), "no {phase:?} span recorded");
+    }
+    assert!(events.iter().any(|e| e.lane > 0), "pool workers recorded no spans");
+
+    // Export is a cold path (allowed to allocate) and must round-trip: the
+    // `.jsonl` file has one well-formed object per drained span.
+    let stop_session = SolverSession::builder(SolverKind::MapUot)
+        .stop(stop)
+        .trace(trace_path.clone())
+        .build(&problems[0]);
+    let exported = stop_session.export_trace().expect("trace export");
+    assert_eq!(exported, telemetry::snapshot_spans().len());
+    let body = std::fs::read_to_string(&trace_path).expect("trace file written");
+    assert_eq!(body.lines().count(), exported);
+    assert!(body.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+    let _ = std::fs::remove_file(&trace_path);
+}

@@ -20,7 +20,7 @@ fn run(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands() {
     let (stdout, _, ok) = run(&["help"]);
     assert!(ok);
-    for cmd in ["solve", "serve", "app", "fig", "info"] {
+    for cmd in ["solve", "serve", "app", "fig", "info", "stats"] {
         assert!(stdout.contains(cmd), "missing {cmd} in help:\n{stdout}");
     }
 }
@@ -270,6 +270,53 @@ fn serve_native_completes_workload() {
     ]);
     assert!(ok, "{stdout}");
     assert!(stdout.contains("6/6 ok"), "{stdout}");
+    // Latency decomposes into queue wait + solve (PR 10).
+    assert!(stdout.contains("+ wait"), "{stdout}");
+}
+
+#[test]
+fn solve_trace_exports_and_stats_validates() {
+    // Both exporter formats: `.jsonl` event log and chrome://tracing JSON.
+    let dir = std::env::temp_dir();
+    for name in ["map_uot_cli_trace.jsonl", "map_uot_cli_trace.json"] {
+        let path = dir.join(name);
+        let path = path.to_str().expect("utf-8 temp path").to_string();
+        let (stdout, _, ok) = run(&[
+            "solve", "--m", "48", "--n", "40", "--threads", "2", "--max-iter", "200", "--trace",
+            path.as_str(),
+        ]);
+        assert!(ok, "{stdout}");
+        assert!(stdout.contains("roofline:"), "{stdout}");
+        assert!(stdout.contains("spans ->"), "{stdout}");
+        let (stdout, _, ok) = run(&["stats", "--check-trace", path.as_str()]);
+        assert!(ok, "{stdout}");
+        assert!(stdout.contains("trace ok:"), "{stdout}");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn stats_rejects_invalid_trace() {
+    let path = std::env::temp_dir().join("map_uot_cli_bad_trace.json");
+    std::fs::write(&path, "not json").expect("temp write");
+    let (_, stderr, ok) = run(&["stats", "--check-trace", path.to_str().expect("utf-8")]);
+    assert!(!ok, "invalid trace must fail the gate");
+    assert!(stderr.contains("invalid trace"), "{stderr}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stats_prints_versioned_snapshot_json() {
+    let (stdout, _, ok) = run(&["stats", "--requests", "6", "--size", "32", "--max-iter", "64"]);
+    assert!(ok, "{stdout}");
+    let json = stdout.lines().find(|l| l.starts_with('{')).expect("stats JSON line");
+    assert!(json.starts_with("{\"schema_version\":1,"), "{json}");
+    for key in ["\"counters\":", "\"solve_ms\":", "\"wait_ms\":"] {
+        assert!(json.contains(key), "missing {key}: {json}");
+    }
+    for key in ["\"gauges\":", "\"warm\":", "\"backends\":"] {
+        assert!(json.contains(key), "missing {key}: {json}");
+    }
 }
 
 #[test]

@@ -1,0 +1,152 @@
+//! Integration tests for the span recorder across engines (PR 10):
+//! per-pool-thread span attribution at widths 1 / 2 / 16, tracing purity
+//! (a traced solve is bit-identical to an untraced one), and the golden
+//! Perfetto-JSON schema the exporters promise.
+//!
+//! Telemetry state (the enable flag, the lane registry) is
+//! process-global, so every test here serializes on one mutex.
+
+use std::collections::BTreeSet;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+use map_uot::algo::{Problem, SolverKind, SolverSession, StopRule};
+use map_uot::util::telemetry::{self, Phase, SpanEvent};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+const STOP: StopRule = StopRule { tol: 1e-4, delta_tol: 1e-6, max_iter: 120 };
+
+/// Thread widths to sweep: serial, minimal pool, oversubscribed — or the
+/// single value from `MAP_UOT_POOL_THREADS` (the CI matrix, same
+/// convention as `prop_pool.rs`).
+fn thread_counts() -> Vec<usize> {
+    match std::env::var("MAP_UOT_POOL_THREADS") {
+        Ok(v) => vec![v.parse().expect("MAP_UOT_POOL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 16],
+    }
+}
+
+/// A traced solve attributes sweep work to the threads that did it: one
+/// lane serial, several lanes (session thread plus pool workers) once the
+/// pool engine dispatches parts.
+#[test]
+fn span_attribution_follows_pool_width() {
+    let _g = serialize();
+    let p = Problem::random(192, 160, 0.7, 3);
+    for threads in thread_counts() {
+        telemetry::set_enabled(true);
+        telemetry::reset();
+        let mut session = SolverSession::builder(SolverKind::MapUot)
+            .threads(threads)
+            .stop(STOP)
+            .check_every(4)
+            .build(&p);
+        session.solve(&p).expect("traced solve");
+        telemetry::set_enabled(false);
+        let events = telemetry::snapshot_spans();
+        assert!(!events.is_empty(), "threads={threads}: no spans recorded");
+
+        let all_lanes: BTreeSet<u32> = events.iter().map(|e| e.lane).collect();
+        let sweep_lanes: BTreeSet<u32> =
+            events.iter().filter(|e| e.phase == Phase::FusedSweep).map(|e| e.lane).collect();
+        if threads == 1 {
+            assert_eq!(all_lanes.len(), 1, "serial run recorded on lanes {all_lanes:?}");
+        } else {
+            assert!(
+                sweep_lanes.len() >= 2,
+                "threads={threads}: sweep spans on lanes {sweep_lanes:?}, expected the \
+                 session thread plus at least one pool worker"
+            );
+        }
+
+        // Well-formed on every lane: non-negative durations, per-lane seq
+        // strictly increasing (snapshot drains each ring in order).
+        assert!(events.iter().all(|e| e.end_ns >= e.start_ns));
+        for lane in &all_lanes {
+            let s: Vec<u64> = events.iter().filter(|e| e.lane == *lane).map(|e| e.seq).collect();
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "lane {lane}: seq out of order");
+        }
+    }
+    telemetry::reset();
+}
+
+/// Tracing is observation only: at every pool width, a traced solve
+/// returns the bit-identical plan and iteration count of an untraced one.
+#[test]
+fn traced_solves_are_bit_identical_to_untraced() {
+    let _g = serialize();
+    telemetry::set_enabled(false);
+    let p = Problem::random(96, 80, 0.7, 5);
+    for threads in thread_counts() {
+        let solve = |traced: bool| {
+            let mut b = SolverSession::builder(SolverKind::MapUot)
+                .threads(threads)
+                .stop(STOP)
+                .check_every(4);
+            if traced {
+                b = b.trace("unused-never-exported.json");
+            }
+            let mut s = b.build(&p);
+            let report = s.solve(&p).expect("solve");
+            (s.into_plan(), report.iters)
+        };
+        let (plain, plain_iters) = solve(false);
+        let (traced, traced_iters) = solve(true);
+        telemetry::set_enabled(false);
+        assert_eq!(plain_iters, traced_iters, "threads={threads}: iteration count drifted");
+        assert_eq!(
+            plain.as_slice(),
+            traced.as_slice(),
+            "threads={threads}: tracing changed the plan"
+        );
+    }
+    telemetry::reset();
+}
+
+/// The Perfetto exporter's schema, pinned byte-for-byte on fixed events,
+/// plus a live traced solve whose export passes the same validator the CI
+/// traced-solve leg runs.
+#[test]
+fn perfetto_export_matches_golden_schema() {
+    let _g = serialize();
+    let events = [
+        SpanEvent { lane: 0, seq: 0, phase: Phase::KernelGenerate, start_ns: 1_000, end_ns: 2_500 },
+        SpanEvent { lane: 3, seq: 7, phase: Phase::Reduction, start_ns: 2_500, end_ns: 2_750 },
+    ];
+    let golden = concat!(
+        "[\n",
+        "{\"name\":\"kernel_generate\",\"cat\":\"mapuot\",\"ph\":\"X\",",
+        "\"ts\":1.000,\"dur\":1.500,\"pid\":1,\"tid\":0},\n",
+        "{\"name\":\"reduction\",\"cat\":\"mapuot\",\"ph\":\"X\",",
+        "\"ts\":2.500,\"dur\":0.250,\"pid\":1,\"tid\":3}\n",
+        "]\n"
+    );
+    assert_eq!(telemetry::render_perfetto(&events), golden);
+    assert_eq!(telemetry::validate_perfetto(golden), Ok(2));
+
+    // Live half: a traced pool solve, exported through the session, passes
+    // the same schema check with every drained span present.
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    let path = std::env::temp_dir().join("map_uot_golden_trace.json");
+    let path = path.to_str().expect("utf-8 temp path").to_string();
+    let p = Problem::random(64, 48, 0.7, 9);
+    let mut session = SolverSession::builder(SolverKind::MapUot)
+        .threads(2)
+        .stop(STOP)
+        .check_every(4)
+        .trace(path.clone())
+        .build(&p);
+    session.solve(&p).expect("traced solve");
+    let exported = session.export_trace().expect("trace export");
+    telemetry::set_enabled(false);
+    assert!(exported > 0, "traced solve drained no spans");
+    let raw = std::fs::read_to_string(&path).expect("trace file written");
+    assert_eq!(telemetry::validate_perfetto(&raw), Ok(exported));
+    let _ = std::fs::remove_file(&path);
+    telemetry::reset();
+}

@@ -342,6 +342,11 @@ HOT_FILES = [
 
 PANIC_DIRS = ("coordinator/", "config/", "runtime/")
 
+# The only `telemetry::` items a hot solver file may touch (mirror of
+# rules.rs TELEMETRY_HOT_API): the alloc-free record path. Everything
+# else (snapshots, exporters, the registry) is cold-layer API.
+TELEMETRY_HOT_API = ("now_ns", "record_span", "span", "enabled", "Phase")
+
 # The transitive-allocation universe: the hot core and the helper layer it
 # is allowed to call. Calls resolving outside (coordinator, config, sim,
 # apps, bench, CLI) are dispatch/setup layers that call INTO the core, not
@@ -469,6 +474,16 @@ def analyze(files):
                              "`.lock()` without the PoisonError::into_inner recovery "
                              "pattern (see coordinator::batcher::recover)")
                         )
+                if rel in HOT_FILES:
+                    for m in re.finditer(r"telemetry::", code):
+                        im = IDENT.match(code[m.end():])
+                        ident = im.group(0) if im else ""
+                        if ident not in TELEMETRY_HOT_API:
+                            violations.append(
+                                (rel, lineno, "telemetry",
+                                 f"`telemetry::{ident}` in a hot solver file - hot loops "
+                                 "may only use the alloc-free record path")
+                            )
             for ch in code:
                 if ch == "{":
                     depth += 1

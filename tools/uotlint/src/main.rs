@@ -113,10 +113,11 @@ fn lint(arg: Option<&str>) -> ExitCode {
         *per_rule.entry(*rule).or_insert(0) += 1;
         println!("{display_prefix}{file}:{line}: [{rule}] {msg}");
     }
-    let by_rule: Vec<String> = ["alloc", "panic", "lock", "safety", "sendsync", "encapsulation"]
-        .iter()
-        .map(|r| format!("{r} {}", per_rule.get(r).copied().unwrap_or(0)))
-        .collect();
+    let by_rule: Vec<String> =
+        ["alloc", "panic", "lock", "safety", "sendsync", "encapsulation", "telemetry"]
+            .iter()
+            .map(|r| format!("{r} {}", per_rule.get(r).copied().unwrap_or(0)))
+            .collect();
 
     println!(
         "uotlint: {} files, {} fns, {} hot roots, {} reachable, {} unsafe sites, \

@@ -20,11 +20,16 @@
 //! * **encapsulation** — thread spawns only in the pool / engine /
 //!   service-lifecycle files; `core::arch` intrinsics only in the kernel
 //!   modules.
+//! * **telemetry** — the hot solver files ([`crate::callgraph::HOT_FILES`])
+//!   may only use the alloc-free recorder API (`now_ns` / `record_span` /
+//!   `span` / `enabled` / `Phase`): exporters, snapshots and registry
+//!   management allocate and belong in the cold layers.
 //!
 //! `#[cfg(test)]` at brace depth 0 cuts the rest of the file from the
-//! spawn, panic and lock rules (tests may take shortcuts freely); the
-//! safety rules apply everywhere, tests included.
+//! spawn, panic, lock and telemetry rules (tests may take shortcuts
+//! freely); the safety rules apply everywhere, tests included.
 
+use crate::callgraph::HOT_FILES;
 use crate::lexer::{comment_run_above, find_words, Line};
 use crate::parse::KEYWORDS;
 
@@ -66,6 +71,11 @@ const SENDSYNC_KEYWORDS: [&str; 13] = [
 /// The escape marker for the panic rule.
 pub const ALLOW_PANIC: &str = "uotlint: allow(panic)";
 
+/// The only `telemetry::` items a hot solver file may touch: the
+/// alloc-free record path. Everything else (snapshots, exporters, the
+/// registry) allocates and is cold-layer API.
+const TELEMETRY_HOT_API: [&str; 5] = ["now_ns", "record_span", "span", "enabled", "Phase"];
+
 /// One reported violation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Violation {
@@ -93,6 +103,7 @@ pub fn check_file(rel: &str, lines: &[Line]) -> FileReport {
     let spawn_allowed = SPAWN_ALLOWED.iter().any(|(f, _)| *f == rel);
     let intrin_allowed = INTRIN_ALLOWED.contains(&rel);
     let panic_dir = PANIC_DIRS.iter().any(|d| rel.starts_with(d));
+    let hot_file = HOT_FILES.contains(&rel);
 
     let mut depth = 0usize;
     let mut in_test = false;
@@ -152,6 +163,28 @@ pub fn check_file(rel: &str, lines: &[Line]) -> FileReport {
                             ),
                         });
                     }
+                }
+            }
+        }
+
+        // --- telemetry: hot files use only the record path --------------
+        if hot_file && !in_test {
+            for (i, _) in code.match_indices("telemetry::") {
+                let rest = &code[i + "telemetry::".len()..];
+                let ident: String = rest
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !TELEMETRY_HOT_API.contains(&ident.as_str()) {
+                    report.violations.push(Violation {
+                        line: lineno,
+                        rule: "telemetry",
+                        msg: format!(
+                            "`telemetry::{ident}` in a hot solver file — hot loops may only \
+                             use the alloc-free record path ({})",
+                            TELEMETRY_HOT_API.join(" / ")
+                        ),
+                    });
                 }
             }
         }
@@ -507,6 +540,30 @@ mod tests {
         assert!(violations("coordinator/batcher.rs", src).is_empty());
         let test = "#[cfg(test)]\nmod tests {\n    fn t(m: &Mutex<u32>) { m.lock().unwrap(); }\n}\n";
         assert!(violations("coordinator/batcher.rs", test).is_empty());
+    }
+
+    // --- telemetry ------------------------------------------------------
+
+    #[test]
+    fn hot_files_may_use_only_the_record_path() {
+        let ok = "fn iterate_x() {\n    let s = telemetry::span(Phase::FusedSweep);\n    drop(s);\n    telemetry::record_span(Phase::Reduction, telemetry::now_ns(), telemetry::now_ns());\n}\n";
+        assert!(violations("algo/parallel.rs", ok).is_empty());
+        let bad = "fn iterate_x() {\n    let e = telemetry::snapshot_spans();\n}\n";
+        assert_eq!(rules_of("algo/parallel.rs", bad), vec!["telemetry"]);
+        // Non-hot files may use the full API (session/export layers).
+        assert!(violations("algo/session.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn telemetry_brace_imports_in_hot_files_are_flagged() {
+        // A brace import smuggles arbitrary items past the following-ident
+        // check, so it is itself a violation in hot files.
+        let src = "use crate::util::telemetry::{self, Phase};\n";
+        assert_eq!(rules_of("algo/kernels.rs", src), vec!["telemetry"]);
+        let ok = "use crate::util::telemetry;\nuse crate::util::telemetry::Phase;\n";
+        assert!(violations("algo/kernels.rs", ok).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { telemetry::reset(); }\n}\n";
+        assert!(violations("algo/oned.rs", test_src).is_empty());
     }
 
     // --- encapsulation --------------------------------------------------
